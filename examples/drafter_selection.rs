@@ -1,0 +1,97 @@
+//! Drafter selection — the deployment question the paper's intro
+//! motivates: given a target model and a shelf of candidate drafters
+//! (fast-but-inaccurate through slow-but-accurate), which should you
+//! deploy, and does the answer depend on the algorithm?
+//!
+//! With SI the answer is treacherous: a bad pick makes inference *slower*
+//! than not speculating at all. With DSI every candidate helps (Theorem
+//! 1), so selection only tunes the size of the win.
+//!
+//! ```bash
+//! cargo run --release --example drafter_selection
+//! ```
+
+use dsi::config::{min_lookahead_for_sp, AlgoKind, ExperimentConfig, LatencyProfile};
+use dsi::simulator::simulate_mean_ms;
+
+struct Candidate {
+    name: &'static str,
+    latency_frac: f64,
+    acceptance: f64,
+}
+
+fn main() {
+    // A plausible shelf for a 30 ms/token target: smaller = faster but
+    // less aligned (numbers bracket the paper's Table 2 measurements).
+    let shelf = [
+        Candidate { name: "68M  (3% lat, 55% acc)", latency_frac: 0.03, acceptance: 0.55 },
+        Candidate { name: "160M (8% lat, 72% acc)", latency_frac: 0.08, acceptance: 0.72 },
+        Candidate { name: "1B   (20% lat, 85% acc)", latency_frac: 0.20, acceptance: 0.85 },
+        Candidate { name: "4B   (65% lat, 94% acc)", latency_frac: 0.65, acceptance: 0.94 },
+        Candidate { name: "distill-bad (40% lat, 25% acc)", latency_frac: 0.40, acceptance: 0.25 },
+    ];
+    let target = 30.0;
+    let n_tokens = 100;
+
+    let nonsi = {
+        let cfg = ExperimentConfig {
+            target: LatencyProfile::uniform(target),
+            n_tokens,
+            ..ExperimentConfig::default()
+        };
+        simulate_mean_ms(AlgoKind::NonSi, &cfg, 1)
+    };
+    println!("target: 30 ms/token; non-SI reference: {nonsi:.0} ms for {n_tokens} tokens\n");
+    println!(
+        "{:<32} {:>10} {:>10} {:>12} {:>12}",
+        "drafter", "SI ms", "DSI ms", "SI vs nonSI", "DSI vs nonSI"
+    );
+
+    let mut best: Option<(&str, f64)> = None;
+    for c in &shelf {
+        let drafter = target * c.latency_frac;
+        let k = min_lookahead_for_sp(target, drafter, 7);
+        let cfg = ExperimentConfig {
+            target: LatencyProfile::uniform(target),
+            drafter: LatencyProfile::uniform(drafter),
+            acceptance_rate: c.acceptance,
+            lookahead: k,
+            sp_degree: 7,
+            n_tokens,
+            ..ExperimentConfig::default()
+        };
+        // SI gets its best lookahead among the usual candidates.
+        let si = [1usize, 3, 5, 10, 20]
+            .iter()
+            .map(|&kk| {
+                let mut c2 = cfg.clone();
+                c2.lookahead = kk;
+                simulate_mean_ms(AlgoKind::Si, &c2, 10)
+            })
+            .fold(f64::INFINITY, f64::min);
+        let dsi = simulate_mean_ms(AlgoKind::Dsi, &cfg, 10);
+        let si_tag = if si > nonsi { "SLOWER" } else { "faster" };
+        println!(
+            "{:<32} {:>10.0} {:>10.0} {:>9.2}x {:>6} {:>9.2}x",
+            c.name,
+            si,
+            dsi,
+            nonsi / si,
+            si_tag,
+            nonsi / dsi
+        );
+        if best.map_or(true, |(_, b)| dsi < b) {
+            best = Some((c.name, dsi));
+        }
+    }
+
+    let (name, ms) = best.unwrap();
+    println!(
+        "\nbest drafter under DSI: {name} at {ms:.0} ms ({:.2}x vs non-SI)",
+        nonsi / ms
+    );
+    println!(
+        "note the 'distill-bad' row: SI is slower than not speculating, DSI still wins — \
+         the robustness gap the paper closes."
+    );
+}

@@ -1,0 +1,103 @@
+//! Figure 2 as ASCII art: run the offline sweep and render the four
+//! heatmap panels in the terminal (each cell one character), then write
+//! the full grid to results/figure2_example.csv.
+//!
+//! ```bash
+//! cargo run --release --example heatmap_sweep
+//! ```
+
+use dsi::report::write_csv;
+use dsi::simulator::sweep::{run_sweep, step_grid, summarize, SweepCell, SweepSpec};
+use std::path::Path;
+
+/// Map a speedup ratio to a glyph: '#' big speedup ... '.' parity,
+/// 'x' slowdown (the paper's pink).
+fn glyph(speedup: f64) -> char {
+    match speedup {
+        s if s < 0.995 => 'x',
+        s if s < 1.05 => '.',
+        s if s < 1.5 => '-',
+        s if s < 2.5 => '+',
+        s if s < 5.0 => '*',
+        _ => '#',
+    }
+}
+
+fn panel(
+    title: &str,
+    cells: &[SweepCell],
+    fracs: &[f64],
+    accs: &[f64],
+    f: impl Fn(&SweepCell) -> f64,
+) {
+    println!("\n{title}");
+    println!("  (rows: acceptance 1.0 at top -> 0.0; cols: drafter latency 2%..100%)");
+    let idx = |i: usize, j: usize| &cells[i * accs.len() + j];
+    for (j, _a) in accs.iter().enumerate().rev() {
+        print!("  ");
+        for (i, _d) in fracs.iter().enumerate() {
+            print!("{}", glyph(f(idx(i, j))));
+        }
+        println!();
+    }
+    println!("  legend: x slowdown | . ~1x | - <1.5x | + <2.5x | * <5x | # >=5x");
+}
+
+fn main() {
+    let spec = SweepSpec {
+        drafter_fracs: step_grid(0.02, 1.0, 0.02),
+        acceptance_rates: step_grid(0.0, 1.0, 0.04),
+        n_tokens: 80,
+        repeats: 2,
+        ..SweepSpec::default()
+    };
+    eprintln!(
+        "sweeping {} cells x {} lookaheads ...",
+        spec.drafter_fracs.len() * spec.acceptance_rates.len(),
+        spec.lookaheads.len()
+    );
+    let cells = run_sweep(&spec);
+
+    panel("(a) non-SI / SI  (SI speedup over non-SI; x = SI slower, the paper's pink)",
+        &cells, &spec.drafter_fracs, &spec.acceptance_rates,
+        |c| 1.0 / c.si_over_nonsi());
+    panel("(b) SI / DSI  (DSI speedup over SI)",
+        &cells, &spec.drafter_fracs, &spec.acceptance_rates,
+        |c| c.dsi_speedup_vs_si());
+    panel("(c) non-SI / DSI  (DSI speedup over non-SI)",
+        &cells, &spec.drafter_fracs, &spec.acceptance_rates,
+        |c| c.dsi_speedup_vs_nonsi());
+    panel("(d) min(SI, non-SI) / DSI  (DSI speedup over the better baseline)",
+        &cells, &spec.drafter_fracs, &spec.acceptance_rates,
+        |c| c.dsi_speedup_vs_baseline());
+
+    let s = summarize(&cells);
+    println!(
+        "\nsummary: SI slower than non-SI on {:.1}% of cells; DSI vs baseline in [{:.3}, {:.2}]x",
+        100.0 * s.si_slowdown_frac,
+        s.min_dsi_vs_baseline,
+        s.max_dsi_vs_baseline
+    );
+
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                format!("{:.3}", c.drafter_frac),
+                format!("{:.3}", c.acceptance_rate),
+                format!("{:.4}", c.si_over_nonsi()),
+                format!("{:.4}", c.dsi_speedup_vs_si()),
+                format!("{:.4}", c.dsi_speedup_vs_nonsi()),
+                format!("{:.4}", c.dsi_speedup_vs_baseline()),
+            ]
+        })
+        .collect();
+    let path = Path::new("results/figure2_example.csv");
+    write_csv(
+        path,
+        &["drafter_frac", "acceptance", "si_over_nonsi", "dsi_vs_si", "dsi_vs_nonsi", "dsi_vs_baseline"],
+        &rows,
+    )
+    .expect("writing CSV");
+    println!("full grid -> {}", path.display());
+}

@@ -1,0 +1,153 @@
+"""AOT compile path: lower the L2 models to HLO text + dump weights as .npy.
+
+Run once by ``make artifacts``; Python never runs at serve time. Emits:
+
+  artifacts/target_prefill.hlo.txt   artifacts/target_decode.hlo.txt
+  artifacts/drafter_prefill.hlo.txt  artifacts/drafter_decode.hlo.txt
+  artifacts/weights/{target,drafter}/NNN_<name>.npy
+  artifacts/manifest.json            (arg order, shapes, hyperparams)
+  artifacts/model.hlo.txt            (= target_decode; Makefile sentinel)
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Functions are lowered with ``return_tuple=True``; the Rust runtime unwraps
+the (logits, cache) pair with ``Literal::to_tuple2``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, n_layers: int, params, cfg: m.ModelConfig,
+                out_dir: pathlib.Path) -> dict:
+    """Lower prefill+decode for one model; dump its weights; return manifest."""
+    flat = m.flatten_params(params)
+    names = m.flat_param_names(n_layers)
+    assert len(flat) == len(names)
+
+    wdir = out_dir / "weights" / name
+    wdir.mkdir(parents=True, exist_ok=True)
+    weight_files = []
+    for i, (pname, arr) in enumerate(zip(names, flat)):
+        fname = f"{i:03d}_{pname}.npy"
+        np.save(wdir / fname, np.asarray(arr))
+        weight_files.append(f"weights/{name}/{fname}")
+
+    cache_shape = cfg.cache_shape(n_layers)
+    weight_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat]
+    cache_spec = jax.ShapeDtypeStruct(cache_shape, jnp.float32)
+    i1 = jax.ShapeDtypeStruct((1,), jnp.int32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.max_seq,), jnp.int32)
+
+    decode_lowered = jax.jit(m.make_decode_fn(n_layers)).lower(
+        *weight_specs, i1, i1, cache_spec)
+    prefill_lowered = jax.jit(m.make_prefill_fn(n_layers)).lower(
+        *weight_specs, tokens_spec, i1, cache_spec)
+
+    decode_path = out_dir / f"{name}_decode.hlo.txt"
+    prefill_path = out_dir / f"{name}_prefill.hlo.txt"
+    decode_path.write_text(to_hlo_text(decode_lowered))
+    prefill_path.write_text(to_hlo_text(prefill_lowered))
+    print(f"[aot] {name}: {len(flat)} weight arrays, "
+          f"decode={decode_path.stat().st_size}B prefill={prefill_path.stat().st_size}B")
+
+    return {
+        "n_layers": n_layers,
+        "decode_hlo": decode_path.name,
+        "prefill_hlo": prefill_path.name,
+        "weights": weight_files,
+        "cache_shape": list(cache_shape),
+        "n_weights": len(flat),
+    }
+
+
+SELFCHECK_TOKEN = 42
+SELFCHECK_POS = 0
+
+
+def selfcheck_logits(params, cfg: m.ModelConfig):
+    """Eager decode logits for the fixed selfcheck input (token=42, pos=0,
+    zero cache). Dumped to artifacts/selfcheck_target_logits.npy; the Rust
+    integration test executes the compiled HLO on the same input and
+    asserts numeric agreement — the cross-language contract."""
+    cache = jnp.zeros(cfg.cache_shape(len(params["layers"])), jnp.float32)
+    logits, _ = m.decode_step(
+        params,
+        jnp.array([SELFCHECK_TOKEN], jnp.int32),
+        jnp.array([SELFCHECK_POS], jnp.int32),
+        cache,
+    )
+    return logits
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="sentinel path; artifacts land in its directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    sentinel = pathlib.Path(args.out)
+    out_dir = sentinel.parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cfg = m.ModelConfig(seed=args.seed)
+    target = m.init_params(cfg)
+    drafter = m.drafter_params(target, cfg)
+
+    manifest = {
+        "version": 1,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "max_seq": cfg.max_seq,
+            "d_ff": cfg.d_ff,
+            "extra_layer_scale": cfg.extra_layer_scale,
+            "seed": cfg.seed,
+        },
+        "models": {
+            "target": lower_model("target", cfg.n_target_layers, target, cfg,
+                                  out_dir),
+            "drafter": lower_model("drafter", cfg.n_drafter_layers, drafter,
+                                   cfg, out_dir),
+        },
+        "arg_order": "[*weights, tokens_or_token (i32), length_or_pos (1,) i32, cache (f32)]",
+        "output": "tuple(logits f32[vocab], cache)",
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+    # Cross-language numerics selfcheck vector (see selfcheck_logits).
+    np.save(out_dir / "selfcheck_target_logits.npy",
+            np.asarray(selfcheck_logits(target, cfg)))
+
+    # Makefile sentinel: copy of the target decode HLO.
+    sentinel.write_text((out_dir / "target_decode.hlo.txt").read_text())
+    print(f"[aot] wrote manifest + sentinel under {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""L1 Pallas kernel: single-query (decode-step) attention over a KV cache.
+
+This is the compute hot-spot of autoregressive decoding: one new query row
+per head attends over all previously cached key/value rows. The paper (DSI)
+is orchestration-level and kernel-agnostic; this kernel is the per-forward
+work that DSI's speculation parallelism hides.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+heads; each grid step stages that head's K/V rows HBM->VMEM via BlockSpec,
+computes the (1 x D) . (D x S) score GEMV on the MXU, applies an online
+softmax in VMEM registers, and writes the (1 x D) output row. With
+H=4, S=128, D=32 the per-step VMEM footprint is S*D*2*4B = 32 KiB, far
+below the ~16 MiB VMEM budget, leaving room for double buffering.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifact runs on the Rust-side CPU client. Correctness is pinned
+against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Large-negative used to mask out not-yet-written cache slots. Using a finite
+# value (not -inf) keeps exp() well-defined under interpret-mode numerics.
+_MASK_VALUE = -1e30
+
+
+def _decode_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, seq_len: int,
+                        head_dim: int):
+    """One grid step == one attention head.
+
+    Block shapes:
+      pos_ref: (1, 1) int32  -- number of valid cache rows is pos+1
+      q_ref:   (1, D)        -- this head's query row
+      k_ref:   (1, S, D)     -- this head's cached keys
+      v_ref:   (1, S, D)     -- this head's cached values
+      o_ref:   (1, D)        -- this head's output row
+    """
+    q = q_ref[0, :]
+    k = k_ref[0]
+    v = v_ref[0]
+    pos = pos_ref[0, 0]
+
+    scale = 1.0 / math.sqrt(head_dim)
+    # (S, D) . (D,) -> (S,): the score GEMV. On real TPU this is an MXU
+    # contraction; in interpret mode it is a plain dot.
+    scores = jnp.dot(k, q) * scale
+
+    # Causal/validity mask: only rows [0, pos] hold real K/V entries.
+    row = jax.lax.broadcasted_iota(jnp.int32, (seq_len,), 0)
+    scores = jnp.where(row <= pos, scores, _MASK_VALUE)
+
+    # Numerically-stable softmax kept entirely in VMEM-resident registers.
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e)
+
+    o_ref[0, :] = jnp.dot(probs, v)
+
+
+@functools.partial(jax.named_call, name="pallas_decode_attention")
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """Single-step attention: ``softmax(q . K^T / sqrt(D)) . V`` per head.
+
+    Args:
+      q:       (H, D) float32 -- query rows for the token being decoded.
+      k_cache: (H, S, D) float32 -- cached keys (rows > pos are garbage).
+      v_cache: (H, S, D) float32 -- cached values.
+      pos:     (1, 1) int32 -- index of the current token; rows [0, pos]
+               of the cache are valid (the current token's K/V must already
+               have been written at row ``pos``).
+
+    Returns:
+      (H, D) float32 attention output.
+    """
+    n_heads, head_dim = q.shape
+    seq_len = k_cache.shape[1]
+    if k_cache.shape != (n_heads, seq_len, head_dim):
+        raise ValueError(f"k_cache shape {k_cache.shape} incompatible with q {q.shape}")
+    if v_cache.shape != k_cache.shape:
+        raise ValueError(f"v_cache shape {v_cache.shape} != k_cache {k_cache.shape}")
+
+    kernel = functools.partial(_decode_attn_kernel, seq_len=seq_len,
+                               head_dim=head_dim)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h: (0, 0)),           # pos (replicated)
+            pl.BlockSpec((1, head_dim), lambda h: (h, 0)),    # q row
+            pl.BlockSpec((1, seq_len, head_dim), lambda h: (h, 0, 0)),  # K
+            pl.BlockSpec((1, seq_len, head_dim), lambda h: (h, 0, 0)),  # V
+        ],
+        out_specs=pl.BlockSpec((1, head_dim), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, head_dim), q.dtype),
+        interpret=True,
+    )(pos, q, k_cache, v_cache)
+
+
+def _decode_attn_blocked_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                                m_ref, l_ref, acc_ref, *, block_s: int,
+                                head_dim: int):
+    """Flash-decoding variant: grid (H, S/Bs) with online-softmax carry.
+
+    The (m, l, acc) running statistics live in VMEM scratch and are carried
+    across the sequence-block dimension of the grid (TPU grids iterate the
+    trailing axis sequentially, so the carry is well-defined; interpret mode
+    preserves the same order).
+    """
+    sb = pl.program_id(1)
+    pos = pos_ref[0, 0]
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[0] = _MASK_VALUE
+        l_ref[0] = 0.0
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :]
+    k = k_ref[0]
+    v = v_ref[0]
+
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.dot(k, q) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0) + sb * block_s
+    scores = jnp.where(row <= pos, scores, _MASK_VALUE)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(scores))
+    alpha = jnp.exp(m_prev - m_cur)
+    e = jnp.exp(scores - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(e)
+    acc = acc_ref[0, :] * alpha + jnp.dot(e, v)
+
+    m_ref[0] = m_cur
+    l_ref[0] = l_cur
+    acc_ref[0, :] = acc
+
+    @pl.when(sb == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0, :] = acc_ref[0, :] / l_ref[0]
+
+
+def decode_attention_blocked(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, pos: jax.Array,
+                             block_s: int = 64) -> jax.Array:
+    """Flash-decoding-style blocked variant of :func:`decode_attention`.
+
+    Identical math, but the sequence axis is tiled in ``block_s``-row VMEM
+    blocks with an online-softmax accumulator, the schedule a real TPU
+    deployment would use when S*D no longer fits VMEM. Kept alongside the
+    monolithic kernel so the benchmark suite can compare structures.
+    """
+    n_heads, head_dim = q.shape
+    seq_len = k_cache.shape[1]
+    if seq_len % block_s != 0:
+        raise ValueError(f"seq_len {seq_len} not divisible by block_s {block_s}")
+
+    kernel = functools.partial(_decode_attn_blocked_kernel, block_s=block_s,
+                               head_dim=head_dim)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_heads, seq_len // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, sb: (0, 0)),
+            pl.BlockSpec((1, head_dim), lambda h, sb: (h, 0)),
+            pl.BlockSpec((1, block_s, head_dim), lambda h, sb: (h, sb, 0)),
+            pl.BlockSpec((1, block_s, head_dim), lambda h, sb: (h, sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, head_dim), lambda h, sb: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),          # running max m
+            pltpu.VMEM((1,), jnp.float32),          # running denom l
+            pltpu.VMEM((1, head_dim), jnp.float32),  # unnormalized acc
+        ],
+        interpret=True,
+    )(pos, q, k_cache, v_cache)

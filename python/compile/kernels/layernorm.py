@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: layer normalization over the feature axis.
+
+Used by the L2 model at every pre-LN site (attention input, MLP input,
+final norm). Whole-tensor kernel: the activations at decode time are a
+single (d,) row (or (S, d) at prefill), trivially VMEM-resident, so there
+is no need for a grid. ``interpret=True`` for CPU-PJRT executability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + _EPS) * g_ref[...] + b_ref[...]
+
+
+def layernorm(x: jax.Array, gain: jax.Array, bias: jax.Array) -> jax.Array:
+    """LayerNorm over the last axis: ``(x - mu) / sqrt(var + eps) * g + b``.
+
+    Args:
+      x:    (..., d) float32 activations.
+      gain: (d,) float32 scale.
+      bias: (d,) float32 shift.
+    """
+    if gain.shape != x.shape[-1:] or bias.shape != x.shape[-1:]:
+        raise ValueError(
+            f"gain/bias shapes {gain.shape}/{bias.shape} must be ({x.shape[-1]},)")
+    return pl.pallas_call(
+        _layernorm_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, gain, bias)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest/hypothesis sweep shapes and
+assert the Pallas kernels (interpret mode) match these to float32 tolerance.
+No Pallas imports here on purpose -- the oracle must not share code with the
+kernel under test.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+_EPS = 1e-5
+_MASK_VALUE = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Reference single-query attention.
+
+    q: (H, D); k_cache/v_cache: (H, S, D); pos: (1, 1) int32 or python int.
+    Returns (H, D).
+    """
+    n_heads, head_dim = q.shape
+    seq_len = k_cache.shape[1]
+    p = jnp.asarray(pos).reshape(()).astype(jnp.int32)
+
+    scale = 1.0 / math.sqrt(head_dim)
+    # (H, S, D) . (H, D) -> (H, S)
+    scores = jnp.einsum("hsd,hd->hs", k_cache, q) * scale
+    row = jnp.arange(seq_len)[None, :]
+    scores = jnp.where(row <= p, scores, _MASK_VALUE)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", probs, v_cache)
+
+
+def layernorm_ref(x, gain, bias):
+    """Reference LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + _EPS) * gain + bias

@@ -1,0 +1,279 @@
+"""L2: the target and drafter language models, in JAX, calling L1 kernels.
+
+The DSI paper orchestrates frozen off-the-shelf target/drafter pairs
+(Starcoder-15B/168M, Vicuna-13B/68M, Phi3-14B/4B). We cannot ship those, so
+we build the closest synthetic equivalent that exercises the same code path
+(DESIGN.md §Substitutions): a tiny byte-level GPT *target* and a *drafter*
+that is the literal layer-truncated prefix of the target.
+
+Alignment trick: layers >= ``n_drafter_layers`` of the target are initialized
+with their residual-branch output projections scaled by ``extra_layer_scale``
+(default 0.1). The target then equals the drafter plus a small perturbation,
+so greedy drafter tokens frequently match greedy target tokens -- a real,
+measurable, nonzero acceptance rate, mimicking the "same model family" pairs
+the paper uses (e.g. Starcoder-168M drafting for Starcoder-15B at 93%).
+
+Two entry points per model, both pure functions lowered AOT by ``aot.py``:
+
+  prefill(params..., tokens[S] i32, length[1] i32, cache) -> (logits[V], cache)
+  decode_step(params..., token[1] i32, pos[1] i32, cache) -> (logits[V], cache)
+
+KV-cache layout: (n_layers, 2, n_heads, max_seq, head_dim); slot [l, 0] holds
+keys, [l, 1] values. The cache is a functional input/output so the Rust L3
+owns the buffer across steps. Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.layernorm import layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters shared by the target/drafter pair."""
+
+    vocab: int = 256          # byte-level
+    d_model: int = 128
+    n_heads: int = 4
+    max_seq: int = 128
+    d_ff: int = 512
+    n_target_layers: int = 4
+    n_drafter_layers: int = 2
+    extra_layer_scale: float = 0.1  # residual scale of target-only layers
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def cache_shape(self, n_layers: int) -> tuple[int, ...]:
+        return (n_layers, 2, self.n_heads, self.max_seq, self.head_dim)
+
+
+# Deterministic flat ordering of the per-layer parameter arrays. This order
+# is the contract with aot.py's weight manifest and the Rust npy loader.
+LAYER_PARAM_NAMES = (
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_proj", "b_proj",
+    "ln2_g", "ln2_b", "w_ff1", "b_ff1", "w_ff2", "b_ff2",
+)
+HEADER_PARAM_NAMES = ("tok_emb", "pos_emb")
+FOOTER_PARAM_NAMES = ("lnf_g", "lnf_b")
+
+
+def init_params(cfg: ModelConfig) -> dict[str, Any]:
+    """Initialize the *target* parameters; the drafter is a prefix view.
+
+    Returns a dict: header arrays, ``layers`` (list of per-layer dicts in
+    LAYER_PARAM_NAMES order), footer arrays.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+
+    def normal(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_target_layers))
+    params: dict[str, Any] = {
+        "tok_emb": normal(next(keys), (v, d), 0.08),
+        "pos_emb": normal(next(keys), (s, d), 0.02),
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+        "layers": [],
+    }
+    for l in range(cfg.n_target_layers):
+        # Target-only layers are down-scaled so target ~= drafter + epsilon,
+        # yielding a realistic nonzero greedy acceptance rate.
+        resid_scale = 1.0 if l < cfg.n_drafter_layers else cfg.extra_layer_scale
+        layer = {
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "w_qkv": normal(next(keys), (d, 3 * d), 1.0 / math.sqrt(d)),
+            "b_qkv": jnp.zeros((3 * d,), jnp.float32),
+            "w_proj": normal(next(keys), (d, d), resid_scale / math.sqrt(d)),
+            "b_proj": jnp.zeros((d,), jnp.float32),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "w_ff1": normal(next(keys), (d, ff), 1.0 / math.sqrt(d)),
+            "b_ff1": jnp.zeros((ff,), jnp.float32),
+            "w_ff2": normal(next(keys), (ff, d), resid_scale / math.sqrt(ff)),
+            "b_ff2": jnp.zeros((d,), jnp.float32),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def drafter_params(params: dict[str, Any], cfg: ModelConfig) -> dict[str, Any]:
+    """The drafter: identical embeddings/final-norm, first-k-layers prefix."""
+    return {
+        **{k: params[k] for k in (*HEADER_PARAM_NAMES, *FOOTER_PARAM_NAMES)},
+        "layers": params["layers"][: cfg.n_drafter_layers],
+    }
+
+
+def flatten_params(params: dict[str, Any]) -> list[jax.Array]:
+    """Flatten into the canonical manifest ordering (see param name tuples)."""
+    flat = [params[k] for k in HEADER_PARAM_NAMES]
+    for layer in params["layers"]:
+        flat.extend(layer[k] for k in LAYER_PARAM_NAMES)
+    flat.extend(params[k] for k in FOOTER_PARAM_NAMES)
+    return flat
+
+
+def flat_param_names(n_layers: int) -> list[str]:
+    names = list(HEADER_PARAM_NAMES)
+    for l in range(n_layers):
+        names.extend(f"layer{l}_{k}" for k in LAYER_PARAM_NAMES)
+    names.extend(FOOTER_PARAM_NAMES)
+    return names
+
+
+def unflatten_params(flat: list[jax.Array], n_layers: int) -> dict[str, Any]:
+    it = iter(flat)
+    params: dict[str, Any] = {k: next(it) for k in HEADER_PARAM_NAMES}
+    params["layers"] = [
+        {k: next(it) for k in LAYER_PARAM_NAMES} for _ in range(n_layers)
+    ]
+    params.update({k: next(it) for k in FOOTER_PARAM_NAMES})
+    return params
+
+
+def _gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def decode_step(params: dict[str, Any], token: jax.Array, pos: jax.Array,
+                cache: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One autoregressive step. token/pos: (1,) int32. Returns (logits, cache).
+
+    Writes the step's K/V rows at ``pos`` and attends rows [0, pos] via the
+    Pallas decode-attention kernel (L1).
+    """
+    t = token[0]
+    p = pos[0]
+    x = params["tok_emb"][t] + params["pos_emb"][p]
+
+    n_layers, _, n_heads, _, head_dim = cache.shape
+    d = x.shape[-1]
+
+    for l, layer in enumerate(params["layers"]):
+        h = layernorm(x, layer["ln1_g"], layer["ln1_b"])
+        qkv = h @ layer["w_qkv"] + layer["b_qkv"]
+        q, k, v = jnp.split(qkv, 3)
+        q = q.reshape(n_heads, head_dim)
+        k = k.reshape(1, 1, n_heads, 1, head_dim)
+        v = v.reshape(1, 1, n_heads, 1, head_dim)
+        # Cache layout (L, 2, H, S, D): write this step's row at index pos.
+        cache = jax.lax.dynamic_update_slice(cache, k, (l, 0, 0, p, 0))
+        cache = jax.lax.dynamic_update_slice(cache, v, (l, 1, 0, p, 0))
+
+        attn = decode_attention(q, cache[l, 0], cache[l, 1],
+                                pos.reshape(1, 1))
+        x = x + attn.reshape(-1) @ layer["w_proj"] + layer["b_proj"]
+
+        h2 = layernorm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + _gelu(h2 @ layer["w_ff1"] + layer["b_ff1"]) @ layer["w_ff2"] \
+            + layer["b_ff2"]
+
+    xf = layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = xf @ params["tok_emb"].T
+    return logits, cache
+
+
+def _full_attention(x, layer, n_heads, causal):
+    """Shared full-sequence attention block used by prefill and the oracle."""
+    seq, d = x.shape
+    head_dim = d // n_heads
+    h = layernorm(x, layer["ln1_g"], layer["ln1_b"])
+    qkv = h @ layer["w_qkv"] + layer["b_qkv"]  # (S, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(seq, n_heads, head_dim)
+    k = k.reshape(seq, n_heads, head_dim)
+    v = v.reshape(seq, n_heads, head_dim)
+    scale = 1.0 / math.sqrt(head_dim)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("hqk,khd->qhd", probs, v).reshape(seq, d)
+    return attn, k, v
+
+
+def prefill(params: dict[str, Any], tokens: jax.Array, length: jax.Array,
+            cache: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Process a padded prompt in one pass; fill the KV cache.
+
+    tokens: (max_seq,) int32, positions >= length are padding (their cached
+    K/V rows are garbage but are overwritten/never attended during decode).
+    length: (1,) int32, number of real prompt tokens (>= 1).
+    Returns (logits at position length-1, filled cache).
+    """
+    seq = tokens.shape[0]
+    n_heads = cache.shape[2]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:seq]
+    causal = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+
+    for l, layer in enumerate(params["layers"]):
+        attn, k, v = _full_attention(x, layer, n_heads, causal)
+        cache = cache.at[l, 0].set(k.transpose(1, 0, 2))
+        cache = cache.at[l, 1].set(v.transpose(1, 0, 2))
+        x = x + attn @ layer["w_proj"] + layer["b_proj"]
+        h2 = layernorm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + _gelu(h2 @ layer["w_ff1"] + layer["b_ff1"]) @ layer["w_ff2"] \
+            + layer["b_ff2"]
+
+    xf = layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits_all = xf @ params["tok_emb"].T          # (S, V)
+    logits = jax.lax.dynamic_index_in_dim(logits_all, length[0] - 1, axis=0,
+                                          keepdims=False)
+    return logits, cache
+
+
+def reference_forward(params: dict[str, Any], tokens: jax.Array,
+                      n_heads: int) -> jax.Array:
+    """Oracle: full non-incremental forward over unpadded tokens (T,) int32.
+
+    Returns logits (T, V). Tests pin prefill/decode consistency against
+    this; the acceptance-rate measurement also uses it.
+    """
+    seq = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:seq]
+    causal = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    for layer in params["layers"]:
+        attn, _, _ = _full_attention(x, layer, n_heads, causal)
+        x = x + attn @ layer["w_proj"] + layer["b_proj"]
+        h2 = layernorm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + _gelu(h2 @ layer["w_ff1"] + layer["b_ff1"]) @ layer["w_ff2"] \
+            + layer["b_ff2"]
+    xf = layernorm(x, params["lnf_g"], params["lnf_b"])
+    return xf @ params["tok_emb"].T
+
+
+def make_decode_fn(n_layers: int):
+    """Flat-argument wrapper for AOT lowering: fn(*weights, token, pos, cache)."""
+
+    def fn(*args):
+        n_weights = len(args) - 3
+        params = unflatten_params(list(args[:n_weights]), n_layers)
+        token, pos, cache = args[n_weights:]
+        return decode_step(params, token, pos, cache)
+
+    return fn
+
+
+def make_prefill_fn(n_layers: int):
+    """Flat-argument wrapper for AOT lowering: fn(*weights, tokens, length, cache)."""
+
+    def fn(*args):
+        n_weights = len(args) - 3
+        params = unflatten_params(list(args[:n_weights]), n_layers)
+        tokens, length, cache = args[n_weights:]
+        return prefill(params, tokens, length, cache)
+
+    return fn

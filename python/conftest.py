@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from the repo root
+(`pytest python/tests/`) or from `python/` (`cd python && pytest tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

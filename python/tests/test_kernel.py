@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and positions; this is the CORE correctness
+signal for the compute layer — the Rust runtime executes exactly these
+kernels (lowered into the decode-step HLO).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, decode_attention_blocked
+from compile.kernels.layernorm import layernorm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_heads=st.sampled_from([1, 2, 4, 8]),
+    seq=st.sampled_from([8, 16, 64, 128, 160]),
+    head_dim=st.sampled_from([8, 16, 32, 64]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(n_heads, seq, head_dim, pos_frac, seed):
+    q = rand(seed, (n_heads, head_dim))
+    k = rand(seed + 1, (n_heads, seq, head_dim))
+    v = rand(seed + 2, (n_heads, seq, head_dim))
+    pos = jnp.array([[int(pos_frac * (seq - 1))]], dtype=jnp.int32)
+    out = decode_attention(q, k, v, pos)
+    expect = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_heads=st.sampled_from([1, 4]),
+    head_dim=st.sampled_from([16, 32]),
+    block=st.sampled_from([16, 32, 64]),
+    pos=st.integers(0, 127),
+    seed=st.integers(0, 2**16),
+)
+def test_blocked_flash_variant_matches_ref(n_heads, head_dim, block, pos, seed):
+    seq = 128
+    q = rand(seed, (n_heads, head_dim))
+    k = rand(seed + 1, (n_heads, seq, head_dim))
+    v = rand(seed + 2, (n_heads, seq, head_dim))
+    p = jnp.array([[pos]], dtype=jnp.int32)
+    out = decode_attention_blocked(q, k, v, p, block_s=block)
+    expect = ref.decode_attention_ref(q, k, v, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+def test_pos_zero_attends_only_first_row():
+    """With pos=0, the output must be exactly v[:, 0] (softmax over one)."""
+    H, S, D = 2, 16, 8
+    q = rand(0, (H, D))
+    k = rand(1, (H, S, D))
+    v = rand(2, (H, S, D))
+    pos = jnp.array([[0]], dtype=jnp.int32)
+    out = decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, 0]), rtol=1e-6, atol=1e-6)
+
+
+def test_garbage_beyond_pos_is_masked():
+    """Rows > pos must not affect the output (the KV-cache invariant the
+    Rust session rollback relies on)."""
+    H, S, D = 4, 32, 16
+    q = rand(3, (H, D))
+    k = rand(4, (H, S, D))
+    v = rand(5, (H, S, D))
+    pos = jnp.array([[10]], dtype=jnp.int32)
+    base = decode_attention(q, k, v, pos)
+    k2 = k.at[:, 11:].set(1e6)  # poison the masked region
+    v2 = v.at[:, 11:].set(-1e6)
+    poisoned = decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=1e-6)
+
+
+def test_attention_shape_validation():
+    q = rand(0, (4, 16))
+    k = rand(1, (4, 32, 16))
+    v = rand(2, (2, 32, 16))  # wrong head count
+    pos = jnp.array([[0]], dtype=jnp.int32)
+    with pytest.raises(ValueError):
+        decode_attention(q, k, v, pos)
+    with pytest.raises(ValueError):
+        decode_attention_blocked(q, k, k, pos, block_s=7)  # 32 % 7 != 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([(), (1,), (7,), (3, 5)]),
+    d=st.sampled_from([8, 32, 128, 129]),
+    seed=st.integers(0, 2**16),
+    affine=st.booleans(),
+)
+def test_layernorm_matches_ref(rows, d, seed, affine):
+    x = rand(seed, (*rows, d), scale=3.0)
+    if affine:
+        g = rand(seed + 1, (d,)) + 1.0
+        b = rand(seed + 2, (d,))
+    else:
+        g = jnp.ones((d,))
+        b = jnp.zeros((d,))
+    out = layernorm(x, g, b)
+    expect = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_normalizes():
+    x = rand(9, (64,), scale=10.0) + 5.0
+    out = np.asarray(layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    assert abs(out.mean()) < 1e-5
+    assert abs(out.std() - 1.0) < 1e-2
+
+
+def test_layernorm_shape_validation():
+    x = rand(0, (16,))
+    with pytest.raises(ValueError):
+        layernorm(x, jnp.ones(8), jnp.zeros(16))

@@ -1,0 +1,108 @@
+//! L3 hot-path microbenchmarks — the perf-pass instrument.
+//!
+//! Measures (1) raw event-simulator throughput (the sweep bottleneck),
+//! (2) the online coordinator's orchestration overhead: wall time of a
+//! wait-engine DSI run minus the theoretical schedule, at shrinking
+//! latency scales (overhead dominates as waits approach zero), and
+//! (3) channel/thread primitives underlying the coordinator.
+
+use dsi::config::{AlgoKind, ExperimentConfig, LatencyProfile};
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{run_dsi, run_nonsi, OnlineConfig};
+use dsi::simulator::simulate;
+use dsi::util::benchkit::{bench_for, suite};
+use std::time::Duration;
+
+fn main() {
+    suite("coordinator_overhead");
+
+    // (1) simulator throughput
+    println!();
+    let cfg = ExperimentConfig { n_tokens: 200, ..ExperimentConfig::default() };
+    let r = bench_for("event sim DSI 200 tokens", Duration::from_secs(1), 5, || {
+        let _ = simulate(AlgoKind::Dsi, &cfg);
+    });
+    println!(
+        "{}   -> {:.2}M simulated tokens/s",
+        r.render(),
+        200.0 / r.mean_ms / 1e3
+    );
+
+    // (2) online coordinator overhead vs the wait schedule
+    println!("\nonline DSI orchestration overhead (wait engine, k=2, SP=4, p=0.9, 32 tokens):");
+    for scale in [4.0, 1.0, 0.25] {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(2.0 * scale),
+            drafter: LatencyProfile::uniform(0.4 * scale),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 5 },
+            max_context: 4096,
+        };
+        let ocfg = OnlineConfig {
+            prompt: vec![1, 2, 3, 4],
+            n_tokens: 32,
+            lookahead: 2,
+            sp_degree: 4,
+            max_speculation_depth: 64,
+        };
+        // Ideal schedule from the virtual-clock simulator.
+        let sim_cfg = ExperimentConfig {
+            target: LatencyProfile::uniform(2.0 * scale),
+            drafter: LatencyProfile::uniform(0.4 * scale),
+            acceptance_rate: 0.9,
+            lookahead: 2,
+            sp_degree: 4,
+            n_tokens: 32,
+            ..ExperimentConfig::default()
+        };
+        let ideal = simulate(AlgoKind::Dsi, &sim_cfg).total_ms;
+        let mut walls = Vec::new();
+        for _ in 0..5 {
+            walls.push(run_dsi(&eng.factory(), &ocfg).wall_ms);
+        }
+        let wall = walls.iter().copied().fold(f64::INFINITY, f64::min);
+        println!(
+            "  target={:>4.1}ms: wall {:>8.2} ms vs ideal {:>8.2} ms -> overhead {:>6.2} ms ({:>5.1}%)",
+            2.0 * scale,
+            wall,
+            ideal,
+            wall - ideal,
+            100.0 * (wall - ideal) / ideal
+        );
+    }
+
+    // (3) primitives
+    println!();
+    let r = bench_for("mpsc channel round trip x1000", Duration::from_secs(1), 2, || {
+        let (tx, rx) = std::sync::mpsc::channel::<u64>();
+        for i in 0..1000u64 {
+            tx.send(i).unwrap();
+        }
+        for _ in 0..1000 {
+            rx.recv().unwrap();
+        }
+    });
+    println!("{}", r.render());
+    let r = bench_for("thread spawn+join", Duration::from_secs(1), 2, || {
+        std::thread::spawn(|| {}).join().unwrap();
+    });
+    println!("{}", r.render());
+
+    // non-SI online floor for reference
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(1.0),
+        drafter: LatencyProfile::uniform(0.2),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 5 },
+        max_context: 4096,
+    };
+    let ocfg = OnlineConfig {
+        prompt: vec![1, 2, 3, 4],
+        n_tokens: 32,
+        lookahead: 2,
+        sp_degree: 4,
+        max_speculation_depth: 64,
+    };
+    let r = bench_for("online non-SI 32 tokens @1ms", Duration::from_secs(2), 1, || {
+        let _ = run_nonsi(&eng.factory(), &ocfg);
+    });
+    println!("{}   (floor 32ms)", r.render());
+}

@@ -1,0 +1,52 @@
+//! Bench + regeneration of Figure 2: the offline heatmap sweep over
+//! (drafter latency, acceptance rate), SI at its per-cell best lookahead,
+//! DSI restricted to Equation-1-feasible lookaheads (SP = 7).
+//!
+//! The full paper-resolution grid is `repro heatmap --fine`; here we run
+//! a coarser grid and also measure raw simulator throughput (the quantity
+//! the perf pass optimizes — sweeping "millions of data points" is only
+//! feasible if single simulations are microseconds).
+
+use dsi::config::{AlgoKind, ExperimentConfig};
+use dsi::simulator::sweep::{run_sweep, summarize, SweepSpec};
+use dsi::simulator::simulate;
+use dsi::util::benchkit::{bench, bench_for, suite};
+use std::time::Duration;
+
+fn main() {
+    suite("fig2_heatmaps");
+
+    let spec = SweepSpec::default();
+    let cells = run_sweep(&spec);
+    let s = summarize(&cells);
+    println!("\nFigure 2 reproduction ({} cells):", s.cells);
+    println!("  (a) SI slower than non-SI on {:.1}% of the grid", 100.0 * s.si_slowdown_frac);
+    println!("  (b) max DSI speedup vs SI:       {:.2}x", s.max_dsi_vs_si);
+    println!("  (c) max DSI speedup vs non-SI:   {:.2}x  (min {:.3}x, paper: never < 1)", s.max_dsi_vs_nonsi, s.min_dsi_vs_nonsi);
+    println!("  (d) max DSI speedup vs baseline: {:.2}x  (min {:.3}x; paper: up to ~1.6x)", s.max_dsi_vs_baseline, s.min_dsi_vs_baseline);
+    assert!(s.min_dsi_vs_baseline >= 0.98, "DSI regressed below baseline");
+
+    // Raw per-simulation cost: the unit of sweep throughput.
+    println!();
+    let cfg = ExperimentConfig::default();
+    for algo in AlgoKind::ALL {
+        let r = bench_for(
+            &format!("simulate {} (50 tokens)", algo.name()),
+            Duration::from_millis(600),
+            3,
+            || {
+                let _ = simulate(algo, &cfg);
+            },
+        );
+        println!("{}  ({:.2}M tokens/s simulated)", r.render(), 50.0 / r.mean_ms / 1e3);
+    }
+
+    println!();
+    println!(
+        "{}",
+        bench("coarse sweep (51x51 grid, 15 lookaheads, 3 reps)", || {
+            let _ = run_sweep(&SweepSpec::default());
+        })
+        .render()
+    );
+}

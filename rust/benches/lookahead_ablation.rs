@@ -1,0 +1,71 @@
+//! Ablation bench: DSI latency as a function of lookahead, at several
+//! (drafter latency, acceptance) operating points — quantifying the
+//! paper's guidance that the *minimal* Equation-1-feasible lookahead is
+//! optimal ("allowing DSI to detect rejections earlier"), and measuring
+//! the SP-degree tradeoff behind it.
+
+use dsi::config::{min_lookahead_for_sp, required_sp, ExperimentConfig, LatencyProfile};
+use dsi::simulator::{simulate_dsi, simulate_mean_ms};
+use dsi::config::AlgoKind;
+use dsi::util::benchkit::suite;
+
+fn main() {
+    suite("lookahead_ablation");
+
+    let target = 100.0;
+    println!(
+        "\nDSI mean latency (ms, 100 tokens, 20 seeds) vs lookahead; SP budget = 7; * = Eq-1 minimal"
+    );
+    for (dfrac, acc) in [(0.05, 0.9), (0.1, 0.8), (0.3, 0.9), (0.5, 0.6)] {
+        let drafter = target * dfrac;
+        let kmin = min_lookahead_for_sp(target, drafter, 7);
+        print!("d={:>4.0}% a={acc:.1} | ", dfrac * 100.0);
+        let mut best = (f64::INFINITY, 0usize);
+        for k in [1usize, 2, 3, 5, 7, 10, 15, 20, 30] {
+            if required_sp(target, drafter, k) > 7 {
+                print!("{k:>2}: ----   ");
+                continue;
+            }
+            let cfg = ExperimentConfig {
+                target: LatencyProfile::uniform(target),
+                drafter: LatencyProfile::uniform(drafter),
+                acceptance_rate: acc,
+                lookahead: k,
+                sp_degree: 7,
+                n_tokens: 100,
+                ..ExperimentConfig::default()
+            };
+            let ms = simulate_mean_ms(AlgoKind::Dsi, &cfg, 20);
+            if ms < best.0 {
+                best = (ms, k);
+            }
+            let star = if k == kmin { "*" } else { " " };
+            print!("{k:>2}{star}{ms:>6.0}  ");
+        }
+        println!("   | best k={} (Eq-1 min k={kmin})", best.1);
+    }
+
+    // SP-degree scaling at the minimal lookahead: the §3.1 claim that SP
+    // beyond ceil(t/d) cannot help.
+    println!("\nDSI latency vs SP degree (d=10%, a=0.8, k = Eq-1 minimal per SP):");
+    let drafter = 10.0;
+    for sp in [1usize, 2, 3, 5, 7, 10, 15] {
+        let k = min_lookahead_for_sp(target, drafter, sp);
+        let cfg = ExperimentConfig {
+            target: LatencyProfile::uniform(target),
+            drafter: LatencyProfile::uniform(drafter),
+            acceptance_rate: 0.8,
+            lookahead: k,
+            sp_degree: sp,
+            n_tokens: 100,
+            ..ExperimentConfig::default()
+        };
+        let mut tot = 0.0;
+        for seed in 0..20 {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            tot += simulate_dsi(&c).total_ms;
+        }
+        println!("  SP={sp:>2} k={k:>2}: {:>7.0} ms", tot / 20.0);
+    }
+}

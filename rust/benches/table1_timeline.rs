@@ -1,0 +1,46 @@
+//! Bench + regeneration of Table 1 / Figure 1: tokens-settled-over-time
+//! for non-SI, SI, DSI under the paper's illustration parameters.
+//!
+//! Prints the reproduced table (the paper artifact) and the simulator's
+//! cost of producing it.
+
+use dsi::config::AlgoKind;
+use dsi::simulator::timeline;
+use dsi::util::benchkit::{bench, suite};
+
+fn main() {
+    suite("table1_timeline");
+
+    // The artifact itself.
+    let times: Vec<f64> = (1..=4).map(|i| i as f64 * 200.0).collect();
+    let rows = timeline::table1(&times, 64);
+    println!("\nTable 1 reproduction (t_i = i*200ms, target=100ms, drafter=14ms, k=1):");
+    println!("{:<6} {:<7} {:>5} {:>5} {:>5} {:>5}", "case", "algo", "t1", "t2", "t3", "t4");
+    for r in &rows {
+        println!(
+            "{:<6} {:<7} {:>5} {:>5} {:>5} {:>5}",
+            r.case, r.algo.name(), r.tokens_at[0], r.tokens_at[1], r.tokens_at[2], r.tokens_at[3]
+        );
+    }
+
+    // Structural check mirrors the paper's claim.
+    for i in 0..times.len() {
+        let get = |case: &str, a: AlgoKind| {
+            rows.iter().find(|r| r.case == case && r.algo == a).unwrap().tokens_at[i]
+        };
+        for case in ["worst", "best"] {
+            assert!(get(case, AlgoKind::Dsi) >= get(case, AlgoKind::Si));
+            assert!(get(case, AlgoKind::Dsi) >= get(case, AlgoKind::NonSi));
+        }
+    }
+    println!("\ninvariant: DSI >= SI and DSI >= non-SI at every sample time — OK");
+
+    // Timing.
+    println!();
+    println!("{}", bench("table1 (6 simulations, 64 tokens)", || {
+        let _ = timeline::table1(&times, 64);
+    }).render());
+    println!("{}", bench("figure1 traces (6 simulations, 48 tokens)", || {
+        let _ = timeline::figure1_traces(48);
+    }).render());
+}

@@ -1,0 +1,51 @@
+//! Bench + regeneration of Table 2: DSI-vs-SI speedups for the paper's
+//! ten measured ⟨target, drafter, dataset⟩ pairs, run through the *online*
+//! thread-pool coordinator with calibrated waits.
+//!
+//! Latencies are scaled to 10% of the paper's milliseconds so the bench
+//! completes quickly; ratios are scale-invariant (every wait scales
+//! together). EXPERIMENTS.md records a full-scale (scale=1.0) run.
+
+use dsi::report::table2_rows;
+use dsi::util::benchkit::{bench_for, suite};
+use std::time::Duration;
+
+fn main() {
+    suite("table2_speedups");
+
+    let rows = table2_rows(0.1, 40, 2);
+    println!(
+        "\n{:<42} {:>6} {:>7} {:>9} {:>9} {:>8} {:>7}",
+        "pair", "d_%", "accept", "SI ms(k)", "DSI ms(k)", "speedup", "paper"
+    );
+    for r in &rows {
+        println!(
+            "{:<42} {:>5.1}% {:>7.2} {:>6.0}({}) {:>6.0}({}) {:>7.2}x {:>6.2}x",
+            r.label,
+            r.drafter_pct,
+            r.acceptance,
+            r.si_best_ms,
+            r.si_best_lookahead,
+            r.dsi_best_ms,
+            r.dsi_best_lookahead,
+            r.speedup,
+            r.paper_speedup
+        );
+    }
+    let gmean: f64 = rows.iter().map(|r| r.speedup.ln()).sum::<f64>() / rows.len() as f64;
+    println!("\ngeometric-mean DSI-vs-SI speedup: {:.2}x (paper range 1.29-1.92x)", gmean.exp());
+
+    println!();
+    println!(
+        "{}",
+        bench_for(
+            "table2 full sweep (10 pairs, 3 lookaheads, 40 tok)",
+            Duration::from_secs(3),
+            0,
+            || {
+                let _ = table2_rows(0.1, 40, 1);
+            }
+        )
+        .render()
+    );
+}

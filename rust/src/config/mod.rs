@@ -1,0 +1,255 @@
+//! Experiment configuration: the knobs the paper's evaluation turns.
+//!
+//! Every experiment in the paper is parameterized by a small tuple —
+//! (target latency, drafter latency, acceptance rate, lookahead, SP degree,
+//! number of tokens) — plus the algorithm under test. This module defines
+//! those types, validates them, computes the paper's Equation 1
+//! (lookahead/SP feasibility), and ships the measured presets from Tables
+//! 2 and 3 so every experiment is reproducible from checked-in data.
+
+mod presets;
+pub use presets::{paper_pairs, PairPreset, TINY_PAIR};
+
+/// Latency profile of one model on one dataset, in milliseconds.
+///
+/// The paper distinguishes Time To First Token (prefill) from Time Per
+/// Output Token (decode); §F.1 measures both per model/dataset pair on an
+/// A100 and the simulators replay them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyProfile {
+    /// Time-to-first-token (prefill) in ms.
+    pub ttft_ms: f64,
+    /// Time-per-output-token (decode) in ms.
+    pub tpot_ms: f64,
+}
+
+impl LatencyProfile {
+    pub fn new(ttft_ms: f64, tpot_ms: f64) -> Self {
+        Self { ttft_ms, tpot_ms }
+    }
+
+    /// Uniform latency (TTFT == TPOT) — used by the offline heatmaps where
+    /// the paper parameterizes by a single relative drafter latency.
+    pub fn uniform(tpot_ms: f64) -> Self {
+        Self { ttft_ms: tpot_ms, tpot_ms }
+    }
+
+    /// Latency of the i-th forward pass of this model (0-based).
+    #[inline]
+    pub fn forward_ms(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.ttft_ms
+        } else {
+            self.tpot_ms
+        }
+    }
+
+    /// TTFT/TPOT ratio — the quantity Table 3 reports.
+    pub fn ttft_tpot_ratio(&self) -> f64 {
+        self.ttft_ms / self.tpot_ms
+    }
+}
+
+/// The inference algorithms under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Plain autoregressive decoding of the target model.
+    NonSi,
+    /// Blocking speculative inference (Leviathan et al., 2023).
+    Si,
+    /// Distributed speculative inference (this paper).
+    Dsi,
+    /// PEARL (Liu et al., 2025): draft-during-verify, one target instance.
+    Pearl,
+}
+
+impl AlgoKind {
+    pub const ALL: [AlgoKind; 4] =
+        [AlgoKind::NonSi, AlgoKind::Si, AlgoKind::Dsi, AlgoKind::Pearl];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::NonSi => "non-SI",
+            AlgoKind::Si => "SI",
+            AlgoKind::Dsi => "DSI",
+            AlgoKind::Pearl => "PEARL",
+        }
+    }
+}
+
+/// A fully-specified single-run experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Target model latency profile.
+    pub target: LatencyProfile,
+    /// Drafter model latency profile.
+    pub drafter: LatencyProfile,
+    /// Probability a draft token is accepted by the verifier (i.i.d.
+    /// assumption, §F.2.1).
+    pub acceptance_rate: f64,
+    /// Draft tokens per verification task (Appendix D).
+    pub lookahead: usize,
+    /// Speculation-parallelism degree: number of target servers.
+    pub sp_degree: usize,
+    /// Number of tokens to generate.
+    pub n_tokens: usize,
+    /// RNG seed for acceptance draws.
+    pub seed: u64,
+    /// Whether a rejection preempts in-flight verification tasks
+    /// (Algorithm 1 line 8 terminates descendants). When false, stale
+    /// tasks run to completion and only then free their server.
+    pub preempt_on_reject: bool,
+    /// Cap on un-verified speculation depth (tokens drafted beyond the
+    /// last verified position). `None` = unbounded (the paper's abstract
+    /// algorithm); online runs bound it by the KV-cache capacity.
+    pub max_speculation_depth: Option<usize>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            target: LatencyProfile::uniform(30.0),
+            drafter: LatencyProfile::uniform(3.0),
+            acceptance_rate: 0.8,
+            lookahead: 5,
+            sp_degree: 7,
+            n_tokens: 50,
+            seed: 0,
+            preempt_on_reject: true,
+            max_speculation_depth: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Relative drafter latency (the paper's "Drafter Latency (%)").
+    pub fn drafter_latency_frac(&self) -> f64 {
+        self.drafter.tpot_ms / self.target.tpot_ms
+    }
+
+    /// Equation 1 left-hand side: target servers needed so verification
+    /// tasks never queue, at this lookahead.
+    pub fn required_sp(&self) -> usize {
+        required_sp(self.target.tpot_ms, self.drafter.tpot_ms, self.lookahead)
+    }
+
+    /// Does (lookahead, SP) satisfy Equation 1?
+    pub fn satisfies_eq1(&self) -> bool {
+        self.required_sp() <= self.sp_degree
+    }
+
+    /// Validate parameter ranges. Returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.acceptance_rate) {
+            return Err(format!("acceptance_rate {} not in [0,1]", self.acceptance_rate));
+        }
+        if self.lookahead == 0 {
+            return Err("lookahead must be >= 1".into());
+        }
+        if self.sp_degree == 0 {
+            return Err("sp_degree must be >= 1".into());
+        }
+        if self.n_tokens == 0 {
+            return Err("n_tokens must be >= 1".into());
+        }
+        for (name, l) in [("target", &self.target), ("drafter", &self.drafter)] {
+            if l.tpot_ms <= 0.0 || l.ttft_ms <= 0.0 {
+                return Err(format!("{name} latencies must be positive"));
+            }
+        }
+        if self.drafter.tpot_ms > self.target.tpot_ms {
+            return Err(format!(
+                "drafter TPOT {} > target TPOT {} violates Assumption 2",
+                self.drafter.tpot_ms, self.target.tpot_ms
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Equation 1: `ceil(target_latency / (lookahead * drafter_latency)) <= SP`.
+/// Returns the minimum SP degree at which verification tasks never wait.
+pub fn required_sp(target_ms: f64, drafter_ms: f64, lookahead: usize) -> usize {
+    (target_ms / (lookahead as f64 * drafter_ms)).ceil().max(1.0) as usize
+}
+
+/// The minimal lookahead satisfying Equation 1 for a given SP degree —
+/// the paper's recommended operating point ("selecting the minimum
+/// lookahead value that satisfies Equation 1 is the optimal choice").
+pub fn min_lookahead_for_sp(target_ms: f64, drafter_ms: f64, sp: usize) -> usize {
+    let mut k = 1usize;
+    while required_sp(target_ms, drafter_ms, k) > sp {
+        k += 1;
+        if k > 100_000 {
+            break; // degenerate latencies; caller validates
+        }
+    }
+    k
+}
+
+/// Maximum useful SP degree: `ceil(target/drafter)` — "any larger SP degree
+/// cannot speed up the inference" (§3.1).
+pub fn max_useful_sp(target_ms: f64, drafter_ms: f64) -> usize {
+    (target_ms / drafter_ms).ceil().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_paper_example() {
+        // §3.1: "given a single drafter of 5% latency and SP = 4, having
+        // lookahead = 5 is sufficient."
+        assert!(required_sp(100.0, 5.0, 5) <= 4);
+        // "the maximum number of required processing units is
+        // 1 + ceil(1 / (5 * 0.05)) = 5" => required SP at lookahead 5 is 4.
+        assert_eq!(required_sp(100.0, 5.0, 5), 4);
+    }
+
+    #[test]
+    fn eq1_abstract_example() {
+        // §4: drafter 5% latency, SP = 3 => min lookahead is 7.
+        assert_eq!(min_lookahead_for_sp(100.0, 5.0, 3), 7);
+    }
+
+    #[test]
+    fn min_lookahead_satisfies_eq1() {
+        for &(t, d, sp) in &[(30.0, 3.0, 7), (20.6, 6.8, 7), (52.4, 34.6, 2), (100.0, 1.0, 4)] {
+            let k = min_lookahead_for_sp(t, d, sp);
+            assert!(required_sp(t, d, k) <= sp, "t={t} d={d} sp={sp} k={k}");
+            if k > 1 {
+                assert!(required_sp(t, d, k - 1) > sp, "k not minimal: t={t} d={d} sp={sp}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_useful_sp_examples() {
+        assert_eq!(max_useful_sp(100.0, 5.0), 20);
+        assert_eq!(max_useful_sp(30.0, 30.0), 1);
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.validate().is_ok());
+        c.acceptance_rate = 1.5;
+        assert!(c.validate().is_err());
+        c.acceptance_rate = 0.5;
+        c.lookahead = 0;
+        assert!(c.validate().is_err());
+        c.lookahead = 5;
+        c.drafter = LatencyProfile::uniform(100.0); // slower than target
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn forward_ms_distinguishes_ttft() {
+        let l = LatencyProfile::new(100.0, 10.0);
+        assert_eq!(l.forward_ms(0), 100.0);
+        assert_eq!(l.forward_ms(1), 10.0);
+        assert_eq!(l.forward_ms(7), 10.0);
+        assert!((l.ttft_tpot_ratio() - 10.0).abs() < 1e-12);
+    }
+}

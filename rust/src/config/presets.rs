@@ -1,0 +1,184 @@
+//! Measured presets from the paper's independent experiments.
+//!
+//! Table 2 reports, for each ⟨target, drafter, dataset⟩ triple, the TPOT
+//! latencies measured on an A100 (§F.1), the acceptance rate estimated via
+//! the geometric fit (§F.2), and the resulting DSI-vs-SI speedup. Table 3
+//! reports the TTFT/TPOT ratios. We check both in as data so every
+//! experiment replays the paper's exact inputs; the speedup column is what
+//! our harness must reproduce (EXPERIMENTS.md records paper-vs-measured).
+
+use super::LatencyProfile;
+
+/// One row of Table 2: a measured ⟨target, drafter, dataset⟩ configuration.
+#[derive(Debug, Clone)]
+pub struct PairPreset {
+    pub target_name: &'static str,
+    pub drafter_name: &'static str,
+    pub dataset: &'static str,
+    pub target: LatencyProfile,
+    pub drafter: LatencyProfile,
+    /// Acceptance rate (fraction in [0,1]) from the paper's §F.2 estimate.
+    pub acceptance_rate: f64,
+    /// The paper's reported DSI-vs-SI speedup for this row ("Speedup DSI
+    /// vs. SI" in Table 2); the reproduction target.
+    pub paper_speedup_dsi_vs_si: f64,
+}
+
+impl PairPreset {
+    pub fn label(&self) -> String {
+        format!("{}/{}/{}", self.target_name, self.drafter_name, self.dataset)
+    }
+
+    pub fn drafter_latency_pct(&self) -> f64 {
+        100.0 * self.drafter.tpot_ms / self.target.tpot_ms
+    }
+}
+
+/// TTFT/TPOT ratios from Table 3 keyed by (model, dataset). TPOTs come from
+/// Table 2; TTFT = ratio * TPOT.
+const fn lat(tpot: f64, ttft_ratio: f64) -> LatencyProfile {
+    LatencyProfile { ttft_ms: tpot * ttft_ratio, tpot_ms: tpot }
+}
+
+/// The ten rows of Table 2, with TTFTs reconstructed from Table 3's ratios.
+pub fn paper_pairs() -> Vec<PairPreset> {
+    vec![
+        PairPreset {
+            target_name: "Starcoder-15B",
+            drafter_name: "Starcoder-168M",
+            dataset: "HumanEval",
+            target: lat(20.6, 1.35),
+            drafter: lat(6.8, 1.19),
+            acceptance_rate: 0.93,
+            paper_speedup_dsi_vs_si: 1.92,
+        },
+        PairPreset {
+            target_name: "Starcoder-15B",
+            drafter_name: "Starcoder-168M",
+            dataset: "MBPP",
+            target: lat(21.0, 1.54),
+            drafter: lat(6.8, 1.20),
+            acceptance_rate: 0.90,
+            paper_speedup_dsi_vs_si: 1.66,
+        },
+        PairPreset {
+            target_name: "Phi3-14B",
+            drafter_name: "Phi3-4B",
+            dataset: "Alpaca",
+            target: lat(49.6, 1.15), // Alpaca ratio for 14B not in Table 3; ~Vicuna Alpaca
+            drafter: lat(33.4, 1.05),
+            acceptance_rate: 0.87,
+            paper_speedup_dsi_vs_si: 1.60,
+        },
+        PairPreset {
+            target_name: "Phi3-14B",
+            drafter_name: "Phi3-4B",
+            dataset: "HumanEval",
+            target: lat(52.1, 1.29),
+            drafter: lat(34.0, 1.23),
+            acceptance_rate: 0.95,
+            paper_speedup_dsi_vs_si: 1.41,
+        },
+        PairPreset {
+            target_name: "Phi3-14B",
+            drafter_name: "Phi3-4B",
+            dataset: "CNN-DM",
+            target: lat(52.4, 4.77),
+            drafter: lat(34.6, 3.88),
+            acceptance_rate: 0.93,
+            paper_speedup_dsi_vs_si: 1.39,
+        },
+        PairPreset {
+            target_name: "Phi3-14B",
+            drafter_name: "Phi3-4B",
+            dataset: "MBPP",
+            target: lat(52.2, 1.43),
+            drafter: lat(34.3, 1.27),
+            acceptance_rate: 0.94,
+            paper_speedup_dsi_vs_si: 1.37,
+        },
+        PairPreset {
+            target_name: "Vicuna-13B",
+            drafter_name: "Vicuna-68M",
+            dataset: "CNN-DM",
+            target: lat(37.7, 5.36),
+            drafter: lat(2.5, 1.04),
+            acceptance_rate: 0.63,
+            paper_speedup_dsi_vs_si: 1.47,
+        },
+        PairPreset {
+            target_name: "Vicuna-13B",
+            drafter_name: "Vicuna-68M",
+            dataset: "Alpaca",
+            target: lat(33.3, 1.15),
+            drafter: lat(2.5, 1.05),
+            acceptance_rate: 0.58,
+            paper_speedup_dsi_vs_si: 1.41,
+        },
+        PairPreset {
+            target_name: "Vicuna-7B",
+            drafter_name: "Vicuna-68M",
+            dataset: "CNN-DM",
+            target: lat(29.4, 4.53),
+            drafter: lat(2.5, 1.06),
+            acceptance_rate: 0.67,
+            paper_speedup_dsi_vs_si: 1.29,
+        },
+        PairPreset {
+            target_name: "Vicuna-7B",
+            drafter_name: "Vicuna-68M",
+            dataset: "Alpaca",
+            target: lat(26.0, 1.19),
+            drafter: lat(2.5, 1.06),
+            acceptance_rate: 0.59,
+            paper_speedup_dsi_vs_si: 1.70,
+        },
+    ]
+}
+
+/// Our own tiny AOT-compiled pair (target = 4-layer GPT, drafter = its
+/// 2-layer prefix; see python/compile/model.py). Latencies are measured by
+/// `repro calibrate` on this machine and stored in results/calibration.json;
+/// these are placeholder defaults used until calibration runs.
+pub const TINY_PAIR: PairPreset = PairPreset {
+    target_name: "tiny-gpt-4L",
+    drafter_name: "tiny-gpt-2L",
+    dataset: "synthetic-bytes",
+    target: LatencyProfile { ttft_ms: 12.0, tpot_ms: 4.0 },
+    drafter: LatencyProfile { ttft_ms: 7.0, tpot_ms: 2.0 },
+    acceptance_rate: 0.9,
+    paper_speedup_dsi_vs_si: f64::NAN, // not a paper row
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_rows_as_in_table2() {
+        assert_eq!(paper_pairs().len(), 10);
+    }
+
+    #[test]
+    fn drafter_latency_pcts_match_table2() {
+        // Table 2's "Drafter Latency (%)" column, same row order.
+        let expect = [32.3, 32.9, 67.4, 65.3, 66.0, 65.8, 6.5, 7.4, 8.4, 9.5, ];
+        for (row, pct) in paper_pairs().iter().zip(expect) {
+            assert!(
+                (row.drafter_latency_pct() - pct).abs() < 0.75,
+                "{}: {} vs table {}",
+                row.label(),
+                row.drafter_latency_pct(),
+                pct
+            );
+        }
+    }
+
+    #[test]
+    fn all_rows_satisfy_assumption2() {
+        for row in paper_pairs() {
+            assert!(row.drafter.tpot_ms < row.target.tpot_ms, "{}", row.label());
+            assert!((0.0..=1.0).contains(&row.acceptance_rate));
+        }
+    }
+}

@@ -1,0 +1,603 @@
+//! Online DSI: Algorithm 1 (generalized to lookahead ≥ 1, Appendix D) on
+//! real OS threads — the paper's system contribution.
+//!
+//! Topology (matching §4's single-node design):
+//!
+//! ```text
+//!             ┌────────────┐   drafts    ┌──────────────┐
+//!             │  drafter   │ ──────────► │              │
+//!             │  thread    │ ◄────────── │  coordinator │◄─┐
+//!             └────────────┘  restarts   │  event loop  │  │ results
+//!                                        └──────┬───────┘  │
+//!                                     verify    │          │
+//!                                     tasks     ▼          │
+//!                              ┌─────────────────────────┐ │
+//!                              │ target pool (SP degree) │─┘
+//!                              │  worker 0 … worker SP-1 │
+//!                              └─────────────────────────┘
+//! ```
+//!
+//! - The **drafter thread** streams draft tokens continuously; it never
+//!   blocks on verification (DSI's defining non-blocking property). On a
+//!   rejection it receives a restart with the corrected context.
+//! - **Verification tasks** τ_0, τ_1, … of each generation go to a shared
+//!   queue served by the target pool. τ_0 needs only the settled context
+//!   (after a rejection the target self-drafts its continuation, which is
+//!   why DSI never falls behind non-SI); τ_j covers the j-th lookahead
+//!   block and is dispatched as soon as the drafter has produced its
+//!   input tokens.
+//! - The **coordinator** settles positions strictly in order, comparing
+//!   draft tokens against target predictions (exact match). The first
+//!   mismatch settles the target's own token as the correction, bumps the
+//!   generation id (staling every queued/running task and the drafter's
+//!   branch — Algorithm 1 line 8's terminations), and restarts.
+//!
+//! Losslessness: the output is bit-identical to greedy non-SI decoding of
+//! the target (tested below for the wait engine at several acceptance
+//! rates and in `rust/tests/` for the real PJRT engine).
+
+use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
+use crate::config::AlgoKind;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A verification task for the target pool.
+enum Task {
+    Verify {
+        gen: u64,
+        /// Full context prefix the predictions condition on.
+        ctx: Vec<u32>,
+        /// Predict indices [from, to).
+        from: usize,
+        to: usize,
+    },
+    Shutdown,
+}
+
+/// Worker -> coordinator messages.
+enum Msg {
+    Draft { gen: u64, index: usize, token: u32 },
+    VerifyDone { gen: u64, from: usize, preds: Vec<u32> },
+    DrafterStopped,
+}
+
+/// Drafter control messages.
+enum Ctrl {
+    Restart { gen: u64, ctx: Vec<u32> },
+    /// Park between requests (the drafter blocks on its control channel).
+    Pause,
+    Stop,
+}
+
+/// Shared FIFO task queue with wakeup.
+struct TaskQueue {
+    q: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+}
+
+impl TaskQueue {
+    fn new() -> Self {
+        Self { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, t: Task) {
+        self.q.lock().unwrap().push_back(t);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Task {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return t;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Drop all queued Verify tasks (rejection preempts them).
+    fn clear_verifies(&self) {
+        let mut q = self.q.lock().unwrap();
+        q.retain(|t| matches!(t, Task::Shutdown));
+    }
+}
+
+
+/// One-shot convenience: build a pipeline, run one generation, tear down.
+/// Serving paths should hold a [`DsiPipeline`] instead — model loading /
+/// HLO compilation then happens once per worker, not once per request.
+pub fn run_dsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
+    let mut pipeline = DsiPipeline::new(factory, cfg.sp_degree);
+    pipeline.generate(cfg)
+}
+
+/// A persistent DSI serving pipeline: the drafter thread and the SP
+/// target-pool workers (with their loaded models and KV sessions) stay
+/// alive across requests. Between requests the drafter parks on its
+/// control channel, so an idle pipeline consumes no CPU.
+pub struct DsiPipeline {
+    queue: Arc<TaskQueue>,
+    msg_rx: Receiver<Msg>,
+    ctrl_tx: Sender<Ctrl>,
+    current_gen: Arc<AtomicU64>,
+    frontier: Arc<AtomicUsize>,
+    depth: Arc<AtomicUsize>,
+    drafter_calls_ctr: Arc<AtomicUsize>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    drafter_handle: Option<std::thread::JoinHandle<()>>,
+    sp_degree: usize,
+    gen: u64,
+}
+
+impl DsiPipeline {
+    pub fn new(factory: &ServerFactory, sp_degree: usize) -> Self {
+        assert!(sp_degree >= 1);
+        let queue = Arc::new(TaskQueue::new());
+        let (msg_tx, msg_rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let current_gen = Arc::new(AtomicU64::new(0));
+        let frontier = Arc::new(AtomicUsize::new(0));
+        let depth = Arc::new(AtomicUsize::new(usize::MAX));
+        let drafter_calls_ctr = Arc::new(AtomicUsize::new(0));
+
+        // --- target pool ---
+        let mut workers = Vec::new();
+        for wid in 0..sp_degree {
+            let queue = queue.clone();
+            let tx = msg_tx.clone();
+            let cur = current_gen.clone();
+            let factory = factory.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut server = factory(ServerRole::Target, wid);
+                loop {
+                    match queue.pop() {
+                        Task::Shutdown => break,
+                        Task::Verify { gen, ctx, from, to } => {
+                            // Queued-task preemption (Algorithm 1 line 8):
+                            // skip work a rejection already invalidated.
+                            if gen != cur.load(Ordering::Acquire) {
+                                continue;
+                            }
+                            let preds = server.predictions(&ctx, from, to);
+                            if tx.send(Msg::VerifyDone { gen, from, preds }).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        // --- drafter thread ---
+        let (ctrl_tx, ctrl_rx): (Sender<Ctrl>, Receiver<Ctrl>) = channel();
+        let drafter_handle = {
+            let tx = msg_tx.clone();
+            let factory = factory.clone();
+            let frontier = frontier.clone();
+            let depth = depth.clone();
+            let calls = drafter_calls_ctr.clone();
+            std::thread::spawn(move || {
+                let mut server = factory(ServerRole::Drafter, 0);
+                let horizon = server.max_context();
+                let mut gen = 0u64;
+                let mut ctx: Vec<u32> = Vec::new();
+                let mut paused = true; // parked until the first Restart
+                'outer: loop {
+                    // Drain control messages (newest restart wins); block
+                    // while paused.
+                    loop {
+                        let msg = if paused {
+                            match ctrl_rx.recv() {
+                                Ok(m) => Some(m),
+                                Err(_) => break 'outer,
+                            }
+                        } else {
+                            match ctrl_rx.try_recv() {
+                                Ok(m) => Some(m),
+                                Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                    break 'outer
+                                }
+                            }
+                        };
+                        match msg {
+                            Some(Ctrl::Restart { gen: g, ctx: c }) => {
+                                gen = g;
+                                ctx = c;
+                                paused = false;
+                            }
+                            Some(Ctrl::Pause) => paused = true,
+                            Some(Ctrl::Stop) => break 'outer,
+                            None => break,
+                        }
+                        if paused {
+                            continue; // keep blocking on the channel
+                        }
+                        break;
+                    }
+                    // Depth / horizon limits: idle briefly rather than spin.
+                    let f = frontier.load(Ordering::Acquire);
+                    let d = depth.load(Ordering::Acquire);
+                    if ctx.len().saturating_sub(f) >= d || ctx.len() >= horizon {
+                        match ctrl_rx.recv_timeout(Duration::from_micros(200)) {
+                            Ok(Ctrl::Restart { gen: g, ctx: c }) => {
+                                gen = g;
+                                ctx = c;
+                                paused = false;
+                            }
+                            Ok(Ctrl::Pause) => paused = true,
+                            Ok(Ctrl::Stop) => break,
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(_) => break,
+                        }
+                        continue;
+                    }
+                    let tok = server.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+                    calls.fetch_add(1, Ordering::Relaxed);
+                    ctx.push(tok);
+                    if tx
+                        .send(Msg::Draft { gen, index: ctx.len() - 1, token: tok })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                let _ = tx.send(Msg::DrafterStopped);
+            })
+        };
+
+        Self {
+            queue,
+            msg_rx,
+            ctrl_tx,
+            current_gen,
+            frontier,
+            depth,
+            drafter_calls_ctr,
+            workers,
+            drafter_handle: Some(drafter_handle),
+            sp_degree,
+            gen: 0,
+        }
+    }
+
+    /// Run one generation. `cfg.sp_degree` is ignored (the pool size was
+    /// fixed at construction).
+    pub fn generate(&mut self, cfg: &OnlineConfig) -> OnlineOutcome {
+        assert!(cfg.lookahead >= 1);
+        let k = cfg.lookahead;
+        let queue = &self.queue;
+
+        // Fresh request: bump the generation (staling any leftovers from
+        // the previous request), point the drafter at the new prompt.
+        self.gen += 1;
+        let mut gen = self.gen;
+        self.current_gen.store(gen, Ordering::Release);
+        self.frontier.store(cfg.prompt.len(), Ordering::Release);
+        self.depth
+            .store(cfg.max_speculation_depth.max(1), Ordering::Release);
+        let drafter_calls_before = self.drafter_calls_ctr.load(Ordering::Relaxed);
+        let _ = self
+            .ctrl_tx
+            .send(Ctrl::Restart { gen, ctx: cfg.prompt.clone() });
+
+        // --- coordinator event loop ---
+        let start = Instant::now();
+        let mut settled = cfg.prompt.clone();
+        let goal = cfg.prompt.len() + cfg.n_tokens;
+        let mut settle_ms: Vec<f64> = Vec::with_capacity(cfg.n_tokens);
+
+        let mut c0 = settled.len(); // context length at generation start
+        let mut drafts: Vec<u32> = Vec::new(); // speculation beyond c0
+        let mut next_task = 1usize; // next block task τ_j to dispatch
+        // Buffered verification results: from-index -> predictions.
+        let mut results: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        // In-flight (queued or running) verification coverage: from -> to.
+        // Gates the chain fallback: a chain task is only worth a forward
+        // when nothing in flight will settle the frontier.
+        let mut inflight: BTreeMap<usize, usize> = BTreeMap::new();
+
+        let mut target_jobs = 0usize;
+        let mut accepted_drafts = 0usize;
+        let mut rejections = 0usize;
+        // Frontier index the chain fallback was last dispatched for. The
+        // chain task (Algorithm 1's target self-thread) fires exactly when
+        // the settle frontier stalls with no covering verification in
+        // flight — the non-SI-pace fallback that makes Theorem 1
+        // unconditional even for near-target-speed drafters.
+        let mut chain_dispatched_for = usize::MAX;
+
+        macro_rules! dispatch_ready_tasks {
+            () => {
+                while next_task >= 1 && drafts.len() >= next_task * k {
+                    let (from, to) =
+                        (c0 + (next_task - 1) * k + 1, c0 + next_task * k + 1);
+                    // Context = generation-start prefix + draft block.
+                    // (`settled` itself may already have grown past c0 by
+                    // settling earlier drafts of this generation.)
+                    let mut ctx = settled[..c0].to_vec();
+                    ctx.extend_from_slice(&drafts[..next_task * k]);
+                    queue.push(Task::Verify { gen, ctx, from, to });
+                    inflight.insert(from, to);
+                    target_jobs += 1;
+                    next_task += 1;
+                }
+            };
+        }
+
+        macro_rules! dispatch_chain_if_stalled {
+            () => {
+                let pos = settled.len();
+                let covered = inflight
+                    .range(..=pos)
+                    .next_back()
+                    .map_or(false, |(_, &to)| to > pos);
+                if pos < goal && chain_dispatched_for != pos && !covered {
+                    chain_dispatched_for = pos;
+                    queue.push(Task::Verify {
+                        gen,
+                        ctx: settled.clone(),
+                        from: pos,
+                        to: pos + 1,
+                    });
+                    inflight.insert(pos, pos + 1);
+                    target_jobs += 1;
+                }
+            };
+        }
+        dispatch_chain_if_stalled!();
+
+        'main: while settled.len() < goal {
+            let msg = match self.msg_rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            };
+            match msg {
+                Msg::DrafterStopped => {}
+                Msg::Draft { gen: g, index, token } => {
+                    if g != gen {
+                        continue; // stale speculation branch
+                    }
+                    debug_assert_eq!(index, c0 + drafts.len(), "draft order");
+                    drafts.push(token);
+                    dispatch_ready_tasks!();
+                }
+                Msg::VerifyDone { gen: g, from, preds } => {
+                    if g != gen {
+                        continue; // preempted (stale) verification
+                    }
+                    // Chain and block results can share a `from`; keep the
+                    // wider coverage (overlapping predictions are identical
+                    // — same deterministic model, same context).
+                    let keep =
+                        results.get(&from).map_or(true, |old| old.len() < preds.len());
+                    if keep {
+                        results.insert(from, preds);
+                    }
+                    inflight.remove(&from);
+                }
+            }
+
+            // Settle in strict position order.
+            'settle: while settled.len() < goal {
+                let pos = settled.len();
+                // Find the buffered result covering `pos` (its from <= pos).
+                let Some((&from, _)) = results.range(..=pos).next_back() else {
+                    break;
+                };
+                let preds = &results[&from];
+                if from + preds.len() <= pos {
+                    // Covers only already-settled ground; drop it.
+                    results.remove(&from);
+                    continue;
+                }
+                let pred = preds[pos - from];
+                // The draft at `pos` must exist to compare (the drafter is
+                // faster than the target, so this only waits in
+                // pathological schedules; we wait for the next Draft).
+                let Some(&draft) = drafts.get(pos - c0) else {
+                    break 'settle;
+                };
+                let now = start.elapsed().as_secs_f64() * 1e3;
+                if draft == pred {
+                    settled.push(draft);
+                    settle_ms.push(now);
+                    accepted_drafts += 1;
+                    self.frontier.store(settled.len(), Ordering::Release);
+                    // fall through: more positions may settle from this result
+                } else {
+                    // Rejection: the verifier's own token is the correction.
+                    settled.push(pred);
+                    settle_ms.push(now);
+                    rejections += 1;
+                    self.frontier.store(settled.len(), Ordering::Release);
+                    if settled.len() >= goal {
+                        break 'main;
+                    }
+                    // Resynchronize: new generation from corrected context.
+                    gen += 1;
+                    self.gen = gen;
+                    self.current_gen.store(gen, Ordering::Release);
+                    queue.clear_verifies();
+                    results.clear();
+                    inflight.clear();
+                    drafts.clear();
+                    c0 = settled.len();
+                    next_task = 1;
+                    let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: settled.clone() });
+                    continue 'settle;
+                }
+            }
+
+            // The frontier is waiting on its next verification with nothing
+            // in flight: launch the chain fallback so progress is never
+            // slower than non-SI.
+            dispatch_chain_if_stalled!();
+        }
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+        // Park the drafter and stale out any in-flight speculation; the
+        // pool threads stay alive for the next request.
+        let _ = self.ctrl_tx.send(Ctrl::Pause);
+        self.gen += 1;
+        self.current_gen.store(self.gen, Ordering::Release);
+        self.queue.clear_verifies();
+
+        let drafter_calls =
+            self.drafter_calls_ctr.load(Ordering::Relaxed) - drafter_calls_before;
+
+        let mut tokens = settled[cfg.prompt.len()..].to_vec();
+        tokens.truncate(cfg.n_tokens);
+        settle_ms.truncate(cfg.n_tokens);
+
+        OnlineOutcome {
+            algo: AlgoKind::Dsi,
+            tokens,
+            wall_ms,
+            ttft_ms: settle_ms.first().copied().unwrap_or(f64::NAN),
+            settle_ms,
+            target_jobs,
+            drafter_calls,
+            accepted_drafts,
+            rejections,
+        }
+    }
+}
+
+impl Drop for DsiPipeline {
+    fn drop(&mut self) {
+        let _ = self.ctrl_tx.send(Ctrl::Stop);
+        for _ in 0..self.sp_degree {
+            self.queue.push(Task::Shutdown);
+        }
+        // Drain so worker sends never block on a full channel (unbounded
+        // mpsc never blocks, but the drafter may be mid-send).
+        while self.msg_rx.try_recv().is_ok() {}
+        if let Some(h) = self.drafter_handle.take() {
+            let _ = h.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+    use crate::coordinator::{run_nonsi, run_si};
+
+    fn engine(p: f64, t: f64, d: f64, seed: u64) -> WaitEngine {
+        WaitEngine {
+            target: LatencyProfile::uniform(t),
+            drafter: LatencyProfile::uniform(d),
+            oracle: Oracle { vocab: 256, acceptance_rate: p, seed },
+            max_context: 8192,
+        }
+    }
+
+    fn cfg(n: usize, k: usize, sp: usize) -> OnlineConfig {
+        OnlineConfig {
+            prompt: vec![10, 20, 30],
+            n_tokens: n,
+            lookahead: k,
+            sp_degree: sp,
+            max_speculation_depth: 64,
+        }
+    }
+
+    /// THE correctness property: DSI output == non-SI greedy output,
+    /// bit-for-bit, under any acceptance rate and parallelism.
+    #[test]
+    fn dsi_is_lossless() {
+        for p in [0.0, 0.3, 0.8, 1.0] {
+            for (k, sp) in [(1, 4), (2, 3), (4, 2)] {
+                let eng = engine(p, 2.0, 0.4, 17);
+                let c = cfg(24, k, sp);
+                let dsi = run_dsi(&eng.factory(), &c);
+                let nonsi = run_nonsi(&eng.factory(), &c);
+                assert_eq!(
+                    dsi.tokens, nonsi.tokens,
+                    "lossless violated at p={p} k={k} sp={sp}"
+                );
+                assert_eq!(dsi.tokens.len(), 24);
+            }
+        }
+    }
+
+    #[test]
+    fn dsi_faster_than_si_with_good_drafter() {
+        // Wait-engine speed check at Table-2-like ratios (scaled down 4x
+        // to keep the test fast): target 5ms, drafter 0.6ms, p=0.9.
+        let eng = engine(0.9, 5.0, 0.6, 23);
+        let c = cfg(40, 2, 5);
+        let dsi = run_dsi(&eng.factory(), &c);
+        let si = run_si(&eng.factory(), &c);
+        assert_eq!(dsi.tokens, si.tokens);
+        assert!(
+            dsi.wall_ms < si.wall_ms,
+            "DSI {:.1}ms !< SI {:.1}ms",
+            dsi.wall_ms,
+            si.wall_ms
+        );
+    }
+
+    #[test]
+    fn dsi_tracks_nonsi_with_hopeless_drafter() {
+        // p=0: every draft rejected; DSI must stay within overhead of
+        // non-SI (Theorem 1), not collapse.
+        let eng = engine(0.0, 5.0, 0.6, 29);
+        let c = cfg(20, 2, 4);
+        let dsi = run_dsi(&eng.factory(), &c);
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(dsi.tokens, nonsi.tokens);
+        // generous 35% overhead budget for channel hops/scheduling
+        assert!(
+            dsi.wall_ms < nonsi.wall_ms * 1.35,
+            "DSI {:.1}ms vs non-SI {:.1}ms",
+            dsi.wall_ms,
+            nonsi.wall_ms
+        );
+        assert_eq!(dsi.accepted_drafts, 0);
+    }
+
+    #[test]
+    fn counters_are_consistent() {
+        let eng = engine(0.7, 3.0, 0.5, 31);
+        let c = cfg(30, 2, 4);
+        let out = run_dsi(&eng.factory(), &c);
+        assert_eq!(out.tokens.len(), 30);
+        assert_eq!(out.accepted_drafts + out.rejections, out.settle_ms.len());
+        assert!(out.target_jobs >= out.rejections);
+        assert!(out.drafter_calls >= out.accepted_drafts);
+        // settle times are monotone
+        for w in out.settle_ms.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let eng = engine(1.0, 4.0, 0.2, 37);
+        let mut c = cfg(30, 2, 4);
+        c.max_speculation_depth = 4;
+        let out = run_dsi(&eng.factory(), &c);
+        assert_eq!(out.tokens.len(), 30);
+        // losslessness unaffected by the depth cap
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens);
+    }
+
+    #[test]
+    fn single_server_pool_still_correct() {
+        let eng = engine(0.5, 3.0, 0.5, 41);
+        let c = cfg(16, 2, 1);
+        let out = run_dsi(&eng.factory(), &c);
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens);
+    }
+}

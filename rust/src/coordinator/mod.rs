@@ -1,0 +1,139 @@
+//! The "online" (§4) coordinator: the paper's L3 contribution as a real
+//! multithreaded system.
+//!
+//! Exactly like the paper's implementation, forward passes are pluggable:
+//! the **wait engine** replaces each forward with a calibrated wait (so the
+//! run incurs every real-world multithreading latency — thread creation,
+//! context switching, channel hops, scheduling — while the "GPU" time is
+//! replayed from measured TTFT/TPOT values), and the **real engine** runs
+//! the AOT-compiled tiny models through PJRT. Both sit behind [`LmServer`].
+//!
+//! The server abstraction is *prediction-oriented*: one verification task
+//! is one `predictions(ctx, from, to)` call returning the model's greedy
+//! next-token prediction at every covered position. Verification is exact
+//! matching of draft tokens against target predictions (Algorithm 1 lines
+//! 8/10), which makes DSI *strictly* lossless: its output is bit-identical
+//! to non-SI greedy decoding of the target model. (The relaxed
+//! rejection-sampling rule lives in `runtime::sampler` and is
+//! property-tested there.)
+
+mod dsi;
+pub mod real_engine;
+mod nonsi;
+mod si;
+pub mod wait_engine;
+
+pub use dsi::{run_dsi, DsiPipeline};
+pub use real_engine::{real_factory, RealServer};
+pub use nonsi::{run_nonsi, run_nonsi_with};
+pub use si::{run_si, run_si_with};
+pub use wait_engine::{WaitEngine, WaitServer};
+
+use crate::config::AlgoKind;
+use std::sync::Arc;
+
+/// A model server owned by exactly one thread (target-pool worker, drafter
+/// thread, or an inline baseline loop).
+pub trait LmServer {
+    /// Greedy predictions for token indices `[from, to)` of the stream
+    /// whose prefix is `ctx` (`ctx.len() >= to - 1`, `from >= 1`):
+    /// `result[i]` is the model's next-token prediction given
+    /// `ctx[..from + i]`. One call == one verification task == one
+    /// (batched) forward pass in the latency model.
+    fn predictions(&mut self, ctx: &[u32], from: usize, to: usize) -> Vec<u32>;
+
+    /// Upper bound on context length (KV capacity). Drafting and
+    /// speculation stop at this horizon.
+    fn max_context(&self) -> usize;
+}
+
+/// Which model a factory should construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerRole {
+    Target,
+    Drafter,
+}
+
+/// Server factory. Servers are constructed *inside* their owning thread
+/// (the PJRT client is not `Send`), so the factory itself must be
+/// shareable across threads.
+pub type ServerFactory = Arc<dyn Fn(ServerRole, usize) -> Box<dyn LmServer> + Send + Sync>;
+
+/// Online-run parameters.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    pub prompt: Vec<u32>,
+    /// Output tokens to generate.
+    pub n_tokens: usize,
+    /// Draft tokens per verification task.
+    pub lookahead: usize,
+    /// Target-server pool size (speculation parallelism degree).
+    pub sp_degree: usize,
+    /// Hard cap on drafted-but-unverified depth (bounded by KV capacity).
+    pub max_speculation_depth: usize,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            prompt: vec![1, 2, 3, 4],
+            n_tokens: 32,
+            lookahead: 2,
+            sp_degree: 4,
+            max_speculation_depth: 24,
+        }
+    }
+}
+
+/// Result of one online generation run.
+#[derive(Debug, Clone)]
+pub struct OnlineOutcome {
+    pub algo: AlgoKind,
+    /// Generated tokens (prompt excluded), truncated to `n_tokens`.
+    pub tokens: Vec<u32>,
+    /// End-to-end wall time, ms.
+    pub wall_ms: f64,
+    /// Wall time until the first output token settled, ms.
+    pub ttft_ms: f64,
+    /// Settle wall time (ms since start) of each output token.
+    pub settle_ms: Vec<f64>,
+    /// Verification tasks executed on target servers.
+    pub target_jobs: usize,
+    /// Drafter forward calls.
+    pub drafter_calls: usize,
+    /// Accepted draft tokens.
+    pub accepted_drafts: usize,
+    /// Rejection (resync) events.
+    pub rejections: usize,
+}
+
+impl OnlineOutcome {
+    pub fn ms_per_token(&self) -> f64 {
+        self.wall_ms / self.tokens.len().max(1) as f64
+    }
+
+    /// Mean decode latency after the first token (the TPOT analogue).
+    pub fn tpot_ms(&self) -> f64 {
+        if self.settle_ms.len() < 2 {
+            return f64::NAN;
+        }
+        (self.wall_ms - self.ttft_ms) / (self.settle_ms.len() - 1) as f64
+    }
+}
+
+/// Longest common prefix of two token slices (resync primitive).
+pub fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn common_prefix() {
+        assert_eq!(common_prefix_len(&[1, 2, 3], &[1, 2, 4, 5]), 2);
+        assert_eq!(common_prefix_len(&[], &[1]), 0);
+        assert_eq!(common_prefix_len(&[7], &[7]), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! Online non-SI baseline: plain autoregressive greedy decoding on a
+//! single target server. Also the losslessness oracle — every other
+//! algorithm's output must equal this one token-for-token.
+
+use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
+use crate::config::AlgoKind;
+use std::time::Instant;
+
+pub fn run_nonsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
+    let mut server = factory(ServerRole::Target, 0);
+    run_nonsi_with(server.as_mut(), cfg)
+}
+
+/// Like [`run_nonsi`] but on a caller-owned (persistent) server — serving
+/// paths reuse the loaded model across requests.
+pub fn run_nonsi_with(server: &mut dyn super::LmServer, cfg: &OnlineConfig) -> OnlineOutcome {
+    let horizon = server.max_context();
+    let mut ctx = cfg.prompt.clone();
+    let n_tokens = cfg.n_tokens.min(horizon.saturating_sub(ctx.len()));
+
+    let start = Instant::now();
+    let mut settle_ms = Vec::with_capacity(n_tokens);
+    let mut jobs = 0usize;
+    for _ in 0..n_tokens {
+        let len = ctx.len();
+        let pred = server.predictions(&ctx, len, len + 1)[0];
+        jobs += 1;
+        ctx.push(pred);
+        settle_ms.push(start.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+    OnlineOutcome {
+        algo: AlgoKind::NonSi,
+        tokens: ctx[cfg.prompt.len()..].to_vec(),
+        wall_ms,
+        ttft_ms: settle_ms.first().copied().unwrap_or(f64::NAN),
+        settle_ms,
+        target_jobs: jobs,
+        drafter_calls: 0,
+        accepted_drafts: 0,
+        rejections: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+
+    #[test]
+    fn produces_oracle_stream_with_expected_timing() {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(2.0),
+            drafter: LatencyProfile::uniform(0.5),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.5, seed: 3 },
+            max_context: 4096,
+        };
+        let cfg = OnlineConfig { n_tokens: 20, ..OnlineConfig::default() };
+        let out = run_nonsi(&eng.factory(), &cfg);
+        assert_eq!(out.tokens.len(), 20);
+        assert_eq!(out.target_jobs, 20);
+        // wall time ~ 20 * 2ms plus small scheduling overhead
+        assert!(out.wall_ms >= 40.0 && out.wall_ms < 80.0, "{}", out.wall_ms);
+        // tokens are the oracle's canonical stream
+        let mut ctx = cfg.prompt.clone();
+        for &t in &out.tokens {
+            assert_eq!(t, eng.oracle.target_token(&ctx));
+            ctx.push(t);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Real-compute engine: [`LmServer`] backed by the AOT-compiled PJRT
+//! models. This is the end-to-end configuration — every verification task
+//! and draft is an actual forward pass of the tiny GPT pair through the
+//! Pallas-kerneled decode step.
+//!
+//! Each server compiles its own executables and owns its own KV cache
+//! (the paper: "Each server maintains its own KV cache"). Resynchronizing
+//! after a rejection reuses the longest shared prefix and re-decodes only
+//! the divergent suffix.
+
+use super::{common_prefix_len, LmServer, ServerFactory, ServerRole};
+use crate::runtime::pjrt::{ModelRole, ModelRuntime, Session};
+use crate::runtime::sampler::argmax;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+pub struct RealServer {
+    rt: ModelRuntime,
+    sess: Session,
+}
+
+impl RealServer {
+    pub fn load(artifacts: &std::path::Path, role: ServerRole) -> anyhow::Result<Self> {
+        let model_role = match role {
+            ServerRole::Target => ModelRole::Target,
+            ServerRole::Drafter => ModelRole::Drafter,
+        };
+        let rt = ModelRuntime::load(artifacts, model_role)?;
+        let sess = rt.new_session()?;
+        Ok(Self { rt, sess })
+    }
+}
+
+impl LmServer for RealServer {
+    fn predictions(&mut self, ctx: &[u32], from: usize, to: usize) -> Vec<u32> {
+        assert!(from >= 1 && to > from && ctx.len() >= to - 1, "bad range {from}..{to}");
+        let shared = common_prefix_len(&self.sess.tokens, ctx);
+
+        let mut preds = Vec::with_capacity(to - from);
+        if shared == 0 || self.sess.pos == 0 {
+            // Cold (or fully divergent) cache: prefill through the first
+            // needed prediction, then decode the rest.
+            let pre = from.min(ctx.len()); // prefill ctx[..from] predicts index `from`
+            self.sess = self.rt.new_session().expect("session");
+            let logits = self.rt.prefill(&mut self.sess, &ctx[..pre]).expect("prefill");
+            preds.push(argmax(&logits));
+            for idx in pre..to - 1 {
+                let logits = self.rt.decode_step(&mut self.sess, ctx[idx]).expect("decode");
+                preds.push(argmax(&logits));
+            }
+            // preds now covers indices pre..to; keep [from, to)
+            let skip = from - pre; // == 0
+            return preds[skip..].to_vec();
+        }
+
+        // Warm cache: roll back to the useful prefix and decode forward.
+        let resume = shared.min(from - 1);
+        self.rt.rollback(&mut self.sess, resume);
+        for idx in resume..to - 1 {
+            let logits = self.rt.decode_step(&mut self.sess, ctx[idx]).expect("decode");
+            if idx + 1 >= from {
+                preds.push(argmax(&logits));
+            }
+        }
+        debug_assert_eq!(preds.len(), to - from);
+        preds
+    }
+
+    fn max_context(&self) -> usize {
+        self.rt.max_seq
+    }
+}
+
+/// Factory loading servers from an artifact directory. Compilation happens
+/// once per server thread at startup (analogous to model load on a GPU).
+pub fn real_factory(artifacts: PathBuf) -> ServerFactory {
+    Arc::new(move |role, _id| {
+        Box::new(RealServer::load(&artifacts, role).expect("loading AOT artifacts"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = Path::new("artifacts");
+        p.join("manifest.json").exists().then(|| p.to_path_buf())
+    }
+
+    #[test]
+    fn predictions_match_plain_decode() {
+        let Some(dir) = artifacts() else { return };
+        let mut s = RealServer::load(&dir, ServerRole::Target).unwrap();
+        let ctx: Vec<u32> = vec![5, 9, 200, 31, 77, 12];
+        // predictions for indices 2..6 in one call
+        let batch = s.predictions(&ctx, 2, 6);
+
+        // same thing step by step on a fresh server
+        let mut s2 = RealServer::load(&dir, ServerRole::Target).unwrap();
+        let mut singles = Vec::new();
+        for i in 2..6 {
+            singles.push(s2.predictions(&ctx[..i], i, i + 1)[0]);
+        }
+        assert_eq!(batch, singles);
+    }
+
+    #[test]
+    fn resync_after_divergence() {
+        let Some(dir) = artifacts() else { return };
+        let mut s = RealServer::load(&dir, ServerRole::Drafter).unwrap();
+        let ctx_a: Vec<u32> = vec![1, 2, 3, 4, 5, 6];
+        let ctx_b: Vec<u32> = vec![1, 2, 3, 9, 9, 9];
+        let a1 = s.predictions(&ctx_a, 4, 7);
+        let _b = s.predictions(&ctx_b, 4, 7); // diverge
+        let a2 = s.predictions(&ctx_a, 4, 7); // resync back
+        assert_eq!(a1, a2);
+    }
+}

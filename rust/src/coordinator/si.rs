@@ -1,0 +1,143 @@
+//! Online SI baseline (Leviathan et al. 2023): blocking draft-then-verify
+//! with one target server and one drafter server — the sequential
+//! algorithm DSI parallelizes.
+//!
+//! Each iteration drafts `lookahead` tokens (sequential drafter forwards),
+//! then runs ONE batched target verification covering the drafted block
+//! plus the bonus position. Accepted prefix + one target token settle per
+//! iteration.
+
+use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
+use crate::config::AlgoKind;
+use std::time::Instant;
+
+pub fn run_si(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
+    let mut target = factory(ServerRole::Target, 0);
+    let mut drafter = factory(ServerRole::Drafter, 0);
+    run_si_with(target.as_mut(), drafter.as_mut(), cfg)
+}
+
+/// Like [`run_si`] but on caller-owned (persistent) servers.
+pub fn run_si_with(
+    target: &mut dyn super::LmServer,
+    drafter: &mut dyn super::LmServer,
+    cfg: &OnlineConfig,
+) -> OnlineOutcome {
+    let horizon = target.max_context().min(drafter.max_context());
+    let k = cfg.lookahead;
+
+    let mut ctx = cfg.prompt.clone();
+    let n_tokens = cfg.n_tokens.min(horizon.saturating_sub(ctx.len() + k + 1));
+    let goal = cfg.prompt.len() + n_tokens;
+
+    let start = Instant::now();
+    let mut settle_ms = Vec::new();
+    let mut target_jobs = 0usize;
+    let mut drafter_calls = 0usize;
+    let mut accepted_drafts = 0usize;
+    let mut rejections = 0usize;
+
+    while ctx.len() < goal {
+        let base = ctx.len();
+        // Draft k tokens sequentially (blocking, by SI's definition).
+        let mut drafts = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut probe = ctx.clone();
+            probe.extend_from_slice(&drafts);
+            let t = drafter.predictions(&probe, probe.len(), probe.len() + 1)[0];
+            drafter_calls += 1;
+            drafts.push(t);
+        }
+        // One batched verification: predictions for indices base..base+k
+        // (k draft positions + the bonus position).
+        let mut probe = ctx.clone();
+        probe.extend_from_slice(&drafts);
+        let preds = target.predictions(&probe, base, base + k + 1);
+        target_jobs += 1;
+
+        // Accept the longest matching prefix, then one target token
+        // (correction on mismatch, bonus on all-accept).
+        let mut i = 0;
+        while i < k && drafts[i] == preds[i] {
+            ctx.push(drafts[i]);
+            settle_ms.push(f64::NAN); // settle together below
+            accepted_drafts += 1;
+            i += 1;
+        }
+        ctx.push(preds[i]); // bonus (i == k) or correction (i < k)
+        settle_ms.push(f64::NAN);
+        if i < k {
+            rejections += 1;
+        }
+        // All tokens of the iteration settle when verification returns.
+        let now = start.elapsed().as_secs_f64() * 1e3;
+        for s in settle_ms.iter_mut().rev().take(i + 1) {
+            *s = now;
+        }
+    }
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+    let mut tokens = ctx[cfg.prompt.len()..].to_vec();
+    tokens.truncate(n_tokens);
+    settle_ms.truncate(n_tokens);
+
+    OnlineOutcome {
+        algo: AlgoKind::Si,
+        tokens,
+        wall_ms,
+        ttft_ms: settle_ms.first().copied().unwrap_or(f64::NAN),
+        settle_ms,
+        target_jobs,
+        drafter_calls,
+        accepted_drafts,
+        rejections,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::coordinator::run_nonsi;
+    use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+
+    fn engine(p: f64, t: f64, d: f64) -> WaitEngine {
+        WaitEngine {
+            target: LatencyProfile::uniform(t),
+            drafter: LatencyProfile::uniform(d),
+            oracle: Oracle { vocab: 256, acceptance_rate: p, seed: 9 },
+            max_context: 4096,
+        }
+    }
+
+    #[test]
+    fn si_is_lossless_wrt_nonsi() {
+        // Exact-match SI must reproduce greedy non-SI output exactly.
+        for p in [0.0, 0.6, 1.0] {
+            let eng = engine(p, 2.0, 0.4);
+            let cfg = OnlineConfig { n_tokens: 24, lookahead: 3, ..OnlineConfig::default() };
+            let si = run_si(&eng.factory(), &cfg);
+            let nonsi = run_nonsi(&eng.factory(), &cfg);
+            assert_eq!(si.tokens, nonsi.tokens, "p={p}");
+        }
+    }
+
+    #[test]
+    fn perfect_drafter_reduces_target_jobs() {
+        let eng = engine(1.0, 2.0, 0.2);
+        let cfg = OnlineConfig { n_tokens: 24, lookahead: 3, ..OnlineConfig::default() };
+        let out = run_si(&eng.factory(), &cfg);
+        // k+1 = 4 tokens per verification.
+        assert!(out.target_jobs <= 24 / 4 + 1, "jobs {}", out.target_jobs);
+        assert_eq!(out.rejections, 0);
+    }
+
+    #[test]
+    fn hopeless_drafter_one_token_per_job() {
+        let eng = engine(0.0, 2.0, 0.2);
+        let cfg = OnlineConfig { n_tokens: 12, lookahead: 3, ..OnlineConfig::default() };
+        let out = run_si(&eng.factory(), &cfg);
+        assert_eq!(out.accepted_drafts, 0);
+        assert!(out.target_jobs >= 12);
+    }
+}

@@ -1,0 +1,43 @@
+//! # DSI — Distributed Speculative Inference
+//!
+//! Rust + JAX + Pallas reproduction of *"Distributed Speculative Inference
+//! (DSI): Speculation Parallelism for Provably Faster Lossless Language
+//! Model Inference"* (Timor et al., ICLR 2025).
+//!
+//! The crate is organized in the paper's own strata:
+//!
+//! - [`config`] — experiment configuration, paper presets (Tables 2/3), TOML
+//!   config files for the launcher.
+//! - [`simulator`] — the discrete-event ("offline", §4.1) simulator of
+//!   non-SI / SI / DSI / PEARL; regenerates the Figure 2 & 7 heatmaps,
+//!   Table 1, and the analytical ablations.
+//! - [`coordinator`] — the "online" (§4) implementation: real OS threads, a
+//!   pool of target servers (speculation parallelism), a drafter server, and
+//!   the rejection-synchronization protocol. Forward passes are pluggable:
+//!   calibrated waits (the paper's methodology) or real PJRT executions.
+//! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
+//!   from JAX/Pallas by `python/compile/aot.py`) into PJRT CPU executables;
+//!   npy weight loading, sampling, KV-cache state, byte tokenizer.
+//! - [`server`] — the serving front: request queue, router, batcher,
+//!   sessions, metrics. DSI is a first-class scheduling policy here.
+//! - [`workload`] — synthetic prompt corpora and arrival processes.
+//! - [`stats`] — acceptance-rate estimation (geometric fit, §F.2), summary
+//!   statistics, speedup ratios.
+//! - [`report`] — regenerates every paper table/figure as text + CSV.
+//!
+//! Python never runs on the request path: `make artifacts` is the only time
+//! JAX executes, and the resulting HLO text + npy weights are all the Rust
+//! binary needs.
+
+pub mod config;
+pub mod coordinator;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+pub use config::{AlgoKind, ExperimentConfig, LatencyProfile, PairPreset};
+pub use simulator::{SimOutcome, simulate};

@@ -1,0 +1,396 @@
+//! `repro` — the DSI reproduction launcher.
+//!
+//! Every table and figure of the paper has a subcommand; `repro all`
+//! regenerates the lot into `results/`. Arg parsing is hand-rolled (the
+//! build environment vendors no CLI crates) but follows clap conventions:
+//! `repro <command> [--flag value]...`.
+
+use dsi::config::{AlgoKind, ExperimentConfig, LatencyProfile};
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{real_factory, run_dsi, run_nonsi, run_si, OnlineConfig};
+use dsi::report;
+use dsi::runtime::tokenizer;
+use dsi::server::router::Router;
+use dsi::server::Server;
+use dsi::simulator::sweep::SweepSpec;
+use dsi::workload::{PromptGen, PromptProfile};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const USAGE: &str = r#"repro — Distributed Speculative Inference (DSI) reproduction
+
+USAGE: repro <command> [flags]
+
+COMMANDS (paper artifacts):
+  table1                Table 1: tokens over time, worst/best case
+  table2                Table 2: DSI vs SI speedups, online thread-pool runs
+                          --scale F (default 0.25; 1.0 = real ms)
+                          --tokens N (default 50)  --repeats N (default 3)
+  table3                Table 3: TTFT/TPOT ratios
+  timeline              Figure 1: settle traces (CSV)
+  heatmap               Figure 2: offline sweep heatmaps
+                          --fine (paper-resolution grid; slow)
+                          --lookahead K (fixed-k variant = Figure 7)
+  mp-compare            §3.1 SP-vs-MP break-even analysis
+  all                   regenerate everything above into results/
+
+COMMANDS (system):
+  compare               one offline config, all four algorithms
+                          --target MS --drafter MS --accept P --lookahead K
+                          --sp N --tokens N
+  serve                 serve a synthetic workload through the full stack
+                          --engine wait|real (default wait)
+                          --algo dsi|si|nonsi  --requests N  --tokens N
+                          --profile instruction|summarization|code
+  generate              generate text with the real AOT model pair
+                          --algo dsi|si|nonsi  --prompt STR  --tokens N
+  calibrate             measure the tiny pair's TTFT/TPOT + acceptance rate
+
+FLAGS:
+  --out DIR             results directory (default results/)
+  --artifacts DIR       AOT artifacts (default artifacts/)
+"#;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    let out_dir = PathBuf::from(flags.get("out").map(String::as_str).unwrap_or("results"));
+    let artifacts =
+        PathBuf::from(flags.get("artifacts").map(String::as_str).unwrap_or("artifacts"));
+
+    let result = match cmd.as_str() {
+        "table1" => cmd_table1(&out_dir),
+        "table2" => cmd_table2(&out_dir, &flags),
+        "table3" => cmd_table3(&out_dir),
+        "timeline" => cmd_timeline(&out_dir),
+        "heatmap" => cmd_heatmap(&out_dir, &flags),
+        "mp-compare" => cmd_mp(&out_dir),
+        "all" => cmd_all(&out_dir, &flags),
+        "compare" => cmd_compare(&flags),
+        "serve" => cmd_serve(&artifacts, &flags),
+        "generate" => cmd_generate(&artifacts, &flags),
+        "calibrate" => cmd_calibrate(&artifacts),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}").into()),
+    };
+
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type CmdResult = Result<(), Box<dyn std::error::Error>>;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let boolean = matches!(name, "fine" | "full");
+            if boolean {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let val = args.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(name.to_string(), val);
+                i += 2;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_table1(out: &Path) -> CmdResult {
+    println!("== Table 1: tokens generated over time (Figure-1 configuration) ==\n");
+    print!("{}", report::table1_report(out));
+    println!("\nCSV: {}", out.join("table1.csv").display());
+    Ok(())
+}
+
+fn cmd_table2(out: &Path, flags: &HashMap<String, String>) -> CmdResult {
+    let scale = flag_f64(flags, "scale", 0.25);
+    let tokens = flag_usize(flags, "tokens", 50);
+    let repeats = flag_usize(flags, "repeats", 3);
+    println!(
+        "== Table 2: DSI vs SI, online thread-pool runs (scale {scale}, {tokens} tokens, \
+         {repeats} repeats) ==\n"
+    );
+    print!("{}", report::table2_report(out, scale, tokens, repeats));
+    println!("\nCSV: {}", out.join("table2.csv").display());
+    Ok(())
+}
+
+fn cmd_table3(out: &Path) -> CmdResult {
+    println!("== Table 3: TTFT/TPOT ratios ==\n");
+    print!("{}", report::table3_report(out));
+    Ok(())
+}
+
+fn cmd_timeline(out: &Path) -> CmdResult {
+    println!("== Figure 1: settle traces ==\n");
+    print!("{}", report::timeline_report(out));
+    println!("\nCSV: {}", out.join("figure1_traces.csv").display());
+    Ok(())
+}
+
+fn cmd_heatmap(out: &Path, flags: &HashMap<String, String>) -> CmdResult {
+    let mut spec = if flags.contains_key("fine") {
+        SweepSpec::fine()
+    } else {
+        SweepSpec::default()
+    };
+    let name = if let Some(k) = flags.get("lookahead") {
+        spec.fixed_lookahead = Some(k.parse()?);
+        format!("figure7_lookahead{k}")
+    } else {
+        "figure2".to_string()
+    };
+    println!("== {} heatmap sweep ==\n", name);
+    print!("{}", report::heatmap_report(out, &spec, &name));
+    println!("CSV: {}", out.join(format!("{name}.csv")).display());
+    Ok(())
+}
+
+fn cmd_mp(out: &Path) -> CmdResult {
+    println!("== §3.1: MP-vs-SP break-even ==\n");
+    print!("{}", report::mp_report(out));
+    Ok(())
+}
+
+fn cmd_all(out: &Path, flags: &HashMap<String, String>) -> CmdResult {
+    cmd_table1(out)?;
+    println!();
+    cmd_table2(out, flags)?;
+    println!();
+    cmd_table3(out)?;
+    println!();
+    cmd_timeline(out)?;
+    println!();
+    cmd_heatmap(out, flags)?;
+    println!();
+    let mut f7 = flags.clone();
+    f7.insert("lookahead".into(), "5".into());
+    cmd_heatmap(out, &f7)?;
+    println!();
+    cmd_mp(out)
+}
+
+fn cmd_compare(flags: &HashMap<String, String>) -> CmdResult {
+    let cfg = ExperimentConfig {
+        target: LatencyProfile::uniform(flag_f64(flags, "target", 30.0)),
+        drafter: LatencyProfile::uniform(flag_f64(flags, "drafter", 3.0)),
+        acceptance_rate: flag_f64(flags, "accept", 0.8),
+        lookahead: flag_usize(flags, "lookahead", 5),
+        sp_degree: flag_usize(flags, "sp", 7),
+        n_tokens: flag_usize(flags, "tokens", 100),
+        ..ExperimentConfig::default()
+    };
+    cfg.validate().map_err(|e| -> Box<dyn std::error::Error> { e.into() })?;
+    println!(
+        "== offline comparison (target {}ms, drafter {}ms, accept {}, k={}, SP={}) ==\n",
+        cfg.target.tpot_ms,
+        cfg.drafter.tpot_ms,
+        cfg.acceptance_rate,
+        cfg.lookahead,
+        cfg.sp_degree
+    );
+    print!("{}", report::compare_report(&cfg));
+    Ok(())
+}
+
+fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
+    let algo = match flags.get("algo").map(String::as_str).unwrap_or("dsi") {
+        "dsi" => AlgoKind::Dsi,
+        "si" => AlgoKind::Si,
+        "nonsi" => AlgoKind::NonSi,
+        other => return Err(format!("unknown algo {other}").into()),
+    };
+    let n_requests = flag_usize(flags, "requests", 8);
+    let n_tokens = flag_usize(flags, "tokens", 32);
+    let profile = match flags.get("profile").map(String::as_str).unwrap_or("instruction") {
+        "instruction" => PromptProfile::Instruction,
+        "summarization" => PromptProfile::Summarization,
+        "code" => PromptProfile::Code,
+        other => return Err(format!("unknown profile {other}").into()),
+    };
+    let engine = flags.get("engine").map(String::as_str).unwrap_or("wait");
+
+    let (factory, target_lat, drafter_lat, max_prompt) = match engine {
+        "real" => {
+            let m = dsi::runtime::Manifest::load(artifacts)?;
+            println!(
+                "serving real AOT pair ({} + {} layers)",
+                m.target.n_layers, m.drafter.n_layers
+            );
+            (
+                real_factory(artifacts.to_path_buf()),
+                LatencyProfile::uniform(4.0),
+                LatencyProfile::uniform(2.0),
+                m.config.max_seq.saturating_sub(n_tokens + 8),
+            )
+        }
+        "wait" => {
+            let eng = WaitEngine {
+                target: LatencyProfile::new(40.0, 8.0),
+                drafter: LatencyProfile::new(5.0, 1.0),
+                oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 1 },
+                max_context: 4096,
+            };
+            (eng.factory(), eng.target, eng.drafter, 1024)
+        }
+        other => return Err(format!("unknown engine {other}").into()),
+    };
+
+    let router = Router::new(target_lat, drafter_lat, 7);
+    let mut srv = Server::new(factory, router, algo).with_max_depth(16);
+    let mut gen = PromptGen::new(11, 256);
+    let mut reqs = gen.closed_loop(n_requests, profile, n_tokens);
+    for r in &mut reqs {
+        r.prompt.truncate(max_prompt.max(4));
+    }
+    println!(
+        "serving {n_requests} {} requests x {n_tokens} tokens via {} ({engine} engine)...\n",
+        profile.name(),
+        algo.name()
+    );
+    let t0 = std::time::Instant::now();
+    let resps = srv.serve(&reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", srv.metrics.snapshot().render());
+    println!(
+        "wall {:.2}s  |  {:.1} tok/s end-to-end  |  acceptance estimate {:.3}",
+        wall,
+        resps.iter().map(|r| r.tokens.len()).sum::<usize>() as f64 / wall,
+        srv.router.acceptance_estimate()
+    );
+    Ok(())
+}
+
+fn cmd_generate(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
+    let algo = match flags.get("algo").map(String::as_str).unwrap_or("dsi") {
+        "dsi" => AlgoKind::Dsi,
+        "si" => AlgoKind::Si,
+        "nonsi" => AlgoKind::NonSi,
+        other => return Err(format!("unknown algo {other}").into()),
+    };
+    let prompt_text = flags
+        .get("prompt")
+        .cloned()
+        .unwrap_or_else(|| "Hello, distributed speculation".to_string());
+    let n_tokens = flag_usize(flags, "tokens", 24);
+
+    let factory = real_factory(artifacts.to_path_buf());
+    let cfg = OnlineConfig {
+        prompt: tokenizer::encode(&prompt_text),
+        n_tokens,
+        lookahead: 2,
+        sp_degree: flag_usize(flags, "sp", 2),
+        max_speculation_depth: 12,
+    };
+    println!("generating {n_tokens} tokens via {} (real engine)...", algo.name());
+    let out = match algo {
+        AlgoKind::Dsi => run_dsi(&factory, &cfg),
+        AlgoKind::Si => run_si(&factory, &cfg),
+        _ => run_nonsi(&factory, &cfg),
+    };
+    println!(
+        "wall {:.1}ms  ttft {:.1}ms  tpot {:.2}ms  jobs={} drafts={} accepted={} rejections={}",
+        out.wall_ms,
+        out.ttft_ms,
+        out.tpot_ms(),
+        out.target_jobs,
+        out.drafter_calls,
+        out.accepted_drafts,
+        out.rejections
+    );
+    println!("tokens: {:?}", out.tokens);
+    println!("text:   {:?}", tokenizer::decode(&out.tokens));
+    Ok(())
+}
+
+fn cmd_calibrate(artifacts: &Path) -> CmdResult {
+    use dsi::coordinator::{real_engine::RealServer, LmServer, ServerRole};
+    use std::time::Instant;
+
+    println!("calibrating the tiny AOT pair on this machine...\n");
+    let mut results = Vec::new();
+    for role in [ServerRole::Target, ServerRole::Drafter] {
+        let mut s = RealServer::load(artifacts, role)?;
+        // TTFT: fresh prefill of a 16-token prompt.
+        let prompt: Vec<u32> = (1..=16).collect();
+        let t0 = Instant::now();
+        let _ = s.predictions(&prompt, 16, 17);
+        let ttft = t0.elapsed().as_secs_f64() * 1e3;
+        // TPOT: 32 single-token decode steps.
+        let mut ctx = prompt.clone();
+        let t0 = Instant::now();
+        for _ in 0..32 {
+            let t = s.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+            ctx.push(t);
+        }
+        let tpot = t0.elapsed().as_secs_f64() * 1e3 / 32.0;
+        println!(
+            "{:?}: TTFT {:.2}ms  TPOT {:.3}ms  ratio {:.2}",
+            role,
+            ttft,
+            tpot,
+            ttft / tpot
+        );
+        results.push((role, ttft, tpot));
+    }
+
+    // Acceptance rate (§F.2): longest-match runs between greedy streams.
+    let mut target = RealServer::load(artifacts, ServerRole::Target)?;
+    let mut drafter = RealServer::load(artifacts, ServerRole::Drafter)?;
+    let mut runs = Vec::new();
+    let mut gen = PromptGen::new(3, 256);
+    for _ in 0..8 {
+        let prompt = gen.prompt(PromptProfile::Instruction);
+        let mut ctx = prompt.clone();
+        let mut run = 0usize;
+        for _ in 0..48 {
+            let t = target.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+            let d = drafter.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+            if t == d {
+                run += 1;
+            } else {
+                runs.push(run);
+                run = 0;
+            }
+            ctx.push(t);
+            if ctx.len() + 2 >= target.max_context() {
+                break;
+            }
+        }
+        runs.push(run);
+    }
+    let rate = dsi::stats::acceptance_rate_from_runs(&runs);
+    println!("\nacceptance rate (geometric fit over {} runs): {:.3}", runs.len(), rate);
+    println!(
+        "\nEq-1 operating point for an 8-GPU node: SP=7, lookahead={}",
+        dsi::config::min_lookahead_for_sp(results[0].2, results[1].2, 7)
+    );
+    Ok(())
+}

@@ -1,0 +1,434 @@
+//! Report harness: regenerates every table and figure of the paper as
+//! aligned text (stdout) plus CSV under `results/`.
+//!
+//! | Paper artifact | Function |
+//! |----------------|----------|
+//! | Table 1        | [`table1_report`]  |
+//! | Table 2        | [`table2_report`]  |
+//! | Table 3        | [`table3_report`]  |
+//! | Figure 1       | [`timeline_report`] |
+//! | Figure 2 (a-d) | [`heatmap_report`] |
+//! | Figure 7 (a-c) | [`heatmap_report`] with fixed lookahead 5 |
+//! | §3.1 MP vs SP  | [`mp_report`]      |
+
+use crate::config::{paper_pairs, required_sp, AlgoKind, LatencyProfile};
+use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+use crate::coordinator::{run_dsi, run_si, OnlineConfig};
+use crate::simulator::sweep::{run_sweep, summarize, SweepSpec};
+use crate::simulator::timeline;
+use crate::util::par_map;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            let _ = write!(out, "{:<w$}  ", c, w = widths[i]);
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(
+        &mut out,
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Write rows as CSV (simple quoting: fields are numeric/identifier-ish).
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut s = headers.join(",");
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    std::fs::write(path, s)
+}
+
+/// Table 1: tokens generated at sample times, worst/best case.
+pub fn table1_report(out_dir: &Path) -> String {
+    // Sample at multiples of the target forward time (100 ms in the
+    // Figure-1 configuration), like the figure's t1..t4 marks.
+    let times: Vec<f64> = (1..=4).map(|i| i as f64 * 200.0).collect();
+    let rows_data = timeline::table1(&times, 64);
+    let mut rows = Vec::new();
+    for r in &rows_data {
+        let mut row = vec![r.case.to_string(), r.algo.name().to_string()];
+        row.extend(r.tokens_at.iter().map(|t| t.to_string()));
+        rows.push(row);
+    }
+    let headers = vec!["case", "algo", "t1", "t2", "t3", "t4"];
+    let _ = write_csv(&out_dir.join("table1.csv"), &headers, &rows);
+    render_table(&headers, &rows)
+}
+
+/// One row of our Table 2 reproduction.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub label: String,
+    pub target_ms: f64,
+    pub drafter_ms: f64,
+    pub drafter_pct: f64,
+    pub acceptance: f64,
+    pub si_best_ms: f64,
+    pub si_best_lookahead: usize,
+    pub dsi_best_ms: f64,
+    pub dsi_best_lookahead: usize,
+    pub speedup: f64,
+    pub paper_speedup: f64,
+}
+
+/// Table 2: the main experiment. Online (real OS threads, calibrated
+/// waits) DSI vs SI for the paper's ten measured pairs.
+///
+/// `scale` scales all latencies (1.0 = the paper's real milliseconds;
+/// smaller is faster to run and leaves ratios intact because every wait
+/// scales together). `repeats` averages wall times.
+pub fn table2_rows(scale: f64, n_tokens: usize, repeats: usize) -> Vec<Table2Row> {
+    let pairs = paper_pairs();
+    par_map(pairs, |pair| {
+        let target = LatencyProfile::new(pair.target.ttft_ms * scale, pair.target.tpot_ms * scale);
+        let drafter =
+            LatencyProfile::new(pair.drafter.ttft_ms * scale, pair.drafter.tpot_ms * scale);
+        let lookaheads = [1usize, 5, 10];
+
+        let mut best_si = (f64::INFINITY, 0usize);
+        let mut best_dsi = (f64::INFINITY, 0usize);
+        for &k in &lookaheads {
+            let mut si_ms = 0.0;
+            let mut dsi_ms = 0.0;
+            let mut dsi_runs = 0usize;
+            for rep in 0..repeats {
+                let eng = WaitEngine {
+                    target,
+                    drafter,
+                    oracle: Oracle {
+                        vocab: 256,
+                        acceptance_rate: pair.acceptance_rate,
+                        seed: 1000 + rep as u64,
+                    },
+                    max_context: 16 * 1024,
+                };
+                let cfg = OnlineConfig {
+                    prompt: vec![1, 2, 3, 4],
+                    n_tokens,
+                    lookahead: k,
+                    sp_degree: 7,
+                    max_speculation_depth: 4096,
+                };
+                si_ms += run_si(&eng.factory(), &cfg).wall_ms;
+                // DSI only on single-node-deployable lookaheads (Eq. 1,
+                // SP = 7) — the paper's Table 2 restriction.
+                if required_sp(target.tpot_ms, drafter.tpot_ms, k) <= 7 {
+                    dsi_ms += run_dsi(&eng.factory(), &cfg).wall_ms;
+                    dsi_runs += 1;
+                }
+            }
+            let si_mean = si_ms / repeats as f64;
+            if si_mean < best_si.0 {
+                best_si = (si_mean, k);
+            }
+            if dsi_runs > 0 {
+                let dsi_mean = dsi_ms / dsi_runs as f64;
+                if dsi_mean < best_dsi.0 {
+                    best_dsi = (dsi_mean, k);
+                }
+            }
+        }
+
+        Table2Row {
+            label: pair.label(),
+            target_ms: pair.target.tpot_ms,
+            drafter_ms: pair.drafter.tpot_ms,
+            drafter_pct: pair.drafter_latency_pct(),
+            acceptance: pair.acceptance_rate,
+            si_best_ms: best_si.0 / scale,
+            si_best_lookahead: best_si.1,
+            dsi_best_ms: best_dsi.0 / scale,
+            dsi_best_lookahead: best_dsi.1,
+            speedup: best_si.0 / best_dsi.0,
+            paper_speedup: pair.paper_speedup_dsi_vs_si,
+        }
+    })
+}
+
+pub fn table2_report(out_dir: &Path, scale: f64, n_tokens: usize, repeats: usize) -> String {
+    let rows_data = table2_rows(scale, n_tokens, repeats);
+    let headers = vec![
+        "pair",
+        "t_ms",
+        "d_ms",
+        "d_%",
+        "accept",
+        "SI_ms(k)",
+        "DSI_ms(k)",
+        "speedup",
+        "paper",
+    ];
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.1}", r.target_ms),
+                format!("{:.1}", r.drafter_ms),
+                format!("{:.1}", r.drafter_pct),
+                format!("{:.2}", r.acceptance),
+                format!("{:.0}({})", r.si_best_ms, r.si_best_lookahead),
+                format!("{:.0}({})", r.dsi_best_ms, r.dsi_best_lookahead),
+                format!("{:.2}x", r.speedup),
+                format!("{:.2}x", r.paper_speedup),
+            ]
+        })
+        .collect();
+    let _ = write_csv(&out_dir.join("table2.csv"), &headers, &rows);
+    render_table(&headers, &rows)
+}
+
+/// Table 3: TTFT/TPOT ratios of the checked-in presets.
+pub fn table3_report(out_dir: &Path) -> String {
+    let headers = vec!["model", "dataset", "ttft/tpot"];
+    let mut rows = Vec::new();
+    for pair in paper_pairs() {
+        rows.push(vec![
+            pair.target_name.to_string(),
+            pair.dataset.to_string(),
+            format!("{:.2}", pair.target.ttft_tpot_ratio()),
+        ]);
+        rows.push(vec![
+            pair.drafter_name.to_string(),
+            pair.dataset.to_string(),
+            format!("{:.2}", pair.drafter.ttft_tpot_ratio()),
+        ]);
+    }
+    rows.dedup();
+    let _ = write_csv(&out_dir.join("table3.csv"), &headers, &rows);
+    render_table(&headers, &rows)
+}
+
+/// Figure 1: settle traces for the three algorithms (worst/best case).
+pub fn timeline_report(out_dir: &Path) -> String {
+    let traces = timeline::figure1_traces(48);
+    let headers = vec!["case", "algo", "time_ms", "tokens"];
+    let mut rows = Vec::new();
+    let mut text = String::new();
+    for (case, algo, out) in &traces {
+        let _ = writeln!(
+            text,
+            "{case:5} {:7} total={:8.1}ms tokens={} target_fwds={}",
+            algo.name(),
+            out.total_ms,
+            out.tokens,
+            out.target_forwards
+        );
+        for e in &out.trace {
+            rows.push(vec![
+                case.to_string(),
+                algo.name().to_string(),
+                format!("{:.2}", e.time_ms),
+                e.tokens.to_string(),
+            ]);
+        }
+    }
+    let _ = write_csv(&out_dir.join("figure1_traces.csv"), &headers, &rows);
+    text
+}
+
+/// Figures 2 & 7: heatmap sweeps. Writes the full grid CSV and returns a
+/// textual summary of the panel extrema.
+pub fn heatmap_report(out_dir: &Path, spec: &SweepSpec, name: &str) -> String {
+    let cells = run_sweep(spec);
+    let headers = vec![
+        "drafter_frac",
+        "acceptance",
+        "nonsi_ms",
+        "si_ms",
+        "si_k",
+        "dsi_ms",
+        "dsi_k",
+        "si_over_nonsi",
+        "dsi_speedup_vs_si",
+        "dsi_speedup_vs_nonsi",
+        "dsi_speedup_vs_baseline",
+    ];
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                format!("{:.3}", c.drafter_frac),
+                format!("{:.3}", c.acceptance_rate),
+                format!("{:.2}", c.nonsi_ms),
+                format!("{:.2}", c.si_ms),
+                c.si_lookahead.to_string(),
+                format!("{:.2}", c.dsi_ms),
+                c.dsi_lookahead.to_string(),
+                format!("{:.4}", c.si_over_nonsi()),
+                format!("{:.4}", c.dsi_speedup_vs_si()),
+                format!("{:.4}", c.dsi_speedup_vs_nonsi()),
+                format!("{:.4}", c.dsi_speedup_vs_baseline()),
+            ]
+        })
+        .collect();
+    let _ = write_csv(&out_dir.join(format!("{name}.csv")), &headers, &rows);
+
+    let s = summarize(&cells);
+    format!(
+        "{name}: {} cells\n\
+         (a) SI/non-SI : SI slower than non-SI on {:.1}% of the grid (paper: pink region exists)\n\
+         (b) DSI vs SI : max speedup {:.2}x\n\
+         (c) DSI vs non-SI : max speedup {:.2}x, min {:.3}x (paper: never < 1)\n\
+         (d) DSI vs min(SI, non-SI): max {:.2}x, min {:.3}x (paper: up to ~1.6x, never < 1)\n",
+        s.cells,
+        100.0 * s.si_slowdown_frac,
+        s.max_dsi_vs_si,
+        s.max_dsi_vs_nonsi,
+        s.min_dsi_vs_nonsi,
+        s.max_dsi_vs_baseline,
+        s.min_dsi_vs_baseline,
+    )
+}
+
+/// §3.1 MP-vs-SP comparison.
+pub fn mp_report(out_dir: &Path) -> String {
+    let headers = vec![
+        "acceptance",
+        "lookahead",
+        "gpus",
+        "visible_fwd_frac",
+        "mp_breakeven_analytic",
+        "mp_breakeven_simulated",
+    ];
+    let mut rows = Vec::new();
+    let mut text = String::new();
+    for a in [0.5, 0.6, 0.7, 0.8, 0.9, 0.95] {
+        let c = crate::simulator::mp_vs_sp(0.10, a, 2, 300);
+        let _ = writeln!(
+            text,
+            "a={a:.2}: MP must accelerate forwards {:.2}x (analytic {:.2}x) on the same \
+             {}-GPU budget to match DSI",
+            c.mp_breakeven_speedup_simulated, c.mp_breakeven_speedup_analytic, c.gpu_budget
+        );
+        rows.push(vec![
+            format!("{a:.2}"),
+            "2".into(),
+            c.gpu_budget.to_string(),
+            format!("{:.3}", c.dsi_visible_forward_frac),
+            format!("{:.3}", c.mp_breakeven_speedup_analytic),
+            format!("{:.3}", c.mp_breakeven_speedup_simulated),
+        ]);
+    }
+    let _ = write_csv(&out_dir.join("mp_vs_sp.csv"), &headers, &rows);
+    text
+}
+
+/// Algorithms side by side on one offline config (quick CLI view).
+pub fn compare_report(cfg: &crate::config::ExperimentConfig) -> String {
+    let headers = vec![
+        "algo",
+        "total_ms",
+        "ms/token",
+        "target_fwds",
+        "drafter_fwds",
+        "accepted",
+        "rejections",
+    ];
+    let rows: Vec<Vec<String>> = AlgoKind::ALL
+        .iter()
+        .map(|&algo| {
+            let out = crate::simulator::simulate(algo, cfg);
+            vec![
+                algo.name().to_string(),
+                format!("{:.1}", out.total_ms),
+                format!("{:.2}", out.ms_per_token()),
+                out.target_forwards.to_string(),
+                out.drafter_forwards.to_string(),
+                out.accepted_drafts.to_string(),
+                out.rejections.to_string(),
+            ]
+        })
+        .collect();
+    render_table(&headers, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let t = render_table(
+            &["a", "long_header"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same length modulo trailing spaces
+        assert!(lines[1].starts_with("---"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dsi_csv_test");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["x", "y"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "x,y\n1,2\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn table1_has_all_rows() {
+        let dir = std::env::temp_dir().join("dsi_t1_test");
+        let t = table1_report(&dir);
+        assert_eq!(t.lines().count(), 2 + 6); // header+sep + 2 cases * 3 algos
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn table3_covers_presets() {
+        let dir = std::env::temp_dir().join("dsi_t3_test");
+        let t = table3_report(&dir);
+        assert!(t.contains("Starcoder-15B"));
+        assert!(t.contains("Vicuna-68M"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compare_report_runs() {
+        let t = compare_report(&crate::config::ExperimentConfig::default());
+        assert!(t.contains("DSI") && t.contains("PEARL"));
+    }
+
+    #[test]
+    fn table2_fast_smoke() {
+        // Reduced scale + few tokens: structural check that DSI >= SI
+        // never inverts badly. (At 0.2x scale the fastest drafter wait is
+        // 0.5 ms, so coordinator scheduling overhead is a visible but
+        // bounded fraction — especially on the single-core build machine;
+        // the full-scale run in EXPERIMENTS.md uses scale 1.0 where
+        // overhead is negligible.)
+        let rows = table2_rows(0.2, 16, 1);
+        assert_eq!(rows.len(), 10);
+        for r in &rows {
+            assert!(r.speedup > 0.75, "{}: speedup {}", r.label, r.speedup);
+            assert!(r.dsi_best_ms.is_finite());
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (which writes it) and the Rust runtime (which loads models from it).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model hyperparameters shared by the target/drafter pair.
+#[derive(Debug, Clone)]
+pub struct HyperParams {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub d_ff: usize,
+    pub seed: u64,
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub n_layers: usize,
+    pub decode_hlo: PathBuf,
+    pub prefill_hlo: PathBuf,
+    pub weight_files: Vec<PathBuf>,
+    pub cache_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: HyperParams,
+    pub target: ModelEntry,
+    pub drafter: ModelEntry,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
+
+        let cfg = v.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let get_usize = |key: &str| -> Result<usize> {
+            cfg.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config.{key} missing"))
+        };
+        let config = HyperParams {
+            vocab: get_usize("vocab")?,
+            d_model: get_usize("d_model")?,
+            n_heads: get_usize("n_heads")?,
+            head_dim: get_usize("head_dim")?,
+            max_seq: get_usize("max_seq")?,
+            d_ff: get_usize("d_ff")?,
+            seed: get_usize("seed")? as u64,
+        };
+
+        let models = v.get("models").ok_or_else(|| anyhow!("manifest missing models"))?;
+        let parse_model = |name: &str| -> Result<ModelEntry> {
+            let m = models
+                .get(name)
+                .ok_or_else(|| anyhow!("manifest missing models.{name}"))?;
+            let s = |key: &str| -> Result<String> {
+                m.get(key)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("models.{name}.{key} missing"))
+            };
+            let weight_files = m
+                .get("weights")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("models.{name}.weights missing"))?
+                .iter()
+                .map(|w| {
+                    w.as_str()
+                        .map(|p| dir.join(p))
+                        .ok_or_else(|| anyhow!("non-string weight path"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let cache_shape = m
+                .get("cache_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("models.{name}.cache_shape missing"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad cache dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ModelEntry {
+                n_layers: m
+                    .get("n_layers")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("models.{name}.n_layers missing"))?,
+                decode_hlo: dir.join(s("decode_hlo")?),
+                prefill_hlo: dir.join(s("prefill_hlo")?),
+                weight_files,
+                cache_shape,
+            })
+        };
+
+        let manifest = Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            target: parse_model("target")?,
+            drafter: parse_model("drafter")?,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        if c.d_model != c.n_heads * c.head_dim {
+            anyhow::bail!("d_model {} != n_heads*head_dim", c.d_model);
+        }
+        for (name, m) in [("target", &self.target), ("drafter", &self.drafter)] {
+            let expect = vec![m.n_layers, 2, c.n_heads, c.max_seq, c.head_dim];
+            if m.cache_shape != expect {
+                anyhow::bail!("{name} cache_shape {:?} != {:?}", m.cache_shape, expect);
+            }
+            if m.weight_files.is_empty() {
+                anyhow::bail!("{name} has no weights");
+            }
+        }
+        if self.drafter.n_layers >= self.target.n_layers {
+            anyhow::bail!("drafter must be smaller than target (Assumption 2)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run in this checkout
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.config.vocab, 256);
+        assert_eq!(m.target.n_layers, 4);
+        assert_eq!(m.drafter.n_layers, 2);
+        assert_eq!(m.target.weight_files.len(), 52);
+        assert_eq!(m.drafter.weight_files.len(), 28);
+        assert!(m.target.decode_hlo.exists());
+        assert!(m.drafter.prefill_hlo.exists());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

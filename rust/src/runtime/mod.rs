@@ -1,0 +1,19 @@
+//! The AOT runtime bridge: everything needed to run the JAX/Pallas-lowered
+//! models from Rust with no Python on the request path.
+//!
+//! - [`npy`] — reads the weight arrays dumped by `aot.py`.
+//! - [`manifest`] — the artifact contract (`artifacts/manifest.json`).
+//! - [`pjrt`] — PJRT CPU client wrapper: compile HLO text once, then
+//!   prefill/decode with a functional KV cache owned by Rust.
+//! - [`sampler`] — greedy/temperature/top-k selection and the lossless
+//!   rejection-sampling verification rule.
+//! - [`tokenizer`] — byte-level text <-> token ids.
+
+pub mod manifest;
+pub mod npy;
+pub mod pjrt;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use manifest::Manifest;
+pub use pjrt::{ModelRole, ModelRuntime, Session};

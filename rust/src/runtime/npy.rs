@@ -1,0 +1,232 @@
+//! Minimal NumPy `.npy` reader — loads the weight arrays written by
+//! `python/compile/aot.py` (`np.save`, format v1.0, little-endian f32/i32,
+//! C order). No external deps; the dialect is controlled by our own
+//! writer, so unsupported dtypes are a hard error, not a fallback.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+impl NpyArray {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            NpyData::I32(_) => bail!("expected f32 array, found i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v),
+            NpyData::F32(_) => bail!("expected i32 array, found f32"),
+        }
+    }
+}
+
+/// Load a `.npy` file.
+pub fn load_npy(path: &Path) -> Result<NpyArray> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    parse_npy(&bytes).with_context(|| format!("parsing {path:?}"))
+}
+
+/// Parse `.npy` bytes (v1.0/v2.0 headers).
+pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+    const MAGIC: &[u8] = b"\x93NUMPY";
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not an npy file (bad magic)");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+        2 => {
+            if bytes.len() < 12 {
+                bail!("truncated v2 header");
+            }
+            (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12,
+            )
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header_end = header_start + header_len;
+    if bytes.len() < header_end {
+        bail!("truncated header");
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_end])
+        .context("header not utf-8")?;
+
+    let descr = extract_quoted(header, "descr").context("missing descr")?;
+    let fortran = header
+        .split("'fortran_order'")
+        .nth(1)
+        .map(|s| s.trim_start().trim_start_matches(':').trim_start())
+        .map(|s| s.starts_with("True"))
+        .unwrap_or(false);
+    if fortran {
+        bail!("fortran_order arrays unsupported");
+    }
+    let shape = extract_shape(header).context("missing shape")?;
+    let count: usize = shape.iter().product();
+
+    let payload = &bytes[header_end..];
+    let data = match descr.as_str() {
+        "<f4" => {
+            if payload.len() < count * 4 {
+                bail!("payload too short: {} < {}", payload.len(), count * 4);
+            }
+            NpyData::F32(
+                payload[..count * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        "<i4" => {
+            if payload.len() < count * 4 {
+                bail!("payload too short");
+            }
+            NpyData::I32(
+                payload[..count * 4]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        "<i8" => {
+            // np.save of default ints; downcast checked.
+            if payload.len() < count * 8 {
+                bail!("payload too short");
+            }
+            let v: Result<Vec<i32>> = payload[..count * 8]
+                .chunks_exact(8)
+                .map(|c| {
+                    let x = i64::from_le_bytes([
+                        c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                    ]);
+                    i32::try_from(x).context("i64 value out of i32 range")
+                })
+                .collect();
+            NpyData::I32(v?)
+        }
+        other => bail!("unsupported dtype {other:?} (writer emits <f4/<i4)"),
+    };
+
+    Ok(NpyArray { shape, data })
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let after = header.split(&format!("'{key}'")).nth(1)?;
+    let after = after.trim_start().strip_prefix(':')?.trim_start();
+    let after = after.strip_prefix('\'')?;
+    Some(after.split('\'').next()?.to_string())
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let after = header.split("'shape'").nth(1)?;
+    let open = after.find('(')?;
+    let close = after[open..].find(')')? + open;
+    let inner = &after[open + 1..close];
+    let mut dims = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue; // trailing comma of 1-tuples
+        }
+        dims.push(p.parse().ok()?);
+    }
+    Some(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built npy v1 bytes for [[1.0, 2.0], [3.0, 4.0]] f32.
+    fn sample_f32() -> Vec<u8> {
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (2, 2), }";
+        let mut h = header.as_bytes().to_vec();
+        // pad to 64-byte alignment with spaces + newline, as numpy does
+        let total = 10 + h.len() + 1;
+        let pad = (64 - total % 64) % 64;
+        h.extend(std::iter::repeat(b' ').take(pad));
+        h.push(b'\n');
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend((h.len() as u16).to_le_bytes());
+        out.extend(&h);
+        for v in [1f32, 2.0, 3.0, 4.0] {
+            out.extend(v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_f32() {
+        let arr = parse_npy(&sample_f32()).unwrap();
+        assert_eq!(arr.shape, vec![2, 2]);
+        assert_eq!(arr.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let header = "{'descr': '<i4', 'fortran_order': False, 'shape': (3,), }";
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend((header.len() as u16).to_le_bytes());
+        out.extend(header.as_bytes());
+        for v in [7i32, -1, 0] {
+            out.extend(v.to_le_bytes());
+        }
+        let arr = parse_npy(&out).unwrap();
+        assert_eq!(arr.shape, vec![3]);
+        assert_eq!(arr.as_i32().unwrap(), &[7, -1, 0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_npy(b"NOTNUMPYxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_fortran_order() {
+        let header = "{'descr': '<f4', 'fortran_order': True, 'shape': (1,), }";
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend((header.len() as u16).to_le_bytes());
+        out.extend(header.as_bytes());
+        out.extend(1f32.to_le_bytes());
+        assert!(parse_npy(&out).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut b = sample_f32();
+        b.truncate(b.len() - 4);
+        assert!(parse_npy(&b).is_err());
+    }
+
+    #[test]
+    fn roundtrip_real_artifacts_if_present() {
+        // Integration-ish: if `make artifacts` has run, spot-check a weight.
+        let p = std::path::Path::new("artifacts/weights/target/000_tok_emb.npy");
+        if p.exists() {
+            let arr = load_npy(p).unwrap();
+            assert_eq!(arr.shape, vec![256, 128]);
+            assert_eq!(arr.element_count(), 256 * 128);
+            assert!(arr.as_f32().unwrap().iter().all(|x| x.is_finite()));
+        }
+    }
+}

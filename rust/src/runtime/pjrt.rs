@@ -1,0 +1,244 @@
+//! PJRT model executor: loads the AOT artifacts (HLO text + npy weights)
+//! and runs prefill/decode from Rust. This is the only place forward
+//! passes happen at serve time — Python is not involved.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so every server thread constructs its own [`ModelRuntime`]. That
+//! mirrors the paper's deployment, where each target/drafter server is a
+//! separate GPU process with its own weights and KV cache.
+
+use super::manifest::{Manifest, ModelEntry};
+use super::npy::{load_npy, NpyData};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which of the pair to load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelRole {
+    Target,
+    Drafter,
+}
+
+/// A loaded, compiled model: executables + weight literals.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    exe_decode: xla::PjRtLoadedExecutable,
+    exe_prefill: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    pub vocab: usize,
+    pub max_seq: usize,
+    cache_elems: usize,
+    cache_dims: Vec<i64>,
+}
+
+/// Mutable per-sequence state: the KV cache and its fill level.
+pub struct Session {
+    cache: xla::Literal,
+    /// Number of tokens already processed into the cache.
+    pub pos: usize,
+    /// The context tokens processed so far (for rollback/resync checks).
+    pub tokens: Vec<u32>,
+}
+
+impl ModelRuntime {
+    /// Load one model from the artifact directory.
+    pub fn load(dir: &Path, role: ModelRole) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let entry = match role {
+            ModelRole::Target => &manifest.target,
+            ModelRole::Drafter => &manifest.drafter,
+        };
+        Self::load_entry(entry, manifest.config.vocab, manifest.config.max_seq)
+    }
+
+    fn load_entry(entry: &ModelEntry, vocab: usize, max_seq: usize) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+        };
+        let exe_decode = compile(&entry.decode_hlo)?;
+        let exe_prefill = compile(&entry.prefill_hlo)?;
+
+        let mut weights = Vec::with_capacity(entry.weight_files.len());
+        for wf in &entry.weight_files {
+            let arr = load_npy(wf)?;
+            let dims: Vec<i64> = arr.shape.iter().map(|&d| d as i64).collect();
+            let lit = match &arr.data {
+                NpyData::F32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+                NpyData::I32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+            };
+            weights.push(lit);
+        }
+
+        let cache_dims: Vec<i64> = entry.cache_shape.iter().map(|&d| d as i64).collect();
+        let cache_elems: usize = entry.cache_shape.iter().product();
+        Ok(ModelRuntime {
+            client,
+            exe_decode,
+            exe_prefill,
+            weights,
+            vocab,
+            max_seq,
+            cache_elems,
+            cache_dims,
+        })
+    }
+
+    /// Fresh session with a zeroed KV cache.
+    pub fn new_session(&self) -> Result<Session> {
+        let zeros = vec![0f32; self.cache_elems];
+        let cache = xla::Literal::vec1(zeros.as_slice()).reshape(&self.cache_dims)?;
+        Ok(Session { cache, pos: 0, tokens: Vec::new() })
+    }
+
+    /// Process a whole prompt with the prefill executable; returns the
+    /// logits predicting the token after the prompt. Resets the session.
+    pub fn prefill(&self, sess: &mut Session, prompt: &[u32]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        if prompt.len() > self.max_seq {
+            bail!("prompt len {} > max_seq {}", prompt.len(), self.max_seq);
+        }
+        let mut padded = vec![0i32; self.max_seq];
+        for (i, &t) in prompt.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let tokens = xla::Literal::vec1(padded.as_slice());
+        let length = xla::Literal::vec1(&[prompt.len() as i32]);
+
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&tokens);
+        args.push(&length);
+        // Reuse the session cache buffer as the functional input.
+        let cache = std::mem::replace(&mut sess.cache, xla::Literal::vec1(&[0f32]));
+        args.push(&cache);
+
+        let result = self.exe_prefill.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_cache) = result.to_tuple2()?;
+        sess.cache = new_cache;
+        sess.pos = prompt.len();
+        sess.tokens = prompt.to_vec();
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// One decode step: process `token` at the session's current position;
+    /// returns logits predicting the next token.
+    pub fn decode_step(&self, sess: &mut Session, token: u32) -> Result<Vec<f32>> {
+        if sess.pos >= self.max_seq {
+            bail!("KV cache full (max_seq {})", self.max_seq);
+        }
+        let t = xla::Literal::vec1(&[token as i32]);
+        let p = xla::Literal::vec1(&[sess.pos as i32]);
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&t);
+        args.push(&p);
+        let cache = std::mem::replace(&mut sess.cache, xla::Literal::vec1(&[0f32]));
+        args.push(&cache);
+
+        let result = self.exe_decode.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_cache) = result.to_tuple2()?;
+        sess.cache = new_cache;
+        sess.pos += 1;
+        sess.tokens.push(token);
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// Roll the session back so only the first `len` tokens remain. The
+    /// cache rows beyond `len` are stale but unreachable: the decode
+    /// kernel masks rows > pos and new writes overwrite them.
+    pub fn rollback(&self, sess: &mut Session, len: usize) {
+        assert!(len <= sess.pos, "rollback {len} beyond pos {}", sess.pos);
+        sess.pos = len;
+        sess.tokens.truncate(len);
+    }
+
+    /// Platform info string (for logs).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<&'static Path> {
+        let p = Path::new("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn target_loads_and_decodes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(dir, ModelRole::Target).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        let logits = rt.prefill(&mut sess, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(logits.len(), rt.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        let logits2 = rt.decode_step(&mut sess, 7).unwrap();
+        assert_eq!(logits2.len(), rt.vocab);
+        assert_eq!(sess.pos, 5);
+        assert_eq!(sess.tokens, vec![1, 2, 3, 4, 7]);
+    }
+
+    #[test]
+    fn prefill_matches_decode_chain() {
+        // The core incremental-consistency property, now across the AOT
+        // boundary: prefill(prompt) logits == decode-step-by-step logits.
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(dir, ModelRole::Drafter).unwrap();
+        let prompt = [5u32, 250, 17, 99, 3];
+
+        let mut s1 = rt.new_session().unwrap();
+        let via_prefill = rt.prefill(&mut s1, &prompt).unwrap();
+
+        let mut s2 = rt.new_session().unwrap();
+        let mut last = rt.prefill(&mut s2, &prompt[..1]).unwrap();
+        for &t in &prompt[1..] {
+            last = rt.decode_step(&mut s2, t).unwrap();
+        }
+        for (a, b) in via_prefill.iter().zip(&last) {
+            assert!((a - b).abs() < 1e-3, "prefill {a} vs decode {b}");
+        }
+    }
+
+    #[test]
+    fn rollback_then_rewrite_is_consistent() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(dir, ModelRole::Drafter).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        rt.prefill(&mut sess, &[1, 2, 3]).unwrap();
+        let clean = rt.decode_step(&mut sess, 42).unwrap();
+
+        // Diverge, roll back, re-decode the same token: logits must match.
+        rt.rollback(&mut sess, 3);
+        rt.decode_step(&mut sess, 99).unwrap();
+        rt.rollback(&mut sess, 3);
+        let redo = rt.decode_step(&mut sess, 42).unwrap();
+        for (a, b) in clean.iter().zip(&redo) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cache_full_is_error() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = ModelRuntime::load(dir, ModelRole::Drafter).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        rt.prefill(&mut sess, &vec![1; rt.max_seq]).unwrap();
+        assert!(rt.decode_step(&mut sess, 1).is_err());
+    }
+}

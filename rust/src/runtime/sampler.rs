@@ -1,0 +1,178 @@
+//! Token selection from logits: greedy, temperature, top-k — plus the
+//! lossless speculative rejection-sampling rule (Leviathan et al. 2023)
+//! used by the relaxed verification mode.
+
+use crate::util::Rng64;
+
+/// Greedy argmax (ties break to the lowest index, like jnp.argmax).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f64> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Sample from a temperature-scaled, optionally top-k-truncated
+/// distribution. `temperature == 0` degrades to greedy.
+pub fn sample(logits: &[f32], temperature: f64, top_k: usize, rng: &mut Rng64) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&x| (x as f64 / temperature) as f32).collect();
+    let mut probs = softmax(&scaled);
+    if top_k > 0 && top_k < probs.len() {
+        // zero all but the k largest, renormalize
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        for &i in &idx[top_k..] {
+            probs[i] = 0.0;
+        }
+        let z: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= z;
+        }
+    }
+    sample_from_probs(&probs, rng)
+}
+
+/// Inverse-CDF sampling from a probability vector.
+pub fn sample_from_probs(probs: &[f64], rng: &mut Rng64) -> u32 {
+    let u = rng.gen_f64();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i as u32;
+        }
+    }
+    (probs.len() - 1) as u32
+}
+
+/// Lossless speculative verification of ONE draft token (Leviathan et al.):
+/// accept draft `x` with probability `min(1, p_target(x)/p_draft(x))`;
+/// on rejection, resample from `norm(max(0, p_target - p_draft))`.
+///
+/// Returns `(accepted, token)` where `token == x` iff accepted.
+pub fn rejection_sample_verify(
+    target_logits: &[f32],
+    draft_logits: &[f32],
+    draft_token: u32,
+    rng: &mut Rng64,
+) -> (bool, u32) {
+    let p = softmax(target_logits);
+    let q = softmax(draft_logits);
+    let x = draft_token as usize;
+    let ratio = if q[x] > 0.0 { (p[x] / q[x]).min(1.0) } else { 1.0 };
+    if rng.gen_f64() < ratio {
+        return (true, draft_token);
+    }
+    // residual distribution
+    let mut resid: Vec<f64> = p.iter().zip(&q).map(|(&pi, &qi)| (pi - qi).max(0.0)).collect();
+    let z: f64 = resid.iter().sum();
+    if z <= 0.0 {
+        // identical distributions: acceptance should have been 1.0
+        return (true, draft_token);
+    }
+    for r in &mut resid {
+        *r /= z;
+    }
+    (false, sample_from_probs(&resid, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0]), 0); // tie -> lowest index
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng64::seed_from_u64(0);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], 0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut rng = Rng64::seed_from_u64(1);
+        let logits = [0.0f32, 2.0, 0.0, 0.0];
+        let n = 50_000;
+        let hits = (0..n)
+            .filter(|_| sample(&logits, 1.0, 0, &mut rng) == 1)
+            .count();
+        let expect = softmax(&logits)[1];
+        let freq = hits as f64 / n as f64;
+        assert!((freq - expect).abs() < 0.01, "freq {freq} expect {expect}");
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let mut rng = Rng64::seed_from_u64(2);
+        let logits = [10.0f32, 9.0, -50.0, -50.0];
+        for _ in 0..1000 {
+            let t = sample(&logits, 1.0, 2, &mut rng);
+            assert!(t < 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    /// The rejection-sampling rule is lossless: the marginal output
+    /// distribution equals the target distribution regardless of drafts.
+    #[test]
+    fn rejection_sampling_preserves_target_distribution() {
+        let mut rng = Rng64::seed_from_u64(3);
+        let target = [1.0f32, 0.0, 2.0, -1.0];
+        let draft = [2.0f32, 1.0, -1.0, 0.0]; // deliberately misaligned
+        let p_target = softmax(&target);
+        let q_draft = softmax(&draft);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            // draft proposes from its own distribution
+            let x = sample_from_probs(&q_draft, &mut rng);
+            let (_, tok) = rejection_sample_verify(&target, &draft, x, &mut rng);
+            counts[tok as usize] += 1;
+        }
+        for i in 0..4 {
+            let freq = counts[i] as f64 / n as f64;
+            assert!(
+                (freq - p_target[i]).abs() < 0.01,
+                "token {i}: freq {freq} vs target {}",
+                p_target[i]
+            );
+        }
+    }
+
+    #[test]
+    fn identical_distributions_always_accept() {
+        let mut rng = Rng64::seed_from_u64(4);
+        let logits = [0.5f32, 1.5, -0.5];
+        for tok in 0..3u32 {
+            let (acc, t) = rejection_sample_verify(&logits, &logits, tok, &mut rng);
+            assert!(acc);
+            assert_eq!(t, tok);
+        }
+    }
+}

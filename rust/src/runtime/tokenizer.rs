@@ -1,0 +1,44 @@
+//! Byte-level tokenizer: token id == byte value (vocab 256), matching the
+//! L2 model's vocabulary. Lossless on arbitrary UTF-8 input.
+
+/// Encode a string to token ids.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.as_bytes().iter().map(|&b| b as u32).collect()
+}
+
+/// Decode token ids back to a string (lossy on invalid UTF-8 — generated
+/// bytes from an untrained model are not guaranteed to be valid text).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello DSI";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ☃";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        assert_eq!(encode("A"), vec![65]);
+        assert!(encode("é").len() == 2); // two UTF-8 bytes
+    }
+
+    #[test]
+    fn invalid_bytes_lossy() {
+        let garbage = vec![0xFFu32, 0xFE, 65];
+        let s = decode(&garbage);
+        assert!(s.ends_with('A'));
+    }
+}

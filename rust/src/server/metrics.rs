@@ -1,0 +1,121 @@
+//! Serving metrics: TTFT / TPOT / end-to-end latency distributions and
+//! throughput, aggregated across requests.
+
+use crate::stats::{percentile, OnlineStats};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    ttft: OnlineStats,
+    wall: OnlineStats,
+    queue: OnlineStats,
+    ttft_samples: Vec<f64>,
+    wall_samples: Vec<f64>,
+    tokens: u64,
+    requests: u64,
+    busy_ms: f64,
+}
+
+/// A point-in-time summary.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub tokens: u64,
+    pub ttft_mean_ms: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub wall_mean_ms: f64,
+    pub wall_p50_ms: f64,
+    pub wall_p99_ms: f64,
+    pub queue_mean_ms: f64,
+    pub tokens_per_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, resp: &super::Response) {
+        self.ttft.push(resp.ttft_ms);
+        self.wall.push(resp.wall_ms);
+        self.queue.push(resp.queue_ms);
+        self.ttft_samples.push(resp.ttft_ms);
+        self.wall_samples.push(resp.wall_ms);
+        self.tokens += resp.tokens.len() as u64;
+        self.requests += 1;
+        self.busy_ms += resp.wall_ms;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            requests: self.requests,
+            tokens: self.tokens,
+            ttft_mean_ms: self.ttft.mean(),
+            ttft_p50_ms: percentile(&self.ttft_samples, 50.0),
+            ttft_p99_ms: percentile(&self.ttft_samples, 99.0),
+            wall_mean_ms: self.wall.mean(),
+            wall_p50_ms: percentile(&self.wall_samples, 50.0),
+            wall_p99_ms: percentile(&self.wall_samples, 99.0),
+            queue_mean_ms: self.queue.mean(),
+            tokens_per_s: if self.busy_ms > 0.0 {
+                self.tokens as f64 / (self.busy_ms / 1e3)
+            } else {
+                f64::NAN
+            },
+        }
+    }
+}
+
+impl Snapshot {
+    /// Render as aligned text for logs and the e2e example.
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} tokens={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
+             e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | {:.1} tok/s",
+            self.requests,
+            self.tokens,
+            self.ttft_mean_ms,
+            self.ttft_p50_ms,
+            self.ttft_p99_ms,
+            self.wall_mean_ms,
+            self.wall_p50_ms,
+            self.wall_p99_ms,
+            self.queue_mean_ms,
+            self.tokens_per_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgoKind;
+
+    fn resp(ttft: f64, wall: f64, n: usize) -> crate::server::Response {
+        crate::server::Response {
+            id: 0,
+            tokens: vec![0; n],
+            text: String::new(),
+            ttft_ms: ttft,
+            wall_ms: wall,
+            queue_ms: 1.0,
+            algo: AlgoKind::Dsi,
+            lookahead: 2,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::new();
+        m.observe(&resp(10.0, 100.0, 20));
+        m.observe(&resp(20.0, 200.0, 30));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens, 50);
+        assert!((s.ttft_mean_ms - 15.0).abs() < 1e-9);
+        assert!((s.wall_mean_ms - 150.0).abs() < 1e-9);
+        // 50 tokens over 300ms busy
+        assert!((s.tokens_per_s - 50.0 / 0.3).abs() < 1e-6);
+        assert!(!s.render().is_empty());
+    }
+}

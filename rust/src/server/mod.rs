@@ -1,0 +1,219 @@
+//! The serving front: request handling on top of the DSI coordinator.
+//!
+//! A downstream user deploys DSI behind this layer: requests arrive (open
+//! or closed loop), the [`router`] picks the operating point (lookahead /
+//! SP split via Equation 1, from calibrated latencies and the online
+//! acceptance-rate estimate), the generation loop runs the selected
+//! algorithm, and [`metrics`] aggregates TTFT/TPOT/throughput.
+
+pub mod metrics;
+pub mod router;
+
+use crate::config::AlgoKind;
+use crate::coordinator::{
+    run_nonsi_with, run_si_with, DsiPipeline, LmServer, OnlineConfig, ServerFactory,
+    ServerRole,
+};
+use crate::runtime::tokenizer;
+use crate::workload::Request;
+use metrics::Metrics;
+use router::Router;
+use std::time::Instant;
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    /// Wall ms from dispatch to first output token.
+    pub ttft_ms: f64,
+    /// Wall ms for the whole generation.
+    pub wall_ms: f64,
+    /// Queueing delay before dispatch, ms.
+    pub queue_ms: f64,
+    pub algo: AlgoKind,
+    pub lookahead: usize,
+}
+
+/// Serving engine: owns the router and metrics; executes requests
+/// sequentially (one generation at a time — the single-node regime where
+/// DSI spends the node's GPUs on speculation parallelism rather than
+/// request parallelism).
+pub struct Server {
+    factory: ServerFactory,
+    pub router: Router,
+    pub metrics: Metrics,
+    algo: AlgoKind,
+    max_speculation_depth: usize,
+    /// Persistent DSI pipeline (threads + loaded models live across
+    /// requests); lazily constructed on the first DSI request.
+    dsi: Option<DsiPipeline>,
+    /// Persistent single servers for the sequential baselines.
+    target_srv: Option<Box<dyn LmServer>>,
+    drafter_srv: Option<Box<dyn LmServer>>,
+}
+
+impl Server {
+    pub fn new(factory: ServerFactory, router: Router, algo: AlgoKind) -> Self {
+        Self {
+            factory,
+            router,
+            metrics: Metrics::new(),
+            algo,
+            max_speculation_depth: 24,
+            dsi: None,
+            target_srv: None,
+            drafter_srv: None,
+        }
+    }
+
+    pub fn with_max_depth(mut self, depth: usize) -> Self {
+        self.max_speculation_depth = depth;
+        self
+    }
+
+    /// Serve a full workload; honors arrival times (open loop) by waiting.
+    pub fn serve(&mut self, requests: &[Request]) -> Vec<Response> {
+        let epoch = Instant::now();
+        let mut responses = Vec::with_capacity(requests.len());
+        for req in requests {
+            // Open-loop pacing.
+            let now_ms = epoch.elapsed().as_secs_f64() * 1e3;
+            if req.arrival_ms > now_ms {
+                crate::coordinator::wait_engine::precise_wait(req.arrival_ms - now_ms);
+            }
+            let dispatched_ms = epoch.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = (dispatched_ms - req.arrival_ms).max(0.0);
+
+            let resp = self.execute(req, queue_ms);
+            self.metrics.observe(&resp);
+            responses.push(resp);
+        }
+        responses
+    }
+
+    fn execute(&mut self, req: &Request, queue_ms: f64) -> Response {
+        let plan = self.router.plan(self.algo);
+        let cfg = OnlineConfig {
+            prompt: req.prompt.clone(),
+            n_tokens: req.max_new_tokens,
+            lookahead: plan.lookahead,
+            sp_degree: plan.sp_degree,
+            max_speculation_depth: self.max_speculation_depth,
+        };
+        let out = match self.algo {
+            AlgoKind::Dsi => {
+                let factory = &self.factory;
+                let sp = plan.sp_degree;
+                self.dsi
+                    .get_or_insert_with(|| DsiPipeline::new(factory, sp))
+                    .generate(&cfg)
+            }
+            AlgoKind::Si => {
+                let factory = &self.factory;
+                let target = self
+                    .target_srv
+                    .get_or_insert_with(|| factory(ServerRole::Target, 0));
+                let drafter = self
+                    .drafter_srv
+                    .get_or_insert_with(|| factory(ServerRole::Drafter, 0));
+                run_si_with(target.as_mut(), drafter.as_mut(), &cfg)
+            }
+            AlgoKind::NonSi | AlgoKind::Pearl => {
+                let factory = &self.factory;
+                let target = self
+                    .target_srv
+                    .get_or_insert_with(|| factory(ServerRole::Target, 0));
+                run_nonsi_with(target.as_mut(), &cfg)
+            }
+        };
+        // Feed the acceptance estimator (§F.2 online variant).
+        self.router
+            .observe_run(out.accepted_drafts, out.rejections.max(1));
+
+        Response {
+            id: req.id,
+            text: tokenizer::decode(&out.tokens),
+            tokens: out.tokens,
+            ttft_ms: out.ttft_ms,
+            wall_ms: out.wall_ms,
+            queue_ms,
+            algo: self.algo,
+            lookahead: plan.lookahead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+    use crate::workload::{PromptGen, PromptProfile};
+
+    fn wait_factory(p: f64) -> (ServerFactory, WaitEngine) {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(2.0),
+            drafter: LatencyProfile::uniform(0.4),
+            oracle: Oracle { vocab: 256, acceptance_rate: p, seed: 5 },
+            max_context: 4096,
+        };
+        (eng.factory(), eng)
+    }
+
+    #[test]
+    fn serves_closed_loop_and_records_metrics() {
+        let (factory, _) = wait_factory(0.9);
+        let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 4);
+        let mut srv = Server::new(factory, router, AlgoKind::Dsi);
+        let mut gen = PromptGen::new(1, 256);
+        let reqs = gen.closed_loop(4, PromptProfile::Instruction, 12);
+        let resps = srv.serve(&reqs);
+        assert_eq!(resps.len(), 4);
+        for r in &resps {
+            assert_eq!(r.tokens.len(), 12);
+            assert!(r.wall_ms > 0.0);
+        }
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.tokens, 48);
+        assert!(snap.tokens_per_s > 0.0);
+    }
+
+    #[test]
+    fn dsi_server_beats_si_server_on_throughput() {
+        // Latencies large enough that the expected DSI-vs-SI margin (~2x
+        // at p=0.95) dwarfs scheduling noise from parallel test threads.
+        let mut walls = Vec::new();
+        for algo in [AlgoKind::Dsi, AlgoKind::Si] {
+            let eng = WaitEngine {
+                target: LatencyProfile::uniform(6.0),
+                drafter: LatencyProfile::uniform(1.0),
+                oracle: Oracle { vocab: 256, acceptance_rate: 0.95, seed: 5 },
+                max_context: 4096,
+            };
+            let router =
+                Router::new(LatencyProfile::uniform(6.0), LatencyProfile::uniform(1.0), 4);
+            let mut srv = Server::new(eng.factory(), router, algo);
+            let mut gen = PromptGen::new(1, 256);
+            let reqs = gen.closed_loop(3, PromptProfile::Instruction, 24);
+            let resps = srv.serve(&reqs);
+            walls.push(resps.iter().map(|r| r.wall_ms).sum::<f64>());
+        }
+        assert!(walls[0] < walls[1], "DSI {} !< SI {}", walls[0], walls[1]);
+    }
+
+    #[test]
+    fn open_loop_respects_arrivals() {
+        let (factory, _) = wait_factory(0.9);
+        let router = Router::new(LatencyProfile::uniform(1.0), LatencyProfile::uniform(0.3), 2);
+        let mut srv = Server::new(factory, router, AlgoKind::NonSi);
+        let mut gen = PromptGen::new(2, 256);
+        let reqs = gen.open_loop(3, PromptProfile::Instruction, 4, 50.0);
+        let t0 = Instant::now();
+        let _ = srv.serve(&reqs);
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(elapsed_ms >= reqs.last().unwrap().arrival_ms);
+    }
+}

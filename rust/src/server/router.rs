@@ -1,0 +1,110 @@
+//! Operating-point router: turns calibrated latencies and the live
+//! acceptance-rate estimate into (lookahead, SP degree) per request.
+//!
+//! Policy (§3.1/§4): given the GPU budget, reserve one server for the
+//! drafter, cap SP at the useful maximum `ceil(t_target/t_drafter)`, and
+//! pick the minimal lookahead satisfying Equation 1 — the paper's optimal
+//! choice, detecting rejections as early as the hardware allows.
+
+use crate::config::{max_useful_sp, min_lookahead_for_sp, AlgoKind, LatencyProfile};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Plan {
+    pub lookahead: usize,
+    pub sp_degree: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub target: LatencyProfile,
+    pub drafter: LatencyProfile,
+    /// GPU budget for target servers (node size minus drafter).
+    pub sp_budget: usize,
+    /// Streaming acceptance estimate (§F.2 geometric fit, online).
+    accepted: u64,
+    rejected: u64,
+}
+
+impl Router {
+    pub fn new(target: LatencyProfile, drafter: LatencyProfile, sp_budget: usize) -> Self {
+        assert!(sp_budget >= 1);
+        Self { target, drafter, sp_budget, accepted: 0, rejected: 0 }
+    }
+
+    /// Live acceptance-rate estimate; NaN until observations arrive.
+    pub fn acceptance_estimate(&self) -> f64 {
+        let n = self.accepted + self.rejected;
+        if n == 0 {
+            return f64::NAN;
+        }
+        // mean accepted-run length = accepted/rejected; geometric fit.
+        let mean_run = self.accepted as f64 / self.rejected.max(1) as f64;
+        1.0 - 1.0 / (1.0 + mean_run)
+    }
+
+    /// Record a finished generation's verification outcomes.
+    pub fn observe_run(&mut self, accepted: usize, rejections: usize) {
+        self.accepted += accepted as u64;
+        self.rejected += rejections as u64;
+    }
+
+    /// The operating point for an algorithm.
+    pub fn plan(&self, algo: AlgoKind) -> Plan {
+        match algo {
+            AlgoKind::NonSi => Plan { lookahead: 1, sp_degree: 1 },
+            AlgoKind::Si | AlgoKind::Pearl => Plan {
+                // SI uses a single target server; lookahead 5 is the
+                // standard practice the paper cites (and sweeps around).
+                lookahead: 5,
+                sp_degree: 1,
+            },
+            AlgoKind::Dsi => {
+                // Don't allocate more target servers than can ever be
+                // concurrently busy (§3.1).
+                let sp = self
+                    .sp_budget
+                    .min(max_useful_sp(self.target.tpot_ms, self.drafter.tpot_ms));
+                let k = min_lookahead_for_sp(self.target.tpot_ms, self.drafter.tpot_ms, sp);
+                Plan { lookahead: k, sp_degree: sp }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsi_plan_satisfies_eq1() {
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 7);
+        let p = r.plan(AlgoKind::Dsi);
+        assert!(crate::config::required_sp(30.0, 3.0, p.lookahead) <= p.sp_degree);
+        assert!(p.sp_degree <= 7);
+    }
+
+    #[test]
+    fn dsi_plan_caps_at_useful_sp() {
+        // Slow drafter (50%): only 2 target servers can ever be busy.
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(15.0), 7);
+        let p = r.plan(AlgoKind::Dsi);
+        assert_eq!(p.sp_degree, 2);
+        assert_eq!(p.lookahead, 1);
+    }
+
+    #[test]
+    fn acceptance_estimator_converges() {
+        let mut r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 7);
+        assert!(r.acceptance_estimate().is_nan());
+        // p=0.8 -> mean run 4 accepted per rejection
+        r.observe_run(4000, 1000);
+        assert!((r.acceptance_estimate() - 0.8).abs() < 0.01);
+    }
+
+    #[test]
+    fn nonsi_plan_trivial() {
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 7);
+        let p = r.plan(AlgoKind::NonSi);
+        assert_eq!((p.lookahead, p.sp_degree), (1, 1));
+    }
+}

@@ -1,0 +1,263 @@
+//! Discrete-event ("offline", §4.1) simulators of the four algorithms.
+//!
+//! The paper's offline experiment sums forward-pass latencies on a virtual
+//! clock, deliberately excluding multithreading overheads, "decoupling the
+//! implementation details from the theoretical analysis". These simulators
+//! replay that methodology exactly and regenerate Figure 2, Figure 7,
+//! Table 1, and the Proposition 1 bound checks.
+//!
+//! All four share [`ExperimentConfig`] and an i.i.d. Bernoulli acceptance
+//! stream (§F.2.1's assumption, validated by Mamou et al. 2024). Every
+//! simulator also emits a *settle trace* — (virtual time, settled-token
+//! count) events — from which the Table 1 / Figure 1 timelines are read.
+
+mod dsi;
+mod mp_compare;
+mod nonsi;
+mod pearl;
+mod si;
+pub mod sweep;
+pub mod timeline;
+
+pub use dsi::simulate_dsi;
+pub use mp_compare::{mp_vs_sp, MpComparison};
+pub use nonsi::simulate_nonsi;
+pub use pearl::simulate_pearl;
+pub use si::simulate_si;
+
+use crate::config::{AlgoKind, ExperimentConfig};
+use crate::util::Rng64;
+
+/// A settle event: at `time_ms`, the number of *verified* output tokens
+/// reached `tokens`. The Table 1 rows are this trace sampled at t1..t4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SettleEvent {
+    pub time_ms: f64,
+    pub tokens: usize,
+}
+
+/// Outcome of one simulated generation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub algo: AlgoKind,
+    /// End-to-end wall time (virtual), ms: prefill + decode, excluding
+    /// tokenization — the paper's latency definition.
+    pub total_ms: f64,
+    /// Verified output tokens produced (>= n_tokens requested).
+    pub tokens: usize,
+    /// Target forward passes that *contributed to latency* (dispatched and
+    /// not preempted before completing).
+    pub target_forwards: usize,
+    /// Target forwards preempted by a rejection (speculation waste) —
+    /// nonzero only for DSI with preempt_on_reject.
+    pub target_forwards_wasted: usize,
+    pub drafter_forwards: usize,
+    /// Draft tokens accepted by verification.
+    pub accepted_drafts: usize,
+    /// Rejection events (each costs a resynchronization).
+    pub rejections: usize,
+    /// The settle trace (monotone in both fields).
+    pub trace: Vec<SettleEvent>,
+}
+
+impl SimOutcome {
+    /// Mean decode latency per token, ms.
+    pub fn ms_per_token(&self) -> f64 {
+        self.total_ms / self.tokens as f64
+    }
+
+    /// Verified tokens at virtual time `t_ms` (reads the settle trace).
+    pub fn tokens_at(&self, t_ms: f64) -> usize {
+        self.trace
+            .iter()
+            .take_while(|e| e.time_ms <= t_ms)
+            .last()
+            .map_or(0, |e| e.tokens)
+    }
+}
+
+/// I.i.d. Bernoulli(acceptance_rate) draft-acceptance stream (§F.2.1).
+pub struct AcceptanceSampler {
+    rng: Rng64,
+    p: f64,
+}
+
+impl AcceptanceSampler {
+    pub fn new(p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "acceptance rate {p} not in [0,1]");
+        Self { rng: Rng64::seed_from_u64(seed), p }
+    }
+
+    /// Is the next draft token accepted?
+    #[inline]
+    pub fn accept(&mut self) -> bool {
+        // Exact at the endpoints so p=0 / p=1 runs are deterministic
+        // (Table 1's worst/best cases).
+        if self.p <= 0.0 {
+            false
+        } else if self.p >= 1.0 {
+            true
+        } else {
+            self.rng.gen_f64() < self.p
+        }
+    }
+
+    /// Number of leading accepts in a block of `k` drafts (capped at k).
+    pub fn accepted_in_block(&mut self, k: usize) -> usize {
+        let mut n = 0;
+        for _ in 0..k {
+            if self.accept() {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        n
+    }
+}
+
+/// Dispatch on algorithm kind. The uniform entry point used by sweeps,
+/// benches, and the CLI.
+pub fn simulate(algo: AlgoKind, cfg: &ExperimentConfig) -> SimOutcome {
+    match algo {
+        AlgoKind::NonSi => simulate_nonsi(cfg),
+        AlgoKind::Si => simulate_si(cfg),
+        AlgoKind::Dsi => simulate_dsi(cfg),
+        AlgoKind::Pearl => simulate_pearl(cfg),
+    }
+}
+
+/// Average total latency over `repeats` seeds (the paper averages 5).
+pub fn simulate_mean_ms(algo: AlgoKind, cfg: &ExperimentConfig, repeats: u64) -> f64 {
+    let mut acc = 0.0;
+    for r in 0..repeats {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(r.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        acc += simulate(algo, &c).total_ms;
+    }
+    acc / repeats as f64
+}
+
+/// Server pool on the virtual clock: SP slots, each with a free-from time.
+/// `acquire(ready)` returns the dispatch time on the earliest-free slot and
+/// books it until `dispatch + busy_ms` (rebookable for preemption).
+pub(crate) struct VirtualPool {
+    free_at: Vec<f64>,
+}
+
+impl VirtualPool {
+    pub fn new(slots: usize) -> Self {
+        assert!(slots >= 1);
+        Self { free_at: vec![0.0; slots] }
+    }
+
+    /// Book the earliest-available slot. Returns (slot index, dispatch time).
+    pub fn acquire(&mut self, ready_ms: f64, busy_ms: f64) -> (usize, f64) {
+        let (idx, _) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let dispatch = self.free_at[idx].max(ready_ms);
+        self.free_at[idx] = dispatch + busy_ms;
+        (idx, dispatch)
+    }
+
+    /// Preempt a booking: the slot frees at `at_ms` instead of its booked
+    /// completion (never extends a booking).
+    pub fn preempt(&mut self, slot: usize, at_ms: f64) {
+        if self.free_at[slot] > at_ms {
+            self.free_at[slot] = at_ms;
+        }
+    }
+}
+
+/// Common result assembly helper.
+pub(crate) fn push_trace(trace: &mut Vec<SettleEvent>, time_ms: f64, tokens: usize) {
+    debug_assert!(
+        trace.last().map_or(true, |e| e.tokens <= tokens),
+        "settle trace must be monotone"
+    );
+    trace.push(SettleEvent { time_ms, tokens });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg(p: f64, k: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            acceptance_rate: p,
+            lookahead: k,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn sampler_endpoints_deterministic() {
+        let mut s = AcceptanceSampler::new(0.0, 1);
+        assert!(!(0..100).any(|_| s.accept()));
+        let mut s = AcceptanceSampler::new(1.0, 1);
+        assert!((0..100).all(|_| s.accept()));
+    }
+
+    #[test]
+    fn sampler_block_statistics() {
+        let mut s = AcceptanceSampler::new(0.8, 42);
+        let n = 200_000;
+        let total: usize = (0..n).map(|_| s.accepted_in_block(5)).sum();
+        let mean = total as f64 / n as f64;
+        // E[min(Geom(0.8), 5)] = sum_{i=1..5} 0.8^i ≈ 2.68928
+        assert!((mean - 2.68928).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn sampler_reproducible() {
+        let draw = |seed| {
+            let mut s = AcceptanceSampler::new(0.6, seed);
+            (0..64).map(|_| s.accept() as u8).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8));
+    }
+
+    #[test]
+    fn virtual_pool_queues_fifo() {
+        let mut pool = VirtualPool::new(2);
+        let (_, d1) = pool.acquire(0.0, 10.0);
+        let (_, d2) = pool.acquire(0.0, 10.0);
+        let (_, d3) = pool.acquire(0.0, 10.0); // must wait for a slot
+        assert_eq!(d1, 0.0);
+        assert_eq!(d2, 0.0);
+        assert_eq!(d3, 10.0);
+    }
+
+    #[test]
+    fn virtual_pool_preempt_frees_early() {
+        let mut pool = VirtualPool::new(1);
+        let (slot, d1) = pool.acquire(0.0, 100.0);
+        assert_eq!(d1, 0.0);
+        pool.preempt(slot, 30.0);
+        let (_, d2) = pool.acquire(0.0, 10.0);
+        assert_eq!(d2, 30.0);
+    }
+
+    #[test]
+    fn dispatch_covers_all_algos() {
+        for algo in AlgoKind::ALL {
+            let out = simulate(algo, &cfg(0.7, 5));
+            assert!(out.tokens >= 50, "{algo:?} produced {}", out.tokens);
+            assert!(out.total_ms > 0.0);
+            assert_eq!(out.algo, algo);
+        }
+    }
+
+    #[test]
+    fn tokens_at_reads_trace() {
+        let out = simulate(AlgoKind::NonSi, &cfg(0.5, 1));
+        assert_eq!(out.tokens_at(-1.0), 0);
+        assert_eq!(out.tokens_at(out.total_ms + 1.0), out.tokens);
+    }
+}

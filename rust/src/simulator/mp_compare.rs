@@ -1,0 +1,113 @@
+//! §3.1's SP-vs-MP argument, quantified: under an equal GPU budget, how
+//! much must model parallelism accelerate each target forward to match
+//! DSI's speculation parallelism?
+//!
+//! The paper's worked example: drafter at 10% latency, lookahead = 2, six
+//! GPUs (5 target + 1 drafter). With acceptance rate a, DSI hides a
+//! fraction `a^lookahead` of target forwards, so only `1 - a^lookahead`
+//! contribute latency; MP over the same 5 GPUs must speed each forward by
+//! `1 / (1 - a^lookahead)` (= 2.78x at a = 0.8) to break even.
+
+use super::{simulate_dsi, simulate_nonsi};
+use crate::config::{ExperimentConfig, LatencyProfile};
+
+#[derive(Debug, Clone)]
+pub struct MpComparison {
+    pub acceptance_rate: f64,
+    pub lookahead: usize,
+    pub gpu_budget: usize,
+    /// Fraction of target forwards contributing to DSI latency
+    /// (`1 - a^lookahead`).
+    pub dsi_visible_forward_frac: f64,
+    /// Forward speedup MP must achieve on the same budget to match DSI
+    /// (analytic: `1 / (1 - a^lookahead)`).
+    pub mp_breakeven_speedup_analytic: f64,
+    /// Same break-even measured from the event simulation.
+    pub mp_breakeven_speedup_simulated: f64,
+    /// DSI end-to-end latency (ms) from the simulator.
+    pub dsi_ms: f64,
+    /// non-SI latency with unaccelerated forwards (MP speedup 1).
+    pub nonsi_ms: f64,
+}
+
+/// Run the comparison for a given drafter fraction/acceptance/lookahead.
+pub fn mp_vs_sp(
+    drafter_frac: f64,
+    acceptance_rate: f64,
+    lookahead: usize,
+    n_tokens: usize,
+) -> MpComparison {
+    let target = 100.0;
+    let sp = crate::config::required_sp(target, target * drafter_frac, lookahead);
+    let cfg = ExperimentConfig {
+        target: LatencyProfile::uniform(target),
+        drafter: LatencyProfile::uniform(target * drafter_frac),
+        acceptance_rate,
+        lookahead,
+        sp_degree: sp,
+        n_tokens,
+        seed: 0,
+        preempt_on_reject: true,
+        max_speculation_depth: None,
+    };
+    let mut dsi_ms = 0.0;
+    let reps = 20;
+    for seed in 0..reps {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        dsi_ms += simulate_dsi(&c).total_ms;
+    }
+    dsi_ms /= reps as f64;
+    let nonsi_ms = simulate_nonsi(&cfg).total_ms;
+
+    // MP break-even: scale the target forward latency until non-SI matches
+    // DSI. non-SI latency is linear in forward latency, so the break-even
+    // speedup is simply nonsi_ms / dsi_ms.
+    let mp_breakeven_speedup_simulated = nonsi_ms / dsi_ms;
+
+    let visible = 1.0 - acceptance_rate.powi(lookahead as i32);
+    MpComparison {
+        acceptance_rate,
+        lookahead,
+        gpu_budget: sp + 1,
+        dsi_visible_forward_frac: visible,
+        mp_breakeven_speedup_analytic: 1.0 / visible,
+        mp_breakeven_speedup_simulated,
+        dsi_ms,
+        nonsi_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_278x() {
+        // Drafter 10%, lookahead 2, a = 0.8: MP must be 2.78x.
+        let c = mp_vs_sp(0.10, 0.8, 2, 400);
+        assert!((c.dsi_visible_forward_frac - 0.36).abs() < 1e-12);
+        assert!((c.mp_breakeven_speedup_analytic - 1.0 / 0.36).abs() < 1e-9);
+        assert_eq!(c.gpu_budget, 6); // 5 target + 1 drafter
+        // The simulated break-even should land near the analytic one.
+        // (The event simulation pipelines corrections with in-flight
+        // verification, so DSI runs somewhat faster than the pure
+        // forward-hiding bound predicts and the measured break-even can
+        // exceed the 2.78x analytic figure.)
+        assert!(
+            c.mp_breakeven_speedup_simulated > 2.0
+                && c.mp_breakeven_speedup_simulated < 4.2,
+            "simulated break-even {}",
+            c.mp_breakeven_speedup_simulated
+        );
+    }
+
+    #[test]
+    fn breakeven_grows_with_acceptance() {
+        let lo = mp_vs_sp(0.10, 0.5, 2, 200);
+        let hi = mp_vs_sp(0.10, 0.9, 2, 200);
+        assert!(
+            hi.mp_breakeven_speedup_simulated > lo.mp_breakeven_speedup_simulated
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Non-speculative (plain autoregressive) baseline on the virtual clock.
+//!
+//! Latency model (§F.3): one target forward per token; the first costs
+//! TTFT (prefill + first decode), every subsequent token costs TPOT.
+
+use super::{push_trace, SimOutcome};
+use crate::config::{AlgoKind, ExperimentConfig};
+
+pub fn simulate_nonsi(cfg: &ExperimentConfig) -> SimOutcome {
+    let mut t = 0.0;
+    let mut trace = Vec::with_capacity(cfg.n_tokens);
+    for i in 0..cfg.n_tokens {
+        t += cfg.target.forward_ms(i);
+        push_trace(&mut trace, t, i + 1);
+    }
+    SimOutcome {
+        algo: AlgoKind::NonSi,
+        total_ms: t,
+        tokens: cfg.n_tokens,
+        target_forwards: cfg.n_tokens,
+        target_forwards_wasted: 0,
+        drafter_forwards: 0,
+        accepted_drafts: 0,
+        rejections: 0,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+
+    #[test]
+    fn exact_closed_form() {
+        let cfg = ExperimentConfig {
+            target: LatencyProfile::new(100.0, 30.0),
+            n_tokens: 10,
+            ..ExperimentConfig::default()
+        };
+        let out = simulate_nonsi(&cfg);
+        assert!((out.total_ms - (100.0 + 9.0 * 30.0)).abs() < 1e-9);
+        assert_eq!(out.tokens, 10);
+        assert_eq!(out.target_forwards, 10);
+        assert_eq!(out.trace.len(), 10);
+        assert_eq!(out.tokens_at(100.0), 1);
+        assert_eq!(out.tokens_at(129.9), 1);
+        assert_eq!(out.tokens_at(130.0), 2);
+    }
+}

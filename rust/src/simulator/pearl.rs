@@ -1,0 +1,184 @@
+//! PEARL (Liu et al., ICLR 2025) baseline: parallel draft-during-verify
+//! with a single target instance — the related-work comparison in §5.
+//!
+//! PEARL overlaps the drafting of iteration i+1 with the verification of
+//! iteration i (*post-verify*), and verifies the first draft token of an
+//! iteration while the rest of the block is still being drafted
+//! (*pre-verify*). Unlike DSI it (a) holds only ONE target instance, and
+//! (b) can only overlap with the *next* iteration, so it remains
+//! fundamentally sequential: its cycle time is `max(k·t_drafter, t_target)`
+//! rather than DSI's fully-hidden verification.
+//!
+//! On rejection the overlapped draft block is wasted and PEARL falls back
+//! to a fresh draft-then-verify cycle, which is why it can be slower than
+//! non-SI for slow/inaccurate drafters (the gap the paper highlights; DSI
+//! provably never is).
+
+use super::{push_trace, AcceptanceSampler, SimOutcome};
+use crate::config::{AlgoKind, ExperimentConfig};
+
+pub fn simulate_pearl(cfg: &ExperimentConfig) -> SimOutcome {
+    let k = cfg.lookahead;
+    let mut acc = AcceptanceSampler::new(cfg.acceptance_rate, cfg.seed);
+
+    let mut t = 0.0f64;
+    let mut tokens = 0usize;
+    let mut target_forwards = 0usize;
+    let mut drafter_forwards = 0usize;
+    let mut accepted_drafts = 0usize;
+    let mut rejections = 0usize;
+    let mut trace = Vec::new();
+
+    // Time to draft a block of k tokens starting at drafter forward index i.
+    let draft_block = |from_forward: usize, cfg: &ExperimentConfig| -> f64 {
+        (0..k).map(|i| cfg.drafter.forward_ms(from_forward + i)).sum()
+    };
+
+    // Pipeline state: is there a block drafted during the previous cycle,
+    // waiting to be verified?
+    let mut have_overlapped_block = false;
+
+    while tokens < cfg.n_tokens {
+        if !have_overlapped_block {
+            // Cold start / post-rejection: draft a block sequentially
+            // (pre-verify overlaps the *first token*'s verification with
+            // the remaining drafting — model: the target forward starts
+            // after the first draft token rather than after all k).
+            let first_draft = cfg.drafter.forward_ms(drafter_forwards);
+            let rest: f64 = draft_block(drafter_forwards, cfg) - first_draft;
+            drafter_forwards += k;
+            let verify = cfg.target.forward_ms(target_forwards);
+            target_forwards += 1;
+            // Pre-verify: verification (of the whole block, in PEARL's
+            // segmented fashion) runs concurrently with the tail drafting.
+            t += first_draft + verify.max(rest);
+        } else {
+            // Steady pipeline: the block was drafted during the previous
+            // verification; this cycle only needs the verification, with
+            // the *next* block drafting concurrently.
+            let verify = cfg.target.forward_ms(target_forwards);
+            target_forwards += 1;
+            let draft = draft_block(drafter_forwards, cfg);
+            drafter_forwards += k;
+            t += verify.max(draft);
+        }
+
+        let a = acc.accepted_in_block(k);
+        accepted_drafts += a;
+        if a < k {
+            rejections += 1;
+            tokens += a + 1; // correction token from the target forward
+            have_overlapped_block = false; // overlapped draft is wasted
+        } else {
+            tokens += k; // all accepted; bonus suppressed (next block's
+                         // first token already drafted against it)
+            have_overlapped_block = true;
+        }
+        push_trace(&mut trace, t, tokens);
+    }
+
+    SimOutcome {
+        algo: AlgoKind::Pearl,
+        total_ms: t,
+        tokens,
+        target_forwards,
+        target_forwards_wasted: 0,
+        drafter_forwards,
+        accepted_drafts,
+        rejections,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::simulator::{simulate_dsi, simulate_nonsi};
+
+    fn cfg(p: f64, k: usize, n: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            target: LatencyProfile::uniform(30.0),
+            drafter: LatencyProfile::uniform(3.0),
+            acceptance_rate: p,
+            lookahead: k,
+            n_tokens: n,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn best_case_pipelines_at_target_rate() {
+        // p=1 with k·td < tt: steady-state cycle = tt, yielding k tokens.
+        let out = simulate_pearl(&cfg(1.0, 5, 100));
+        // first cycle: td + max(tt, 4*td) = 3 + 30; then 19 cycles of 30.
+        let expect = 3.0 + 30.0 + 19.0 * 30.0;
+        assert!((out.total_ms - expect).abs() < 1e-9, "{}", out.total_ms);
+    }
+
+    #[test]
+    fn can_be_slower_than_nonsi() {
+        // The paper's criticism: slow/inaccurate drafter makes PEARL
+        // slower than non-SI (DSI never is).
+        let c = ExperimentConfig {
+            target: LatencyProfile::uniform(30.0),
+            drafter: LatencyProfile::uniform(20.0),
+            acceptance_rate: 0.05,
+            lookahead: 5,
+            n_tokens: 200,
+            seed: 2,
+            ..ExperimentConfig::default()
+        };
+        let pearl = simulate_pearl(&c);
+        let nonsi = simulate_nonsi(&c);
+        assert!(pearl.total_ms > nonsi.total_ms);
+    }
+
+    #[test]
+    fn dsi_beats_pearl_in_expectation() {
+        // §5: PEARL is "strictly slower than DSI with a smaller lookahead,
+        // in expectation". Our PEARL model is deliberately *generous* (a
+        // perfect one-deep overlap upper bound), so in the
+        // rejection-dominated regime (low acceptance) both algorithms
+        // degenerate to one correction per target forward and the gap
+        // closes to ~0. DSI's structural advantage — speculation deeper
+        // than one iteration, spread over SP target servers — shows up as
+        // acceptance grows: PEARL's settle rate is floored at
+        // max(t_target, k*t_drafter) per block while DSI approaches the
+        // pure drafting rate. We assert dominance in that regime (which
+        // covers Table 2's measured pairs at 0.87-0.95 and the upper half
+        // of Figure 2).
+        for p in [0.8, 0.9, 0.95] {
+            let mut pearl_tot = 0.0;
+            let mut dsi_tot = 0.0;
+            for seed in 0..60 {
+                // PEARL at the test lookahead; DSI at its own optimal
+                // (Equation-1-minimal) lookahead, as §5 prescribes.
+                let mut c = cfg(p, 5, 100);
+                c.seed = seed;
+                pearl_tot += simulate_pearl(&c).total_ms;
+                let mut cd = c.clone();
+                cd.lookahead = crate::config::min_lookahead_for_sp(
+                    c.target.tpot_ms,
+                    c.drafter.tpot_ms,
+                    c.sp_degree,
+                );
+                dsi_tot += simulate_dsi(&cd).total_ms;
+            }
+            assert!(
+                dsi_tot <= pearl_tot,
+                "p={p}: DSI {} vs PEARL {}",
+                dsi_tot / 60.0,
+                pearl_tot / 60.0
+            );
+        }
+    }
+
+    #[test]
+    fn produces_requested_tokens() {
+        for p in [0.0, 0.5, 1.0] {
+            let out = simulate_pearl(&cfg(p, 4, 77));
+            assert!(out.tokens >= 77);
+        }
+    }
+}

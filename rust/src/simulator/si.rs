@@ -1,0 +1,142 @@
+//! Blocking speculative inference (Leviathan et al. 2023) on the virtual
+//! clock — the paper's §F.4 reference simulation, extended with the
+//! TTFT/TPOT split and the settle trace.
+//!
+//! Each iteration: the drafter produces `lookahead` tokens sequentially,
+//! then ONE batched target forward verifies them. `accepted + 1` tokens
+//! settle per iteration (the +1 is the target's own token: the correction
+//! on rejection, the bonus on all-accept). Drafting and verification are
+//! strictly sequential — the limitation DSI removes.
+
+use super::{push_trace, AcceptanceSampler, SimOutcome};
+use crate::config::{AlgoKind, ExperimentConfig};
+
+pub fn simulate_si(cfg: &ExperimentConfig) -> SimOutcome {
+    let k = cfg.lookahead;
+    let mut acc = AcceptanceSampler::new(cfg.acceptance_rate, cfg.seed);
+
+    let mut t = 0.0;
+    let mut tokens = 0usize;
+    let mut target_forwards = 0usize;
+    let mut drafter_forwards = 0usize;
+    let mut accepted_drafts = 0usize;
+    let mut rejections = 0usize;
+    let mut trace = Vec::new();
+
+    while tokens < cfg.n_tokens {
+        // Draft k tokens, sequentially, on the drafter server.
+        for _ in 0..k {
+            t += cfg.drafter.forward_ms(drafter_forwards);
+            drafter_forwards += 1;
+        }
+        // One (batched) target forward verifies the k drafts.
+        t += cfg.target.forward_ms(target_forwards);
+        target_forwards += 1;
+
+        let a = acc.accepted_in_block(k);
+        accepted_drafts += a;
+        if a < k {
+            rejections += 1;
+        }
+        // a accepted drafts + 1 target token (bonus or correction) settle
+        // together when the verification completes.
+        tokens += a + 1;
+        push_trace(&mut trace, t, tokens);
+    }
+
+    SimOutcome {
+        algo: AlgoKind::Si,
+        total_ms: t,
+        tokens,
+        target_forwards,
+        target_forwards_wasted: 0,
+        drafter_forwards,
+        accepted_drafts,
+        rejections,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+
+    fn cfg(p: f64, k: usize, n: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            target: LatencyProfile::uniform(30.0),
+            drafter: LatencyProfile::uniform(3.0),
+            acceptance_rate: p,
+            lookahead: k,
+            n_tokens: n,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn worst_case_matches_closed_form() {
+        // p=0: every iteration yields exactly 1 token and costs k*td + tt.
+        let out = simulate_si(&cfg(0.0, 5, 20));
+        assert_eq!(out.tokens, 20);
+        assert_eq!(out.target_forwards, 20);
+        assert_eq!(out.drafter_forwards, 100);
+        assert!((out.total_ms - 20.0 * (5.0 * 3.0 + 30.0)).abs() < 1e-9);
+        assert_eq!(out.rejections, 20);
+        assert_eq!(out.accepted_drafts, 0);
+    }
+
+    #[test]
+    fn best_case_matches_closed_form() {
+        // p=1: every iteration yields k+1 tokens.
+        let out = simulate_si(&cfg(1.0, 5, 60));
+        assert_eq!(out.tokens, 60);
+        assert_eq!(out.target_forwards, 10);
+        assert!((out.total_ms - 10.0 * (5.0 * 3.0 + 30.0)).abs() < 1e-9);
+        assert_eq!(out.rejections, 0);
+        assert_eq!(out.accepted_drafts, 50);
+    }
+
+    #[test]
+    fn slow_drafter_worse_than_nonsi() {
+        // The paper's motivating gap: slow+inaccurate drafter makes SI
+        // slower than non-SI.
+        let cfg = ExperimentConfig {
+            target: LatencyProfile::uniform(30.0),
+            drafter: LatencyProfile::uniform(25.0), // 83% latency
+            acceptance_rate: 0.2,
+            lookahead: 5,
+            n_tokens: 100,
+            seed: 3,
+            ..ExperimentConfig::default()
+        };
+        let si = simulate_si(&cfg);
+        let nonsi = super::super::simulate_nonsi(&cfg);
+        assert!(
+            si.total_ms > nonsi.total_ms,
+            "SI {} should be slower than non-SI {}",
+            si.total_ms,
+            nonsi.total_ms
+        );
+    }
+
+    #[test]
+    fn expectation_matches_analytic() {
+        // Mean tokens/iteration ~ sum p^i + 1.
+        let p = 0.8;
+        let k = 5;
+        let out = simulate_si(&cfg(p, k, 50_000));
+        let per_iter = out.tokens as f64 / out.target_forwards as f64;
+        let analytic = crate::stats::expected_tokens_per_si_iteration(p, k);
+        assert!((per_iter - analytic).abs() < 0.03, "{per_iter} vs {analytic}");
+    }
+
+    #[test]
+    fn ttft_charged_once_per_model() {
+        let mut c = cfg(1.0, 2, 3);
+        c.target = LatencyProfile::new(100.0, 30.0);
+        c.drafter = LatencyProfile::new(10.0, 3.0);
+        let out = simulate_si(&c);
+        // one iteration: drafts 10 + 3, verify 100.
+        assert!((out.total_ms - 113.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,306 @@
+//! Figure 2 / Figure 7 heatmap sweeps: pairwise speedups of DSI, SI, and
+//! non-SI over the (drafter latency, acceptance rate) grid.
+//!
+//! Methodology follows §F.3: SI picks its best lookahead per cell from a
+//! candidate set; DSI is restricted to lookaheads that satisfy Equation 1
+//! for SP = 7 (deployable on one 8-GPU node with a single-GPU drafter);
+//! each (cell, lookahead) pair is averaged over repeats. Cells are
+//! embarrassingly parallel — rayon fans them out, which is exactly the
+//! "parallelize the experiments, not the algorithm" trick the paper uses
+//! to cover millions of configurations.
+
+use super::{simulate_mean_ms, SimOutcome};
+use crate::config::{required_sp, AlgoKind, ExperimentConfig, LatencyProfile};
+use crate::util::par_map;
+
+/// Sweep parameters. Defaults give a coarse (fast) grid; `fine()` matches
+/// the paper's resolution.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Drafter TPOT as a fraction of target TPOT; grid values.
+    pub drafter_fracs: Vec<f64>,
+    /// Acceptance-rate grid values.
+    pub acceptance_rates: Vec<f64>,
+    /// Candidate lookaheads for SI's per-cell optimum.
+    pub lookaheads: Vec<usize>,
+    /// If set, evaluate only this lookahead (Figure 7 uses 5).
+    pub fixed_lookahead: Option<usize>,
+    /// SP budget for DSI's Equation-1 feasibility filter.
+    pub sp_budget: usize,
+    pub n_tokens: usize,
+    pub repeats: u64,
+    pub seed: u64,
+    /// Target TPOT in ms (the unit; ratios are scale-invariant).
+    pub target_tpot_ms: f64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            drafter_fracs: step_grid(0.02, 1.0, 0.02),
+            acceptance_rates: step_grid(0.0, 1.0, 0.02),
+            lookaheads: vec![1, 2, 3, 4, 5, 7, 10, 15, 20, 30, 50, 75, 100, 150, 200],
+            fixed_lookahead: None,
+            sp_budget: 7,
+            n_tokens: 100,
+            repeats: 3,
+            seed: 0,
+            target_tpot_ms: 100.0,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// The paper's full grid (0.01 steps, lookahead 1..=200, 5 repeats).
+    /// Heavy: millions of simulations.
+    pub fn fine() -> Self {
+        Self {
+            drafter_fracs: step_grid(0.01, 1.0, 0.01),
+            acceptance_rates: step_grid(0.0, 1.0, 0.01),
+            lookaheads: (1..=200).collect(),
+            repeats: 5,
+            ..Self::default()
+        }
+    }
+
+    /// Figure 7: everything at a fixed lookahead of 5.
+    pub fn fixed_lookahead(k: usize) -> Self {
+        Self { fixed_lookahead: Some(k), ..Self::default() }
+    }
+}
+
+pub fn step_grid(from: f64, to: f64, step: f64) -> Vec<f64> {
+    let n = ((to - from) / step).round() as usize;
+    (0..=n).map(|i| (from + i as f64 * step).min(to)).collect()
+}
+
+/// One heatmap cell: latencies (ms) of the three algorithms with their
+/// per-cell optimal (or fixed) lookaheads.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub drafter_frac: f64,
+    pub acceptance_rate: f64,
+    pub nonsi_ms: f64,
+    pub si_ms: f64,
+    pub si_lookahead: usize,
+    pub dsi_ms: f64,
+    pub dsi_lookahead: usize,
+}
+
+impl SweepCell {
+    /// Figure 2(a): run-time ratio SI / non-SI (> 1 = SI slower = pink).
+    pub fn si_over_nonsi(&self) -> f64 {
+        self.si_ms / self.nonsi_ms
+    }
+
+    /// Figure 2(b): DSI speedup over SI (latency ratio SI / DSI).
+    pub fn dsi_speedup_vs_si(&self) -> f64 {
+        self.si_ms / self.dsi_ms
+    }
+
+    /// Figure 2(c): DSI speedup over non-SI.
+    pub fn dsi_speedup_vs_nonsi(&self) -> f64 {
+        self.nonsi_ms / self.dsi_ms
+    }
+
+    /// Figure 2(d): DSI speedup over the better of SI and non-SI.
+    pub fn dsi_speedup_vs_baseline(&self) -> f64 {
+        self.si_ms.min(self.nonsi_ms) / self.dsi_ms
+    }
+}
+
+/// Run the sweep. Returns cells in row-major (drafter_frac-major) order.
+pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepCell> {
+    let mut cells: Vec<(f64, f64)> = Vec::new();
+    for &d in &spec.drafter_fracs {
+        for &a in &spec.acceptance_rates {
+            cells.push((d, a));
+        }
+    }
+    par_map(cells, |&(drafter_frac, acceptance_rate)| {
+        sweep_cell(spec, drafter_frac, acceptance_rate)
+    })
+}
+
+fn sweep_cell(spec: &SweepSpec, drafter_frac: f64, acceptance_rate: f64) -> SweepCell {
+    let base = ExperimentConfig {
+        target: LatencyProfile::uniform(spec.target_tpot_ms),
+        drafter: LatencyProfile::uniform(spec.target_tpot_ms * drafter_frac),
+        acceptance_rate,
+        lookahead: 1,
+        sp_degree: spec.sp_budget,
+        n_tokens: spec.n_tokens,
+        seed: spec.seed,
+        preempt_on_reject: true,
+        max_speculation_depth: None,
+    };
+
+    let nonsi_ms = simulate_mean_ms(AlgoKind::NonSi, &base, 1); // deterministic
+
+    let candidates: Vec<usize> = match spec.fixed_lookahead {
+        Some(k) => vec![k],
+        None => spec.lookaheads.clone(),
+    };
+
+    // SI: best over all candidate lookaheads (the paper lets SI optimize).
+    let (si_ms, si_lookahead) = candidates
+        .iter()
+        .map(|&k| {
+            let mut c = base.clone();
+            c.lookahead = k;
+            (simulate_mean_ms(AlgoKind::Si, &c, spec.repeats), k)
+        })
+        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .unwrap();
+
+    // DSI: best over Equation-1-feasible lookaheads only.
+    let feasible: Vec<usize> = candidates
+        .iter()
+        .copied()
+        .filter(|&k| {
+            required_sp(base.target.tpot_ms, base.drafter.tpot_ms, k) <= spec.sp_budget
+        })
+        .collect();
+    let (dsi_ms, dsi_lookahead) = if feasible.is_empty() {
+        // No feasible lookahead in the candidate set: fall back to the
+        // minimal feasible k outside the set (always exists).
+        let k = crate::config::min_lookahead_for_sp(
+            base.target.tpot_ms,
+            base.drafter.tpot_ms,
+            spec.sp_budget,
+        );
+        let mut c = base.clone();
+        c.lookahead = k;
+        (simulate_mean_ms(AlgoKind::Dsi, &c, spec.repeats), k)
+    } else {
+        feasible
+            .iter()
+            .map(|&k| {
+                let mut c = base.clone();
+                c.lookahead = k;
+                (simulate_mean_ms(AlgoKind::Dsi, &c, spec.repeats), k)
+            })
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap()
+    };
+
+    SweepCell {
+        drafter_frac,
+        acceptance_rate,
+        nonsi_ms,
+        si_ms,
+        si_lookahead,
+        dsi_ms,
+        dsi_lookahead,
+    }
+}
+
+/// Summary of a sweep for the report: extrema of each figure panel.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    pub cells: usize,
+    /// Fraction of cells where SI is slower than non-SI (Fig 2a pink area).
+    pub si_slowdown_frac: f64,
+    /// Max DSI speedup over SI (Fig 2b peak).
+    pub max_dsi_vs_si: f64,
+    /// Max DSI speedup over non-SI (Fig 2c peak).
+    pub max_dsi_vs_nonsi: f64,
+    /// Max DSI speedup over min(SI, non-SI) (Fig 2d peak; paper: ~1.6).
+    pub max_dsi_vs_baseline: f64,
+    /// Min DSI speedup over baseline (paper: >= 1, "never slower").
+    pub min_dsi_vs_baseline: f64,
+    /// Min DSI speedup vs non-SI (Theorem 1: >= 1).
+    pub min_dsi_vs_nonsi: f64,
+}
+
+pub fn summarize(cells: &[SweepCell]) -> SweepSummary {
+    let n = cells.len().max(1);
+    SweepSummary {
+        cells: cells.len(),
+        si_slowdown_frac: cells.iter().filter(|c| c.si_over_nonsi() > 1.0).count() as f64
+            / n as f64,
+        max_dsi_vs_si: fold_max(cells.iter().map(|c| c.dsi_speedup_vs_si())),
+        max_dsi_vs_nonsi: fold_max(cells.iter().map(|c| c.dsi_speedup_vs_nonsi())),
+        max_dsi_vs_baseline: fold_max(cells.iter().map(|c| c.dsi_speedup_vs_baseline())),
+        min_dsi_vs_baseline: fold_min(cells.iter().map(|c| c.dsi_speedup_vs_baseline())),
+        min_dsi_vs_nonsi: fold_min(cells.iter().map(|c| c.dsi_speedup_vs_nonsi())),
+    }
+}
+
+fn fold_max(it: impl Iterator<Item = f64>) -> f64 {
+    it.fold(f64::NEG_INFINITY, f64::max)
+}
+
+fn fold_min(it: impl Iterator<Item = f64>) -> f64 {
+    it.fold(f64::INFINITY, f64::min)
+}
+
+/// `SimOutcome` is re-exported here for bench access to per-cell runs.
+pub type CellOutcome = SimOutcome;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            drafter_fracs: vec![0.06, 0.3, 0.8],
+            acceptance_rates: vec![0.0, 0.5, 0.9],
+            lookaheads: vec![1, 3, 5, 10, 20],
+            n_tokens: 60,
+            repeats: 2,
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn grid_helper() {
+        let g = step_grid(0.0, 1.0, 0.25);
+        assert_eq!(g, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn sweep_produces_full_grid() {
+        let cells = run_sweep(&tiny_spec());
+        assert_eq!(cells.len(), 9);
+    }
+
+    #[test]
+    fn figure2_claims_hold_on_small_grid() {
+        let cells = run_sweep(&tiny_spec());
+        let s = summarize(&cells);
+        // (a) SI is slower than non-SI somewhere (slow/inaccurate corner).
+        assert!(s.si_slowdown_frac > 0.0);
+        // (b,c,d) DSI never slower than either baseline (up to sim noise).
+        assert!(s.min_dsi_vs_nonsi >= 0.99, "{}", s.min_dsi_vs_nonsi);
+        assert!(s.min_dsi_vs_baseline >= 0.99, "{}", s.min_dsi_vs_baseline);
+        // DSI strictly helps somewhere.
+        assert!(s.max_dsi_vs_baseline > 1.1);
+    }
+
+    #[test]
+    fn dsi_lookahead_respects_eq1() {
+        let spec = tiny_spec();
+        for c in run_sweep(&spec) {
+            let req = required_sp(
+                spec.target_tpot_ms,
+                spec.target_tpot_ms * c.drafter_frac,
+                c.dsi_lookahead,
+            );
+            assert!(req <= spec.sp_budget, "cell {c:?} needs SP {req}");
+        }
+    }
+
+    #[test]
+    fn fixed_lookahead_spec_uses_it() {
+        let mut spec = tiny_spec();
+        spec.fixed_lookahead = Some(5);
+        for c in run_sweep(&spec) {
+            assert_eq!(c.si_lookahead, 5);
+            // DSI may fall back to a larger feasible k when 5 violates Eq 1.
+            if required_sp(100.0, 100.0 * c.drafter_frac, 5) <= spec.sp_budget {
+                assert_eq!(c.dsi_lookahead, 5);
+            }
+        }
+    }
+}

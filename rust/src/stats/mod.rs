@@ -1,0 +1,237 @@
+//! Statistics substrate: acceptance-rate estimation (§F.2), summary
+//! statistics for latency distributions, and speedup arithmetic.
+
+/// Streaming summary statistics (Welford) — allocation-free, used in the
+//  metrics hot path.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the 95% normal-approximation confidence interval.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 { f64::NAN } else { 1.96 * self.std() / (self.n as f64).sqrt() }
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile over a sample (nearest-rank). Used for latency
+/// reporting (p50/p90/p99). Sorts a copy; not for hot paths.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Nearest-rank: smallest value with at least p% of the sample <= it.
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// Acceptance-rate estimation from observed accepted-run lengths (§F.2).
+///
+/// The paper models token acceptance as i.i.d. Bernoulli(p); the number of
+/// consecutive accepted drafts is then geometric. Given per-prompt counts
+/// `n_i` of accepted draft tokens, the estimate is
+/// `p = 1 - 1/(1 + mean(n_i))`.
+pub fn acceptance_rate_from_runs(accepted_runs: &[usize]) -> f64 {
+    if accepted_runs.is_empty() {
+        return f64::NAN;
+    }
+    let mean = accepted_runs.iter().map(|&n| n as f64).sum::<f64>()
+        / accepted_runs.len() as f64;
+    1.0 - 1.0 / (1.0 + mean)
+}
+
+/// Inverse of [`acceptance_rate_from_runs`]'s model: expected accepted-run
+/// length for a given acceptance rate. (E[geometric successes] = p/(1-p).)
+pub fn expected_run_length(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p), "p={p} must be in [0,1)");
+    p / (1.0 - p)
+}
+
+/// Longest shared prefix of two token sequences — the §F.2 measurement
+/// primitive ("lengths of the longest sequences of exact token matches").
+pub fn longest_match_prefix(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// Speedup of `ours` over `baseline` given end-to-end latencies.
+#[inline]
+pub fn speedup(baseline_ms: f64, ours_ms: f64) -> f64 {
+    baseline_ms / ours_ms
+}
+
+/// Expected number of target forwards SI needs for N tokens at acceptance
+/// rate `p` and lookahead `k` (§F.3's worked example generalized):
+/// each iteration yields E[min(Geom(p), k)] + 1 tokens.
+pub fn si_expected_iterations(n_tokens: usize, p: f64, k: usize) -> f64 {
+    n_tokens as f64 / expected_tokens_per_si_iteration(p, k)
+}
+
+/// E[min(#consecutive accepts, k)] + 1 — tokens per SI iteration.
+/// Closed form: sum_{i=1..k} p^i + 1.
+pub fn expected_tokens_per_si_iteration(p: f64, k: usize) -> f64 {
+    let mut s = 0.0;
+    let mut pi = 1.0;
+    for _ in 0..k {
+        pi *= p;
+        s += pi;
+    }
+    s + 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn online_stats_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = OnlineStats::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn geometric_fit_roundtrip() {
+        // If runs are exactly the expectation of Geom(p), the fit recovers p.
+        for p in [0.1, 0.5, 0.8, 0.93] {
+            let mean_run = expected_run_length(p);
+            // feed many identical "runs" at the expected length (fractional
+            // lengths are not representable; use a two-point mixture)
+            let lo = mean_run.floor() as usize;
+            let hi = lo + 1;
+            let frac = mean_run - lo as f64;
+            let n = 10_000usize;
+            let n_hi = (frac * n as f64).round() as usize;
+            let mut runs = vec![lo; n - n_hi];
+            runs.extend(std::iter::repeat(hi).take(n_hi));
+            let est = acceptance_rate_from_runs(&runs);
+            assert!((est - p).abs() < 0.01, "p={p} est={est}");
+        }
+    }
+
+    #[test]
+    fn longest_match() {
+        assert_eq!(longest_match_prefix(&[1, 2, 3], &[1, 2, 4]), 2);
+        assert_eq!(longest_match_prefix(&[], &[1]), 0);
+        assert_eq!(longest_match_prefix(&[5, 6], &[5, 6]), 2);
+    }
+
+    #[test]
+    fn si_tokens_per_iteration_limits() {
+        // p=0: 1 token per iteration (the target's own).
+        assert!((expected_tokens_per_si_iteration(0.0, 5) - 1.0).abs() < 1e-12);
+        // p=1: k+1 tokens per iteration.
+        assert!((expected_tokens_per_si_iteration(1.0, 5) - 6.0).abs() < 1e-12);
+        // monotone in p and k
+        assert!(
+            expected_tokens_per_si_iteration(0.9, 5)
+                > expected_tokens_per_si_iteration(0.5, 5)
+        );
+        assert!(
+            expected_tokens_per_si_iteration(0.9, 10)
+                > expected_tokens_per_si_iteration(0.9, 5)
+        );
+    }
+}

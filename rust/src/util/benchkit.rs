@@ -1,0 +1,80 @@
+//! Tiny benchmark harness (criterion stand-in for this offline build).
+//!
+//! Time-based: warm up, then run batches until the measurement budget is
+//! spent; reports mean / std / min / p50 wall time per iteration. Used by
+//! every file in `rust/benches/` (all `harness = false`).
+
+use crate::stats::{percentile, OnlineStats};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+}
+
+impl BenchResult {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters   mean {:>10.3} ms   p50 {:>10.3} ms   min {:>10.3} ms   ±{:>8.3}",
+            self.name, self.iterations, self.mean_ms, self.p50_ms, self.min_ms, self.std_ms
+        )
+    }
+}
+
+/// Benchmark `f` for roughly `budget` (default 2s), after `warmup` runs.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, warmup: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || stats.count() < 3 {
+        let t0 = Instant::now();
+        f();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        stats.push(ms);
+        samples.push(ms);
+        if stats.count() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iterations: stats.count(),
+        mean_ms: stats.mean(),
+        std_ms: stats.std(),
+        min_ms: stats.min(),
+        p50_ms: percentile(&samples, 50.0),
+    }
+}
+
+/// Default-budget convenience (2 s measurement, 1 warmup).
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_for(name, Duration::from_secs(2), 1, f)
+}
+
+/// Print a bench-suite header (so `cargo bench` output reads uniformly).
+pub fn suite(title: &str) {
+    println!("\n=== bench: {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep() {
+        let r = bench_for("sleep1ms", Duration::from_millis(60), 1, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(r.iterations >= 3);
+        assert!(r.mean_ms >= 1.0 && r.mean_ms < 5.0, "{}", r.mean_ms);
+        assert!(!r.render().is_empty());
+    }
+}

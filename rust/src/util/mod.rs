@@ -1,0 +1,15 @@
+//! Dependency-free substrates: deterministic PRNG, scoped-thread parallel
+//! map, and a minimal JSON reader/writer.
+//!
+//! The build environment is fully offline (only the `xla` PJRT bindings and
+//! `anyhow` are vendored), so the usual crates (rand, rayon, serde) are
+//! reimplemented here at the scale this project needs. Each is small,
+//! tested, and deliberately boring.
+
+pub mod benchkit;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use parallel::par_map;
+pub use rng::Rng64;

@@ -1,0 +1,112 @@
+//! Order-preserving scoped-thread parallel map (rayon stand-in).
+//!
+//! Work-stealing via a shared atomic cursor: each worker claims the next
+//! unprocessed index. Results land in a pre-sized slot vector, so output
+//! order matches input order regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` on up to `threads` OS threads (0 = #cpus).
+pub fn par_map_threads<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(n);
+
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let items_ref = &items;
+    let f_ref = &f;
+    let slots_ref = &slots;
+    let cursor_ref = &cursor;
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f_ref(&items_ref[i]);
+                *slots_ref[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker missed a slot"))
+        .collect()
+}
+
+/// Map with the default thread count.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_threads(items, 0, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(items, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u32> = par_map(Vec::<u32>::new(), |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = par_map_threads(vec![1, 2, 3], 1, |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // With 4 threads and sleepy work, wall time must be well under
+        // the serial sum.
+        use std::time::{Duration, Instant};
+        let t0 = Instant::now();
+        let _ = par_map_threads(vec![(); 8], 4, |_| {
+            std::thread::sleep(Duration::from_millis(30));
+        });
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(8 * 30 - 40),
+            "not parallel: {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = par_map_threads(vec![5], 16, |&x| x);
+        assert_eq!(out, vec![5]);
+    }
+}

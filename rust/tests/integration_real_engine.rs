@@ -1,0 +1,112 @@
+//! Integration tests across the AOT boundary: the compiled HLO artifacts
+//! executed by the Rust PJRT runtime, driven by the full coordinator
+//! stack. These run only when `make artifacts` has produced `artifacts/`
+//! (they are skipped silently otherwise so `cargo test` works on a fresh
+//! checkout).
+
+use dsi::config::AlgoKind;
+use dsi::coordinator::{real_factory, run_dsi, run_nonsi, run_si, OnlineConfig};
+use dsi::runtime::npy::load_npy;
+use dsi::runtime::pjrt::{ModelRole, ModelRuntime};
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    p.join("manifest.json").exists().then(|| p.to_path_buf())
+}
+
+/// The cross-language numerics contract: executing the compiled decode
+/// HLO on the selfcheck input must reproduce the logits JAX computed
+/// eagerly at AOT time (dumped to selfcheck_target_logits.npy).
+#[test]
+fn selfcheck_logits_match_python() {
+    let Some(dir) = artifacts() else { return };
+    let expect_path = dir.join("selfcheck_target_logits.npy");
+    if !expect_path.exists() {
+        return; // artifacts predate the selfcheck; `make artifacts` refreshes
+    }
+    let expected = load_npy(&expect_path).unwrap();
+    let expected = expected.as_f32().unwrap();
+
+    let rt = ModelRuntime::load(&dir, ModelRole::Target).unwrap();
+    let mut sess = rt.new_session().unwrap();
+    // selfcheck input: token 42 at position 0 on a zero cache == decoding
+    // token 42 as the very first token.
+    let logits = rt.decode_step(&mut sess, 42).unwrap();
+    assert_eq!(logits.len(), expected.len());
+    for (i, (a, b)) in logits.iter().zip(expected).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-4,
+            "logit {i}: rust {a} vs python {b}"
+        );
+    }
+}
+
+/// Full-stack losslessness: DSI and SI through real PJRT forwards produce
+/// exactly the greedy non-SI stream.
+#[test]
+fn real_engine_losslessness() {
+    let Some(dir) = artifacts() else { return };
+    let factory = real_factory(dir);
+    let cfg = OnlineConfig {
+        prompt: vec![72, 101, 108, 108, 111], // "Hello"
+        n_tokens: 16,
+        lookahead: 2,
+        sp_degree: 2,
+        max_speculation_depth: 8,
+    };
+    let nonsi = run_nonsi(&factory, &cfg);
+    let si = run_si(&factory, &cfg);
+    let dsi = run_dsi(&factory, &cfg);
+    assert_eq!(nonsi.tokens.len(), 16);
+    assert_eq!(si.tokens, nonsi.tokens, "SI diverged from target greedy");
+    assert_eq!(dsi.tokens, nonsi.tokens, "DSI diverged from target greedy");
+    assert_eq!(nonsi.algo, AlgoKind::NonSi);
+    // With the aligned drafter, most drafts should be accepted.
+    assert!(
+        dsi.accepted_drafts * 2 >= dsi.tokens.len(),
+        "suspiciously low acceptance: {}/{}",
+        dsi.accepted_drafts,
+        dsi.tokens.len()
+    );
+}
+
+/// Deterministic outputs: two identical runs produce identical tokens
+/// (greedy decoding of frozen weights must not wobble across threads).
+#[test]
+fn real_engine_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let factory = real_factory(dir);
+    let cfg = OnlineConfig {
+        prompt: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        n_tokens: 12,
+        lookahead: 3,
+        sp_degree: 2,
+        max_speculation_depth: 9,
+    };
+    let a = run_dsi(&factory, &cfg);
+    let b = run_dsi(&factory, &cfg);
+    assert_eq!(a.tokens, b.tokens);
+}
+
+/// Drafter and target agree often (the layer-truncation alignment) but
+/// not always (so rejections exercise resync) — measured over the real
+/// models, mirroring §F.2's estimation procedure.
+#[test]
+fn real_acceptance_rate_in_expected_band() {
+    let Some(dir) = artifacts() else { return };
+    use dsi::coordinator::{LmServer, RealServer, ServerRole};
+    let mut target = RealServer::load(&dir, ServerRole::Target).unwrap();
+    let mut drafter = RealServer::load(&dir, ServerRole::Drafter).unwrap();
+    let mut ctx: Vec<u32> = vec![10, 20, 30, 40];
+    let mut agree = 0usize;
+    let n = 40usize;
+    for _ in 0..n {
+        let t = target.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+        let d = drafter.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+        agree += (t == d) as usize;
+        ctx.push(t);
+    }
+    let rate = agree as f64 / n as f64;
+    assert!(rate > 0.4, "acceptance too low: {rate}");
+}

@@ -1,0 +1,202 @@
+//! Property-based tests over random configurations (hand-rolled
+//! generator; the offline build vendors no proptest). Each property runs
+//! against a few hundred random configs drawn from a seeded RNG, so
+//! failures are reproducible by case index.
+
+use dsi::config::{min_lookahead_for_sp, required_sp, AlgoKind, ExperimentConfig, LatencyProfile};
+use dsi::simulator::{simulate, simulate_dsi, simulate_nonsi, simulate_si};
+use dsi::util::Rng64;
+
+/// Random-but-valid experiment config.
+fn random_config(rng: &mut Rng64) -> ExperimentConfig {
+    let target = 5.0 + rng.gen_f64() * 95.0;
+    let drafter = target * (0.01 + rng.gen_f64() * 0.98);
+    let sp = 1 + rng.gen_range(10);
+    let use_min_k = rng.gen_bool(0.5);
+    let lookahead = if use_min_k {
+        min_lookahead_for_sp(target, drafter, sp)
+    } else {
+        1 + rng.gen_range(20)
+    };
+    ExperimentConfig {
+        target: LatencyProfile::new(target * (1.0 + rng.gen_f64() * 4.0), target),
+        drafter: LatencyProfile::new(drafter * (1.0 + rng.gen_f64() * 4.0), drafter),
+        acceptance_rate: rng.gen_f64(),
+        lookahead,
+        sp_degree: sp,
+        n_tokens: 20 + rng.gen_range(180),
+        seed: rng.next_u64(),
+        preempt_on_reject: rng.gen_bool(0.5),
+        max_speculation_depth: None,
+    }
+}
+
+#[test]
+fn prop_all_algorithms_complete_and_account() {
+    let mut rng = Rng64::seed_from_u64(0xDEAD);
+    for case in 0..250 {
+        let cfg = random_config(&mut rng);
+        for algo in AlgoKind::ALL {
+            let out = simulate(algo, &cfg);
+            assert!(out.tokens >= cfg.n_tokens, "case {case} {algo:?}: short output");
+            assert!(out.total_ms.is_finite() && out.total_ms > 0.0, "case {case} {algo:?}");
+            // Trace sanity: monotone, ends at the reported totals.
+            for w in out.trace.windows(2) {
+                assert!(w[0].time_ms <= w[1].time_ms, "case {case} {algo:?}: time order");
+                assert!(w[0].tokens < w[1].tokens, "case {case} {algo:?}: token order");
+            }
+            let last = out.trace.last().unwrap();
+            assert_eq!(last.tokens, out.tokens, "case {case} {algo:?}");
+            assert!((last.time_ms - out.total_ms).abs() < 1e-6, "case {case} {algo:?}");
+        }
+    }
+}
+
+/// Theorem 1 (simulator form): at the Equation-1-minimal lookahead, DSI is
+/// never slower than non-SI.
+#[test]
+fn prop_dsi_never_slower_than_nonsi_at_min_lookahead() {
+    let mut rng = Rng64::seed_from_u64(0xBEEF);
+    for case in 0..300 {
+        let mut cfg = random_config(&mut rng);
+        cfg.lookahead =
+            min_lookahead_for_sp(cfg.target.tpot_ms, cfg.drafter.tpot_ms, cfg.sp_degree);
+        // Uniform profiles isolate the theorem from TTFT bookkeeping.
+        cfg.target = LatencyProfile::uniform(cfg.target.tpot_ms);
+        cfg.drafter = LatencyProfile::uniform(cfg.drafter.tpot_ms);
+        let dsi = simulate_dsi(&cfg);
+        let nonsi = simulate_nonsi(&cfg);
+        assert!(
+            dsi.total_ms <= nonsi.total_ms * (1.0 + 1e-9),
+            "case {case}: DSI {} > non-SI {} (cfg {cfg:?})",
+            dsi.total_ms,
+            nonsi.total_ms
+        );
+    }
+}
+
+/// Theorem 2 (simulator form): DSI is at least as fast as SI in
+/// expectation (averaged over seeds), at the same lookahead, when Eq. 1
+/// is satisfied.
+#[test]
+fn prop_dsi_beats_si_in_expectation() {
+    let mut rng = Rng64::seed_from_u64(0xCAFE);
+    for case in 0..40 {
+        let mut cfg = random_config(&mut rng);
+        cfg.target = LatencyProfile::uniform(cfg.target.tpot_ms);
+        cfg.drafter = LatencyProfile::uniform(cfg.drafter.tpot_ms);
+        cfg.lookahead =
+            min_lookahead_for_sp(cfg.target.tpot_ms, cfg.drafter.tpot_ms, cfg.sp_degree);
+        cfg.n_tokens = 120;
+        let mut dsi = 0.0;
+        let mut si = 0.0;
+        for s in 0..25 {
+            let mut c = cfg.clone();
+            c.seed = s * 7919 + case;
+            dsi += simulate_dsi(&c).total_ms;
+            si += simulate_si(&c).total_ms;
+        }
+        assert!(
+            dsi <= si * 1.01, // 1% slack for finite-sample noise
+            "case {case}: mean DSI {} > mean SI {} (cfg {cfg:?})",
+            dsi / 25.0,
+            si / 25.0
+        );
+    }
+}
+
+/// Speedup is monotone-ish in acceptance rate: strictly better drafters
+/// never hurt DSI (averaged over seeds).
+#[test]
+fn prop_dsi_latency_monotone_in_acceptance() {
+    let mut rng = Rng64::seed_from_u64(0xF00D);
+    for case in 0..30 {
+        let mut cfg = random_config(&mut rng);
+        cfg.target = LatencyProfile::uniform(cfg.target.tpot_ms);
+        cfg.drafter = LatencyProfile::uniform(cfg.drafter.tpot_ms);
+        cfg.lookahead =
+            min_lookahead_for_sp(cfg.target.tpot_ms, cfg.drafter.tpot_ms, cfg.sp_degree);
+        cfg.n_tokens = 100;
+        let mean_at = |p: f64| {
+            let mut tot = 0.0;
+            for s in 0..30 {
+                let mut c = cfg.clone();
+                c.acceptance_rate = p;
+                c.seed = s * 31 + case;
+                tot += simulate_dsi(&c).total_ms;
+            }
+            tot / 30.0
+        };
+        let lo = mean_at(0.2);
+        let hi = mean_at(0.9);
+        assert!(
+            hi <= lo * 1.02,
+            "case {case}: latency at p=0.9 ({hi}) worse than at p=0.2 ({lo})"
+        );
+    }
+}
+
+/// Equation 1 helpers are mutually consistent for random latencies.
+#[test]
+fn prop_eq1_consistency() {
+    let mut rng = Rng64::seed_from_u64(0x1234);
+    for _ in 0..1000 {
+        let t = 1.0 + rng.gen_f64() * 200.0;
+        let d = t * (0.005 + rng.gen_f64() * 0.99);
+        let sp = 1 + rng.gen_range(16);
+        let k = min_lookahead_for_sp(t, d, sp);
+        assert!(required_sp(t, d, k) <= sp, "t={t} d={d} sp={sp} k={k}");
+        if k > 1 {
+            assert!(required_sp(t, d, k - 1) > sp, "k={k} not minimal for t={t} d={d}");
+        }
+    }
+}
+
+/// Determinism: identical configs (including seed) give identical outcomes.
+#[test]
+fn prop_simulators_deterministic() {
+    let mut rng = Rng64::seed_from_u64(0x5555);
+    for _ in 0..50 {
+        let cfg = random_config(&mut rng);
+        for algo in AlgoKind::ALL {
+            let a = simulate(algo, &cfg);
+            let b = simulate(algo, &cfg);
+            assert_eq!(a.total_ms, b.total_ms);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.target_forwards, b.target_forwards);
+        }
+    }
+}
+
+/// The online wait-engine coordinator is lossless for random settings.
+/// (Heavier per case than the simulator props; fewer cases.)
+#[test]
+fn prop_online_dsi_lossless_random_configs() {
+    use dsi::config::LatencyProfile;
+    use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+    use dsi::coordinator::{run_dsi, run_nonsi, OnlineConfig};
+
+    let mut rng = Rng64::seed_from_u64(0x9999);
+    for case in 0..12 {
+        let p = rng.gen_f64();
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(1.0 + rng.gen_f64() * 2.0),
+            drafter: LatencyProfile::uniform(0.2 + rng.gen_f64() * 0.5),
+            oracle: Oracle { vocab: 256, acceptance_rate: p, seed: rng.next_u64() },
+            max_context: 4096,
+        };
+        let cfg = OnlineConfig {
+            prompt: vec![1, 2, 3],
+            n_tokens: 12 + rng.gen_range(12),
+            lookahead: 1 + rng.gen_range(4),
+            sp_degree: 1 + rng.gen_range(5),
+            max_speculation_depth: 8 + rng.gen_range(32),
+        };
+        let dsi = run_dsi(&eng.factory(), &cfg);
+        let nonsi = run_nonsi(&eng.factory(), &cfg);
+        assert_eq!(
+            dsi.tokens, nonsi.tokens,
+            "case {case}: lossless violated at p={p:.3} cfg={cfg:?}"
+        );
+    }
+}
