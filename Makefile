@@ -1,0 +1,36 @@
+# DSI reproduction — top-level driver.
+
+CARGO ?= cargo
+PY ?= python3
+
+.PHONY: build test verify artifacts bench fmt clippy clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# The tier-1 gate.
+verify: build test
+
+# Lower the tiny JAX/Pallas pair to HLO text + npy weights (the only time
+# Python runs). Artifacts land in rust/artifacts/ — the package root, so
+# `cargo test` finds them — with a root-level symlink for `cargo run`.
+artifacts:
+	$(PY) python/compile/aot.py --out rust/artifacts/model.hlo.txt
+	ln -sfn rust/artifacts artifacts
+
+bench:
+	$(CARGO) bench --bench concurrent_serving
+	$(CARGO) bench --bench coordinator_overhead
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+clean:
+	$(CARGO) clean
+	rm -rf rust/artifacts artifacts

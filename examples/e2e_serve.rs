@@ -19,10 +19,11 @@ use dsi::coordinator::{
 use dsi::runtime::Manifest;
 use dsi::server::router::Router;
 use dsi::server::Server;
+use dsi::util::error::Result;
 use dsi::workload::{PromptGen, PromptProfile};
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let artifacts = Path::new("artifacts");
     let manifest = Manifest::load(artifacts)?;
     println!(
@@ -61,13 +62,13 @@ fn main() -> anyhow::Result<()> {
         let resps = srv.serve(&reqs);
         let wall_s = t0.elapsed().as_secs_f64();
 
-        let snap = srv.metrics.snapshot();
+        let snap = srv.metrics_snapshot();
         println!("\n== {} ==", algo.name());
         println!("  {}", snap.render());
         println!(
             "  total wall {:.2}s, acceptance estimate {:.3}",
             wall_s,
-            srv.router.acceptance_estimate()
+            srv.acceptance_estimate()
         );
         println!(
             "  sample output: {:?}",
@@ -134,11 +135,47 @@ fn main() -> anyhow::Result<()> {
         si.wall_ms / dsi_out.wall_ms,
         nonsi.wall_ms / dsi_out.wall_ms,
     );
+
+    // --- projection: concurrent sessions sharing one target pool --------
+    // The serving-scale question: given the node's SP budget, how much
+    // aggregate throughput does admitting multiple generations at once
+    // buy (each session runs at a smaller Eq-1 share, so per-request
+    // latency rises while total wall time falls)?
+    println!("\nconcurrent multi-session serving on the calibrated pair (8 requests):");
+    let mut seq_wall = f64::NAN;
+    for max_sessions in [1usize, 2, 4] {
+        let router = Router::new(
+            LatencyProfile::uniform(t_tpot),
+            LatencyProfile::uniform(d_tpot),
+            7,
+        );
+        let mut srv = Server::new(eng.factory(), router, AlgoKind::Dsi)
+            .with_max_depth(64)
+            .with_max_sessions(max_sessions)
+            .with_pool_size(7);
+        let mut gen = PromptGen::new(23, 256);
+        let reqs = gen.closed_loop(8, PromptProfile::Instruction, 32);
+        let t0 = std::time::Instant::now();
+        let _ = srv.serve(&reqs);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if max_sessions == 1 {
+            seq_wall = wall_ms;
+        }
+        let snap = srv.metrics_snapshot();
+        println!(
+            "  max_sessions={max_sessions}: wall {:>7.0} ms | {:>6.1} tok/s | \
+             mean e2e {:>6.0} ms | speedup vs sequential {:.2}x",
+            wall_ms,
+            snap.tokens_per_s,
+            snap.wall_mean_ms,
+            seq_wall / wall_ms,
+        );
+    }
     Ok(())
 }
 
 /// Greedy drafter-target agreement rate over a short rollout (§F.2).
-fn calibrate_acceptance(artifacts: &Path) -> anyhow::Result<f64> {
+fn calibrate_acceptance(artifacts: &Path) -> Result<f64> {
     let mut target = RealServer::load(artifacts, ServerRole::Target)?;
     let mut drafter = RealServer::load(artifacts, ServerRole::Drafter)?;
     let mut ctx: Vec<u32> = vec![5, 10, 15, 20];
@@ -154,7 +191,7 @@ fn calibrate_acceptance(artifacts: &Path) -> anyhow::Result<f64> {
 }
 
 /// Measure decode TPOT of both real models (16-step average, warm cache).
-fn calibrate_tpots(artifacts: &Path) -> anyhow::Result<(f64, f64)> {
+fn calibrate_tpots(artifacts: &Path) -> Result<(f64, f64)> {
     let mut out = [0.0f64; 2];
     for (i, role) in [ServerRole::Target, ServerRole::Drafter].iter().enumerate() {
         let mut s = RealServer::load(artifacts, *role)?;

@@ -1,68 +1,58 @@
 //! Online DSI: Algorithm 1 (generalized to lookahead ≥ 1, Appendix D) on
 //! real OS threads — the paper's system contribution.
 //!
-//! Topology (matching §4's single-node design):
+//! Topology (§4's single-node design, generalized to concurrent sessions):
 //!
 //! ```text
-//!             ┌────────────┐   drafts    ┌──────────────┐
-//!             │  drafter   │ ──────────► │              │
-//!             │  thread    │ ◄────────── │  coordinator │◄─┐
-//!             └────────────┘  restarts   │  event loop  │  │ results
-//!                                        └──────┬───────┘  │
-//!                                     verify    │          │
-//!                                     tasks     ▼          │
-//!                              ┌─────────────────────────┐ │
-//!                              │ target pool (SP degree) │─┘
-//!                              │  worker 0 … worker SP-1 │
-//!                              └─────────────────────────┘
+//!   session 0                 session 1
+//! ┌────────────┐            ┌────────────┐
+//! │  drafter   │            │  drafter   │     (one drafter thread
+//! │  thread    │            │  thread    │      per session)
+//! └─────┬──────┘            └─────┬──────┘
+//!       │ drafts                  │ drafts
+//! ┌─────▼──────┐            ┌─────▼──────┐
+//! │ coordinator│            │ coordinator│     (one event loop
+//! │ event loop │            │ event loop │      per session)
+//! └─────┬──▲───┘            └─────┬──▲───┘
+//!       │  │ tagged results       │  │
+//!       ▼  │  tagged tasks        ▼  │
+//! ┌──────────────────────────────────────┐
+//! │   shared TargetPool (SP budget)      │
+//! │   worker 0 … worker P-1              │
+//! └──────────────────────────────────────┘
 //! ```
 //!
 //! - The **drafter thread** streams draft tokens continuously; it never
 //!   blocks on verification (DSI's defining non-blocking property). On a
 //!   rejection it receives a restart with the corrected context.
-//! - **Verification tasks** τ_0, τ_1, … of each generation go to a shared
-//!   queue served by the target pool. τ_0 needs only the settled context
-//!   (after a rejection the target self-drafts its continuation, which is
-//!   why DSI never falls behind non-SI); τ_j covers the j-th lookahead
-//!   block and is dispatched as soon as the drafter has produced its
-//!   input tokens.
+//! - **Verification tasks** τ_0, τ_1, … of each generation go to the
+//!   shared [`TargetPool`], tagged `(session, generation)`. τ_0 needs only
+//!   the settled context (after a rejection the target self-drafts its
+//!   continuation, which is why DSI never falls behind non-SI); τ_j covers
+//!   the j-th lookahead block and is dispatched as soon as the drafter has
+//!   produced its input tokens. A session keeps at most `sp_degree` block
+//!   tasks in flight — its share of the node's SP budget — so concurrent
+//!   sessions contend for, rather than monopolize, the pool.
 //! - The **coordinator** settles positions strictly in order, comparing
 //!   draft tokens against target predictions (exact match). The first
 //!   mismatch settles the target's own token as the correction, bumps the
-//!   generation id (staling every queued/running task and the drafter's
-//!   branch — Algorithm 1 line 8's terminations), and restarts.
+//!   session's generation (staling that session's queued/running tasks and
+//!   its drafter branch — Algorithm 1 line 8's terminations, now scoped
+//!   per session), and restarts.
 //!
 //! Losslessness: the output is bit-identical to greedy non-SI decoding of
 //! the target (tested below for the wait engine at several acceptance
-//! rates and in `rust/tests/` for the real PJRT engine).
+//! rates, under pool contention in `rust/tests/concurrent_serving.rs`,
+//! and for the real PJRT engine in `rust/tests/`).
 
+use super::pool::{PoolHandle, SessionMsg, TargetPool};
 use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-/// A verification task for the target pool.
-enum Task {
-    Verify {
-        gen: u64,
-        /// Full context prefix the predictions condition on.
-        ctx: Vec<u32>,
-        /// Predict indices [from, to).
-        from: usize,
-        to: usize,
-    },
-    Shutdown,
-}
-
-/// Worker -> coordinator messages.
-enum Msg {
-    Draft { gen: u64, index: usize, token: u32 },
-    VerifyDone { gen: u64, from: usize, preds: Vec<u32> },
-    DrafterStopped,
-}
 
 /// Drafter control messages.
 enum Ctrl {
@@ -72,108 +62,49 @@ enum Ctrl {
     Stop,
 }
 
-/// Shared FIFO task queue with wakeup.
-struct TaskQueue {
-    q: Mutex<VecDeque<Task>>,
-    cv: Condvar,
-}
-
-impl TaskQueue {
-    fn new() -> Self {
-        Self { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
-    }
-
-    fn push(&self, t: Task) {
-        self.q.lock().unwrap().push_back(t);
-        self.cv.notify_one();
-    }
-
-    fn pop(&self) -> Task {
-        let mut q = self.q.lock().unwrap();
-        loop {
-            if let Some(t) = q.pop_front() {
-                return t;
-            }
-            q = self.cv.wait(q).unwrap();
-        }
-    }
-
-    /// Drop all queued Verify tasks (rejection preempts them).
-    fn clear_verifies(&self) {
-        let mut q = self.q.lock().unwrap();
-        q.retain(|t| matches!(t, Task::Shutdown));
-    }
-}
-
-
-/// One-shot convenience: build a pipeline, run one generation, tear down.
-/// Serving paths should hold a [`DsiPipeline`] instead — model loading /
-/// HLO compilation then happens once per worker, not once per request.
+/// One-shot convenience: build a private pool and session, run one
+/// generation, tear down. Serving paths should hold a [`TargetPool`] and
+/// [`DsiSession`]s instead — model loading / HLO compilation then happens
+/// once per pool worker, not once per request.
 pub fn run_dsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
-    let mut pipeline = DsiPipeline::new(factory, cfg.sp_degree);
-    pipeline.generate(cfg)
+    let pool = TargetPool::new(factory, cfg.sp_degree);
+    let mut session = DsiSession::new(&pool, factory);
+    session.generate(cfg)
 }
 
-/// A persistent DSI serving pipeline: the drafter thread and the SP
-/// target-pool workers (with their loaded models and KV sessions) stay
-/// alive across requests. Between requests the drafter parks on its
-/// control channel, so an idle pipeline consumes no CPU.
-pub struct DsiPipeline {
-    queue: Arc<TaskQueue>,
-    msg_rx: Receiver<Msg>,
+/// A persistent DSI session: one drafter thread (with its loaded model and
+/// KV state) plus a registration on a shared [`TargetPool`]. The session
+/// stays alive across requests; between requests the drafter parks on its
+/// control channel, so an idle session consumes no CPU.
+///
+/// Any number of sessions may share one pool — each session's tasks are
+/// tagged with its id, results are routed back privately, and rejection
+/// staling never crosses session boundaries.
+pub struct DsiSession {
+    handle: PoolHandle,
+    msg_rx: Receiver<SessionMsg>,
     ctrl_tx: Sender<Ctrl>,
-    current_gen: Arc<AtomicU64>,
     frontier: Arc<AtomicUsize>,
     depth: Arc<AtomicUsize>,
     drafter_calls_ctr: Arc<AtomicUsize>,
-    workers: Vec<std::thread::JoinHandle<()>>,
     drafter_handle: Option<std::thread::JoinHandle<()>>,
-    sp_degree: usize,
     gen: u64,
 }
 
-impl DsiPipeline {
-    pub fn new(factory: &ServerFactory, sp_degree: usize) -> Self {
-        assert!(sp_degree >= 1);
-        let queue = Arc::new(TaskQueue::new());
-        let (msg_tx, msg_rx): (Sender<Msg>, Receiver<Msg>) = channel();
-        let current_gen = Arc::new(AtomicU64::new(0));
+impl DsiSession {
+    /// Register on `pool` and spawn this session's drafter thread. The
+    /// pool must outlive the session (it owns the target workers).
+    pub fn new(pool: &TargetPool, factory: &ServerFactory) -> Self {
+        let (msg_tx, msg_rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = channel();
+        let handle = pool.register(msg_tx.clone());
         let frontier = Arc::new(AtomicUsize::new(0));
         let depth = Arc::new(AtomicUsize::new(usize::MAX));
         let drafter_calls_ctr = Arc::new(AtomicUsize::new(0));
 
-        // --- target pool ---
-        let mut workers = Vec::new();
-        for wid in 0..sp_degree {
-            let queue = queue.clone();
-            let tx = msg_tx.clone();
-            let cur = current_gen.clone();
-            let factory = factory.clone();
-            workers.push(std::thread::spawn(move || {
-                let mut server = factory(ServerRole::Target, wid);
-                loop {
-                    match queue.pop() {
-                        Task::Shutdown => break,
-                        Task::Verify { gen, ctx, from, to } => {
-                            // Queued-task preemption (Algorithm 1 line 8):
-                            // skip work a rejection already invalidated.
-                            if gen != cur.load(Ordering::Acquire) {
-                                continue;
-                            }
-                            let preds = server.predictions(&ctx, from, to);
-                            if tx.send(Msg::VerifyDone { gen, from, preds }).is_err() {
-                                break;
-                            }
-                        }
-                    }
-                }
-            }));
-        }
-
         // --- drafter thread ---
         let (ctrl_tx, ctrl_rx): (Sender<Ctrl>, Receiver<Ctrl>) = channel();
         let drafter_handle = {
-            let tx = msg_tx.clone();
+            let tx = msg_tx;
             let factory = factory.clone();
             let frontier = frontier.clone();
             let depth = depth.clone();
@@ -238,43 +169,47 @@ impl DsiPipeline {
                     calls.fetch_add(1, Ordering::Relaxed);
                     ctx.push(tok);
                     if tx
-                        .send(Msg::Draft { gen, index: ctx.len() - 1, token: tok })
+                        .send(SessionMsg::Draft { gen, index: ctx.len() - 1, token: tok })
                         .is_err()
                     {
                         break;
                     }
                 }
-                let _ = tx.send(Msg::DrafterStopped);
+                let _ = tx.send(SessionMsg::DrafterStopped);
             })
         };
 
         Self {
-            queue,
+            handle,
             msg_rx,
             ctrl_tx,
-            current_gen,
             frontier,
             depth,
             drafter_calls_ctr,
-            workers,
             drafter_handle: Some(drafter_handle),
-            sp_degree,
             gen: 0,
         }
     }
 
-    /// Run one generation. `cfg.sp_degree` is ignored (the pool size was
-    /// fixed at construction).
+    /// This session's pool-unique id.
+    pub fn session_id(&self) -> u64 {
+        self.handle.session_id()
+    }
+
+    /// Run one generation. `cfg.sp_degree` is this session's share of the
+    /// pool: the cap on its concurrently in-flight block-verification
+    /// tasks (the chain fallback is exempt — it guarantees non-SI pace).
     pub fn generate(&mut self, cfg: &OnlineConfig) -> OnlineOutcome {
         assert!(cfg.lookahead >= 1);
         let k = cfg.lookahead;
-        let queue = &self.queue;
+        let max_inflight = cfg.sp_degree.max(1);
 
         // Fresh request: bump the generation (staling any leftovers from
         // the previous request), point the drafter at the new prompt.
         self.gen += 1;
         let mut gen = self.gen;
-        self.current_gen.store(gen, Ordering::Release);
+        let handle = &self.handle;
+        handle.advance_gen(gen);
         self.frontier.store(cfg.prompt.len(), Ordering::Release);
         self.depth
             .store(cfg.max_speculation_depth.max(1), Ordering::Release);
@@ -295,8 +230,9 @@ impl DsiPipeline {
         // Buffered verification results: from-index -> predictions.
         let mut results: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
         // In-flight (queued or running) verification coverage: from -> to.
-        // Gates the chain fallback: a chain task is only worth a forward
-        // when nothing in flight will settle the frontier.
+        // Gates the chain fallback (a chain task is only worth a forward
+        // when nothing in flight will settle the frontier) and meters this
+        // session's pool share.
         let mut inflight: BTreeMap<usize, usize> = BTreeMap::new();
 
         let mut target_jobs = 0usize;
@@ -311,7 +247,7 @@ impl DsiPipeline {
 
         macro_rules! dispatch_ready_tasks {
             () => {
-                while next_task >= 1 && drafts.len() >= next_task * k {
+                while drafts.len() >= next_task * k && inflight.len() < max_inflight {
                     let (from, to) =
                         (c0 + (next_task - 1) * k + 1, c0 + next_task * k + 1);
                     // Context = generation-start prefix + draft block.
@@ -319,7 +255,7 @@ impl DsiPipeline {
                     // settling earlier drafts of this generation.)
                     let mut ctx = settled[..c0].to_vec();
                     ctx.extend_from_slice(&drafts[..next_task * k]);
-                    queue.push(Task::Verify { gen, ctx, from, to });
+                    handle.submit(gen, ctx, from, to);
                     inflight.insert(from, to);
                     target_jobs += 1;
                     next_task += 1;
@@ -336,12 +272,7 @@ impl DsiPipeline {
                     .map_or(false, |(_, &to)| to > pos);
                 if pos < goal && chain_dispatched_for != pos && !covered {
                     chain_dispatched_for = pos;
-                    queue.push(Task::Verify {
-                        gen,
-                        ctx: settled.clone(),
-                        from: pos,
-                        to: pos + 1,
-                    });
+                    handle.submit(gen, settled.clone(), pos, pos + 1);
                     inflight.insert(pos, pos + 1);
                     target_jobs += 1;
                 }
@@ -355,30 +286,34 @@ impl DsiPipeline {
                 Err(_) => break,
             };
             match msg {
-                Msg::DrafterStopped => {}
-                Msg::Draft { gen: g, index, token } => {
+                SessionMsg::DrafterStopped => {}
+                SessionMsg::Draft { gen: g, index, token } => {
                     if g != gen {
                         continue; // stale speculation branch
                     }
                     debug_assert_eq!(index, c0 + drafts.len(), "draft order");
                     drafts.push(token);
-                    dispatch_ready_tasks!();
                 }
-                Msg::VerifyDone { gen: g, from, preds } => {
-                    if g != gen {
+                SessionMsg::Verify(r) => {
+                    debug_assert_eq!(r.session, handle.session_id(), "routing");
+                    if r.gen != gen {
                         continue; // preempted (stale) verification
                     }
                     // Chain and block results can share a `from`; keep the
                     // wider coverage (overlapping predictions are identical
                     // — same deterministic model, same context).
-                    let keep =
-                        results.get(&from).map_or(true, |old| old.len() < preds.len());
+                    let keep = results
+                        .get(&r.from)
+                        .map_or(true, |old| old.len() < r.preds.len());
                     if keep {
-                        results.insert(from, preds);
+                        results.insert(r.from, r.preds);
                     }
-                    inflight.remove(&from);
+                    inflight.remove(&r.from);
                 }
             }
+            // Dispatch whatever became possible: new drafts may complete a
+            // block, and a finished verification frees in-flight budget.
+            dispatch_ready_tasks!();
 
             // Settle in strict position order.
             'settle: while settled.len() < goal {
@@ -417,10 +352,11 @@ impl DsiPipeline {
                         break 'main;
                     }
                     // Resynchronize: new generation from corrected context.
+                    // Staling is scoped to this session — concurrent
+                    // sessions on the pool are unaffected.
                     gen += 1;
                     self.gen = gen;
-                    self.current_gen.store(gen, Ordering::Release);
-                    queue.clear_verifies();
+                    handle.advance_gen(gen);
                     results.clear();
                     inflight.clear();
                     drafts.clear();
@@ -439,11 +375,10 @@ impl DsiPipeline {
         let wall_ms = start.elapsed().as_secs_f64() * 1e3;
 
         // Park the drafter and stale out any in-flight speculation; the
-        // pool threads stay alive for the next request.
+        // pool workers keep serving other sessions.
         let _ = self.ctrl_tx.send(Ctrl::Pause);
         self.gen += 1;
-        self.current_gen.store(self.gen, Ordering::Release);
-        self.queue.clear_verifies();
+        handle.advance_gen(self.gen);
 
         let drafter_calls =
             self.drafter_calls_ctr.load(Ordering::Relaxed) - drafter_calls_before;
@@ -466,21 +401,17 @@ impl DsiPipeline {
     }
 }
 
-impl Drop for DsiPipeline {
+impl Drop for DsiSession {
     fn drop(&mut self) {
         let _ = self.ctrl_tx.send(Ctrl::Stop);
-        for _ in 0..self.sp_degree {
-            self.queue.push(Task::Shutdown);
-        }
-        // Drain so worker sends never block on a full channel (unbounded
-        // mpsc never blocks, but the drafter may be mid-send).
+        // Drain pending messages so the drafter never wedges mid-send
+        // (unbounded mpsc never blocks, but stay defensive).
         while self.msg_rx.try_recv().is_ok() {}
         if let Some(h) = self.drafter_handle.take() {
             let _ = h.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        // PoolHandle drops here: unregisters the session and purges its
+        // queued tasks from the shared pool.
     }
 }
 
@@ -599,5 +530,26 @@ mod tests {
         let out = run_dsi(&eng.factory(), &c);
         let nonsi = run_nonsi(&eng.factory(), &c);
         assert_eq!(out.tokens, nonsi.tokens);
+    }
+
+    #[test]
+    fn session_reuse_across_requests() {
+        // A persistent session serves back-to-back requests correctly
+        // (stale speculation from request i never leaks into request i+1).
+        let eng = engine(0.8, 2.0, 0.4, 43);
+        let pool = TargetPool::new(&eng.factory(), 3);
+        let mut session = DsiSession::new(&pool, &eng.factory());
+        for n in [8usize, 16, 12] {
+            let c = OnlineConfig {
+                prompt: vec![n as u32, 7, 9],
+                n_tokens: n,
+                lookahead: 2,
+                sp_degree: 3,
+                max_speculation_depth: 64,
+            };
+            let out = session.generate(&c);
+            let nonsi = run_nonsi(&eng.factory(), &c);
+            assert_eq!(out.tokens, nonsi.tokens, "request of {n} tokens");
+        }
     }
 }

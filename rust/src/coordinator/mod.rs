@@ -16,16 +16,23 @@
 //! to non-SI greedy decoding of the target model. (The relaxed
 //! rejection-sampling rule lives in `runtime::sampler` and is
 //! property-tested there.)
+//!
+//! Since the target-pool extraction, speculation parallelism is a *shared*
+//! node resource: [`pool::TargetPool`] owns the target workers, tasks are
+//! tagged `(session, generation)`, and any number of [`DsiSession`]s run
+//! concurrently against one pool with per-session rejection staling.
 
 mod dsi;
-pub mod real_engine;
 mod nonsi;
+pub mod pool;
+pub mod real_engine;
 mod si;
 pub mod wait_engine;
 
-pub use dsi::{run_dsi, DsiPipeline};
-pub use real_engine::{real_factory, RealServer};
+pub use dsi::{run_dsi, DsiSession};
 pub use nonsi::{run_nonsi, run_nonsi_with};
+pub use pool::{PoolHandle, SessionMsg, TargetPool, VerifyResult};
+pub use real_engine::{real_factory, RealServer};
 pub use si::{run_si, run_si_with};
 pub use wait_engine::{WaitEngine, WaitServer};
 

@@ -1,0 +1,334 @@
+//! The shared target pool: speculation parallelism as a node-level,
+//! schedulable resource.
+//!
+//! The paper's Algorithm 1 owns its target servers per generation; a
+//! serving node cannot afford that — the SP budget (GPUs running target
+//! replicas) is fixed per node while requests come and go. [`TargetPool`]
+//! therefore decouples the pool from any single generation:
+//!
+//! - **Workers** are OS threads, each owning one target [`LmServer`]
+//!   (model load / HLO compilation happens once per worker, at pool
+//!   construction — not per request).
+//! - **Tasks** are tagged `(session_id, generation)`. Rejection staling
+//!   (Algorithm 1 line 8) is *per session*: one session's resync never
+//!   cancels another session's in-flight verification.
+//! - **Results** are routed back to the owning session's coordinator
+//!   through the `Sender<SessionMsg>` it registered; a result for a
+//!   departed session is dropped on the floor.
+//!
+//! Sessions interact with the pool through a [`PoolHandle`] obtained from
+//! [`TargetPool::register`]; dropping the handle unregisters the session
+//! and purges its queued tasks.
+
+use super::{LmServer, ServerFactory, ServerRole};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A completed verification task, routed back to its owning session.
+#[derive(Debug, Clone)]
+pub struct VerifyResult {
+    /// Session the task belonged to (always the receiving session's id;
+    /// the pool routes by tag, never broadcast).
+    pub session: u64,
+    /// Generation the task was dispatched under. The coordinator drops
+    /// results whose generation a rejection has since staled.
+    pub gen: u64,
+    /// First predicted index.
+    pub from: usize,
+    /// Greedy predictions for indices `[from, from + preds.len())`.
+    pub preds: Vec<u32>,
+}
+
+/// The unified event stream a session coordinator consumes: drafts from
+/// its own drafter thread and verification results from the shared pool
+/// arrive on one channel, so the event loop needs no select.
+#[derive(Debug)]
+pub enum SessionMsg {
+    /// A draft token from the session's drafter thread.
+    Draft { gen: u64, index: usize, token: u32 },
+    /// A verification result from the target pool.
+    Verify(VerifyResult),
+    /// The session's drafter thread exited.
+    DrafterStopped,
+}
+
+/// A queued verification task.
+enum PoolTask {
+    Verify { session: u64, gen: u64, ctx: Vec<u32>, from: usize, to: usize },
+    Shutdown,
+}
+
+/// Per-session routing entry.
+struct Route {
+    /// Current (non-stale) generation of the session. Workers skip tasks
+    /// whose tag is older — the queued-task half of Algorithm 1 line 8.
+    gen: Arc<AtomicU64>,
+    /// Result channel into the session's coordinator event loop.
+    tx: Sender<SessionMsg>,
+}
+
+/// State shared between the pool owner, its workers, and session handles.
+struct PoolShared {
+    queue: Mutex<VecDeque<PoolTask>>,
+    cv: Condvar,
+    routes: Mutex<HashMap<u64, Route>>,
+    next_session: AtomicU64,
+    active: AtomicUsize,
+}
+
+impl PoolShared {
+    fn push(&self, t: PoolTask) {
+        self.queue.lock().unwrap().push_back(t);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> PoolTask {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return t;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Drop queued tasks of `session` older than `gen` (rejection staling,
+    /// per session — other sessions' tasks are untouched).
+    fn purge_stale(&self, session: u64, gen: u64) {
+        let mut q = self.queue.lock().unwrap();
+        q.retain(|t| match t {
+            PoolTask::Verify { session: s, gen: g, .. } => *s != session || *g >= gen,
+            PoolTask::Shutdown => true,
+        });
+    }
+}
+
+/// A session's capability to use the pool. Obtained from
+/// [`TargetPool::register`]; dropping it unregisters the session.
+pub struct PoolHandle {
+    shared: Arc<PoolShared>,
+    session: u64,
+    gen: Arc<AtomicU64>,
+}
+
+impl PoolHandle {
+    /// This session's pool-unique id.
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+
+    /// Enqueue one verification task tagged with this session and `gen`.
+    pub fn submit(&self, gen: u64, ctx: Vec<u32>, from: usize, to: usize) {
+        self.shared.push(PoolTask::Verify { session: self.session, gen, ctx, from, to });
+    }
+
+    /// Advance this session's generation (a rejection resync): queued
+    /// tasks with older tags are purged and running ones are skipped by
+    /// the workers' tag check / dropped by the coordinator on receipt.
+    pub fn advance_gen(&self, gen: u64) {
+        self.gen.store(gen, Ordering::Release);
+        self.shared.purge_stale(self.session, gen);
+    }
+}
+
+impl Drop for PoolHandle {
+    fn drop(&mut self) {
+        self.shared.routes.lock().unwrap().remove(&self.session);
+        // Leftover queued tasks would only waste worker forwards.
+        self.shared.purge_stale(self.session, u64::MAX);
+        self.shared.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A shared pool of target-model workers serving tagged verification
+/// tasks from any number of concurrent sessions.
+pub struct TargetPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl TargetPool {
+    /// Spawn `size` workers, each constructing its own target server from
+    /// `factory` (servers are built inside their owning thread — the PJRT
+    /// client is not `Send`).
+    pub fn new(factory: &ServerFactory, size: usize) -> Self {
+        assert!(size >= 1, "pool needs at least one worker");
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            routes: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(1),
+            active: AtomicUsize::new(0),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for wid in 0..size {
+            let shared = shared.clone();
+            let factory = factory.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut server: Box<dyn LmServer> = factory(ServerRole::Target, wid);
+                loop {
+                    match shared.pop() {
+                        PoolTask::Shutdown => break,
+                        PoolTask::Verify { session, gen, ctx, from, to } => {
+                            // Route lookup doubles as the staleness check:
+                            // a departed session or an advanced generation
+                            // means the forward would be wasted.
+                            let route = {
+                                let routes = shared.routes.lock().unwrap();
+                                routes.get(&session).map(|r| (r.gen.clone(), r.tx.clone()))
+                            };
+                            let Some((cur, tx)) = route else { continue };
+                            if gen != cur.load(Ordering::Acquire) {
+                                continue; // staled while queued (Alg. 1 line 8)
+                            }
+                            let preds = server.predictions(&ctx, from, to);
+                            // If the generation staled mid-forward the
+                            // coordinator drops the result by tag; if the
+                            // session departed, the send just fails.
+                            let _ = tx.send(SessionMsg::Verify(VerifyResult {
+                                session,
+                                gen,
+                                from,
+                                preds,
+                            }));
+                        }
+                    }
+                }
+            }));
+        }
+        Self { shared, workers, size }
+    }
+
+    /// Number of worker threads (the node's SP budget realized).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Sessions currently registered.
+    pub fn active_sessions(&self) -> usize {
+        self.shared.active.load(Ordering::Acquire)
+    }
+
+    /// Register a session: results for its tasks will be sent as
+    /// [`SessionMsg::Verify`] on `tx`.
+    pub fn register(&self, tx: Sender<SessionMsg>) -> PoolHandle {
+        let session = self.shared.next_session.fetch_add(1, Ordering::AcqRel);
+        let gen = Arc::new(AtomicU64::new(0));
+        self.shared
+            .routes
+            .lock()
+            .unwrap()
+            .insert(session, Route { gen: gen.clone(), tx });
+        self.shared.active.fetch_add(1, Ordering::AcqRel);
+        PoolHandle { shared: self.shared.clone(), session, gen }
+    }
+}
+
+impl Drop for TargetPool {
+    fn drop(&mut self) {
+        for _ in 0..self.size {
+            self.shared.push(PoolTask::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn pool_with_latency(size: usize, target_ms: f64) -> TargetPool {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(target_ms),
+            drafter: LatencyProfile::uniform(0.1),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 11 },
+            max_context: 4096,
+        };
+        TargetPool::new(&eng.factory(), size)
+    }
+
+    fn pool(size: usize) -> TargetPool {
+        pool_with_latency(size, 0.5)
+    }
+
+    fn recv_verify(rx: &std::sync::mpsc::Receiver<SessionMsg>) -> Option<VerifyResult> {
+        match rx.recv_timeout(Duration::from_millis(500)) {
+            Ok(SessionMsg::Verify(r)) => Some(r),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn routes_results_to_owning_session() {
+        let pool = pool(2);
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let a = pool.register(tx_a);
+        let b = pool.register(tx_b);
+        assert_ne!(a.session_id(), b.session_id());
+        assert_eq!(pool.active_sessions(), 2);
+
+        a.submit(0, vec![1, 2, 3], 2, 3);
+        b.submit(0, vec![9, 8, 7], 2, 3);
+        let ra = recv_verify(&rx_a).expect("session A result");
+        let rb = recv_verify(&rx_b).expect("session B result");
+        assert_eq!(ra.session, a.session_id());
+        assert_eq!(rb.session, b.session_id());
+        assert_eq!(ra.preds.len(), 1);
+        // No cross-delivery: each channel saw exactly its own result.
+        assert!(rx_a.try_recv().is_err());
+        assert!(rx_b.try_recv().is_err());
+    }
+
+    #[test]
+    fn staling_is_per_session() {
+        // 50ms forwards: the single worker is predictably busy with B's
+        // blocker while we enqueue and then stale A's task.
+        let pool = pool_with_latency(1, 50.0);
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let a = pool.register(tx_a);
+        let b = pool.register(tx_b);
+
+        // Occupy the worker, queue A's task behind it, then advance A's
+        // generation: A's old-gen task must never be served, while B's
+        // tasks are untouched by A's resync.
+        b.submit(0, vec![4, 5, 6], 2, 3);
+        a.submit(0, vec![1, 2, 3], 2, 3);
+        a.advance_gen(1);
+        assert!(recv_verify(&rx_b).is_some(), "B's task survived A's resync");
+        assert!(rx_a.try_recv().is_err(), "A's stale task was applied");
+
+        // A's new-generation task flows normally.
+        a.submit(1, vec![1, 2, 3], 2, 3);
+        let r = recv_verify(&rx_a).expect("fresh-gen result");
+        assert_eq!(r.gen, 1);
+    }
+
+    #[test]
+    fn departed_session_tasks_are_dropped() {
+        let pool = pool(1);
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        a.submit(0, vec![1, 2, 3], 2, 3);
+        drop(a); // unregister with a task possibly still queued
+        assert_eq!(pool.active_sessions(), 0);
+        // The pool keeps serving other sessions.
+        let (tx_b, rx_b) = channel();
+        let b = pool.register(tx_b);
+        b.submit(0, vec![2, 2, 2], 2, 3);
+        assert!(recv_verify(&rx_b).is_some());
+        drop(b);
+        drop(rx_a);
+        assert!(rx_b.try_recv().is_err());
+    }
+}

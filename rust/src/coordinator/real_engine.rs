@@ -7,6 +7,9 @@
 //! (the paper: "Each server maintains its own KV cache"). Resynchronizing
 //! after a rejection reuses the longest shared prefix and re-decodes only
 //! the divergent suffix.
+//!
+//! Requires the `pjrt` cargo feature; without it `runtime::pjrt` is the
+//! stub backend and [`RealServer::load`] returns a descriptive error.
 
 use super::{common_prefix_len, LmServer, ServerFactory, ServerRole};
 use crate::runtime::pjrt::{ModelRole, ModelRuntime, Session};
@@ -20,7 +23,10 @@ pub struct RealServer {
 }
 
 impl RealServer {
-    pub fn load(artifacts: &std::path::Path, role: ServerRole) -> anyhow::Result<Self> {
+    pub fn load(
+        artifacts: &std::path::Path,
+        role: ServerRole,
+    ) -> crate::util::error::Result<Self> {
         let model_role = match role {
             ServerRole::Target => ModelRole::Target,
             ServerRole::Drafter => ModelRole::Drafter,

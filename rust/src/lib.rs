@@ -11,19 +11,35 @@
 //! - [`simulator`] — the discrete-event ("offline", §4.1) simulator of
 //!   non-SI / SI / DSI / PEARL; regenerates the Figure 2 & 7 heatmaps,
 //!   Table 1, and the analytical ablations.
-//! - [`coordinator`] — the "online" (§4) implementation: real OS threads, a
-//!   pool of target servers (speculation parallelism), a drafter server, and
-//!   the rejection-synchronization protocol. Forward passes are pluggable:
-//!   calibrated waits (the paper's methodology) or real PJRT executions.
+//! - [`coordinator`] — the "online" (§4) implementation on real OS threads,
+//!   split along the resource boundary:
+//!   [`coordinator::pool::TargetPool`] is the node's shared pool of target
+//!   workers (speculation parallelism as a schedulable resource; tasks are
+//!   tagged `(session, generation)` with per-session rejection staling),
+//!   and [`coordinator::DsiSession`] is one generation stream — a private
+//!   drafter thread plus a registration on the shared pool. Forward passes
+//!   are pluggable: calibrated waits (the paper's methodology) or real
+//!   PJRT executions (`pjrt` cargo feature).
 //! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
 //!   from JAX/Pallas by `python/compile/aot.py`) into PJRT CPU executables;
-//!   npy weight loading, sampling, KV-cache state, byte tokenizer.
-//! - [`server`] — the serving front: request queue, router, batcher,
-//!   sessions, metrics. DSI is a first-class scheduling policy here.
-//! - [`workload`] — synthetic prompt corpora and arrival processes.
+//!   npy weight loading, sampling, KV-cache state, byte tokenizer. The
+//!   PJRT client proper is gated behind the `pjrt` feature (stubbed in the
+//!   default dependency-free build).
+//! - [`server`] — the serving front: a multi-session scheduler. Requests
+//!   are admitted from an arrival queue into up to `max_sessions`
+//!   concurrent generations; the [`server::router::Router`] re-plans each
+//!   generation's (lookahead, SP) operating point via Equation 1 at its
+//!   share of the node's SP budget as sessions join and leave; DSI
+//!   sessions contend for one shared target pool; [`server::metrics`]
+//!   reports latency percentiles plus wall-span throughput and an
+//!   active-sessions gauge.
+//! - [`workload`] — synthetic prompt corpora and arrival processes
+//!   (closed-loop, Poisson open-loop, and bursty concurrent arrivals).
 //! - [`stats`] — acceptance-rate estimation (geometric fit, §F.2), summary
 //!   statistics, speedup ratios.
 //! - [`report`] — regenerates every paper table/figure as text + CSV.
+//! - [`util`] — dependency-free substrates: PRNG, scoped parallel map,
+//!   JSON, benchkit, and `anyhow`-style error plumbing.
 //!
 //! Python never runs on the request path: `make artifacts` is the only time
 //! JAX executes, and the resulting HLO text + npy weights are all the Rust
@@ -40,4 +56,6 @@ pub mod util;
 pub mod workload;
 
 pub use config::{AlgoKind, ExperimentConfig, LatencyProfile, PairPreset};
-pub use simulator::{SimOutcome, simulate};
+pub use coordinator::{DsiSession, TargetPool};
+pub use server::Server;
+pub use simulator::{simulate, SimOutcome};

@@ -41,8 +41,12 @@ COMMANDS (system):
                           --sp N --tokens N
   serve                 serve a synthetic workload through the full stack
                           --engine wait|real (default wait)
-                          --algo dsi|si|nonsi  --requests N  --tokens N
+                          --algo dsi|si|nonsi|pearl  --requests N  --tokens N
                           --profile instruction|summarization|code
+                          --max-sessions N (concurrent generations, default 1)
+                          --pool-size N (shared target pool, default 7)
+                          --burst N (requests arriving together; 0 = all at t=0)
+                          --gap MS (burst spacing, default 50)
   generate              generate text with the real AOT model pair
                           --algo dsi|si|nonsi  --prompt STR  --tokens N
   calibrate             measure the tiny pair's TTFT/TPOT + acceptance rate
@@ -225,10 +229,15 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         "dsi" => AlgoKind::Dsi,
         "si" => AlgoKind::Si,
         "nonsi" => AlgoKind::NonSi,
+        "pearl" => AlgoKind::Pearl,
         other => return Err(format!("unknown algo {other}").into()),
     };
     let n_requests = flag_usize(flags, "requests", 8);
     let n_tokens = flag_usize(flags, "tokens", 32);
+    let max_sessions = flag_usize(flags, "max-sessions", 1);
+    let pool_size = flag_usize(flags, "pool-size", 7);
+    let burst = flag_usize(flags, "burst", 0);
+    let gap_ms = flag_f64(flags, "gap", 50.0);
     let profile = match flags.get("profile").map(String::as_str).unwrap_or("instruction") {
         "instruction" => PromptProfile::Instruction,
         "summarization" => PromptProfile::Summarization,
@@ -263,27 +272,35 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         other => return Err(format!("unknown engine {other}").into()),
     };
 
-    let router = Router::new(target_lat, drafter_lat, 7);
-    let mut srv = Server::new(factory, router, algo).with_max_depth(16);
+    let router = Router::new(target_lat, drafter_lat, pool_size);
+    let mut srv = Server::new(factory, router, algo)
+        .with_max_depth(16)
+        .with_max_sessions(max_sessions)
+        .with_pool_size(pool_size);
     let mut gen = PromptGen::new(11, 256);
-    let mut reqs = gen.closed_loop(n_requests, profile, n_tokens);
+    let mut reqs = if burst > 0 {
+        gen.bursts(n_requests, profile, n_tokens, burst, gap_ms)
+    } else {
+        gen.closed_loop(n_requests, profile, n_tokens)
+    };
     for r in &mut reqs {
         r.prompt.truncate(max_prompt.max(4));
     }
     println!(
-        "serving {n_requests} {} requests x {n_tokens} tokens via {} ({engine} engine)...\n",
+        "serving {n_requests} {} requests x {n_tokens} tokens via {} \
+         ({engine} engine, {max_sessions} concurrent sessions, pool {pool_size})...\n",
         profile.name(),
         algo.name()
     );
     let t0 = std::time::Instant::now();
     let resps = srv.serve(&reqs);
     let wall = t0.elapsed().as_secs_f64();
-    println!("{}", srv.metrics.snapshot().render());
+    println!("{}", srv.metrics_snapshot().render());
     println!(
         "wall {:.2}s  |  {:.1} tok/s end-to-end  |  acceptance estimate {:.3}",
         wall,
         resps.iter().map(|r| r.tokens.len()).sum::<usize>() as f64 / wall,
-        srv.router.acceptance_estimate()
+        srv.acceptance_estimate()
     );
     Ok(())
 }

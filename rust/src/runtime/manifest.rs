@@ -1,8 +1,9 @@
 //! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
 //! (which writes it) and the Rust runtime (which loads models from it).
 
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Model hyperparameters shared by the target/drafter pair.
@@ -113,19 +114,19 @@ impl Manifest {
     fn validate(&self) -> Result<()> {
         let c = &self.config;
         if c.d_model != c.n_heads * c.head_dim {
-            anyhow::bail!("d_model {} != n_heads*head_dim", c.d_model);
+            crate::bail!("d_model {} != n_heads*head_dim", c.d_model);
         }
         for (name, m) in [("target", &self.target), ("drafter", &self.drafter)] {
             let expect = vec![m.n_layers, 2, c.n_heads, c.max_seq, c.head_dim];
             if m.cache_shape != expect {
-                anyhow::bail!("{name} cache_shape {:?} != {:?}", m.cache_shape, expect);
+                crate::bail!("{name} cache_shape {:?} != {:?}", m.cache_shape, expect);
             }
             if m.weight_files.is_empty() {
-                anyhow::bail!("{name} has no weights");
+                crate::bail!("{name} has no weights");
             }
         }
         if self.drafter.n_layers >= self.target.n_layers {
-            anyhow::bail!("drafter must be smaller than target (Assumption 2)");
+            crate::bail!("drafter must be smaller than target (Assumption 2)");
         }
         Ok(())
     }

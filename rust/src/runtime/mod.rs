@@ -4,13 +4,19 @@
 //! - [`npy`] — reads the weight arrays dumped by `aot.py`.
 //! - [`manifest`] — the artifact contract (`artifacts/manifest.json`).
 //! - [`pjrt`] — PJRT CPU client wrapper: compile HLO text once, then
-//!   prefill/decode with a functional KV cache owned by Rust.
+//!   prefill/decode with a functional KV cache owned by Rust. Gated
+//!   behind the `pjrt` cargo feature; the default build substitutes a
+//!   same-surface stub whose loads fail with a descriptive error.
 //! - [`sampler`] — greedy/temperature/top-k selection and the lossless
 //!   rejection-sampling verification rule.
 //! - [`tokenizer`] — byte-level text <-> token ids.
 
 pub mod manifest;
 pub mod npy;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod sampler;
 pub mod tokenizer;

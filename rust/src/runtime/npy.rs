@@ -3,7 +3,8 @@
 //! C order). No external deps; the dialect is controlled by our own
 //! writer, so unsupported dtypes are a hard error, not a fallback.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 #[derive(Debug, Clone, PartialEq)]

@@ -6,10 +6,15 @@
 //! so every server thread constructs its own [`ModelRuntime`]. That
 //! mirrors the paper's deployment, where each target/drafter server is a
 //! separate GPU process with its own weights and KV cache.
+//!
+//! Compiled only with the `pjrt` cargo feature (the vendored `xla`
+//! bindings); the default offline build substitutes `pjrt_stub.rs`, which
+//! mirrors this module's surface and fails loading with a clear error.
 
 use super::manifest::{Manifest, ModelEntry};
 use super::npy::{load_npy, NpyData};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Which of the pair to load.
@@ -70,8 +75,12 @@ impl ModelRuntime {
             let arr = load_npy(wf)?;
             let dims: Vec<i64> = arr.shape.iter().map(|&d| d as i64).collect();
             let lit = match &arr.data {
-                NpyData::F32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
-                NpyData::I32(v) => xla::Literal::vec1(v.as_slice()).reshape(&dims)?,
+                NpyData::F32(v) => xla::Literal::vec1(v.as_slice())
+                    .reshape(&dims)
+                    .context("reshaping f32 weight")?,
+                NpyData::I32(v) => xla::Literal::vec1(v.as_slice())
+                    .reshape(&dims)
+                    .context("reshaping i32 weight")?,
             };
             weights.push(lit);
         }
@@ -93,7 +102,9 @@ impl ModelRuntime {
     /// Fresh session with a zeroed KV cache.
     pub fn new_session(&self) -> Result<Session> {
         let zeros = vec![0f32; self.cache_elems];
-        let cache = xla::Literal::vec1(zeros.as_slice()).reshape(&self.cache_dims)?;
+        let cache = xla::Literal::vec1(zeros.as_slice())
+            .reshape(&self.cache_dims)
+            .context("shaping KV cache")?;
         Ok(Session { cache, pos: 0, tokens: Vec::new() })
     }
 
@@ -120,13 +131,17 @@ impl ModelRuntime {
         let cache = std::mem::replace(&mut sess.cache, xla::Literal::vec1(&[0f32]));
         args.push(&cache);
 
-        let result = self.exe_prefill.execute::<&xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let (logits, new_cache) = result.to_tuple2()?;
+        let result = self
+            .exe_prefill
+            .execute::<&xla::Literal>(&args)
+            .context("prefill execution")?[0][0]
+            .to_literal_sync()
+            .context("prefill readback")?;
+        let (logits, new_cache) = result.to_tuple2().context("prefill output tuple")?;
         sess.cache = new_cache;
         sess.pos = prompt.len();
         sess.tokens = prompt.to_vec();
-        Ok(logits.to_vec::<f32>()?)
+        logits.to_vec::<f32>().context("prefill logits")
     }
 
     /// One decode step: process `token` at the session's current position;
@@ -143,13 +158,17 @@ impl ModelRuntime {
         let cache = std::mem::replace(&mut sess.cache, xla::Literal::vec1(&[0f32]));
         args.push(&cache);
 
-        let result = self.exe_decode.execute::<&xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let (logits, new_cache) = result.to_tuple2()?;
+        let result = self
+            .exe_decode
+            .execute::<&xla::Literal>(&args)
+            .context("decode execution")?[0][0]
+            .to_literal_sync()
+            .context("decode readback")?;
+        let (logits, new_cache) = result.to_tuple2().context("decode output tuple")?;
         sess.cache = new_cache;
         sess.pos += 1;
         sess.tokens.push(token);
-        Ok(logits.to_vec::<f32>()?)
+        logits.to_vec::<f32>().context("decode logits")
     }
 
     /// Roll the session back so only the first `len` tokens remain. The

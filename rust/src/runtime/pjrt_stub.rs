@@ -1,0 +1,80 @@
+//! Stub PJRT runtime used when the `pjrt` cargo feature is disabled (the
+//! default, dependency-free build). Mirrors the public surface of the
+//! real `runtime::pjrt` module so the rest of the crate — the real-engine
+//! coordinator, the launcher's `generate`/`calibrate` subcommands, the
+//! integration tests — compiles unchanged; every load attempt returns a
+//! clear error instead.
+//!
+//! Enable the real runtime with `--features pjrt` after adding the
+//! vendored `xla` bindings to `rust/Cargo.toml` (see the comment there).
+
+use crate::bail;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// Which of the pair to load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelRole {
+    Target,
+    Drafter,
+}
+
+/// Placeholder for the compiled-model handle. Never constructed.
+pub struct ModelRuntime {
+    pub vocab: usize,
+    pub max_seq: usize,
+    unconstructible: Never,
+}
+
+/// Mutable per-sequence state. Never constructed in stub builds.
+pub struct Session {
+    pub pos: usize,
+    pub tokens: Vec<u32>,
+    unconstructible: Never,
+}
+
+enum Never {}
+
+impl ModelRuntime {
+    /// Always fails: the build has no PJRT backend.
+    pub fn load(_dir: &Path, _role: ModelRole) -> Result<ModelRuntime> {
+        bail!(
+            "built without the `pjrt` feature — the real-compute engine needs \
+             the vendored xla bindings (cargo build --features pjrt); the wait \
+             engine and simulators are fully available"
+        );
+    }
+
+    pub fn new_session(&self) -> Result<Session> {
+        match self.unconstructible {}
+    }
+
+    pub fn prefill(&self, _sess: &mut Session, _prompt: &[u32]) -> Result<Vec<f32>> {
+        match self.unconstructible {}
+    }
+
+    pub fn decode_step(&self, _sess: &mut Session, _token: u32) -> Result<Vec<f32>> {
+        match self.unconstructible {}
+    }
+
+    pub fn rollback(&self, _sess: &mut Session, _len: usize) {
+        match self.unconstructible {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = ModelRuntime::load(Path::new("artifacts"), ModelRole::Target)
+            .err()
+            .expect("stub must refuse to load");
+        assert!(err.to_string().contains("pjrt"), "unhelpful error: {err}");
+    }
+}

@@ -1,7 +1,16 @@
 //! Serving metrics: TTFT / TPOT / end-to-end latency distributions and
 //! throughput, aggregated across requests.
+//!
+//! Throughput is measured over the *wall-clock span* from the first
+//! dispatch to the last completion (the server stamps both on its epoch
+//! clock via [`Metrics::note_dispatch_at`] / [`Metrics::note_complete_at`]).
+//! Summing per-request busy time would double-count overlapping work under
+//! concurrent sessions; the per-request sum is still tracked separately as
+//! `busy_ms` because `busy / span` is the node's effective parallelism.
 
 use crate::stats::{percentile, OnlineStats};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -12,7 +21,14 @@ pub struct Metrics {
     wall_samples: Vec<f64>,
     tokens: u64,
     requests: u64,
+    /// Sum of per-request generation walls (overlaps under concurrency).
     busy_ms: f64,
+    /// Epoch-clock ms of the first dispatch, if the server stamped one.
+    first_dispatch_ms: Option<f64>,
+    /// Epoch-clock ms of the latest completion.
+    last_complete_ms: Option<f64>,
+    /// Live concurrent-generation gauge, shared with the serving loop.
+    active_gauge: Option<Arc<AtomicUsize>>,
 }
 
 /// A point-in-time summary.
@@ -27,12 +43,39 @@ pub struct Snapshot {
     pub wall_p50_ms: f64,
     pub wall_p99_ms: f64,
     pub queue_mean_ms: f64,
+    /// Tokens per second over the first-dispatch..last-completion span.
     pub tokens_per_s: f64,
+    /// Wall-clock serving span the throughput was computed over, ms.
+    pub span_ms: f64,
+    /// Generations in flight at snapshot time.
+    pub active_sessions: usize,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Share the live concurrent-generation gauge (owned by the server's
+    /// scheduling loop) so snapshots can report it.
+    pub fn attach_active_gauge(&mut self, gauge: Arc<AtomicUsize>) {
+        self.active_gauge = Some(gauge);
+    }
+
+    /// Record that a request was dispatched at `now_ms` on the server's
+    /// epoch clock. Only the earliest stamp is kept.
+    pub fn note_dispatch_at(&mut self, now_ms: f64) {
+        if self.first_dispatch_ms.map_or(true, |t| now_ms < t) {
+            self.first_dispatch_ms = Some(now_ms);
+        }
+    }
+
+    /// Record that a request completed at `now_ms` on the server's epoch
+    /// clock. Only the latest stamp is kept.
+    pub fn note_complete_at(&mut self, now_ms: f64) {
+        if self.last_complete_ms.map_or(true, |t| now_ms > t) {
+            self.last_complete_ms = Some(now_ms);
+        }
     }
 
     pub fn observe(&mut self, resp: &super::Response) {
@@ -46,7 +89,18 @@ impl Metrics {
         self.busy_ms += resp.wall_ms;
     }
 
+    /// The throughput span: dispatch..completion if the server stamped
+    /// both, otherwise the summed busy time (sequential fallback — the
+    /// two coincide when nothing overlaps).
+    fn span_ms(&self) -> f64 {
+        match (self.first_dispatch_ms, self.last_complete_ms) {
+            (Some(a), Some(b)) if b > a => b - a,
+            _ => self.busy_ms,
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
+        let span_ms = self.span_ms();
         Snapshot {
             requests: self.requests,
             tokens: self.tokens,
@@ -57,11 +111,16 @@ impl Metrics {
             wall_p50_ms: percentile(&self.wall_samples, 50.0),
             wall_p99_ms: percentile(&self.wall_samples, 99.0),
             queue_mean_ms: self.queue.mean(),
-            tokens_per_s: if self.busy_ms > 0.0 {
-                self.tokens as f64 / (self.busy_ms / 1e3)
+            tokens_per_s: if span_ms > 0.0 {
+                self.tokens as f64 / (span_ms / 1e3)
             } else {
                 f64::NAN
             },
+            span_ms,
+            active_sessions: self
+                .active_gauge
+                .as_ref()
+                .map_or(0, |g| g.load(Ordering::Acquire)),
         }
     }
 }
@@ -70,10 +129,12 @@ impl Snapshot {
     /// Render as aligned text for logs and the e2e example.
     pub fn render(&self) -> String {
         format!(
-            "requests={} tokens={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
-             e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | {:.1} tok/s",
+            "requests={} tokens={} active={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
+             e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | \
+             {:.1} tok/s over {:.0}ms",
             self.requests,
             self.tokens,
+            self.active_sessions,
             self.ttft_mean_ms,
             self.ttft_p50_ms,
             self.ttft_p99_ms,
@@ -82,6 +143,7 @@ impl Snapshot {
             self.wall_p99_ms,
             self.queue_mean_ms,
             self.tokens_per_s,
+            self.span_ms,
         )
     }
 }
@@ -101,11 +163,14 @@ mod tests {
             queue_ms: 1.0,
             algo: AlgoKind::Dsi,
             lookahead: 2,
+            sp_degree: 4,
         }
     }
 
     #[test]
-    fn aggregates() {
+    fn aggregates_sequential_fallback() {
+        // No dispatch/complete stamps: throughput falls back to summed
+        // busy time, matching the sequential-serving interpretation.
         let mut m = Metrics::new();
         m.observe(&resp(10.0, 100.0, 20));
         m.observe(&resp(20.0, 200.0, 30));
@@ -116,6 +181,34 @@ mod tests {
         assert!((s.wall_mean_ms - 150.0).abs() < 1e-9);
         // 50 tokens over 300ms busy
         assert!((s.tokens_per_s - 50.0 / 0.3).abs() < 1e-6);
+        assert_eq!(s.active_sessions, 0);
         assert!(!s.render().is_empty());
+    }
+
+    #[test]
+    fn throughput_uses_wall_span_not_busy_sum() {
+        // Two fully overlapping 100ms requests dispatched at t=0 and
+        // finishing at t=100: 40 tokens over 100ms of wall, not 200ms of
+        // summed busy time.
+        let mut m = Metrics::new();
+        m.note_dispatch_at(0.0);
+        m.note_dispatch_at(1.0); // later dispatch must not shrink the span
+        m.observe(&resp(10.0, 100.0, 20));
+        m.note_complete_at(99.0);
+        m.observe(&resp(10.0, 100.0, 20));
+        m.note_complete_at(100.0);
+        let s = m.snapshot();
+        assert!((s.span_ms - 100.0).abs() < 1e-9);
+        assert!((s.tokens_per_s - 40.0 / 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn active_gauge_is_reported() {
+        let mut m = Metrics::new();
+        let gauge = Arc::new(AtomicUsize::new(0));
+        m.attach_active_gauge(gauge.clone());
+        assert_eq!(m.snapshot().active_sessions, 0);
+        gauge.store(3, Ordering::Release);
+        assert_eq!(m.snapshot().active_sessions, 3);
     }
 }

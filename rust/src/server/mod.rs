@@ -1,23 +1,29 @@
 //! The serving front: request handling on top of the DSI coordinator.
 //!
 //! A downstream user deploys DSI behind this layer: requests arrive (open
-//! or closed loop), the [`router`] picks the operating point (lookahead /
-//! SP split via Equation 1, from calibrated latencies and the online
-//! acceptance-rate estimate), the generation loop runs the selected
-//! algorithm, and [`metrics`] aggregates TTFT/TPOT/throughput.
+//! or closed loop) into an admission queue, up to `max_sessions`
+//! generations run concurrently on OS threads, the [`router`] picks each
+//! generation's operating point (lookahead / SP split via Equation 1 at
+//! the *per-session* share of the node's SP budget, re-planned as sessions
+//! join and leave), the generation runs the selected algorithm — DSI
+//! sessions share one [`TargetPool`] — and [`metrics`] aggregates
+//! TTFT/TPOT/throughput over the true wall-clock span.
 
 pub mod metrics;
 pub mod router;
 
 use crate::config::AlgoKind;
 use crate::coordinator::{
-    run_nonsi_with, run_si_with, DsiPipeline, LmServer, OnlineConfig, ServerFactory,
-    ServerRole,
+    run_nonsi_with, run_si_with, DsiSession, LmServer, OnlineConfig, OnlineOutcome,
+    ServerFactory, ServerRole, TargetPool,
 };
 use crate::runtime::tokenizer;
 use crate::workload::Request;
 use metrics::Metrics;
-use router::Router;
+use router::{Plan, Router};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// A completed request.
@@ -33,38 +39,99 @@ pub struct Response {
     /// Queueing delay before dispatch, ms.
     pub queue_ms: f64,
     pub algo: AlgoKind,
+    /// Lookahead the router planned for this generation.
     pub lookahead: usize,
+    /// SP share the router planned for this generation.
+    pub sp_degree: usize,
 }
 
-/// Serving engine: owns the router and metrics; executes requests
-/// sequentially (one generation at a time — the single-node regime where
-/// DSI spends the node's GPUs on speculation parallelism rather than
-/// request parallelism).
+/// What one scheduler worker holds to execute generations. Constructed
+/// lazily on the worker's first job so idle workers load no models.
+enum Backend {
+    /// A DSI session registered on the server's shared target pool.
+    Dsi(DsiSession),
+    /// SI (and PEARL, served through the SI path): one target, one drafter.
+    Paired { target: Box<dyn LmServer>, drafter: Box<dyn LmServer> },
+    /// Non-SI: a single target server.
+    Single { target: Box<dyn LmServer> },
+}
+
+impl Backend {
+    fn new(algo: AlgoKind, factory: &ServerFactory, pool: Option<&Arc<TargetPool>>) -> Self {
+        match algo {
+            AlgoKind::Dsi => {
+                let pool = pool.expect("DSI serving requires the shared target pool");
+                Backend::Dsi(DsiSession::new(pool, factory))
+            }
+            // PEARL's online coordinator is not implemented; its router
+            // plan (one target + one drafter, §Router) degrades to
+            // blocking SI, so serve it honestly through the SI path
+            // rather than silently running non-SI. The discrete-event
+            // simulator has the faithful PEARL model.
+            AlgoKind::Si | AlgoKind::Pearl => Backend::Paired {
+                target: factory(ServerRole::Target, 0),
+                drafter: factory(ServerRole::Drafter, 0),
+            },
+            AlgoKind::NonSi => Backend::Single { target: factory(ServerRole::Target, 0) },
+        }
+    }
+
+    fn run(&mut self, cfg: &OnlineConfig) -> OnlineOutcome {
+        match self {
+            Backend::Dsi(session) => session.generate(cfg),
+            Backend::Paired { target, drafter } => {
+                run_si_with(target.as_mut(), drafter.as_mut(), cfg)
+            }
+            Backend::Single { target } => run_nonsi_with(target.as_mut(), cfg),
+        }
+    }
+}
+
+/// Serving engine: a multi-session scheduler. Requests are admitted in
+/// arrival order and executed by up to `max_sessions` worker threads;
+/// DSI generations contend for one shared [`TargetPool`] sized to the
+/// node's SP budget. `max_sessions = 1` (the default) reproduces the
+/// single-generation regime where DSI spends the whole node on
+/// speculation parallelism.
 pub struct Server {
     factory: ServerFactory,
-    pub router: Router,
-    pub metrics: Metrics,
+    router: Arc<Mutex<Router>>,
+    metrics: Arc<Mutex<Metrics>>,
     algo: AlgoKind,
     max_speculation_depth: usize,
-    /// Persistent DSI pipeline (threads + loaded models live across
-    /// requests); lazily constructed on the first DSI request.
-    dsi: Option<DsiPipeline>,
-    /// Persistent single servers for the sequential baselines.
-    target_srv: Option<Box<dyn LmServer>>,
-    drafter_srv: Option<Box<dyn LmServer>>,
+    /// Concurrent generations admitted at once.
+    max_sessions: usize,
+    /// Shared target-pool size (defaults to the router's SP budget).
+    pool_size: usize,
+    /// The node's target workers; lazily built on the first DSI serve and
+    /// persistent across `serve` calls (model loading / HLO compilation
+    /// happens once per worker, not once per request).
+    pool: Option<Arc<TargetPool>>,
+    /// Generations currently in flight.
+    active: Arc<AtomicUsize>,
+    /// Server-lifetime clock for metrics span stamps: dispatch/completion
+    /// times from different `serve` calls must share one epoch, or the
+    /// throughput span would mix incompatible clocks.
+    epoch: Instant,
 }
 
 impl Server {
     pub fn new(factory: ServerFactory, router: Router, algo: AlgoKind) -> Self {
+        let pool_size = router.sp_budget;
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut metrics = Metrics::new();
+        metrics.attach_active_gauge(active.clone());
         Self {
             factory,
-            router,
-            metrics: Metrics::new(),
+            router: Arc::new(Mutex::new(router)),
+            metrics: Arc::new(Mutex::new(metrics)),
             algo,
             max_speculation_depth: 24,
-            dsi: None,
-            target_srv: None,
-            drafter_srv: None,
+            max_sessions: 1,
+            pool_size,
+            pool: None,
+            active,
+            epoch: Instant::now(),
         }
     }
 
@@ -73,75 +140,170 @@ impl Server {
         self
     }
 
-    /// Serve a full workload; honors arrival times (open loop) by waiting.
-    pub fn serve(&mut self, requests: &[Request]) -> Vec<Response> {
-        let epoch = Instant::now();
-        let mut responses = Vec::with_capacity(requests.len());
-        for req in requests {
-            // Open-loop pacing.
-            let now_ms = epoch.elapsed().as_secs_f64() * 1e3;
-            if req.arrival_ms > now_ms {
-                crate::coordinator::wait_engine::precise_wait(req.arrival_ms - now_ms);
-            }
-            let dispatched_ms = epoch.elapsed().as_secs_f64() * 1e3;
-            let queue_ms = (dispatched_ms - req.arrival_ms).max(0.0);
-
-            let resp = self.execute(req, queue_ms);
-            self.metrics.observe(&resp);
-            responses.push(resp);
-        }
-        responses
+    /// Admit up to `n` concurrent generations (default 1).
+    pub fn with_max_sessions(mut self, n: usize) -> Self {
+        self.max_sessions = n.max(1);
+        self
     }
 
-    fn execute(&mut self, req: &Request, queue_ms: f64) -> Response {
-        let plan = self.router.plan(self.algo);
-        let cfg = OnlineConfig {
-            prompt: req.prompt.clone(),
-            n_tokens: req.max_new_tokens,
-            lookahead: plan.lookahead,
-            sp_degree: plan.sp_degree,
-            max_speculation_depth: self.max_speculation_depth,
-        };
-        let out = match self.algo {
-            AlgoKind::Dsi => {
-                let factory = &self.factory;
-                let sp = plan.sp_degree;
-                self.dsi
-                    .get_or_insert_with(|| DsiPipeline::new(factory, sp))
-                    .generate(&cfg)
-            }
-            AlgoKind::Si => {
-                let factory = &self.factory;
-                let target = self
-                    .target_srv
-                    .get_or_insert_with(|| factory(ServerRole::Target, 0));
-                let drafter = self
-                    .drafter_srv
-                    .get_or_insert_with(|| factory(ServerRole::Drafter, 0));
-                run_si_with(target.as_mut(), drafter.as_mut(), &cfg)
-            }
-            AlgoKind::NonSi | AlgoKind::Pearl => {
-                let factory = &self.factory;
-                let target = self
-                    .target_srv
-                    .get_or_insert_with(|| factory(ServerRole::Target, 0));
-                run_nonsi_with(target.as_mut(), &cfg)
-            }
-        };
-        // Feed the acceptance estimator (§F.2 online variant).
-        self.router
-            .observe_run(out.accepted_drafts, out.rejections.max(1));
+    /// Size the shared target pool (default: the router's SP budget).
+    /// Takes effect before the pool is first built. The router's SP
+    /// budget is updated to match, so Equation-1 plans never promise SP
+    /// shares the pool cannot deliver.
+    pub fn with_pool_size(mut self, n: usize) -> Self {
+        self.pool_size = n.max(1);
+        self.router.lock().unwrap().sp_budget = self.pool_size;
+        self
+    }
 
-        Response {
-            id: req.id,
-            text: tokenizer::decode(&out.tokens),
-            tokens: out.tokens,
-            ttft_ms: out.ttft_ms,
-            wall_ms: out.wall_ms,
-            queue_ms,
-            algo: self.algo,
-            lookahead: plan.lookahead,
+    /// Live acceptance estimate from the router (§F.2 online variant).
+    pub fn acceptance_estimate(&self) -> f64 {
+        self.router.lock().unwrap().acceptance_estimate()
+    }
+
+    /// Point-in-time metrics summary.
+    pub fn metrics_snapshot(&self) -> metrics::Snapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Generations currently in flight.
+    pub fn active_sessions(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Serve a full workload; honors arrival times (open loop) by waiting.
+    /// Responses are returned in request order.
+    pub fn serve(&mut self, requests: &[Request]) -> Vec<Response> {
+        if requests.is_empty() {
+            return Vec::new();
         }
+        if self.algo == AlgoKind::Dsi && self.pool.is_none() {
+            self.pool = Some(Arc::new(TargetPool::new(&self.factory, self.pool_size)));
+        }
+        let n_workers = self.max_sessions.min(requests.len());
+
+        // Admission order: by arrival time (stable on ties).
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by(|&a, &b| {
+            requests[a]
+                .arrival_ms
+                .partial_cmp(&requests[b].arrival_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+
+        let (job_tx, job_rx) = channel::<usize>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (resp_tx, resp_rx) = channel::<(usize, Response)>();
+        // Arrival pacing and queueing delay are relative to this call's
+        // start; metrics span stamps use the server-lifetime epoch so
+        // repeated `serve` calls accumulate on one clock.
+        let t0 = Instant::now();
+        let epoch = self.epoch;
+        let algo = self.algo;
+        let depth = self.max_speculation_depth;
+
+        std::thread::scope(|s| {
+            for _ in 0..n_workers {
+                let job_rx = job_rx.clone();
+                let resp_tx = resp_tx.clone();
+                let factory = self.factory.clone();
+                let router = self.router.clone();
+                let metrics = self.metrics.clone();
+                let active = self.active.clone();
+                let pool = self.pool.clone();
+                s.spawn(move || {
+                    // Lazy: a worker that never receives a job never
+                    // loads models or spawns a drafter.
+                    let mut backend: Option<Backend> = None;
+                    loop {
+                        // Take the next admitted request; release the
+                        // queue lock before generating.
+                        let idx = match job_rx.lock().unwrap().recv() {
+                            Ok(i) => i,
+                            Err(_) => break,
+                        };
+                        let req = &requests[idx];
+                        let dispatched_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        let queue_ms = (dispatched_ms - req.arrival_ms).max(0.0);
+                        let n_active = active.fetch_add(1, Ordering::AcqRel) + 1;
+                        metrics
+                            .lock()
+                            .unwrap()
+                            .note_dispatch_at(epoch.elapsed().as_secs_f64() * 1e3);
+
+                        // Re-plan the operating point at the current
+                        // session count: the SP budget is a shared
+                        // resource (Equation 1 at the per-session share).
+                        let plan: Plan =
+                            router.lock().unwrap().plan_shared(algo, n_active);
+                        let cfg = OnlineConfig {
+                            prompt: req.prompt.clone(),
+                            n_tokens: req.max_new_tokens,
+                            lookahead: plan.lookahead,
+                            sp_degree: plan.sp_degree,
+                            max_speculation_depth: depth,
+                        };
+                        let out = backend
+                            .get_or_insert_with(|| {
+                                Backend::new(algo, &factory, pool.as_ref())
+                            })
+                            .run(&cfg);
+                        active.fetch_sub(1, Ordering::AcqRel);
+
+                        // Feed the acceptance estimator (§F.2 online
+                        // variant) with the true outcome counts.
+                        router
+                            .lock()
+                            .unwrap()
+                            .observe_run(out.accepted_drafts, out.rejections);
+
+                        let resp = Response {
+                            id: req.id,
+                            text: tokenizer::decode(&out.tokens),
+                            tokens: out.tokens,
+                            ttft_ms: out.ttft_ms,
+                            wall_ms: out.wall_ms,
+                            queue_ms,
+                            algo,
+                            lookahead: plan.lookahead,
+                            sp_degree: plan.sp_degree,
+                        };
+                        {
+                            let mut m = metrics.lock().unwrap();
+                            m.note_complete_at(epoch.elapsed().as_secs_f64() * 1e3);
+                            m.observe(&resp);
+                        }
+                        if resp_tx.send((idx, resp)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(resp_tx);
+
+            // Admission: open-loop pacing on this thread.
+            for &idx in &order {
+                let arrival = requests[idx].arrival_ms;
+                let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+                if arrival > now_ms {
+                    crate::coordinator::wait_engine::precise_wait(arrival - now_ms);
+                }
+                if job_tx.send(idx).is_err() {
+                    break;
+                }
+            }
+            drop(job_tx); // closes the admission queue; workers drain and exit
+        });
+
+        // All workers joined: drain responses back into request order.
+        let mut slots: Vec<Option<Response>> = (0..requests.len()).map(|_| None).collect();
+        while let Ok((idx, resp)) = resp_rx.try_recv() {
+            slots[idx] = Some(resp);
+        }
+        slots
+            .into_iter()
+            .map(|r| r.expect("a scheduler worker died mid-request"))
+            .collect()
     }
 }
 
@@ -171,14 +333,17 @@ mod tests {
         let reqs = gen.closed_loop(4, PromptProfile::Instruction, 12);
         let resps = srv.serve(&reqs);
         assert_eq!(resps.len(), 4);
-        for r in &resps {
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "responses in request order");
             assert_eq!(r.tokens.len(), 12);
             assert!(r.wall_ms > 0.0);
         }
-        let snap = srv.metrics.snapshot();
+        let snap = srv.metrics_snapshot();
         assert_eq!(snap.requests, 4);
         assert_eq!(snap.tokens, 48);
         assert!(snap.tokens_per_s > 0.0);
+        assert_eq!(snap.active_sessions, 0);
+        assert!(!srv.acceptance_estimate().is_nan());
     }
 
     #[test]
@@ -215,5 +380,71 @@ mod tests {
         let _ = srv.serve(&reqs);
         let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
         assert!(elapsed_ms >= reqs.last().unwrap().arrival_ms);
+    }
+
+    #[test]
+    fn pearl_serves_through_si_path_losslessly() {
+        // The PEARL algo must actually speculate (SI path), not silently
+        // run non-SI, and must stay lossless.
+        let (factory, eng) = wait_factory(0.8);
+        let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 4);
+        let mut srv = Server::new(factory, router, AlgoKind::Pearl);
+        let mut gen = PromptGen::new(3, 256);
+        let reqs = gen.closed_loop(2, PromptProfile::Instruction, 10);
+        let resps = srv.serve(&reqs);
+        for (req, resp) in reqs.iter().zip(&resps) {
+            assert_eq!(resp.algo, AlgoKind::Pearl);
+            let cfg = crate::coordinator::OnlineConfig {
+                prompt: req.prompt.clone(),
+                n_tokens: req.max_new_tokens,
+                lookahead: 1,
+                sp_degree: 1,
+                max_speculation_depth: 24,
+            };
+            let nonsi = crate::coordinator::run_nonsi(&eng.factory(), &cfg);
+            assert_eq!(resp.tokens, nonsi.tokens, "PEARL-as-SI lost tokens");
+        }
+        // It used the drafter: the estimator saw accept/reject outcomes.
+        assert!(!srv.acceptance_estimate().is_nan());
+    }
+
+    #[test]
+    fn estimator_sees_true_rejection_counts() {
+        // p=1.0: zero rejections; the estimator must not be fed a
+        // fabricated rejection per run, so the estimate is exactly 1.
+        let (factory, _) = wait_factory(1.0);
+        let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 4);
+        let mut srv = Server::new(factory, router, AlgoKind::Dsi);
+        let mut gen = PromptGen::new(4, 256);
+        let reqs = gen.closed_loop(2, PromptProfile::Instruction, 16);
+        let _ = srv.serve(&reqs);
+        let est = srv.acceptance_estimate();
+        assert!(est > 0.95, "estimate {est} biased low by phantom rejections");
+    }
+
+    #[test]
+    fn concurrent_sessions_stay_lossless_and_ordered() {
+        let (factory, eng) = wait_factory(0.85);
+        let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 4);
+        let mut srv = Server::new(factory, router, AlgoKind::Dsi)
+            .with_max_sessions(3)
+            .with_pool_size(4);
+        let mut gen = PromptGen::new(7, 256);
+        let reqs = gen.closed_loop(6, PromptProfile::Instruction, 10);
+        let resps = srv.serve(&reqs);
+        assert_eq!(resps.len(), 6);
+        for (req, resp) in reqs.iter().zip(&resps) {
+            assert_eq!(resp.id, req.id);
+            let cfg = crate::coordinator::OnlineConfig {
+                prompt: req.prompt.clone(),
+                n_tokens: req.max_new_tokens,
+                lookahead: 1,
+                sp_degree: 1,
+                max_speculation_depth: 24,
+            };
+            let nonsi = crate::coordinator::run_nonsi(&eng.factory(), &cfg);
+            assert_eq!(resp.tokens, nonsi.tokens, "req {} lost tokens", req.id);
+        }
+        assert_eq!(srv.active_sessions(), 0);
     }
 }

@@ -48,8 +48,19 @@ impl Router {
         self.rejected += rejections as u64;
     }
 
-    /// The operating point for an algorithm.
+    /// The operating point for an algorithm with the whole node to itself.
     pub fn plan(&self, algo: AlgoKind) -> Plan {
+        self.plan_shared(algo, 1)
+    }
+
+    /// The operating point when `active_sessions` generations share the
+    /// node: the SP budget is split evenly and Equation 1 is re-solved at
+    /// the per-session share, so the lookahead/SP operating point adapts
+    /// as sessions join and leave. A smaller share forces a larger
+    /// lookahead (fewer, longer verification tasks per session) — the
+    /// resource-vs-latency tradeoff of §3.1 at serving scale.
+    pub fn plan_shared(&self, algo: AlgoKind, active_sessions: usize) -> Plan {
+        let share = (self.sp_budget / active_sessions.max(1)).max(1);
         match algo {
             AlgoKind::NonSi => Plan { lookahead: 1, sp_degree: 1 },
             AlgoKind::Si | AlgoKind::Pearl => Plan {
@@ -61,9 +72,7 @@ impl Router {
             AlgoKind::Dsi => {
                 // Don't allocate more target servers than can ever be
                 // concurrently busy (§3.1).
-                let sp = self
-                    .sp_budget
-                    .min(max_useful_sp(self.target.tpot_ms, self.drafter.tpot_ms));
+                let sp = share.min(max_useful_sp(self.target.tpot_ms, self.drafter.tpot_ms));
                 let k = min_lookahead_for_sp(self.target.tpot_ms, self.drafter.tpot_ms, sp);
                 Plan { lookahead: k, sp_degree: sp }
             }
@@ -106,5 +115,27 @@ mod tests {
         let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 7);
         let p = r.plan(AlgoKind::NonSi);
         assert_eq!((p.lookahead, p.sp_degree), (1, 1));
+    }
+
+    #[test]
+    fn shared_plan_splits_budget_and_grows_lookahead() {
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 8);
+        let solo = r.plan_shared(AlgoKind::Dsi, 1);
+        let quad = r.plan_shared(AlgoKind::Dsi, 4);
+        assert!(quad.sp_degree <= solo.sp_degree);
+        assert!(quad.sp_degree <= 2, "8-way budget split 4 ways");
+        // Each per-session plan still satisfies Equation 1 at its share.
+        assert!(crate::config::required_sp(30.0, 3.0, quad.lookahead) <= quad.sp_degree);
+        // Fewer servers per session => at least as much lookahead.
+        assert!(quad.lookahead >= solo.lookahead);
+    }
+
+    #[test]
+    fn shared_plan_never_starves_a_session() {
+        // More sessions than budget: everyone still gets one server.
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 4);
+        let p = r.plan_shared(AlgoKind::Dsi, 9);
+        assert_eq!(p.sp_degree, 1);
+        assert!(p.lookahead >= 1);
     }
 }

@@ -1,0 +1,128 @@
+//! Minimal error plumbing standing in for `anyhow` — the offline build
+//! vendors no crates, so the subset this project uses (a string-ish error
+//! type, `anyhow!`/`bail!`, and `Context` on `Result`/`Option`) is
+//! reimplemented here. Context wraps outside-in, `anyhow`-style:
+//! `"reading manifest: No such file"`.
+
+use std::fmt;
+
+/// A boxed, human-readable error with accumulated context.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer.
+    fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`anyhow::Context` subset).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (`anyhow::anyhow!` subset).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] (`anyhow::bail!` subset).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_wraps_outside_in() {
+        let e = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: gone");
+        let e = io_err()
+            .with_context(|| format!("pass {}", 2))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "pass 2: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn fails(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through with {}", 9))
+        }
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(fails(false).unwrap_err().to_string(), "fell through with 9");
+    }
+
+    #[test]
+    fn boxes_into_std_error() {
+        let e: Box<dyn std::error::Error> = anyhow!("boxed").into();
+        assert_eq!(e.to_string(), "boxed");
+    }
+}

@@ -1,12 +1,14 @@
 //! Dependency-free substrates: deterministic PRNG, scoped-thread parallel
-//! map, and a minimal JSON reader/writer.
+//! map, a minimal JSON reader/writer, and `anyhow`-style error plumbing.
 //!
-//! The build environment is fully offline (only the `xla` PJRT bindings and
-//! `anyhow` are vendored), so the usual crates (rand, rayon, serde) are
-//! reimplemented here at the scale this project needs. Each is small,
-//! tested, and deliberately boring.
+//! The build environment is fully offline, so the usual crates (rand,
+//! rayon, serde, anyhow) are reimplemented here at the scale this project
+//! needs. Each is small, tested, and deliberately boring. The one true
+//! external dependency — the `xla` PJRT bindings — is confined behind the
+//! `pjrt` cargo feature (see `runtime::pjrt`).
 
 pub mod benchkit;
+pub mod error;
 pub mod json;
 pub mod parallel;
 pub mod rng;

@@ -94,6 +94,30 @@ impl PromptGen {
             .collect()
     }
 
+    /// Burst arrivals for concurrent admission: `n` requests arriving in
+    /// groups of `burst` at the same instant, bursts spaced `gap_ms`
+    /// apart. The adversarial pattern for a multi-session scheduler —
+    /// every burst demands `burst` generations at once, so the SP budget
+    /// must be split rather than time-shared.
+    pub fn bursts(
+        &mut self,
+        n: usize,
+        profile: PromptProfile,
+        max_new_tokens: usize,
+        burst: usize,
+        gap_ms: f64,
+    ) -> Vec<Request> {
+        let burst = burst.max(1);
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: self.prompt(profile),
+                max_new_tokens,
+                arrival_ms: (i / burst) as f64 * gap_ms,
+            })
+            .collect()
+    }
+
     /// An open-loop Poisson arrival trace at `rate_per_s`.
     pub fn open_loop(
         &mut self,
@@ -139,6 +163,21 @@ mod tests {
         let a = PromptGen::new(7, 256).prompt(PromptProfile::Code);
         let b = PromptGen::new(7, 256).prompt(PromptProfile::Code);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bursts_arrive_in_groups() {
+        let mut g = PromptGen::new(5, 256);
+        let reqs = g.bursts(7, PromptProfile::Instruction, 8, 3, 25.0);
+        assert_eq!(reqs.len(), 7);
+        let arrivals: Vec<f64> = reqs.iter().map(|r| r.arrival_ms).collect();
+        assert_eq!(arrivals[0..3], [0.0, 0.0, 0.0]);
+        assert_eq!(arrivals[3..6], [25.0, 25.0, 25.0]);
+        assert_eq!(arrivals[6], 50.0);
+        // ids stay in order for response reordering
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
     }
 
     #[test]
