@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PY ?= python3
 
-.PHONY: build test verify artifacts bench fmt clippy clean
+.PHONY: build test verify artifacts bench bench-all fmt clippy clean
 
 build:
 	$(CARGO) build --release
@@ -21,7 +21,15 @@ artifacts:
 	$(PY) python/compile/aot.py --out rust/artifacts/model.hlo.txt
 	ln -sfn rust/artifacts artifacts
 
+# Perf trajectory: runs the hot-path bench (long-context concurrent
+# serving) and emits BENCH_hotpath.json at the repo root — tokens/s,
+# context-bytes-copied per settled token, submit→dispatch µs. Set
+# BENCH_SMOKE=1 for the quick CI variant.
 bench:
+	BENCH_SMOKE=$(BENCH_SMOKE) BENCH_HOTPATH_OUT=$(CURDIR)/BENCH_hotpath.json \
+		$(CARGO) bench --bench hotpath
+
+bench-all: bench
 	$(CARGO) bench --bench concurrent_serving
 	$(CARGO) bench --bench coordinator_overhead
 

@@ -11,6 +11,7 @@
 //! ```
 
 use dsi::config::{AlgoKind, LatencyProfile};
+use dsi::context::TokenRope;
 use dsi::coordinator::real_engine::RealServer;
 use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
 use dsi::coordinator::{
@@ -178,7 +179,7 @@ fn main() -> Result<()> {
 fn calibrate_acceptance(artifacts: &Path) -> Result<f64> {
     let mut target = RealServer::load(artifacts, ServerRole::Target)?;
     let mut drafter = RealServer::load(artifacts, ServerRole::Drafter)?;
-    let mut ctx: Vec<u32> = vec![5, 10, 15, 20];
+    let mut ctx = TokenRope::from_slice(&[5, 10, 15, 20]);
     let mut agree = 0usize;
     let n = 32usize;
     for _ in 0..n {
@@ -195,7 +196,7 @@ fn calibrate_tpots(artifacts: &Path) -> Result<(f64, f64)> {
     let mut out = [0.0f64; 2];
     for (i, role) in [ServerRole::Target, ServerRole::Drafter].iter().enumerate() {
         let mut s = RealServer::load(artifacts, *role)?;
-        let mut ctx: Vec<u32> = (1..=8).collect();
+        let mut ctx = TokenRope::from_slice(&(1..=8).collect::<Vec<u32>>());
         // warm up (prefill path)
         let t = s.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
         ctx.push(t);

@@ -1,0 +1,136 @@
+//! Hot-path benchmark: the perf trajectory anchor for the zero-copy
+//! speculation-context work.
+//!
+//! Runs the concurrent-serving workload in the regime where context
+//! bookkeeping used to dominate — long prompts (≥ 2k tokens), several
+//! sessions contending for one pool — and reports:
+//!
+//! - **tokens/s** over the serving span (regression gate: must not drop),
+//! - **context bytes copied per settled token** (the tentpole metric:
+//!   rope bookkeeping actually copied vs. what eager full-context clones
+//!   would have copied at the same hand-off sites),
+//! - **submit→dispatch µs** (pool queue wait + dispatch overhead).
+//!
+//! Results land in `BENCH_hotpath.json` (override the path with
+//! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
+//!
+//! ```bash
+//! make bench       # repo root: emits ./BENCH_hotpath.json
+//! ```
+
+use dsi::config::{AlgoKind, LatencyProfile};
+use dsi::context;
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::server::router::Router;
+use dsi::server::Server;
+use dsi::util::benchkit::suite;
+use dsi::util::json::{num, obj, Json};
+use dsi::util::Rng64;
+use dsi::workload::Request;
+use std::time::Instant;
+
+fn main() {
+    suite("hotpath");
+    let smoke = std::env::var("BENCH_SMOKE").map_or(false, |v| !v.is_empty() && v != "0");
+
+    let prompt_len = 2048usize;
+    let n_requests = if smoke { 4 } else { 8 };
+    let n_tokens = if smoke { 16 } else { 32 };
+    let sessions = 4usize;
+    let pool_size = 4usize;
+    let (target_ms, drafter_ms, acceptance) = (3.0, 0.5, 0.9);
+
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(target_ms),
+        drafter: LatencyProfile::uniform(drafter_ms),
+        oracle: Oracle { vocab: 256, acceptance_rate: acceptance, seed: 29 },
+        max_context: 8192,
+    };
+    let router = Router::new(
+        LatencyProfile::uniform(target_ms),
+        LatencyProfile::uniform(drafter_ms),
+        pool_size,
+    );
+    let mut srv = Server::new(eng.factory(), router, AlgoKind::Dsi)
+        .with_max_depth(64)
+        .with_max_sessions(sessions)
+        .with_pool_size(pool_size);
+
+    // Long-context requests (the workload profiles top out far shorter).
+    let mut rng = Rng64::seed_from_u64(71);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..prompt_len).map(|_| 32 + rng.gen_range(95) as u32).collect(),
+            max_new_tokens: n_tokens,
+            arrival_ms: 0.0,
+        })
+        .collect();
+
+    let copied0 = context::copied_bytes();
+    let full0 = context::full_clone_bytes();
+    let t0 = Instant::now();
+    let resps = srv.serve(&reqs);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(resps.len(), n_requests);
+
+    let new_tokens: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    let copied = (context::copied_bytes() - copied0) as f64;
+    let full = (context::full_clone_bytes() - full0) as f64;
+    let copied_per_tok = copied / new_tokens as f64;
+    let full_per_tok = full / new_tokens as f64;
+    let reduction = if copied > 0.0 { full / copied } else { f64::INFINITY };
+    let snap = srv.metrics_snapshot();
+
+    println!(
+        "\n{n_requests} requests x {n_tokens} tokens, prompt {prompt_len} tokens, \
+         {sessions} sessions on a {pool_size}-worker pool\n\
+         (wait engine: target {target_ms}ms, drafter {drafter_ms}ms, p={acceptance})\n"
+    );
+    println!("  wall                    {wall_ms:>10.1} ms");
+    println!("  throughput              {:>10.1} tok/s", snap.tokens_per_s);
+    println!("  ctx bytes copied/token  {copied_per_tok:>10.1} B");
+    println!("  eager-clone equivalent  {full_per_tok:>10.1} B");
+    println!("  copy reduction          {reduction:>10.1} x");
+    println!("  pool queue wait (mean)  {:>10.1} µs", snap.pool_queue_wait_us_mean);
+    println!("  pool dispatch (mean)    {:>10.1} µs", snap.pool_dispatch_us_mean);
+    println!("  pool tasks              {:>10}", snap.pool_tasks);
+
+    let out = obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "config",
+            obj(vec![
+                ("prompt_tokens", num(prompt_len as f64)),
+                ("requests", num(n_requests as f64)),
+                ("new_tokens_per_request", num(n_tokens as f64)),
+                ("sessions", num(sessions as f64)),
+                ("pool_size", num(pool_size as f64)),
+                ("target_ms", num(target_ms)),
+                ("drafter_ms", num(drafter_ms)),
+                ("acceptance_rate", num(acceptance)),
+            ]),
+        ),
+        ("wall_ms", num(wall_ms)),
+        ("tokens_per_s", num(snap.tokens_per_s)),
+        ("settled_tokens", num(new_tokens as f64)),
+        ("ctx_bytes_copied_per_settled_token", num(copied_per_tok)),
+        ("full_clone_bytes_per_settled_token", num(full_per_tok)),
+        ("copy_reduction_x", num(reduction)),
+        ("pool_queue_wait_us_mean", num(snap.pool_queue_wait_us_mean)),
+        ("pool_dispatch_us_mean", num(snap.pool_dispatch_us_mean)),
+        ("pool_tasks", num(snap.pool_tasks as f64)),
+    ]);
+    let path = std::env::var("BENCH_HOTPATH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("writing bench json");
+    println!("\nwrote {path}");
+
+    // The acceptance gate, enforced here so CI's smoke run fails loudly
+    // if the hot path regresses to eager copying.
+    assert!(
+        reduction >= 2.0,
+        "copy reduction {reduction:.1}x below the 2x acceptance bar"
+    );
+}

@@ -1,0 +1,516 @@
+//! Zero-copy speculation contexts: the token rope.
+//!
+//! Every hot-path consumer of a context — verification tasks queued on the
+//! shared target pool, the drafter's restart after a rejection, the chain
+//! fallback — used to receive its own `Vec<u32>` clone of the full stream,
+//! making coordination bookkeeping O(L) per event and O(L²) per
+//! generation. [`TokenRope`] makes those hand-offs O(k):
+//!
+//! - The settled prefix lives in immutable, `Arc`-shared **segments**;
+//!   cloning a rope bumps reference counts instead of copying tokens.
+//! - New tokens land in a small owned **tail**; [`TokenRope::freeze`]
+//!   seals the tail into a shared segment (each token is copied once at
+//!   its freeze, never per hand-off).
+//! - [`TokenRope::truncated`] shares a prefix view — the primitive behind
+//!   dispatching task τ_j (prefix + j draft blocks) and rejection resync
+//!   (settled prefix + correction) without re-cloning settled ground.
+//!
+//! Sealed segments are merge-compacted under a size-doubling rule, so a
+//! rope holds O(log L) segments and every token is copied O(log L) times
+//! over its whole life — against O(L) copies per *event* before.
+//!
+//! **Copy accounting.** The module keeps two process-wide counters:
+//! [`copied_bytes`], bumped by every actual token copy a rope performs
+//! (freeze, merge, clone tails, materialization), and
+//! [`full_clone_bytes`], bumped by hand-off sites
+//! ([`note_full_clone`]) with the bytes an eager full-context clone
+//! would have moved. Their ratio is the measured win; the hot-path bench
+//! emits both and `rust/tests/hotpath_copy.rs` gates the regression.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Bytes actually copied by rope operations, process-wide.
+static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Bytes an eager full-context-clone design would have copied at the same
+/// hand-off sites, process-wide.
+static FULL_CLONE_BYTES: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn note_copy(tokens: usize) {
+    COPIED_BYTES.fetch_add((tokens * 4) as u64, Ordering::Relaxed);
+}
+
+/// Record that a hand-off of a `tokens`-long context happened — the bytes
+/// the pre-rope design would have cloned there.
+#[inline]
+pub fn note_full_clone(tokens: usize) {
+    FULL_CLONE_BYTES.fetch_add((tokens * 4) as u64, Ordering::Relaxed);
+}
+
+/// Total context bytes actually copied by rope bookkeeping so far.
+pub fn copied_bytes() -> u64 {
+    COPIED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Total context bytes the eager-clone design would have copied so far.
+pub fn full_clone_bytes() -> u64 {
+    FULL_CLONE_BYTES.load(Ordering::Relaxed)
+}
+
+/// One immutable shared segment: `data[..used]` starting at absolute
+/// position `start` in the rope. `used < data.len()` after a truncation
+/// that split a sealed segment.
+#[derive(Clone, Debug)]
+struct Seg {
+    data: Arc<[u32]>,
+    used: usize,
+    start: usize,
+}
+
+/// An immutable-prefix token sequence with cheap structural sharing: the
+/// speculation-context currency of the whole runtime.
+#[derive(Debug, Default)]
+pub struct TokenRope {
+    segs: Vec<Seg>,
+    /// Total tokens across `segs`.
+    frozen_len: usize,
+    /// Owned mutable tail (tokens not yet sealed).
+    tail: Vec<u32>,
+}
+
+impl Clone for TokenRope {
+    fn clone(&self) -> Self {
+        // Segment list: O(#segs) Arc bumps. Tail: a real copy (kept small
+        // by freezing before hand-offs).
+        note_copy(self.tail.len());
+        Self {
+            segs: self.segs.clone(),
+            frozen_len: self.frozen_len,
+            tail: self.tail.clone(),
+        }
+    }
+}
+
+impl TokenRope {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a slice: one counted copy into a single sealed segment.
+    pub fn from_slice(tokens: &[u32]) -> Self {
+        note_copy(tokens.len());
+        let data: Arc<[u32]> = Arc::from(tokens);
+        let used = data.len();
+        Self {
+            segs: if used == 0 { Vec::new() } else { vec![Seg { data, used, start: 0 }] },
+            frozen_len: used,
+            tail: Vec::new(),
+        }
+    }
+
+    /// Logical length.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.frozen_len + self.tail.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tokens already sealed into shared segments.
+    #[inline]
+    pub fn frozen_len(&self) -> usize {
+        self.frozen_len
+    }
+
+    /// Number of sealed segments (O(log L) under the merge rule).
+    pub fn seg_count(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Append one token to the owned tail — O(1), no sharing impact.
+    #[inline]
+    pub fn push(&mut self, tok: u32) {
+        self.tail.push(tok);
+    }
+
+    /// Append many tokens to the owned tail (counted as a copy).
+    pub fn extend_from_slice(&mut self, tokens: &[u32]) {
+        note_copy(tokens.len());
+        self.tail.extend_from_slice(tokens);
+    }
+
+    /// Seal the tail into a shared segment, then merge-compact: while the
+    /// previous segment is not at least twice the size of the new one,
+    /// fuse them. Keeps `seg_count` logarithmic so clones stay cheap,
+    /// at O(log L) lifetime copies per token.
+    pub fn freeze(&mut self) {
+        if self.tail.is_empty() {
+            return;
+        }
+        note_copy(self.tail.len());
+        let tail = std::mem::take(&mut self.tail);
+        let used = tail.len();
+        self.segs.push(Seg { data: Arc::from(tail), used, start: self.frozen_len });
+        self.frozen_len += used;
+        while self.segs.len() >= 2 {
+            let n = self.segs.len();
+            if self.segs[n - 2].used > 2 * self.segs[n - 1].used {
+                break;
+            }
+            let last = self.segs.pop().unwrap();
+            let prev = self.segs.pop().unwrap();
+            note_copy(prev.used + last.used);
+            let mut fused = Vec::with_capacity(prev.used + last.used);
+            fused.extend_from_slice(&prev.data[..prev.used]);
+            fused.extend_from_slice(&last.data[..last.used]);
+            let used = fused.len();
+            self.segs.push(Seg { data: Arc::from(fused), used, start: prev.start });
+        }
+    }
+
+    /// A rope holding the first `len` tokens, sharing every sealed
+    /// segment it spans — O(#segs) Arc bumps plus a copy only of any tail
+    /// portion kept (zero after [`freeze`](Self::freeze)).
+    pub fn truncated(&self, len: usize) -> TokenRope {
+        assert!(len <= self.len(), "truncate {len} beyond {}", self.len());
+        let mut segs = Vec::with_capacity(self.segs.len());
+        let mut frozen_len = 0usize;
+        for seg in &self.segs {
+            if seg.start >= len {
+                break;
+            }
+            let used = seg.used.min(len - seg.start);
+            frozen_len = seg.start + used;
+            segs.push(Seg { data: seg.data.clone(), used, start: seg.start });
+        }
+        let tail: Vec<u32> = if len > self.frozen_len {
+            let keep = &self.tail[..len - self.frozen_len];
+            note_copy(keep.len());
+            keep.to_vec()
+        } else {
+            Vec::new()
+        };
+        TokenRope { segs, frozen_len, tail }
+    }
+
+    /// Token at position `i` (binary search over sealed segments).
+    pub fn get(&self, i: usize) -> Option<u32> {
+        if i >= self.frozen_len {
+            return self.tail.get(i - self.frozen_len).copied();
+        }
+        let si = self.segs.partition_point(|s| s.start + s.used <= i);
+        let seg = &self.segs[si];
+        Some(seg.data[i - seg.start])
+    }
+
+    /// The contiguous slices composing `self`, in order.
+    pub fn slices(&self) -> impl Iterator<Item = &[u32]> {
+        self.segs
+            .iter()
+            .map(|s| &s.data[..s.used])
+            .chain(std::iter::once(self.tail.as_slice()).filter(|s| !s.is_empty()))
+    }
+
+    /// Iterate tokens of `[start, end)` without materializing.
+    pub fn iter_range(&self, start: usize, end: usize) -> impl Iterator<Item = u32> + '_ {
+        assert!(start <= end && end <= self.len(), "bad range {start}..{end}");
+        let mut skip = start;
+        let mut take = end - start;
+        self.slices().flat_map(move |s| {
+            let lo = skip.min(s.len());
+            skip -= lo;
+            let hi = (lo + take).min(s.len());
+            take -= hi - lo;
+            s[lo..hi].iter().copied()
+        })
+    }
+
+    /// Materialize `[start, end)` into a fresh `Vec` (a counted copy).
+    pub fn to_vec_range(&self, start: usize, end: usize) -> Vec<u32> {
+        note_copy(end - start);
+        self.iter_range(start, end).collect()
+    }
+
+    /// Materialize the whole rope (a counted copy).
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.to_vec_range(0, self.len())
+    }
+
+    /// Length of the longest common prefix with `other` — the resync
+    /// primitive incremental servers use to find their cached resume
+    /// point. O(common) word compares, no copies.
+    pub fn common_prefix_with(&self, other: &[u32]) -> usize {
+        self.common_prefix_from(0, other)
+    }
+
+    /// Like [`common_prefix_with`](Self::common_prefix_with), but compares
+    /// `self[start..]` against `other`, returning the matched length.
+    /// Lets a server that has already trusted `start` tokens (see
+    /// [`PrefixWitness`]) validate only the residue.
+    pub fn common_prefix_from(&self, start: usize, other: &[u32]) -> usize {
+        assert!(start <= self.len(), "start {start} beyond {}", self.len());
+        let mut skip = start;
+        let mut n = 0usize;
+        for s in self.slices() {
+            let lo = skip.min(s.len());
+            skip -= lo;
+            let s = &s[lo..];
+            if s.is_empty() {
+                continue;
+            }
+            if n >= other.len() {
+                break;
+            }
+            let cmp = &other[n..];
+            let lim = cmp.len().min(s.len());
+            let mut i = 0usize;
+            while i < lim && s[i] == cmp[i] {
+                i += 1;
+            }
+            n += i;
+            if i < s.len() {
+                return n;
+            }
+        }
+        n
+    }
+}
+
+/// A witness of a rope prefix a server has already validated: it keeps
+/// the sealed segments of that span alive (so storage identity cannot be
+/// spoofed by allocation reuse) and recognizes them by pointer in later
+/// contexts. This is what makes per-call resync O(new tokens) instead of
+/// O(L): a context that structurally extends the witnessed prefix needs
+/// no token-by-token re-comparison of settled ground.
+#[derive(Debug, Default)]
+pub struct PrefixWitness {
+    segs: Vec<Seg>,
+    len: usize,
+}
+
+impl PrefixWitness {
+    /// How many leading tokens of `ctx` are bit-identical to the
+    /// witnessed prefix, established by storage identity alone (shared
+    /// `Arc` allocations are immutable, so pointer + span equality is
+    /// content equality). No token compares.
+    pub fn trusted_prefix(&self, ctx: &TokenRope) -> usize {
+        let mut trusted = 0usize;
+        for (w, s) in self.segs.iter().zip(&ctx.segs) {
+            if !Arc::ptr_eq(&w.data, &s.data) || w.start != s.start {
+                break;
+            }
+            trusted = s.start + s.used.min(w.used);
+            if w.used != s.used {
+                break;
+            }
+        }
+        trusted.min(self.len)
+    }
+
+    /// Record that `ctx[..len]` has been validated.
+    pub fn record(&mut self, ctx: &TokenRope, len: usize) {
+        debug_assert!(len <= ctx.len());
+        self.len = len;
+        self.segs.clear();
+        for s in &ctx.segs {
+            if s.start >= len {
+                break;
+            }
+            self.segs.push(Seg {
+                data: s.data.clone(),
+                used: s.used.min(len - s.start),
+                start: s.start,
+            });
+        }
+    }
+}
+
+impl From<Vec<u32>> for TokenRope {
+    fn from(v: Vec<u32>) -> Self {
+        Self::from_slice(&v)
+    }
+}
+
+impl From<&[u32]> for TokenRope {
+    fn from(v: &[u32]) -> Self {
+        Self::from_slice(v)
+    }
+}
+
+impl PartialEq for TokenRope {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len()
+            && self.iter_range(0, self.len()).eq(other.iter_range(0, other.len()))
+    }
+}
+impl Eq for TokenRope {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rope_of(n: usize) -> TokenRope {
+        let mut r = TokenRope::from_slice(&(0..n as u32).collect::<Vec<_>>());
+        r.freeze();
+        r
+    }
+
+    #[test]
+    fn push_freeze_and_read_back() {
+        let mut r = TokenRope::new();
+        assert!(r.is_empty());
+        for t in 0..100u32 {
+            r.push(t);
+            if t % 7 == 0 {
+                r.freeze();
+            }
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.to_vec(), (0..100).collect::<Vec<_>>());
+        for i in 0..100 {
+            assert_eq!(r.get(i), Some(i as u32));
+        }
+        assert_eq!(r.get(100), None);
+    }
+
+    #[test]
+    fn merge_keeps_segment_count_logarithmic() {
+        let mut r = TokenRope::new();
+        for t in 0..4096u32 {
+            r.push(t);
+            r.freeze(); // adversarial: freeze every token
+        }
+        assert_eq!(r.len(), 4096);
+        assert!(
+            r.seg_count() <= 16,
+            "merge rule failed: {} segments for 4096 tokens",
+            r.seg_count()
+        );
+        assert_eq!(r.to_vec(), (0..4096).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn truncated_shares_segments_and_preserves_content() {
+        let mut r = rope_of(64);
+        for t in 64..80u32 {
+            r.push(t);
+        }
+        // Truncation across the sealed/tail boundary and inside a segment.
+        for cut in [0usize, 1, 30, 64, 70, 80] {
+            let t = r.truncated(cut);
+            assert_eq!(t.len(), cut);
+            assert_eq!(t.to_vec(), (0..cut as u32).collect::<Vec<_>>());
+        }
+        // A sealed truncation shares the segment storage — no token copy.
+        // (The process-wide counters are shared with concurrently-running
+        // tests, so sharing is asserted structurally, via the Arcs.)
+        let t = r.truncated(64);
+        assert_eq!(t.len(), 64);
+        assert!(
+            Arc::ptr_eq(&t.segs[0].data, &r.segs[0].data),
+            "sealed truncation must share, not copy"
+        );
+        assert!(t.tail.is_empty());
+    }
+
+    #[test]
+    fn clone_of_frozen_rope_shares_segments() {
+        let r = rope_of(2048);
+        let c = r.clone();
+        assert_eq!(c, r);
+        assert!(c.tail.is_empty(), "frozen clone must carry no owned tokens");
+        for (a, b) in c.segs.iter().zip(&r.segs) {
+            assert!(Arc::ptr_eq(&a.data, &b.data), "clone copied a segment");
+        }
+    }
+
+    #[test]
+    fn tail_clone_is_counted() {
+        let mut r = TokenRope::new();
+        for t in 0..10u32 {
+            r.push(t);
+        }
+        // Monotonic lower bound only: other tests in this process also
+        // advance the shared counter concurrently.
+        let before = copied_bytes();
+        let _c = r.clone();
+        assert!(copied_bytes() - before >= 40);
+    }
+
+    #[test]
+    fn iter_range_and_slices_agree() {
+        let mut r = rope_of(50);
+        for t in 50..60u32 {
+            r.push(t);
+        }
+        let all: Vec<u32> = r.slices().flatten().copied().collect();
+        assert_eq!(all, (0..60).collect::<Vec<_>>());
+        let mid: Vec<u32> = r.iter_range(13, 57).collect();
+        assert_eq!(mid, (13..57).collect::<Vec<_>>());
+        assert!(r.iter_range(20, 20).next().is_none());
+    }
+
+    #[test]
+    fn common_prefix() {
+        let mut r = TokenRope::from_slice(&[1, 2, 3]);
+        r.freeze();
+        r.push(4);
+        r.push(5);
+        assert_eq!(r.common_prefix_with(&[1, 2, 3, 4, 5, 6]), 5);
+        assert_eq!(r.common_prefix_with(&[1, 2, 9]), 2);
+        assert_eq!(r.common_prefix_with(&[]), 0);
+        assert_eq!(r.common_prefix_with(&[7]), 0);
+        assert_eq!(r.common_prefix_with(&[1, 2, 3, 4, 5]), 5);
+        // Offset variant: compare self[start..] against the suffix.
+        assert_eq!(r.common_prefix_from(2, &[3, 4, 9]), 2);
+        assert_eq!(r.common_prefix_from(5, &[]), 0);
+        assert_eq!(r.common_prefix_from(0, &[1, 2, 3, 4, 5]), 5);
+        assert_eq!(r.common_prefix_from(4, &[5, 6]), 1);
+    }
+
+    #[test]
+    fn witness_trusts_shared_storage_only() {
+        let mut base = TokenRope::from_slice(&(0..100).collect::<Vec<u32>>());
+        base.freeze();
+        let mut w = PrefixWitness::default();
+        assert_eq!(w.trusted_prefix(&base), 0);
+        w.record(&base, 100);
+        // The same rope, extended by tail pushes: fully trusted.
+        let mut ext = base.clone();
+        ext.push(7);
+        ext.push(8);
+        assert_eq!(w.trusted_prefix(&ext), 100);
+        // A truncated view sharing the segment: trusted over the overlap.
+        assert_eq!(w.trusted_prefix(&base.truncated(40)), 40);
+        // Equal content in DIFFERENT storage earns no trust (identity,
+        // not equality, is the contract).
+        let other = TokenRope::from_slice(&(0..100).collect::<Vec<u32>>());
+        assert_eq!(w.trusted_prefix(&other), 0);
+        // Recording a shorter span caps later trust.
+        w.record(&ext, 30);
+        assert_eq!(w.trusted_prefix(&base), 30);
+    }
+
+    #[test]
+    fn equality_ignores_structure() {
+        let mut a = TokenRope::new();
+        for t in 0..20u32 {
+            a.push(t);
+            a.freeze();
+        }
+        let b = rope_of(20);
+        assert_eq!(a, b);
+        assert_ne!(a, rope_of(19));
+    }
+
+    #[test]
+    fn full_clone_counter_accumulates() {
+        let before = full_clone_bytes();
+        note_full_clone(100);
+        assert_eq!(full_clone_bytes() - before, 400);
+    }
+}

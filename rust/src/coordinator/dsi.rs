@@ -24,21 +24,26 @@
 //!
 //! - The **drafter thread** streams draft tokens continuously; it never
 //!   blocks on verification (DSI's defining non-blocking property). On a
-//!   rejection it receives a restart with the corrected context.
+//!   rejection it receives a restart whose corrected context *shares* the
+//!   settled prefix (a [`TokenRope`] clone — no O(L) copy).
 //! - **Verification tasks** τ_0, τ_1, … of each generation go to the
 //!   shared [`TargetPool`], tagged `(session, generation)`. τ_0 needs only
 //!   the settled context (after a rejection the target self-drafts its
 //!   continuation, which is why DSI never falls behind non-SI); τ_j covers
 //!   the j-th lookahead block and is dispatched as soon as the drafter has
-//!   produced its input tokens. A session keeps at most `sp_degree` block
-//!   tasks in flight — its share of the node's SP budget — so concurrent
-//!   sessions contend for, rather than monopolize, the pool.
-//! - The **coordinator** settles positions strictly in order, comparing
-//!   draft tokens against target predictions (exact match). The first
-//!   mismatch settles the target's own token as the correction, bumps the
-//!   session's generation (staling that session's queued/running tasks and
-//!   its drafter branch — Algorithm 1 line 8's terminations, now scoped
-//!   per session), and restarts.
+//!   produced its input tokens — as a truncated view of the session's one
+//!   speculation rope, so dispatch moves O(k) tokens, never the prefix.
+//!   A session keeps at most `sp_degree` block tasks in flight — its share
+//!   of the node's SP budget — so concurrent sessions contend for, rather
+//!   than monopolize, the pool.
+//! - The **coordinator** keeps a single speculation rope `spec` (settled
+//!   prefix + unverified drafts) and a settle frontier into it. It settles
+//!   positions strictly in order, comparing draft tokens against target
+//!   predictions (exact match). The first mismatch truncates the rope at
+//!   the rejection point, appends the target's own token as the
+//!   correction, bumps the session's generation (staling that session's
+//!   queued/running tasks and its drafter branch — Algorithm 1 line 8's
+//!   terminations, now scoped per session), and restarts.
 //!
 //! Losslessness: the output is bit-identical to greedy non-SI decoding of
 //! the target (tested below for the wait engine at several acceptance
@@ -48,6 +53,7 @@
 use super::pool::{PoolHandle, SessionMsg, TargetPool};
 use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
+use crate::context::TokenRope;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -56,7 +62,9 @@ use std::time::{Duration, Instant};
 
 /// Drafter control messages.
 enum Ctrl {
-    Restart { gen: u64, ctx: Vec<u32> },
+    /// Restart drafting from `ctx` — a shared rope, so the hand-off never
+    /// re-clones the settled prefix.
+    Restart { gen: u64, ctx: TokenRope },
     /// Park between requests (the drafter blocks on its control channel).
     Pause,
     Stop,
@@ -113,7 +121,7 @@ impl DsiSession {
                 let mut server = factory(ServerRole::Drafter, 0);
                 let horizon = server.max_context();
                 let mut gen = 0u64;
-                let mut ctx: Vec<u32> = Vec::new();
+                let mut ctx = TokenRope::new();
                 let mut paused = true; // parked until the first Restart
                 'outer: loop {
                     // Drain control messages (newest restart wins); block
@@ -136,6 +144,9 @@ impl DsiSession {
                         match msg {
                             Some(Ctrl::Restart { gen: g, ctx: c }) => {
                                 gen = g;
+                                // The drafter's incremental prefix state
+                                // resyncs inside its next `predictions`
+                                // call; no warm-up needed here.
                                 ctx = c;
                                 paused = false;
                             }
@@ -214,18 +225,25 @@ impl DsiSession {
         self.depth
             .store(cfg.max_speculation_depth.max(1), Ordering::Release);
         let drafter_calls_before = self.drafter_calls_ctr.load(Ordering::Relaxed);
+
+        // The session's one speculation stream: `spec[..settled]` is
+        // settled ground, `spec[settled..]` unverified drafts of the
+        // current generation. The prompt is sealed once; from here on the
+        // drafter restart, every block task, and the chain fallback all
+        // share this rope's segments instead of cloning tokens.
+        let mut spec = TokenRope::from_slice(&cfg.prompt);
+        let mut settled = spec.len();
+        crate::context::note_full_clone(spec.len());
         let _ = self
             .ctrl_tx
-            .send(Ctrl::Restart { gen, ctx: cfg.prompt.clone() });
+            .send(Ctrl::Restart { gen, ctx: spec.clone() });
 
         // --- coordinator event loop ---
         let start = Instant::now();
-        let mut settled = cfg.prompt.clone();
         let goal = cfg.prompt.len() + cfg.n_tokens;
         let mut settle_ms: Vec<f64> = Vec::with_capacity(cfg.n_tokens);
 
-        let mut c0 = settled.len(); // context length at generation start
-        let mut drafts: Vec<u32> = Vec::new(); // speculation beyond c0
+        let mut c0 = settled; // context length at generation start
         let mut next_task = 1usize; // next block task τ_j to dispatch
         // Buffered verification results: from-index -> predictions.
         let mut results: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
@@ -247,15 +265,13 @@ impl DsiSession {
 
         macro_rules! dispatch_ready_tasks {
             () => {
-                while drafts.len() >= next_task * k && inflight.len() < max_inflight {
+                while spec.len() - c0 >= next_task * k && inflight.len() < max_inflight {
                     let (from, to) =
                         (c0 + (next_task - 1) * k + 1, c0 + next_task * k + 1);
-                    // Context = generation-start prefix + draft block.
-                    // (`settled` itself may already have grown past c0 by
-                    // settling earlier drafts of this generation.)
-                    let mut ctx = settled[..c0].to_vec();
-                    ctx.extend_from_slice(&drafts[..next_task * k]);
-                    handle.submit(gen, ctx, from, to);
+                    // Context = generation-start prefix + draft blocks
+                    // 1..=j, shared straight out of the speculation rope.
+                    spec.freeze();
+                    handle.submit(gen, spec.truncated(c0 + next_task * k), from, to);
                     inflight.insert(from, to);
                     target_jobs += 1;
                     next_task += 1;
@@ -265,14 +281,15 @@ impl DsiSession {
 
         macro_rules! dispatch_chain_if_stalled {
             () => {
-                let pos = settled.len();
+                let pos = settled;
                 let covered = inflight
                     .range(..=pos)
                     .next_back()
                     .map_or(false, |(_, &to)| to > pos);
                 if pos < goal && chain_dispatched_for != pos && !covered {
                     chain_dispatched_for = pos;
-                    handle.submit(gen, settled.clone(), pos, pos + 1);
+                    spec.freeze();
+                    handle.submit(gen, spec.truncated(pos), pos, pos + 1);
                     inflight.insert(pos, pos + 1);
                     target_jobs += 1;
                 }
@@ -280,7 +297,7 @@ impl DsiSession {
         }
         dispatch_chain_if_stalled!();
 
-        'main: while settled.len() < goal {
+        'main: while settled < goal {
             let msg = match self.msg_rx.recv() {
                 Ok(m) => m,
                 Err(_) => break,
@@ -291,8 +308,8 @@ impl DsiSession {
                     if g != gen {
                         continue; // stale speculation branch
                     }
-                    debug_assert_eq!(index, c0 + drafts.len(), "draft order");
-                    drafts.push(token);
+                    debug_assert_eq!(index, spec.len(), "draft order");
+                    spec.push(token);
                 }
                 SessionMsg::Verify(r) => {
                     debug_assert_eq!(r.session, handle.session_id(), "routing");
@@ -316,8 +333,8 @@ impl DsiSession {
             dispatch_ready_tasks!();
 
             // Settle in strict position order.
-            'settle: while settled.len() < goal {
-                let pos = settled.len();
+            'settle: while settled < goal {
+                let pos = settled;
                 // Find the buffered result covering `pos` (its from <= pos).
                 let Some((&from, _)) = results.range(..=pos).next_back() else {
                     break;
@@ -332,37 +349,44 @@ impl DsiSession {
                 // The draft at `pos` must exist to compare (the drafter is
                 // faster than the target, so this only waits in
                 // pathological schedules; we wait for the next Draft).
-                let Some(&draft) = drafts.get(pos - c0) else {
+                let Some(draft) = spec.get(pos) else {
                     break 'settle;
                 };
                 let now = start.elapsed().as_secs_f64() * 1e3;
                 if draft == pred {
-                    settled.push(draft);
+                    settled += 1;
                     settle_ms.push(now);
                     accepted_drafts += 1;
-                    self.frontier.store(settled.len(), Ordering::Release);
+                    self.frontier.store(settled, Ordering::Release);
                     // fall through: more positions may settle from this result
                 } else {
-                    // Rejection: the verifier's own token is the correction.
-                    settled.push(pred);
+                    // Rejection: truncate the speculation rope at the
+                    // mismatch (sharing the settled prefix) and append the
+                    // verifier's own token as the correction.
+                    let mut corrected = spec.truncated(pos);
+                    corrected.push(pred);
+                    corrected.freeze();
+                    spec = corrected;
+                    settled = spec.len();
                     settle_ms.push(now);
                     rejections += 1;
-                    self.frontier.store(settled.len(), Ordering::Release);
-                    if settled.len() >= goal {
+                    self.frontier.store(settled, Ordering::Release);
+                    if settled >= goal {
                         break 'main;
                     }
                     // Resynchronize: new generation from corrected context.
                     // Staling is scoped to this session — concurrent
-                    // sessions on the pool are unaffected.
+                    // sessions on the pool are unaffected. The restart
+                    // shares the rope; nothing is re-cloned.
                     gen += 1;
                     self.gen = gen;
                     handle.advance_gen(gen);
                     results.clear();
                     inflight.clear();
-                    drafts.clear();
-                    c0 = settled.len();
+                    c0 = settled;
                     next_task = 1;
-                    let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: settled.clone() });
+                    crate::context::note_full_clone(spec.len());
+                    let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: spec.clone() });
                     continue 'settle;
                 }
             }
@@ -383,8 +407,8 @@ impl DsiSession {
         let drafter_calls =
             self.drafter_calls_ctr.load(Ordering::Relaxed) - drafter_calls_before;
 
-        let mut tokens = settled[cfg.prompt.len()..].to_vec();
-        tokens.truncate(cfg.n_tokens);
+        let end = settled.min(goal);
+        let tokens = spec.to_vec_range(cfg.prompt.len(), end);
         settle_ms.truncate(cfg.n_tokens);
 
         OnlineOutcome {

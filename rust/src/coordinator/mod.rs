@@ -37,21 +37,49 @@ pub use si::{run_si, run_si_with};
 pub use wait_engine::{WaitEngine, WaitServer};
 
 use crate::config::AlgoKind;
+use crate::context::TokenRope;
 use std::sync::Arc;
 
 /// A model server owned by exactly one thread (target-pool worker, drafter
 /// thread, or an inline baseline loop).
+///
+/// Servers are *stateful*: each keeps an incremental prefix state (the KV
+/// cache, or its wait-engine analog — a rolling prefix-hash chain) and
+/// resynchronizes it to the longest prefix shared with the incoming
+/// context, so a call whose context extends what the server last saw
+/// costs O(new tokens), not O(L). Contexts arrive as [`TokenRope`]s, so
+/// the hand-off itself copies nothing.
 pub trait LmServer {
     /// Greedy predictions for token indices `[from, to)` of the stream
     /// whose prefix is `ctx` (`ctx.len() >= to - 1`, `from >= 1`):
     /// `result[i]` is the model's next-token prediction given
     /// `ctx[..from + i]`. One call == one verification task == one
     /// (batched) forward pass in the latency model.
-    fn predictions(&mut self, ctx: &[u32], from: usize, to: usize) -> Vec<u32>;
+    fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32>;
 
     /// Upper bound on context length (KV capacity). Drafting and
     /// speculation stop at this horizon.
     fn max_context(&self) -> usize;
+
+    /// Advance the server's cached prefix state toward `ctx` without
+    /// charging a forward pass: roll back past any divergence and ingest
+    /// whatever prefix bookkeeping is free (the wait engine extends its
+    /// hash chain; the real engine rolls its KV cache back to the shared
+    /// prefix and lets the next `predictions` decode only the suffix).
+    /// Stateless servers may ignore it.
+    ///
+    /// `predictions` already resyncs internally, so today's coordinators
+    /// never need to call this; it is the hook for schedulers that want
+    /// to warm a server during an idle window (e.g. prefix prefill on a
+    /// real KV cache before the drafts arrive), kept alive under test in
+    /// both engines.
+    fn advance(&mut self, _ctx: &TokenRope) {}
+
+    /// Tokens of context the server's incremental state currently covers
+    /// (0 for a stateless server). Introspection for tests and metrics.
+    fn cached_len(&self) -> usize {
+        0
+    }
 }
 
 /// Which model a factory should construct.
@@ -128,19 +156,5 @@ impl OnlineOutcome {
     }
 }
 
-/// Longest common prefix of two token slices (resync primitive).
-pub fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
-    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn common_prefix() {
-        assert_eq!(common_prefix_len(&[1, 2, 3], &[1, 2, 4, 5]), 2);
-        assert_eq!(common_prefix_len(&[], &[1]), 0);
-        assert_eq!(common_prefix_len(&[7], &[7]), 1);
-    }
-}
+// (The slice-based common_prefix_len helper is gone: the resync primitive
+// is `TokenRope::common_prefix_with`, which every engine now uses.)

@@ -4,6 +4,7 @@
 
 use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
+use crate::context::TokenRope;
 use std::time::Instant;
 
 pub fn run_nonsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
@@ -15,7 +16,7 @@ pub fn run_nonsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
 /// paths reuse the loaded model across requests.
 pub fn run_nonsi_with(server: &mut dyn super::LmServer, cfg: &OnlineConfig) -> OnlineOutcome {
     let horizon = server.max_context();
-    let mut ctx = cfg.prompt.clone();
+    let mut ctx = TokenRope::from_slice(&cfg.prompt);
     let n_tokens = cfg.n_tokens.min(horizon.saturating_sub(ctx.len()));
 
     let start = Instant::now();
@@ -32,7 +33,7 @@ pub fn run_nonsi_with(server: &mut dyn super::LmServer, cfg: &OnlineConfig) -> O
 
     OnlineOutcome {
         algo: AlgoKind::NonSi,
-        tokens: ctx[cfg.prompt.len()..].to_vec(),
+        tokens: ctx.to_vec_range(cfg.prompt.len(), ctx.len()),
         wall_ms,
         ttft_ms: settle_ms.first().copied().unwrap_or(f64::NAN),
         settle_ms,

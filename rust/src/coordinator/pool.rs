@@ -9,22 +9,31 @@
 //! - **Workers** are OS threads, each owning one target [`LmServer`]
 //!   (model load / HLO compilation happens once per worker, at pool
 //!   construction — not per request).
-//! - **Tasks** are tagged `(session_id, generation)`. Rejection staling
+//! - **Tasks** are tagged `(session_id, generation)` and carry their
+//!   context as a [`TokenRope`], so enqueueing shares the settled prefix
+//!   instead of cloning it (submit is O(k), not O(L)). Rejection staling
 //!   (Algorithm 1 line 8) is *per session*: one session's resync never
 //!   cancels another session's in-flight verification.
 //! - **Results** are routed back to the owning session's coordinator
-//!   through the `Sender<SessionMsg>` it registered; a result for a
+//!   through the `Sender<SessionMsg>` it registered. Workers keep a local
+//!   route cache validated by a registration epoch, so the steady-state
+//!   dispatch path locks no map and clones no `Sender`; a result for a
 //!   departed session is dropped on the floor.
+//! - **Timing**: each task's submit→pop queue wait and pop→forward
+//!   dispatch overhead accumulate in [`PoolStats`], surfaced through
+//!   `server::metrics::Snapshot` and the hot-path bench.
 //!
 //! Sessions interact with the pool through a [`PoolHandle`] obtained from
 //! [`TargetPool::register`]; dropping the handle unregisters the session
 //! and purges its queued tasks.
 
 use super::{LmServer, ServerFactory, ServerRole};
+use crate::context::TokenRope;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// A completed verification task, routed back to its owning session.
 #[derive(Debug, Clone)]
@@ -56,7 +65,15 @@ pub enum SessionMsg {
 
 /// A queued verification task.
 enum PoolTask {
-    Verify { session: u64, gen: u64, ctx: Vec<u32>, from: usize, to: usize },
+    Verify {
+        session: u64,
+        gen: u64,
+        ctx: TokenRope,
+        from: usize,
+        to: usize,
+        /// Submit timestamp, for the queue-wait gauge.
+        submitted: Instant,
+    },
     Shutdown,
 }
 
@@ -69,13 +86,62 @@ struct Route {
     tx: Sender<SessionMsg>,
 }
 
+/// Dispatch-path timing, accumulated lock-free by the workers. Shared
+/// with `server::metrics` so serving snapshots expose the pool's health.
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Tasks dispatched to a worker forward (excludes staled/skipped).
+    tasks: AtomicU64,
+    /// Summed submit→pop queue wait, ns.
+    queue_wait_ns: AtomicU64,
+    /// Summed pop→forward dispatch overhead (routing, staleness check), ns.
+    dispatch_ns: AtomicU64,
+}
+
+impl PoolStats {
+    /// Record one dispatched task's timings (worker-side).
+    pub fn record(&self, queue_wait_ns: u64, dispatch_ns: u64) {
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+        self.dispatch_ns.fetch_add(dispatch_ns, Ordering::Relaxed);
+    }
+
+    /// Tasks that reached a worker forward.
+    pub fn tasks(&self) -> u64 {
+        self.tasks.load(Ordering::Relaxed)
+    }
+
+    /// Mean submit→pop queue wait, µs (0 when no tasks ran).
+    pub fn queue_wait_us_mean(&self) -> f64 {
+        let n = self.tasks();
+        if n == 0 {
+            return 0.0;
+        }
+        self.queue_wait_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    /// Mean pop→forward dispatch overhead, µs (0 when no tasks ran).
+    pub fn dispatch_us_mean(&self) -> f64 {
+        let n = self.tasks();
+        if n == 0 {
+            return 0.0;
+        }
+        self.dispatch_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+}
+
 /// State shared between the pool owner, its workers, and session handles.
 struct PoolShared {
     queue: Mutex<VecDeque<PoolTask>>,
     cv: Condvar,
     routes: Mutex<HashMap<u64, Route>>,
+    /// Bumped on every register/unregister; workers revalidate their local
+    /// route cache against it, so a departed session is still skipped
+    /// without a map lock per task.
+    route_epoch: AtomicU64,
     next_session: AtomicU64,
     active: AtomicUsize,
+    stats: Arc<PoolStats>,
 }
 
 impl PoolShared {
@@ -103,6 +169,28 @@ impl PoolShared {
             PoolTask::Shutdown => true,
         });
     }
+
+    /// Drop every queued task of `session`, regardless of generation —
+    /// the departure path. (`purge_stale(session, u64::MAX)` is NOT
+    /// equivalent: its `>=` keep-rule would leave a task tagged exactly
+    /// `u64::MAX` behind.)
+    fn purge_all(&self, session: u64) {
+        let mut q = self.queue.lock().unwrap();
+        q.retain(|t| match t {
+            PoolTask::Verify { session: s, .. } => *s != session,
+            PoolTask::Shutdown => true,
+        });
+    }
+
+    #[cfg(test)]
+    fn queued_tasks_of(&self, session: u64) -> usize {
+        self.queue
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|t| matches!(t, PoolTask::Verify { session: s, .. } if *s == session))
+            .count()
+    }
 }
 
 /// A session's capability to use the pool. Obtained from
@@ -120,8 +208,19 @@ impl PoolHandle {
     }
 
     /// Enqueue one verification task tagged with this session and `gen`.
-    pub fn submit(&self, gen: u64, ctx: Vec<u32>, from: usize, to: usize) {
-        self.shared.push(PoolTask::Verify { session: self.session, gen, ctx, from, to });
+    /// `ctx` is a shared rope: the enqueue moves O(k) delta tokens, never
+    /// the settled prefix.
+    pub fn submit(&self, gen: u64, ctx: TokenRope, from: usize, to: usize) {
+        // Account what an eager-clone design would have copied here.
+        crate::context::note_full_clone(ctx.len());
+        self.shared.push(PoolTask::Verify {
+            session: self.session,
+            gen,
+            ctx,
+            from,
+            to,
+            submitted: Instant::now(),
+        });
     }
 
     /// Advance this session's generation (a rejection resync): queued
@@ -136,8 +235,9 @@ impl PoolHandle {
 impl Drop for PoolHandle {
     fn drop(&mut self) {
         self.shared.routes.lock().unwrap().remove(&self.session);
+        self.shared.route_epoch.fetch_add(1, Ordering::Release);
         // Leftover queued tasks would only waste worker forwards.
-        self.shared.purge_stale(self.session, u64::MAX);
+        self.shared.purge_all(self.session);
         self.shared.active.fetch_sub(1, Ordering::AcqRel);
     }
 }
@@ -160,8 +260,10 @@ impl TargetPool {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             routes: Mutex::new(HashMap::new()),
+            route_epoch: AtomicU64::new(0),
             next_session: AtomicU64::new(1),
             active: AtomicUsize::new(0),
+            stats: Arc::new(PoolStats::default()),
         });
         let mut workers = Vec::with_capacity(size);
         for wid in 0..size {
@@ -169,31 +271,63 @@ impl TargetPool {
             let factory = factory.clone();
             workers.push(std::thread::spawn(move || {
                 let mut server: Box<dyn LmServer> = factory(ServerRole::Target, wid);
+                // Local route cache: on the steady-state path a task costs
+                // one atomic epoch load and a HashMap probe — no routes
+                // lock, no Sender clone. Any register/unregister bumps the
+                // epoch and flushes the cache, so departed sessions are
+                // still skipped before the forward.
+                let mut cache: HashMap<u64, (Arc<AtomicU64>, Sender<SessionMsg>)> =
+                    HashMap::new();
+                let mut cache_epoch = u64::MAX;
                 loop {
                     match shared.pop() {
                         PoolTask::Shutdown => break,
-                        PoolTask::Verify { session, gen, ctx, from, to } => {
+                        PoolTask::Verify { session, gen, ctx, from, to, submitted } => {
+                            let popped = Instant::now();
+                            let epoch = shared.route_epoch.load(Ordering::Acquire);
+                            if epoch != cache_epoch {
+                                cache.clear();
+                                cache_epoch = epoch;
+                            }
+                            if !cache.contains_key(&session) {
+                                let routes = shared.routes.lock().unwrap();
+                                if let Some(r) = routes.get(&session) {
+                                    cache.insert(session, (r.gen.clone(), r.tx.clone()));
+                                }
+                            }
                             // Route lookup doubles as the staleness check:
                             // a departed session or an advanced generation
-                            // means the forward would be wasted.
-                            let route = {
-                                let routes = shared.routes.lock().unwrap();
-                                routes.get(&session).map(|r| (r.gen.clone(), r.tx.clone()))
+                            // means the forward would be wasted. The send
+                            // goes through the cached Sender by reference —
+                            // no clone per task; eviction on a dead channel
+                            // is deferred past the borrow.
+                            let send_failed = {
+                                let Some((cur, tx)) = cache.get(&session) else {
+                                    continue;
+                                };
+                                if gen != cur.load(Ordering::Acquire) {
+                                    continue; // staled while queued (Alg. 1 line 8)
+                                }
+                                shared.stats.record(
+                                    popped.duration_since(submitted).as_nanos() as u64,
+                                    popped.elapsed().as_nanos() as u64,
+                                );
+                                let preds = server.predictions(&ctx, from, to);
+                                // If the generation staled mid-forward the
+                                // coordinator drops the result by tag; if
+                                // the session departed, the send just
+                                // fails.
+                                tx.send(SessionMsg::Verify(VerifyResult {
+                                    session,
+                                    gen,
+                                    from,
+                                    preds,
+                                }))
+                                .is_err()
                             };
-                            let Some((cur, tx)) = route else { continue };
-                            if gen != cur.load(Ordering::Acquire) {
-                                continue; // staled while queued (Alg. 1 line 8)
+                            if send_failed {
+                                cache.remove(&session);
                             }
-                            let preds = server.predictions(&ctx, from, to);
-                            // If the generation staled mid-forward the
-                            // coordinator drops the result by tag; if the
-                            // session departed, the send just fails.
-                            let _ = tx.send(SessionMsg::Verify(VerifyResult {
-                                session,
-                                gen,
-                                from,
-                                preds,
-                            }));
                         }
                     }
                 }
@@ -212,6 +346,12 @@ impl TargetPool {
         self.shared.active.load(Ordering::Acquire)
     }
 
+    /// The pool's dispatch-path timing counters (shared; attach to
+    /// serving metrics).
+    pub fn stats(&self) -> Arc<PoolStats> {
+        self.shared.stats.clone()
+    }
+
     /// Register a session: results for its tasks will be sent as
     /// [`SessionMsg::Verify`] on `tx`.
     pub fn register(&self, tx: Sender<SessionMsg>) -> PoolHandle {
@@ -222,6 +362,9 @@ impl TargetPool {
             .lock()
             .unwrap()
             .insert(session, Route { gen: gen.clone(), tx });
+        // No route_epoch bump: session ids are never reused, so a new
+        // session cannot be stale-cached anywhere — workers miss and fall
+        // through to the locked lookup. Only departure must flush caches.
         self.shared.active.fetch_add(1, Ordering::AcqRel);
         PoolHandle { shared: self.shared.clone(), session, gen }
     }
@@ -245,6 +388,10 @@ mod tests {
     use crate::coordinator::wait_engine::{Oracle, WaitEngine};
     use std::sync::mpsc::channel;
     use std::time::Duration;
+
+    fn rope(tokens: &[u32]) -> TokenRope {
+        TokenRope::from_slice(tokens)
+    }
 
     fn pool_with_latency(size: usize, target_ms: f64) -> TargetPool {
         let eng = WaitEngine {
@@ -277,8 +424,8 @@ mod tests {
         assert_ne!(a.session_id(), b.session_id());
         assert_eq!(pool.active_sessions(), 2);
 
-        a.submit(0, vec![1, 2, 3], 2, 3);
-        b.submit(0, vec![9, 8, 7], 2, 3);
+        a.submit(0, rope(&[1, 2, 3]), 2, 3);
+        b.submit(0, rope(&[9, 8, 7]), 2, 3);
         let ra = recv_verify(&rx_a).expect("session A result");
         let rb = recv_verify(&rx_b).expect("session B result");
         assert_eq!(ra.session, a.session_id());
@@ -287,6 +434,11 @@ mod tests {
         // No cross-delivery: each channel saw exactly its own result.
         assert!(rx_a.try_recv().is_err());
         assert!(rx_b.try_recv().is_err());
+        // Both forwards were timed.
+        let stats = pool.stats();
+        assert_eq!(stats.tasks(), 2);
+        assert!(stats.queue_wait_us_mean() >= 0.0);
+        assert!(stats.dispatch_us_mean() >= 0.0);
     }
 
     #[test]
@@ -302,14 +454,14 @@ mod tests {
         // Occupy the worker, queue A's task behind it, then advance A's
         // generation: A's old-gen task must never be served, while B's
         // tasks are untouched by A's resync.
-        b.submit(0, vec![4, 5, 6], 2, 3);
-        a.submit(0, vec![1, 2, 3], 2, 3);
+        b.submit(0, rope(&[4, 5, 6]), 2, 3);
+        a.submit(0, rope(&[1, 2, 3]), 2, 3);
         a.advance_gen(1);
         assert!(recv_verify(&rx_b).is_some(), "B's task survived A's resync");
         assert!(rx_a.try_recv().is_err(), "A's stale task was applied");
 
         // A's new-generation task flows normally.
-        a.submit(1, vec![1, 2, 3], 2, 3);
+        a.submit(1, rope(&[1, 2, 3]), 2, 3);
         let r = recv_verify(&rx_a).expect("fresh-gen result");
         assert_eq!(r.gen, 1);
     }
@@ -319,16 +471,45 @@ mod tests {
         let pool = pool(1);
         let (tx_a, rx_a) = channel();
         let a = pool.register(tx_a);
-        a.submit(0, vec![1, 2, 3], 2, 3);
+        a.submit(0, rope(&[1, 2, 3]), 2, 3);
         drop(a); // unregister with a task possibly still queued
         assert_eq!(pool.active_sessions(), 0);
         // The pool keeps serving other sessions.
         let (tx_b, rx_b) = channel();
         let b = pool.register(tx_b);
-        b.submit(0, vec![2, 2, 2], 2, 3);
+        b.submit(0, rope(&[2, 2, 2]), 2, 3);
         assert!(recv_verify(&rx_b).is_some());
         drop(b);
         drop(rx_a);
         assert!(rx_b.try_recv().is_err());
+    }
+
+    /// The departure purge must remove EVERY queued task of the session —
+    /// including one tagged `gen == u64::MAX`, which the old
+    /// `purge_stale(session, u64::MAX)` sentinel kept (its `>=` rule).
+    #[test]
+    fn departure_purges_max_gen_sentinel_tasks() {
+        // 80ms blocker keeps the single worker busy so A's queued tasks
+        // deterministically sit in the queue while we inspect it.
+        let pool = pool_with_latency(1, 80.0);
+        let (tx_blocker, rx_blocker) = channel();
+        let blocker = pool.register(tx_blocker);
+        blocker.submit(0, rope(&[9, 9, 9]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10)); // worker picks the blocker up
+
+        let (tx_a, _rx_a) = channel();
+        let a = pool.register(tx_a);
+        let sid = a.session_id();
+        a.submit(u64::MAX, rope(&[1, 2, 3]), 2, 3);
+        a.submit(5, rope(&[1, 2, 3, 4]), 2, 3);
+        assert_eq!(pool.shared.queued_tasks_of(sid), 2);
+
+        // purge_stale with the MAX sentinel leaves the MAX-tagged task.
+        pool.shared.purge_stale(sid, u64::MAX);
+        assert_eq!(pool.shared.queued_tasks_of(sid), 1, "sentinel purge is not purge-all");
+
+        drop(a); // departure: purge_all must clear the rest
+        assert_eq!(pool.shared.queued_tasks_of(sid), 0, "departure left tasks behind");
+        assert!(recv_verify(&rx_blocker).is_some());
     }
 }

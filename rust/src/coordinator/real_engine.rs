@@ -11,7 +11,8 @@
 //! Requires the `pjrt` cargo feature; without it `runtime::pjrt` is the
 //! stub backend and [`RealServer::load`] returns a descriptive error.
 
-use super::{common_prefix_len, LmServer, ServerFactory, ServerRole};
+use super::{LmServer, ServerFactory, ServerRole};
+use crate::context::TokenRope;
 use crate::runtime::pjrt::{ModelRole, ModelRuntime, Session};
 use crate::runtime::sampler::argmax;
 use std::path::PathBuf;
@@ -38,33 +39,36 @@ impl RealServer {
 }
 
 impl LmServer for RealServer {
-    fn predictions(&mut self, ctx: &[u32], from: usize, to: usize) -> Vec<u32> {
+    fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
         assert!(from >= 1 && to > from && ctx.len() >= to - 1, "bad range {from}..{to}");
-        let shared = common_prefix_len(&self.sess.tokens, ctx);
+        let shared = ctx.common_prefix_with(&self.sess.tokens);
 
         let mut preds = Vec::with_capacity(to - from);
         if shared == 0 || self.sess.pos == 0 {
             // Cold (or fully divergent) cache: prefill through the first
-            // needed prediction, then decode the rest.
-            let pre = from.min(ctx.len()); // prefill ctx[..from] predicts index `from`
+            // needed prediction, then decode the rest. Prefill is the one
+            // place the context is materialized — the executable wants a
+            // contiguous padded buffer.
+            let pre = from.min(ctx.len()); // prefill ctx[..pre] predicts index `pre`
             self.sess = self.rt.new_session().expect("session");
-            let logits = self.rt.prefill(&mut self.sess, &ctx[..pre]).expect("prefill");
+            let prompt = ctx.to_vec_range(0, pre);
+            let logits = self.rt.prefill(&mut self.sess, &prompt).expect("prefill");
             preds.push(argmax(&logits));
-            for idx in pre..to - 1 {
-                let logits = self.rt.decode_step(&mut self.sess, ctx[idx]).expect("decode");
+            for tok in ctx.iter_range(pre, to - 1) {
+                let logits = self.rt.decode_step(&mut self.sess, tok).expect("decode");
                 preds.push(argmax(&logits));
             }
-            // preds now covers indices pre..to; keep [from, to)
-            let skip = from - pre; // == 0
-            return preds[skip..].to_vec();
+            // preds covers indices pre..to, and pre == from here.
+            return preds;
         }
 
-        // Warm cache: roll back to the useful prefix and decode forward.
+        // Warm cache: roll back to the useful prefix and decode forward —
+        // only the divergent suffix is processed (or touched at all).
         let resume = shared.min(from - 1);
         self.rt.rollback(&mut self.sess, resume);
-        for idx in resume..to - 1 {
-            let logits = self.rt.decode_step(&mut self.sess, ctx[idx]).expect("decode");
-            if idx + 1 >= from {
+        for (off, tok) in ctx.iter_range(resume, to - 1).enumerate() {
+            let logits = self.rt.decode_step(&mut self.sess, tok).expect("decode");
+            if resume + off + 1 >= from {
                 preds.push(argmax(&logits));
             }
         }
@@ -74,6 +78,19 @@ impl LmServer for RealServer {
 
     fn max_context(&self) -> usize {
         self.rt.max_seq
+    }
+
+    fn advance(&mut self, ctx: &TokenRope) {
+        // Drop any divergent KV suffix now so the next `predictions`
+        // decodes only new tokens. Forward passes stay where they are
+        // charged: in `predictions`.
+        if self.sess.pos > 0 {
+            self.rt.resync(&mut self.sess, ctx);
+        }
+    }
+
+    fn cached_len(&self) -> usize {
+        self.sess.tokens.len()
     }
 }
 
@@ -99,7 +116,7 @@ mod tests {
     fn predictions_match_plain_decode() {
         let Some(dir) = artifacts() else { return };
         let mut s = RealServer::load(&dir, ServerRole::Target).unwrap();
-        let ctx: Vec<u32> = vec![5, 9, 200, 31, 77, 12];
+        let ctx = TokenRope::from_slice(&[5, 9, 200, 31, 77, 12]);
         // predictions for indices 2..6 in one call
         let batch = s.predictions(&ctx, 2, 6);
 
@@ -107,7 +124,7 @@ mod tests {
         let mut s2 = RealServer::load(&dir, ServerRole::Target).unwrap();
         let mut singles = Vec::new();
         for i in 2..6 {
-            singles.push(s2.predictions(&ctx[..i], i, i + 1)[0]);
+            singles.push(s2.predictions(&ctx.truncated(i), i, i + 1)[0]);
         }
         assert_eq!(batch, singles);
     }
@@ -116,10 +133,13 @@ mod tests {
     fn resync_after_divergence() {
         let Some(dir) = artifacts() else { return };
         let mut s = RealServer::load(&dir, ServerRole::Drafter).unwrap();
-        let ctx_a: Vec<u32> = vec![1, 2, 3, 4, 5, 6];
-        let ctx_b: Vec<u32> = vec![1, 2, 3, 9, 9, 9];
+        let ctx_a = TokenRope::from_slice(&[1, 2, 3, 4, 5, 6]);
+        let ctx_b = TokenRope::from_slice(&[1, 2, 3, 9, 9, 9]);
         let a1 = s.predictions(&ctx_a, 4, 7);
         let _b = s.predictions(&ctx_b, 4, 7); // diverge
+        assert!(s.cached_len() >= 3);
+        s.advance(&ctx_a); // KV rollback to the shared prefix, no forwards
+        assert_eq!(s.cached_len(), 3);
         let a2 = s.predictions(&ctx_a, 4, 7); // resync back
         assert_eq!(a1, a2);
     }

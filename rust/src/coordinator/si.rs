@@ -9,6 +9,7 @@
 
 use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
+use crate::context::TokenRope;
 use std::time::Instant;
 
 pub fn run_si(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
@@ -26,7 +27,10 @@ pub fn run_si_with(
     let horizon = target.max_context().min(drafter.max_context());
     let k = cfg.lookahead;
 
-    let mut ctx = cfg.prompt.clone();
+    // The settled stream is a frozen rope: the per-iteration draft probe
+    // shares it (no O(L) clone per iteration — the pre-rope cost was
+    // O(L·k) clones per settled block).
+    let mut ctx = TokenRope::from_slice(&cfg.prompt);
     let n_tokens = cfg.n_tokens.min(horizon.saturating_sub(ctx.len() + k + 1));
     let goal = cfg.prompt.len() + n_tokens;
 
@@ -39,32 +43,31 @@ pub fn run_si_with(
 
     while ctx.len() < goal {
         let base = ctx.len();
-        // Draft k tokens sequentially (blocking, by SI's definition).
-        let mut drafts = Vec::with_capacity(k);
+        // Draft k tokens sequentially (blocking, by SI's definition) onto
+        // a shared view of the settled stream.
+        crate::context::note_full_clone(ctx.len() * (k + 1));
+        let mut probe = ctx.clone();
         for _ in 0..k {
-            let mut probe = ctx.clone();
-            probe.extend_from_slice(&drafts);
             let t = drafter.predictions(&probe, probe.len(), probe.len() + 1)[0];
             drafter_calls += 1;
-            drafts.push(t);
+            probe.push(t);
         }
         // One batched verification: predictions for indices base..base+k
         // (k draft positions + the bonus position).
-        let mut probe = ctx.clone();
-        probe.extend_from_slice(&drafts);
         let preds = target.predictions(&probe, base, base + k + 1);
         target_jobs += 1;
 
         // Accept the longest matching prefix, then one target token
         // (correction on mismatch, bonus on all-accept).
         let mut i = 0;
-        while i < k && drafts[i] == preds[i] {
-            ctx.push(drafts[i]);
+        while i < k && probe.get(base + i) == Some(preds[i]) {
+            ctx.push(preds[i]);
             settle_ms.push(f64::NAN); // settle together below
             accepted_drafts += 1;
             i += 1;
         }
         ctx.push(preds[i]); // bonus (i == k) or correction (i < k)
+        ctx.freeze(); // keep the next iteration's probe clone zero-copy
         settle_ms.push(f64::NAN);
         if i < k {
             rejections += 1;
@@ -77,8 +80,8 @@ pub fn run_si_with(
     }
     let wall_ms = start.elapsed().as_secs_f64() * 1e3;
 
-    let mut tokens = ctx[cfg.prompt.len()..].to_vec();
-    tokens.truncate(n_tokens);
+    let end = ctx.len().min(goal);
+    let tokens = ctx.to_vec_range(cfg.prompt.len(), end);
     settle_ms.truncate(n_tokens);
 
     OnlineOutcome {

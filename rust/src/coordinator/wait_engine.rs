@@ -18,6 +18,7 @@
 
 use super::{LmServer, ServerFactory, ServerRole};
 use crate::config::LatencyProfile;
+use crate::context::{PrefixWitness, TokenRope};
 use crate::util::rng::splitmix64;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -50,26 +51,39 @@ pub struct Oracle {
 }
 
 impl Oracle {
-    fn prefix_hash(&self, prefix: &[u32]) -> u64 {
-        let mut h = self.seed ^ 0xcbf2_9ce4_8422_2325;
-        for &t in prefix {
-            h ^= t as u64;
-            h = splitmix64(&mut h);
-        }
-        h
+    /// Chain state for the empty prefix. The prefix hash is defined as a
+    /// left fold of [`Oracle::hash_step`] from this value, so servers can
+    /// keep a rolling chain and pay O(1) per *new* token instead of
+    /// O(prefix) per predicted position.
+    #[inline]
+    pub fn hash_init(&self) -> u64 {
+        self.seed ^ 0xcbf2_9ce4_8422_2325
     }
 
-    /// The target model's greedy token after `prefix`.
-    pub fn target_token(&self, prefix: &[u32]) -> u32 {
-        let mut h = self.prefix_hash(prefix) ^ 0x9e37;
+    /// Extend the chain by one token.
+    #[inline]
+    pub fn hash_step(&self, h: u64, tok: u32) -> u64 {
+        let mut x = h ^ tok as u64;
+        splitmix64(&mut x)
+    }
+
+    fn prefix_hash(&self, prefix: &[u32]) -> u64 {
+        prefix.iter().fold(self.hash_init(), |h, &t| self.hash_step(h, t))
+    }
+
+    /// The target's greedy token given the chain hash of its prefix.
+    #[inline]
+    pub fn target_token_at(&self, prefix_hash: u64) -> u32 {
+        let mut h = prefix_hash ^ 0x9e37;
         (splitmix64(&mut h) % self.vocab as u64) as u32
     }
 
-    /// The drafter's greedy token after `prefix`: agrees with the target
-    /// with probability `acceptance_rate`, i.i.d. per prefix.
-    pub fn drafter_token(&self, prefix: &[u32]) -> u32 {
-        let t = self.target_token(prefix);
-        let mut h = self.prefix_hash(prefix) ^ 0x51ed_270b;
+    /// The drafter's token given the chain hash of its prefix: agrees with
+    /// the target with probability `acceptance_rate`, i.i.d. per prefix.
+    #[inline]
+    pub fn drafter_token_at(&self, prefix_hash: u64) -> u32 {
+        let t = self.target_token_at(prefix_hash);
+        let mut h = prefix_hash ^ 0x51ed_270b;
         let u = (splitmix64(&mut h) >> 11) as f64 / (1u64 << 53) as f64;
         if u < self.acceptance_rate {
             t
@@ -77,33 +91,93 @@ impl Oracle {
             (t + 1) % self.vocab
         }
     }
+
+    /// The target model's greedy token after `prefix`.
+    pub fn target_token(&self, prefix: &[u32]) -> u32 {
+        self.target_token_at(self.prefix_hash(prefix))
+    }
+
+    /// The drafter's greedy token after `prefix`.
+    pub fn drafter_token(&self, prefix: &[u32]) -> u32 {
+        self.drafter_token_at(self.prefix_hash(prefix))
+    }
 }
 
-/// A wait-mode server: real thread, fake compute.
+/// A wait-mode server: real thread, fake compute — with real incremental
+/// prefix state. The KV-cache analog here is the oracle's rolling hash
+/// chain: `hashes[i]` is the chain value for `tokens[..i]`, so a call
+/// whose context extends the cached prefix hashes only the new tokens
+/// (O(1) per new token) instead of rehashing O(L) per predicted position.
 pub struct WaitServer {
     role: ServerRole,
     profile: LatencyProfile,
     oracle: Arc<Oracle>,
     forwards: usize,
     max_context: usize,
+    /// Tokens the chain currently covers.
+    tokens: Vec<u32>,
+    /// `hashes[i]` = chain hash of `tokens[..i]`; always `tokens.len()+1`
+    /// entries.
+    hashes: Vec<u64>,
+    /// Storage-identity witness of the validated prefix, so a context
+    /// that structurally extends it (the drafter's steady state) skips
+    /// the O(L) token re-comparison entirely.
+    witness: PrefixWitness,
+}
+
+impl WaitServer {
+    /// Resynchronize the chain to `ctx` and extend it to cover
+    /// `ctx[..upto]`. The cache is cut only at a true divergence: a
+    /// shorter task (e.g. the chain fallback, a truncated view of the
+    /// same stream) must not evict state a longer block task just built.
+    fn resync(&mut self, ctx: &TokenRope, upto: usize) {
+        // Tokens the witness proves identical by storage identity, then a
+        // token compare over the (small) residue only.
+        let trusted = self.witness.trusted_prefix(ctx).min(self.tokens.len());
+        let matched = trusted + ctx.common_prefix_from(trusted, &self.tokens[trusted..]);
+        if matched < self.tokens.len() && matched < ctx.len() {
+            // Real divergence: drop the dead branch.
+            self.tokens.truncate(matched);
+            self.hashes.truncate(matched + 1);
+        }
+        if upto > self.tokens.len() {
+            let mut h = *self.hashes.last().unwrap();
+            for tok in ctx.iter_range(self.tokens.len(), upto) {
+                h = self.oracle.hash_step(h, tok);
+                self.tokens.push(tok);
+                self.hashes.push(h);
+            }
+        }
+        self.witness.record(ctx, self.tokens.len().min(ctx.len()));
+    }
 }
 
 impl LmServer for WaitServer {
-    fn predictions(&mut self, ctx: &[u32], from: usize, to: usize) -> Vec<u32> {
+    fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
         assert!(from >= 1 && to > from && ctx.len() >= to - 1, "bad range {from}..{to}");
         // One verification task == one (batched) forward == one wait.
         precise_wait(self.profile.forward_ms(self.forwards));
         self.forwards += 1;
+        self.resync(ctx, to - 1);
         (from..to)
             .map(|p| match self.role {
-                ServerRole::Target => self.oracle.target_token(&ctx[..p]),
-                ServerRole::Drafter => self.oracle.drafter_token(&ctx[..p]),
+                ServerRole::Target => self.oracle.target_token_at(self.hashes[p]),
+                ServerRole::Drafter => self.oracle.drafter_token_at(self.hashes[p]),
             })
             .collect()
     }
 
     fn max_context(&self) -> usize {
         self.max_context
+    }
+
+    fn advance(&mut self, ctx: &TokenRope) {
+        // Free in wait mode: hashing is bookkeeping, not a forward.
+        self.resync(ctx, ctx.len());
+    }
+
+    fn cached_len(&self) -> usize {
+        self.tokens.len()
     }
 }
 
@@ -132,6 +206,9 @@ impl WaitEngine {
                 oracle: oracle.clone(),
                 forwards: 0,
                 max_context: this.max_context,
+                tokens: Vec::new(),
+                hashes: vec![oracle.hash_init()],
+                witness: PrefixWitness::default(),
             })
         })
     }
@@ -191,7 +268,7 @@ mod tests {
         };
         let f = eng.factory();
         let mut s = f(ServerRole::Target, 0);
-        let ctx = vec![1u32, 2, 3, 4, 5];
+        let ctx = TokenRope::from_slice(&[1u32, 2, 3, 4, 5]);
         let t0 = Instant::now();
         let preds = s.predictions(&ctx, 2, 6);
         let first = t0.elapsed().as_secs_f64() * 1e3;
@@ -204,6 +281,48 @@ mod tests {
         // oracle at p=1: drafter == target predictions
         let mut d = f(ServerRole::Drafter, 0);
         assert_eq!(d.predictions(&ctx, 2, 6), preds);
+    }
+
+    /// The rolling chain must be invisible to callers: predictions after
+    /// arbitrary divergence/resync equal fresh-server predictions, and a
+    /// call extending the cached prefix hashes only the new tokens.
+    #[test]
+    fn incremental_state_matches_fresh_server() {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(0.0),
+            drafter: LatencyProfile::uniform(0.0),
+            oracle: oracle(0.6),
+            max_context: 4096,
+        };
+        let f = eng.factory();
+        let mut warm = f(ServerRole::Target, 0);
+        let a = TokenRope::from_slice(&[1, 2, 3, 4, 5, 6, 7]);
+        let b = TokenRope::from_slice(&[1, 2, 3, 9, 9, 9, 9]);
+        let first = warm.predictions(&a, 3, 8);
+        assert_eq!(warm.cached_len(), 7);
+        let _ = warm.predictions(&b, 4, 8); // diverge at index 3
+        let again = warm.predictions(&a, 3, 8); // resync back
+        assert_eq!(first, again, "stateful resync diverged from stateless result");
+
+        let mut fresh = f(ServerRole::Target, 0);
+        assert_eq!(fresh.predictions(&a, 3, 8), first);
+    }
+
+    #[test]
+    fn advance_warms_the_chain_without_forwards() {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(0.0),
+            drafter: LatencyProfile::uniform(0.0),
+            oracle: oracle(0.5),
+            max_context: 4096,
+        };
+        let f = eng.factory();
+        let mut s = f(ServerRole::Drafter, 0);
+        let ctx = TokenRope::from_slice(&(0..64).collect::<Vec<u32>>());
+        s.advance(&ctx);
+        assert_eq!(s.cached_len(), 64);
+        let mut fresh = f(ServerRole::Drafter, 0);
+        assert_eq!(s.predictions(&ctx, 64, 65), fresh.predictions(&ctx, 64, 65));
     }
 
     #[test]

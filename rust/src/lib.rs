@@ -8,6 +8,11 @@
 //!
 //! - [`config`] — experiment configuration, paper presets (Tables 2/3), TOML
 //!   config files for the launcher.
+//! - [`context`] — the zero-copy speculation context ([`context::TokenRope`]):
+//!   an `Arc`-shared settled prefix plus small draft-block deltas, the
+//!   currency every verification task, drafter restart, and chain fallback
+//!   hands around in O(k) instead of O(L); carries the process-wide
+//!   copied-bytes counters the hot-path bench and regression tests read.
 //! - [`simulator`] — the discrete-event ("offline", §4.1) simulator of
 //!   non-SI / SI / DSI / PEARL; regenerates the Figure 2 & 7 heatmaps,
 //!   Table 1, and the analytical ablations.
@@ -46,6 +51,7 @@
 //! binary needs.
 
 pub mod config;
+pub mod context;
 pub mod coordinator;
 pub mod report;
 pub mod runtime;
@@ -56,6 +62,7 @@ pub mod util;
 pub mod workload;
 
 pub use config::{AlgoKind, ExperimentConfig, LatencyProfile, PairPreset};
+pub use context::TokenRope;
 pub use coordinator::{DsiSession, TargetPool};
 pub use server::Server;
 pub use simulator::{simulate, SimOutcome};

@@ -348,6 +348,7 @@ fn cmd_generate(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult 
 }
 
 fn cmd_calibrate(artifacts: &Path) -> CmdResult {
+    use dsi::context::TokenRope;
     use dsi::coordinator::{real_engine::RealServer, LmServer, ServerRole};
     use std::time::Instant;
 
@@ -356,7 +357,7 @@ fn cmd_calibrate(artifacts: &Path) -> CmdResult {
     for role in [ServerRole::Target, ServerRole::Drafter] {
         let mut s = RealServer::load(artifacts, role)?;
         // TTFT: fresh prefill of a 16-token prompt.
-        let prompt: Vec<u32> = (1..=16).collect();
+        let prompt = TokenRope::from_slice(&(1..=16).collect::<Vec<u32>>());
         let t0 = Instant::now();
         let _ = s.predictions(&prompt, 16, 17);
         let ttft = t0.elapsed().as_secs_f64() * 1e3;
@@ -385,7 +386,7 @@ fn cmd_calibrate(artifacts: &Path) -> CmdResult {
     let mut gen = PromptGen::new(3, 256);
     for _ in 0..8 {
         let prompt = gen.prompt(PromptProfile::Instruction);
-        let mut ctx = prompt.clone();
+        let mut ctx = TokenRope::from_slice(&prompt);
         let mut run = 0usize;
         for _ in 0..48 {
             let t = target.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];

@@ -180,6 +180,16 @@ impl ModelRuntime {
         sess.tokens.truncate(len);
     }
 
+    /// Resynchronize `sess` to `ctx`: roll back to the longest shared
+    /// prefix and return its length — the KV-reuse primitive. The caller
+    /// then decodes only `ctx[resume..]`; settled ground is never
+    /// re-processed (or re-copied: `ctx` is a shared rope).
+    pub fn resync(&self, sess: &mut Session, ctx: &crate::context::TokenRope) -> usize {
+        let resume = ctx.common_prefix_with(&sess.tokens);
+        self.rollback(sess, resume);
+        resume
+    }
+
     /// Platform info string (for logs).
     pub fn platform(&self) -> String {
         format!(

@@ -61,6 +61,12 @@ impl ModelRuntime {
         match self.unconstructible {}
     }
 
+    /// Same surface as the real runtime's KV-reuse primitive: roll back to
+    /// the longest prefix shared with `ctx`, return the resume length.
+    pub fn resync(&self, _sess: &mut Session, _ctx: &crate::context::TokenRope) -> usize {
+        match self.unconstructible {}
+    }
+
     pub fn platform(&self) -> String {
         match self.unconstructible {}
     }

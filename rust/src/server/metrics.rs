@@ -8,6 +8,7 @@
 //! concurrent sessions; the per-request sum is still tracked separately as
 //! `busy_ms` because `busy / span` is the node's effective parallelism.
 
+use crate::coordinator::pool::PoolStats;
 use crate::stats::{percentile, OnlineStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -29,6 +30,8 @@ pub struct Metrics {
     last_complete_ms: Option<f64>,
     /// Live concurrent-generation gauge, shared with the serving loop.
     active_gauge: Option<Arc<AtomicUsize>>,
+    /// Dispatch-path timing of the shared target pool, if one is serving.
+    pool_stats: Option<Arc<PoolStats>>,
 }
 
 /// A point-in-time summary.
@@ -49,6 +52,14 @@ pub struct Snapshot {
     pub span_ms: f64,
     /// Generations in flight at snapshot time.
     pub active_sessions: usize,
+    /// Verification tasks the shared pool's workers ran (0 without a pool).
+    pub pool_tasks: u64,
+    /// Mean submit→pop queue wait of pool tasks, µs. The serving-level
+    /// symptom of an oversubscribed SP budget.
+    pub pool_queue_wait_us_mean: f64,
+    /// Mean pop→forward dispatch overhead of pool tasks, µs. The
+    /// coordination tax per task — what the zero-copy hot path minimizes.
+    pub pool_dispatch_us_mean: f64,
 }
 
 impl Metrics {
@@ -60,6 +71,12 @@ impl Metrics {
     /// scheduling loop) so snapshots can report it.
     pub fn attach_active_gauge(&mut self, gauge: Arc<AtomicUsize>) {
         self.active_gauge = Some(gauge);
+    }
+
+    /// Share the target pool's dispatch-path counters so snapshots expose
+    /// queue wait and dispatch overhead.
+    pub fn attach_pool_stats(&mut self, stats: Arc<PoolStats>) {
+        self.pool_stats = Some(stats);
     }
 
     /// Record that a request was dispatched at `now_ms` on the server's
@@ -121,6 +138,15 @@ impl Metrics {
                 .active_gauge
                 .as_ref()
                 .map_or(0, |g| g.load(Ordering::Acquire)),
+            pool_tasks: self.pool_stats.as_ref().map_or(0, |s| s.tasks()),
+            pool_queue_wait_us_mean: self
+                .pool_stats
+                .as_ref()
+                .map_or(0.0, |s| s.queue_wait_us_mean()),
+            pool_dispatch_us_mean: self
+                .pool_stats
+                .as_ref()
+                .map_or(0.0, |s| s.dispatch_us_mean()),
         }
     }
 }
@@ -131,7 +157,7 @@ impl Snapshot {
         format!(
             "requests={} tokens={} active={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
              e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | \
-             {:.1} tok/s over {:.0}ms",
+             {:.1} tok/s over {:.0}ms | pool tasks={} wait={:.0}µs dispatch={:.1}µs",
             self.requests,
             self.tokens,
             self.active_sessions,
@@ -144,6 +170,9 @@ impl Snapshot {
             self.queue_mean_ms,
             self.tokens_per_s,
             self.span_ms,
+            self.pool_tasks,
+            self.pool_queue_wait_us_mean,
+            self.pool_dispatch_us_mean,
         )
     }
 }
@@ -200,6 +229,25 @@ mod tests {
         let s = m.snapshot();
         assert!((s.span_ms - 100.0).abs() < 1e-9);
         assert!((s.tokens_per_s - 40.0 / 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pool_gauges_are_reported() {
+        let mut m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.pool_tasks, 0);
+        assert_eq!(s.pool_queue_wait_us_mean, 0.0);
+        assert_eq!(s.pool_dispatch_us_mean, 0.0);
+
+        let stats = Arc::new(PoolStats::default());
+        m.attach_pool_stats(stats.clone());
+        stats.record(10_000, 2_000); // 10µs wait, 2µs dispatch
+        stats.record(30_000, 4_000);
+        let s = m.snapshot();
+        assert_eq!(s.pool_tasks, 2);
+        assert!((s.pool_queue_wait_us_mean - 20.0).abs() < 1e-9);
+        assert!((s.pool_dispatch_us_mean - 3.0).abs() < 1e-9);
+        assert!(s.render().contains("pool tasks=2"));
     }
 
     #[test]

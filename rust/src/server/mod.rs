@@ -178,7 +178,11 @@ impl Server {
             return Vec::new();
         }
         if self.algo == AlgoKind::Dsi && self.pool.is_none() {
-            self.pool = Some(Arc::new(TargetPool::new(&self.factory, self.pool_size)));
+            let pool = Arc::new(TargetPool::new(&self.factory, self.pool_size));
+            // Surface the pool's queue-wait / dispatch-overhead counters
+            // in metrics snapshots.
+            self.metrics.lock().unwrap().attach_pool_stats(pool.stats());
+            self.pool = Some(pool);
         }
         let n_workers = self.max_sessions.min(requests.len());
 
@@ -343,6 +347,11 @@ mod tests {
         assert_eq!(snap.tokens, 48);
         assert!(snap.tokens_per_s > 0.0);
         assert_eq!(snap.active_sessions, 0);
+        // DSI serving runs through the shared pool: the dispatch-path
+        // gauges must be live.
+        assert!(snap.pool_tasks > 0, "pool task gauge not wired");
+        assert!(snap.pool_queue_wait_us_mean >= 0.0);
+        assert!(snap.pool_dispatch_us_mean >= 0.0);
         assert!(!srv.acceptance_estimate().is_nan());
     }
 

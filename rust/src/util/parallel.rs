@@ -1,11 +1,21 @@
 //! Order-preserving scoped-thread parallel map (rayon stand-in).
 //!
 //! Work-stealing via a shared atomic cursor: each worker claims the next
-//! unprocessed index. Results land in a pre-sized slot vector, so output
-//! order matches input order regardless of scheduling.
+//! unprocessed index. Results land in a pre-sized slot vector written
+//! lock-free — the cursor hands out each index exactly once, so slot
+//! writes are disjoint by construction and need no per-slot `Mutex`
+//! (which used to cost one lock acquisition per item on the map's hot
+//! path); the scope join publishes them to the collecting thread.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+/// Shared base pointer into the slot vector. Safety contract: each index
+/// is written by at most one worker (the atomic cursor dispenses indices
+/// uniquely), the vector is never resized while workers run, and the
+/// owner only reads after the scope joins every worker.
+struct SlotPtr<R>(*mut Option<R>);
+
+unsafe impl<R: Send> Sync for SlotPtr<R> {}
 
 /// Map `f` over `items` on up to `threads` OS threads (0 = #cpus).
 pub fn par_map_threads<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
@@ -30,10 +40,12 @@ where
     }
 
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let mut slots: Vec<Option<R>> = Vec::new();
+    slots.resize_with(n, || None);
+    let base = SlotPtr(slots.as_mut_ptr());
     let items_ref = &items;
     let f_ref = &f;
-    let slots_ref = &slots;
+    let base_ref = &base;
     let cursor_ref = &cursor;
 
     std::thread::scope(|scope| {
@@ -44,14 +56,20 @@ where
                     break;
                 }
                 let r = f_ref(&items_ref[i]);
-                *slots_ref[i].lock().unwrap() = Some(r);
+                // SAFETY: i < n is in bounds, and `i` came from the shared
+                // cursor, so no other thread writes this slot. The slot
+                // holds None (a trivially droppable value) until this one
+                // assignment.
+                unsafe {
+                    *base_ref.0.add(i) = Some(r);
+                }
             });
         }
     });
 
     slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker missed a slot"))
+        .map(|s| s.expect("worker missed a slot"))
         .collect()
 }
 

@@ -98,7 +98,7 @@ fn real_acceptance_rate_in_expected_band() {
     use dsi::coordinator::{LmServer, RealServer, ServerRole};
     let mut target = RealServer::load(&dir, ServerRole::Target).unwrap();
     let mut drafter = RealServer::load(&dir, ServerRole::Drafter).unwrap();
-    let mut ctx: Vec<u32> = vec![10, 20, 30, 40];
+    let mut ctx = dsi::context::TokenRope::from_slice(&[10, 20, 30, 40]);
     let mut agree = 0usize;
     let n = 40usize;
     for _ in 0..n {
