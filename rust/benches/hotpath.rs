@@ -9,7 +9,13 @@
 //! - **context bytes copied per settled token** (the tentpole metric:
 //!   rope bookkeeping actually copied vs. what eager full-context clones
 //!   would have copied at the same hand-off sites),
-//! - **submit→dispatch µs** (pool queue wait + dispatch overhead).
+//! - **submit→dispatch µs** (pool queue wait + dispatch overhead),
+//! - **KV tokens reused vs re-decoded** (the block-store metric: context
+//!   positions pool forwards served from incremental/restored state),
+//! - **affinity hit rate** — with a dedicated 2-session A/B probe
+//!   (affinity scheduling vs the FIFO control) asserting that workers
+//!   lock onto sessions (hit rate > 0.5) without giving up pool
+//!   throughput.
 //!
 //! Results land in `BENCH_hotpath.json` (override the path with
 //! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
@@ -21,6 +27,7 @@
 use dsi::config::{AlgoKind, LatencyProfile};
 use dsi::context;
 use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{DsiSession, OnlineConfig, SchedPolicy, TargetPool};
 use dsi::server::router::Router;
 use dsi::server::Server;
 use dsi::util::benchkit::suite;
@@ -28,6 +35,46 @@ use dsi::util::json::{num, obj, Json};
 use dsi::util::Rng64;
 use dsi::workload::Request;
 use std::time::Instant;
+
+/// Two sessions generating concurrently on a 2-worker pool under the
+/// given scheduling policy; returns (affinity hit rate, dispatched tasks
+/// per second).
+fn affinity_probe(policy: SchedPolicy, smoke: bool) -> (f64, f64) {
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.4),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.85, seed: 97 },
+        max_context: 8192,
+    };
+    let pool = TargetPool::new_with_policy(&eng.factory(), 2, policy);
+    let stats = pool.stats();
+    // Even the smoke probe keeps enough tasks (hundreds of pops) that the
+    // hit-rate gate is a structural property, not a sample-size accident.
+    let requests: u32 = if smoke { 2 } else { 4 };
+    let n_tokens: usize = if smoke { 32 } else { 48 };
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for sid in 0..2u32 {
+            let pool = &pool;
+            let factory = eng.factory();
+            s.spawn(move || {
+                let mut session = DsiSession::new(pool, &factory);
+                for r in 0..requests {
+                    let cfg = OnlineConfig {
+                        prompt: vec![sid + 1, 40 + sid, 90 + r],
+                        n_tokens,
+                        lookahead: 2,
+                        sp_degree: 2,
+                        max_speculation_depth: 64,
+                    };
+                    let _ = session.generate(&cfg);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    (stats.affinity_hit_rate(), stats.tasks() as f64 / elapsed)
+}
 
 fn main() {
     suite("hotpath");
@@ -95,6 +142,17 @@ fn main() {
     println!("  pool queue wait (mean)  {:>10.1} µs", snap.pool_queue_wait_us_mean);
     println!("  pool dispatch (mean)    {:>10.1} µs", snap.pool_dispatch_us_mean);
     println!("  pool tasks              {:>10}", snap.pool_tasks);
+    println!("  kv tokens reused        {:>10}", snap.kv_tokens_reused);
+    println!("  kv tokens redecoded     {:>10}", snap.kv_tokens_redecoded);
+    println!("  affinity hit rate       {:>10.2}", snap.pool_affinity_hit_rate);
+
+    // The 2-session scheduling probe: affinity must lock workers onto
+    // sessions (hit rate > 0.5) without costing pool task throughput
+    // relative to the FIFO control.
+    let (aff_hit, aff_tps) = affinity_probe(SchedPolicy::Affinity, smoke);
+    let (fifo_hit, fifo_tps) = affinity_probe(SchedPolicy::Fifo, smoke);
+    println!("\n  2-session probe: affinity hit {aff_hit:.2} ({aff_tps:.0} tasks/s) \
+         vs fifo hit {fifo_hit:.2} ({fifo_tps:.0} tasks/s)");
 
     let out = obj(vec![
         ("bench", Json::Str("hotpath".into())),
@@ -121,16 +179,41 @@ fn main() {
         ("pool_queue_wait_us_mean", num(snap.pool_queue_wait_us_mean)),
         ("pool_dispatch_us_mean", num(snap.pool_dispatch_us_mean)),
         ("pool_tasks", num(snap.pool_tasks as f64)),
+        ("kv_tokens_reused", num(snap.kv_tokens_reused as f64)),
+        ("kv_tokens_redecoded", num(snap.kv_tokens_redecoded as f64)),
+        ("affinity_hit_rate", num(snap.pool_affinity_hit_rate)),
+        (
+            "affinity_probe_2_sessions",
+            obj(vec![
+                ("hit_rate", num(aff_hit)),
+                ("tasks_per_s", num(aff_tps)),
+                ("hit_rate_fifo_control", num(fifo_hit)),
+                ("tasks_per_s_fifo_control", num(fifo_tps)),
+            ]),
+        ),
     ]);
     let path = std::env::var("BENCH_HOTPATH_OUT")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     std::fs::write(&path, out.to_string()).expect("writing bench json");
     println!("\nwrote {path}");
 
-    // The acceptance gate, enforced here so CI's smoke run fails loudly
-    // if the hot path regresses to eager copying.
+    // The acceptance gates, enforced here so CI's smoke run fails loudly
+    // if the hot path regresses to eager copying or the scheduler stops
+    // keeping workers on their warm sessions.
     assert!(
         reduction >= 2.0,
         "copy reduction {reduction:.1}x below the 2x acceptance bar"
+    );
+    assert!(
+        aff_hit > 0.5,
+        "2-session affinity hit rate {aff_hit:.2} not above 0.5"
+    );
+    // Generous margin: the two probes are separately timed wall-clock
+    // runs on a possibly noisy shared runner, so this gate only catches a
+    // real collapse (affinity serializing the pool), not scheduling
+    // jitter.
+    assert!(
+        aff_tps >= fifo_tps * 0.6,
+        "affinity collapsed pool throughput: {aff_tps:.0} vs fifo {fifo_tps:.0} tasks/s"
     );
 }

@@ -117,8 +117,13 @@ impl DsiSession {
             let frontier = frontier.clone();
             let depth = depth.clone();
             let calls = drafter_calls_ctr.clone();
+            // The drafter's factory id is the pool-unique session id —
+            // concurrent sessions must never hand their factories the
+            // same (Drafter, id) pair, or id-seeded engines would alias
+            // their streams.
+            let drafter_id = handle.session_id() as usize;
             std::thread::spawn(move || {
-                let mut server = factory(ServerRole::Drafter, 0);
+                let mut server = factory(ServerRole::Drafter, drafter_id);
                 let horizon = server.max_context();
                 let mut gen = 0u64;
                 let mut ctx = TokenRope::new();

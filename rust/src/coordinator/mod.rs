@@ -31,7 +31,7 @@ pub mod wait_engine;
 
 pub use dsi::{run_dsi, DsiSession};
 pub use nonsi::{run_nonsi, run_nonsi_with};
-pub use pool::{PoolHandle, SessionMsg, TargetPool, VerifyResult};
+pub use pool::{PoolHandle, PoolStats, SchedPolicy, SessionMsg, TargetPool, VerifyResult};
 pub use real_engine::{real_factory, RealServer};
 pub use si::{run_si, run_si_with};
 pub use wait_engine::{WaitEngine, WaitServer};
@@ -39,6 +39,33 @@ pub use wait_engine::{WaitEngine, WaitServer};
 use crate::config::AlgoKind;
 use crate::context::TokenRope;
 use std::sync::Arc;
+
+/// Cumulative KV-reuse accounting for one server: per `predictions` call,
+/// every context position served straight from the server's incremental
+/// state (its KV cache / hash chain, including spans restored from the
+/// shared [`runtime::kv::BlockStore`](crate::runtime::kv::BlockStore))
+/// counts as *reused*; every position re-processed counts as *redecoded*.
+/// Pool workers difference these around each forward and feed
+/// [`pool::PoolStats`], so serving snapshots and the hot-path bench show
+/// how much settled ground the node avoids re-decoding.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvReuse {
+    pub tokens_reused: u64,
+    pub tokens_redecoded: u64,
+}
+
+impl std::ops::Sub for KvReuse {
+    type Output = KvReuse;
+    /// Delta between two cumulative readings (saturating, defensively).
+    fn sub(self, before: KvReuse) -> KvReuse {
+        KvReuse {
+            tokens_reused: self.tokens_reused.saturating_sub(before.tokens_reused),
+            tokens_redecoded: self
+                .tokens_redecoded
+                .saturating_sub(before.tokens_redecoded),
+        }
+    }
+}
 
 /// A model server owned by exactly one thread (target-pool worker, drafter
 /// thread, or an inline baseline loop).
@@ -65,8 +92,10 @@ pub trait LmServer {
     /// charging a forward pass: roll back past any divergence and ingest
     /// whatever prefix bookkeeping is free (the wait engine extends its
     /// hash chain; the real engine rolls its KV cache back to the shared
-    /// prefix and lets the next `predictions` decode only the suffix).
-    /// Stateless servers may ignore it.
+    /// prefix, restores any settled blocks the shared
+    /// [`BlockStore`](crate::runtime::kv::BlockStore) holds for the
+    /// continuation, and lets the next `predictions` decode only the
+    /// genuinely novel suffix). Stateless servers may ignore it.
     ///
     /// `predictions` already resyncs internally, so today's coordinators
     /// never need to call this; it is the hook for schedulers that want
@@ -79,6 +108,13 @@ pub trait LmServer {
     /// (0 for a stateless server). Introspection for tests and metrics.
     fn cached_len(&self) -> usize {
         0
+    }
+
+    /// Cumulative [`KvReuse`] counters over this server's lifetime
+    /// (always zero for a stateless server). Callers difference two
+    /// readings to attribute reuse to one call.
+    fn kv_reuse(&self) -> KvReuse {
+        KvReuse::default()
     }
 }
 

@@ -19,21 +19,54 @@
 //!   route cache validated by a registration epoch, so the steady-state
 //!   dispatch path locks no map and clones no `Sender`; a result for a
 //!   departed session is dropped on the floor.
+//! - **Session affinity**: the queue is per-session sub-queues. A worker
+//!   prefers the session it last served — its server's incremental KV
+//!   state (hash chain / cache blocks) is warm for exactly that stream —
+//!   and falls back to stealing the oldest-waiting other-session task
+//!   whenever its session has nothing queued, so SP utilization is
+//!   unchanged (no worker idles while any task waits). A streak bound
+//!   forces a steal after [`AFFINITY_STREAK_MAX`] consecutive same-session
+//!   tasks while others wait, so a chatty session cannot starve its
+//!   neighbors. [`SchedPolicy::Fifo`] (oldest-head across all sessions)
+//!   remains available as the A/B control the bench compares against.
 //! - **Timing**: each task's submit→pop queue wait and pop→forward
-//!   dispatch overhead accumulate in [`PoolStats`], surfaced through
-//!   `server::metrics::Snapshot` and the hot-path bench.
+//!   dispatch overhead accumulate in [`PoolStats`] — including tasks that
+//!   were popped but *skipped* (staled or departed), which are counted
+//!   under `skipped_stale`/`skipped_departed` with their queue wait folded
+//!   into the mean, so the wait gauge has no survivor bias. Affinity
+//!   hits/misses and KV tokens reused vs re-decoded (differenced from
+//!   each server's [`LmServer::kv_reuse`] around the forward) land here
+//!   too, surfaced through `server::metrics::Snapshot` and the hot-path
+//!   bench.
 //!
 //! Sessions interact with the pool through a [`PoolHandle`] obtained from
 //! [`TargetPool::register`]; dropping the handle unregisters the session
 //! and purges its queued tasks.
 
-use super::{LmServer, ServerFactory, ServerRole};
+use super::{KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// Consecutive same-session tasks a worker serves before it must steal
+/// an oldest-waiting other-session task (if one exists). Bounds the
+/// neighbor wait a warm session can impose to `AFFINITY_STREAK_MAX`
+/// forwards per competing worker.
+pub const AFFINITY_STREAK_MAX: usize = 8;
+
+/// Worker scheduling policy for the shared queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Prefer the last-served session; steal the oldest other-session
+    /// head when idle or past the streak bound (the default).
+    Affinity,
+    /// Strict oldest-first across all sessions (the pre-affinity
+    /// behavior; kept as the bench's A/B control).
+    Fifo,
+}
 
 /// A completed verification task, routed back to its owning session.
 #[derive(Debug, Clone)]
@@ -64,17 +97,50 @@ pub enum SessionMsg {
 }
 
 /// A queued verification task.
-enum PoolTask {
-    Verify {
-        session: u64,
-        gen: u64,
-        ctx: TokenRope,
-        from: usize,
-        to: usize,
-        /// Submit timestamp, for the queue-wait gauge.
-        submitted: Instant,
-    },
+struct VerifyTask {
+    session: u64,
+    gen: u64,
+    ctx: TokenRope,
+    from: usize,
+    to: usize,
+    /// Submit timestamp, for the queue-wait gauge.
+    submitted: Instant,
+}
+
+/// What a worker's pop yields.
+enum Popped {
+    Task(VerifyTask),
     Shutdown,
+}
+
+/// The shared queue: per-session sub-queues (FIFO within a session —
+/// cross-session order is a scheduling decision, not a guarantee) plus a
+/// pending-shutdown count.
+#[derive(Default)]
+struct Queues {
+    subs: HashMap<u64, VecDeque<VerifyTask>>,
+    shutdown: usize,
+}
+
+impl Queues {
+    /// Session whose head task has waited longest, excluding `skip`.
+    fn oldest_head(&self, skip: Option<u64>) -> Option<u64> {
+        self.subs
+            .iter()
+            .filter(|(sid, q)| Some(**sid) != skip && !q.is_empty())
+            .min_by_key(|(_, q)| q.front().map(|t| t.submitted).expect("non-empty"))
+            .map(|(sid, _)| *sid)
+    }
+
+    /// Pop the head task of `sid`'s sub-queue (which must be non-empty).
+    fn pop_from(&mut self, sid: u64) -> VerifyTask {
+        let q = self.subs.get_mut(&sid).expect("picked session has a sub-queue");
+        let t = q.pop_front().expect("picked sub-queue is non-empty");
+        if q.is_empty() {
+            self.subs.remove(&sid);
+        }
+        t
+    }
 }
 
 /// Per-session routing entry.
@@ -86,16 +152,35 @@ struct Route {
     tx: Sender<SessionMsg>,
 }
 
-/// Dispatch-path timing, accumulated lock-free by the workers. Shared
+/// Dispatch-path counters, accumulated lock-free by the workers. Shared
 /// with `server::metrics` so serving snapshots expose the pool's health.
 #[derive(Debug, Default)]
 pub struct PoolStats {
     /// Tasks dispatched to a worker forward (excludes staled/skipped).
     tasks: AtomicU64,
-    /// Summed submit→pop queue wait, ns.
+    /// Summed submit→pop queue wait of *dispatched* tasks, ns.
     queue_wait_ns: AtomicU64,
     /// Summed pop→forward dispatch overhead (routing, staleness check), ns.
     dispatch_ns: AtomicU64,
+    /// Tasks popped but skipped because a rejection staled their
+    /// generation while they queued.
+    skipped_stale: AtomicU64,
+    /// Tasks popped but skipped because their session had departed.
+    skipped_departed: AtomicU64,
+    /// Summed submit→pop queue wait of skipped tasks, ns — folded into
+    /// [`queue_wait_us_mean`](Self::queue_wait_us_mean) so the gauge has
+    /// no survivor bias (skipped tasks are exactly the ones that waited
+    /// through a rejection).
+    skipped_wait_ns: AtomicU64,
+    /// Pops whose task belonged to the worker's previously-served session.
+    affinity_hits: AtomicU64,
+    /// Pops that switched the worker to a different session.
+    affinity_misses: AtomicU64,
+    /// Context positions served from incremental KV state across all
+    /// dispatched forwards (differenced from [`LmServer::kv_reuse`]).
+    kv_tokens_reused: AtomicU64,
+    /// Context positions re-decoded across all dispatched forwards.
+    kv_tokens_redecoded: AtomicU64,
 }
 
 impl PoolStats {
@@ -106,18 +191,79 @@ impl PoolStats {
         self.dispatch_ns.fetch_add(dispatch_ns, Ordering::Relaxed);
     }
 
+    /// Record one popped-but-skipped task and its queue wait.
+    pub fn record_skipped(&self, departed: bool, queue_wait_ns: u64) {
+        if departed {
+            self.skipped_departed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.skipped_stale.fetch_add(1, Ordering::Relaxed);
+        }
+        self.skipped_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+    }
+
+    /// Record whether a pop stayed on the worker's previous session.
+    pub fn record_affinity(&self, hit: bool) {
+        if hit {
+            self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.affinity_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulate one forward's KV-reuse delta.
+    pub fn record_kv(&self, delta: KvReuse) {
+        self.kv_tokens_reused
+            .fetch_add(delta.tokens_reused, Ordering::Relaxed);
+        self.kv_tokens_redecoded
+            .fetch_add(delta.tokens_redecoded, Ordering::Relaxed);
+    }
+
     /// Tasks that reached a worker forward.
     pub fn tasks(&self) -> u64 {
         self.tasks.load(Ordering::Relaxed)
     }
 
-    /// Mean submit→pop queue wait, µs (0 when no tasks ran).
+    /// Tasks skipped as staled-while-queued.
+    pub fn skipped_stale(&self) -> u64 {
+        self.skipped_stale.load(Ordering::Relaxed)
+    }
+
+    /// Tasks skipped because their session departed.
+    pub fn skipped_departed(&self) -> u64 {
+        self.skipped_departed.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of pops that stayed on the worker's previous session
+    /// (0 when nothing was popped).
+    pub fn affinity_hit_rate(&self) -> f64 {
+        let h = self.affinity_hits.load(Ordering::Relaxed);
+        let m = self.affinity_misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            return 0.0;
+        }
+        h as f64 / (h + m) as f64
+    }
+
+    /// Context positions served from incremental KV state.
+    pub fn kv_tokens_reused(&self) -> u64 {
+        self.kv_tokens_reused.load(Ordering::Relaxed)
+    }
+
+    /// Context positions re-decoded on the workers.
+    pub fn kv_tokens_redecoded(&self) -> u64 {
+        self.kv_tokens_redecoded.load(Ordering::Relaxed)
+    }
+
+    /// Mean submit→pop queue wait over every popped task — dispatched
+    /// *and* skipped — µs (0 when nothing was popped).
     pub fn queue_wait_us_mean(&self) -> f64 {
-        let n = self.tasks();
+        let n = self.tasks() + self.skipped_stale() + self.skipped_departed();
         if n == 0 {
             return 0.0;
         }
-        self.queue_wait_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+        let ns = self.queue_wait_ns.load(Ordering::Relaxed)
+            + self.skipped_wait_ns.load(Ordering::Relaxed);
+        ns as f64 / n as f64 / 1e3
     }
 
     /// Mean pop→forward dispatch overhead, µs (0 when no tasks ran).
@@ -132,8 +278,9 @@ impl PoolStats {
 
 /// State shared between the pool owner, its workers, and session handles.
 struct PoolShared {
-    queue: Mutex<VecDeque<PoolTask>>,
+    queue: Mutex<Queues>,
     cv: Condvar,
+    policy: SchedPolicy,
     routes: Mutex<HashMap<u64, Route>>,
     /// Bumped on every register/unregister; workers revalidate their local
     /// route cache against it, so a departed session is still skipped
@@ -145,16 +292,42 @@ struct PoolShared {
 }
 
 impl PoolShared {
-    fn push(&self, t: PoolTask) {
-        self.queue.lock().unwrap().push_back(t);
+    fn push(&self, t: VerifyTask) {
+        let mut q = self.queue.lock().unwrap();
+        q.subs.entry(t.session).or_default().push_back(t);
+        drop(q);
         self.cv.notify_one();
     }
 
-    fn pop(&self) -> PoolTask {
+    fn push_shutdown(&self) {
+        self.queue.lock().unwrap().shutdown += 1;
+        self.cv.notify_one();
+    }
+
+    /// Pop the next task for a worker whose last-served session is
+    /// `preferred`. Under [`SchedPolicy::Affinity`] the worker stays on
+    /// its warm session when it has work — unless `force_steal` (streak
+    /// bound hit), in which case an oldest-waiting other-session task is
+    /// taken if any exists; with no own work it steals the oldest head.
+    /// Under [`SchedPolicy::Fifo`] it always takes the oldest head.
+    fn pop(&self, preferred: Option<u64>, force_steal: bool) -> Popped {
         let mut q = self.queue.lock().unwrap();
         loop {
-            if let Some(t) = q.pop_front() {
-                return t;
+            let own = preferred.filter(|s| q.subs.contains_key(s));
+            let pick = match self.policy {
+                SchedPolicy::Fifo => q.oldest_head(None),
+                SchedPolicy::Affinity if force_steal => q.oldest_head(preferred).or(own),
+                SchedPolicy::Affinity => own.or_else(|| q.oldest_head(None)),
+            };
+            if let Some(sid) = pick {
+                return Popped::Task(q.pop_from(sid));
+            }
+            // Shutdown only once every queued task is drained: a handle
+            // that submitted before the pool dropped still gets its
+            // result (or its recorded skip), never a silent abandonment.
+            if q.shutdown > 0 {
+                q.shutdown -= 1;
+                return Popped::Shutdown;
             }
             q = self.cv.wait(q).unwrap();
         }
@@ -164,10 +337,12 @@ impl PoolShared {
     /// per session — other sessions' tasks are untouched).
     fn purge_stale(&self, session: u64, gen: u64) {
         let mut q = self.queue.lock().unwrap();
-        q.retain(|t| match t {
-            PoolTask::Verify { session: s, gen: g, .. } => *s != session || *g >= gen,
-            PoolTask::Shutdown => true,
-        });
+        if let Some(sub) = q.subs.get_mut(&session) {
+            sub.retain(|t| t.gen >= gen);
+            if sub.is_empty() {
+                q.subs.remove(&session);
+            }
+        }
     }
 
     /// Drop every queued task of `session`, regardless of generation —
@@ -175,11 +350,7 @@ impl PoolShared {
     /// equivalent: its `>=` keep-rule would leave a task tagged exactly
     /// `u64::MAX` behind.)
     fn purge_all(&self, session: u64) {
-        let mut q = self.queue.lock().unwrap();
-        q.retain(|t| match t {
-            PoolTask::Verify { session: s, .. } => *s != session,
-            PoolTask::Shutdown => true,
-        });
+        self.queue.lock().unwrap().subs.remove(&session);
     }
 
     #[cfg(test)]
@@ -187,9 +358,9 @@ impl PoolShared {
         self.queue
             .lock()
             .unwrap()
-            .iter()
-            .filter(|t| matches!(t, PoolTask::Verify { session: s, .. } if *s == session))
-            .count()
+            .subs
+            .get(&session)
+            .map_or(0, VecDeque::len)
     }
 }
 
@@ -213,7 +384,7 @@ impl PoolHandle {
     pub fn submit(&self, gen: u64, ctx: TokenRope, from: usize, to: usize) {
         // Account what an eager-clone design would have copied here.
         crate::context::note_full_clone(ctx.len());
-        self.shared.push(PoolTask::Verify {
+        self.shared.push(VerifyTask {
             session: self.session,
             gen,
             ctx,
@@ -251,14 +422,20 @@ pub struct TargetPool {
 }
 
 impl TargetPool {
+    /// Spawn `size` workers with the default affinity scheduling policy.
+    pub fn new(factory: &ServerFactory, size: usize) -> Self {
+        Self::new_with_policy(factory, size, SchedPolicy::Affinity)
+    }
+
     /// Spawn `size` workers, each constructing its own target server from
     /// `factory` (servers are built inside their owning thread — the PJRT
-    /// client is not `Send`).
-    pub fn new(factory: &ServerFactory, size: usize) -> Self {
+    /// client is not `Send`), scheduling the shared queue under `policy`.
+    pub fn new_with_policy(factory: &ServerFactory, size: usize, policy: SchedPolicy) -> Self {
         assert!(size >= 1, "pool needs at least one worker");
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(Queues::default()),
             cv: Condvar::new(),
+            policy,
             routes: Mutex::new(HashMap::new()),
             route_epoch: AtomicU64::new(0),
             next_session: AtomicU64::new(1),
@@ -279,56 +456,77 @@ impl TargetPool {
                 let mut cache: HashMap<u64, (Arc<AtomicU64>, Sender<SessionMsg>)> =
                     HashMap::new();
                 let mut cache_epoch = u64::MAX;
+                // Affinity state: the session whose KV state this worker's
+                // server is warm for, and how many consecutive tasks of it
+                // were served (the anti-starvation streak).
+                let mut last_session: Option<u64> = None;
+                let mut streak = 0usize;
                 loop {
-                    match shared.pop() {
-                        PoolTask::Shutdown => break,
-                        PoolTask::Verify { session, gen, ctx, from, to, submitted } => {
-                            let popped = Instant::now();
-                            let epoch = shared.route_epoch.load(Ordering::Acquire);
-                            if epoch != cache_epoch {
-                                cache.clear();
-                                cache_epoch = epoch;
-                            }
-                            if !cache.contains_key(&session) {
-                                let routes = shared.routes.lock().unwrap();
-                                if let Some(r) = routes.get(&session) {
-                                    cache.insert(session, (r.gen.clone(), r.tx.clone()));
-                                }
-                            }
-                            // Route lookup doubles as the staleness check:
-                            // a departed session or an advanced generation
-                            // means the forward would be wasted. The send
-                            // goes through the cached Sender by reference —
-                            // no clone per task; eviction on a dead channel
-                            // is deferred past the borrow.
-                            let send_failed = {
-                                let Some((cur, tx)) = cache.get(&session) else {
-                                    continue;
-                                };
-                                if gen != cur.load(Ordering::Acquire) {
-                                    continue; // staled while queued (Alg. 1 line 8)
-                                }
-                                shared.stats.record(
-                                    popped.duration_since(submitted).as_nanos() as u64,
-                                    popped.elapsed().as_nanos() as u64,
-                                );
-                                let preds = server.predictions(&ctx, from, to);
-                                // If the generation staled mid-forward the
-                                // coordinator drops the result by tag; if
-                                // the session departed, the send just
-                                // fails.
-                                tx.send(SessionMsg::Verify(VerifyResult {
-                                    session,
-                                    gen,
-                                    from,
-                                    preds,
-                                }))
-                                .is_err()
-                            };
-                            if send_failed {
-                                cache.remove(&session);
-                            }
+                    let popped_task =
+                        match shared.pop(last_session, streak >= AFFINITY_STREAK_MAX) {
+                            Popped::Shutdown => break,
+                            Popped::Task(t) => t,
+                        };
+                    let VerifyTask { session, gen, ctx, from, to, submitted } = popped_task;
+                    let popped = Instant::now();
+                    let wait_ns = popped.duration_since(submitted).as_nanos() as u64;
+
+                    let epoch = shared.route_epoch.load(Ordering::Acquire);
+                    if epoch != cache_epoch {
+                        cache.clear();
+                        cache_epoch = epoch;
+                    }
+                    if !cache.contains_key(&session) {
+                        let routes = shared.routes.lock().unwrap();
+                        if let Some(r) = routes.get(&session) {
+                            cache.insert(session, (r.gen.clone(), r.tx.clone()));
                         }
+                    }
+                    // Route lookup doubles as the staleness check: a
+                    // departed session or an advanced generation means the
+                    // forward would be wasted. Skips are still counted —
+                    // with their queue wait — so the wait gauge keeps the
+                    // tasks that waited through a rejection. The send goes
+                    // through the cached Sender by reference — no clone
+                    // per task; eviction on a dead channel is deferred
+                    // past the borrow.
+                    let send_failed = {
+                        let Some((cur, tx)) = cache.get(&session) else {
+                            shared.stats.record_skipped(true, wait_ns);
+                            continue;
+                        };
+                        if gen != cur.load(Ordering::Acquire) {
+                            // staled while queued (Alg. 1 line 8)
+                            shared.stats.record_skipped(false, wait_ns);
+                            continue;
+                        }
+                        // Affinity state tracks *dispatched forwards* only:
+                        // a skipped task never warmed (or used) this
+                        // server's KV state, so it must neither move the
+                        // hit-rate gauge nor advance the streak.
+                        let hit = last_session == Some(session);
+                        shared.stats.record_affinity(hit);
+                        streak = if hit { streak + 1 } else { 1 };
+                        last_session = Some(session);
+                        shared
+                            .stats
+                            .record(wait_ns, popped.elapsed().as_nanos() as u64);
+                        let kv_before = server.kv_reuse();
+                        let preds = server.predictions(&ctx, from, to);
+                        shared.stats.record_kv(server.kv_reuse() - kv_before);
+                        // If the generation staled mid-forward the
+                        // coordinator drops the result by tag; if the
+                        // session departed, the send just fails.
+                        tx.send(SessionMsg::Verify(VerifyResult {
+                            session,
+                            gen,
+                            from,
+                            preds,
+                        }))
+                        .is_err()
+                    };
+                    if send_failed {
+                        cache.remove(&session);
                     }
                 }
             }));
@@ -373,7 +571,7 @@ impl TargetPool {
 impl Drop for TargetPool {
     fn drop(&mut self) {
         for _ in 0..self.size {
-            self.shared.push(PoolTask::Shutdown);
+            self.shared.push_shutdown();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -482,6 +680,185 @@ mod tests {
         drop(b);
         drop(rx_a);
         assert!(rx_b.try_recv().is_err());
+    }
+
+    /// A single worker with interleaved two-session arrivals must drain
+    /// its warm session's sub-queue before switching: affinity beats
+    /// arrival order (per-session FIFO is preserved; cross-session order
+    /// is a scheduling decision).
+    #[test]
+    fn affinity_prefers_last_served_session() {
+        let pool = pool_with_latency(1, 30.0);
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let a = pool.register(tx_a);
+        let b = pool.register(tx_b);
+
+        // Occupy the worker, then queue interleaved arrivals behind it.
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10));
+        a.submit(0, rope(&[1, 1, 1, 1]), 2, 3);
+        b.submit(0, rope(&[2, 2, 2]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 2, 3);
+        b.submit(0, rope(&[2, 2, 2, 2]), 2, 3);
+
+        for _ in 0..3 {
+            assert!(recv_verify(&rx_a).is_some(), "A result missing");
+        }
+        for _ in 0..2 {
+            assert!(recv_verify(&rx_b).is_some(), "B result missing");
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.tasks(), 5);
+        // Pops: A-blocker (miss: no previous session), A, A (hits — both
+        // queued A tasks drain before the older B task), B (miss), B
+        // (hit) — 3 hits / 2 misses.
+        assert!(
+            stats.affinity_hit_rate() > 0.5,
+            "affinity rate {} — interleaved arrivals were served in FIFO order",
+            stats.affinity_hit_rate()
+        );
+    }
+
+    /// Under strict FIFO the same interleaved arrivals are served in
+    /// submit order — the A/B control the bench compares against.
+    #[test]
+    fn fifo_policy_serves_in_arrival_order() {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(30.0),
+            drafter: LatencyProfile::uniform(0.1),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 11 },
+            max_context: 4096,
+        };
+        let pool = TargetPool::new_with_policy(&eng.factory(), 1, SchedPolicy::Fifo);
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let a = pool.register(tx_a);
+        let b = pool.register(tx_b);
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10));
+        a.submit(0, rope(&[1, 1, 1, 1]), 2, 3);
+        b.submit(0, rope(&[2, 2, 2]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 2, 3);
+        b.submit(0, rope(&[2, 2, 2, 2]), 2, 3);
+        for _ in 0..3 {
+            assert!(recv_verify(&rx_a).is_some());
+        }
+        for _ in 0..2 {
+            assert!(recv_verify(&rx_b).is_some());
+        }
+        // Pops: A, A, B, A, B — only the second pop stays on-session.
+        let rate = pool.stats().affinity_hit_rate();
+        assert!(rate < 0.5, "fifo control shows affinity rate {rate}");
+    }
+
+    /// The streak bound: a session with a continuously full sub-queue
+    /// must not starve a neighbor — after `AFFINITY_STREAK_MAX`
+    /// consecutive same-session tasks, the worker steals the waiting one.
+    #[test]
+    fn streak_bound_prevents_starvation() {
+        let pool = pool_with_latency(1, 30.0);
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let a = pool.register(tx_a);
+        let b = pool.register(tx_b);
+
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10));
+        for i in 0..(AFFINITY_STREAK_MAX + 2) as u32 {
+            a.submit(0, rope(&[1, 1, 1, i]), 2, 3);
+        }
+        b.submit(0, rope(&[2, 2, 2]), 2, 3);
+
+        // B's one task is younger than every queued A task, yet it must
+        // be served before A's sub-queue drains.
+        assert!(
+            rx_b.recv_timeout(Duration::from_millis(30 * 12 + 500)).is_ok(),
+            "B starved behind A's streak"
+        );
+        assert!(
+            pool.shared.queued_tasks_of(a.session_id()) > 0,
+            "B was only served after A fully drained"
+        );
+        let mut got = 0; // blocker + the streak submits all land on rx_a
+        while recv_verify(&rx_a).is_some() {
+            got += 1;
+        }
+        assert_eq!(got, AFFINITY_STREAK_MAX + 3, "A tasks lost");
+    }
+
+    /// Survivor-bias fix: popped-but-skipped tasks (staled or departed)
+    /// are counted with their queue wait instead of vanishing from the
+    /// gauges.
+    #[test]
+    fn skipped_tasks_are_counted_with_their_wait() {
+        let pool = pool(1);
+        let (tx_a, _rx_a) = channel();
+        let a = pool.register(tx_a);
+
+        // A task whose session was never registered: the departed path.
+        pool.shared.push(VerifyTask {
+            session: 0xdead,
+            gen: 0,
+            ctx: rope(&[3, 3, 3]),
+            from: 2,
+            to: 3,
+            submitted: Instant::now(),
+        });
+        // A task whose generation is staled directly on the route (the
+        // queue purge is bypassed so the worker must pop it).
+        pool.shared
+            .routes
+            .lock()
+            .unwrap()
+            .get(&a.session_id())
+            .expect("registered route")
+            .gen
+            .store(7, Ordering::Release);
+        a.submit(0, rope(&[4, 4, 4]), 2, 3);
+
+        // Wait until both pops happened.
+        let t0 = Instant::now();
+        let stats = pool.stats();
+        while stats.skipped_stale() + stats.skipped_departed() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "skips never recorded");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(stats.skipped_departed(), 1);
+        assert_eq!(stats.skipped_stale(), 1);
+        assert_eq!(stats.tasks(), 0, "skipped tasks must not count as dispatched");
+        assert!(
+            stats.queue_wait_us_mean() > 0.0,
+            "skipped tasks' queue wait vanished from the mean (survivor bias)"
+        );
+    }
+
+    /// Dispatched forwards feed the pool's KV-reuse counters: a second
+    /// task extending the same stream reuses the warm server state.
+    #[test]
+    fn kv_reuse_counters_accumulate() {
+        let pool = pool(1);
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        let mut ctx = rope(&[5, 5, 5, 5, 5, 5, 5, 5]);
+        ctx.freeze();
+        a.submit(0, ctx.clone(), 8, 9);
+        assert!(recv_verify(&rx_a).is_some());
+        let stats = pool.stats();
+        assert!(stats.kv_tokens_redecoded() >= 8, "first task must decode the stream");
+        let redecoded_after_first = stats.kv_tokens_redecoded();
+
+        let mut ext = ctx.clone();
+        ext.push(6);
+        ext.freeze();
+        a.submit(0, ext, 9, 10);
+        assert!(recv_verify(&rx_a).is_some());
+        assert!(stats.kv_tokens_reused() >= 8, "warm prefix not counted as reused");
+        assert_eq!(
+            stats.kv_tokens_redecoded(),
+            redecoded_after_first + 1,
+            "extension re-decoded settled ground"
+        );
     }
 
     /// The departure purge must remove EVERY queued task of the session —

@@ -4,15 +4,21 @@
 //! Pallas-kerneled decode step.
 //!
 //! Each server compiles its own executables and owns its own KV cache
-//! (the paper: "Each server maintains its own KV cache"). Resynchronizing
-//! after a rejection reuses the longest shared prefix and re-decodes only
-//! the divergent suffix.
+//! (the paper: "Each server maintains its own KV cache") — but settled
+//! cache *blocks* are shared: all servers of one role built by
+//! [`real_factory`] publish completed blocks into one
+//! [`BlockStore`](crate::runtime::kv::BlockStore), so resynchronizing
+//! after a rejection reuses the longest shared prefix AND restores any
+//! continuation a sibling already decoded; only the genuinely novel
+//! suffix is re-decoded. A cold worker's first task on a warm stream is
+//! a block-store lookup + short decode, not a full prefill.
 //!
 //! Requires the `pjrt` cargo feature; without it `runtime::pjrt` is the
 //! stub backend and [`RealServer::load`] returns a descriptive error.
 
-use super::{LmServer, ServerFactory, ServerRole};
+use super::{KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
+use crate::runtime::kv::{self, BlockStore};
 use crate::runtime::pjrt::{ModelRole, ModelRuntime, Session};
 use crate::runtime::sampler::argmax;
 use std::path::PathBuf;
@@ -21,36 +27,64 @@ use std::sync::Arc;
 pub struct RealServer {
     rt: ModelRuntime,
     sess: Session,
+    reuse: KvReuse,
 }
 
 impl RealServer {
+    /// Load with a private block store (shared only by this server's own
+    /// sessions — i.e. cross-worker reuse off).
     pub fn load(
         artifacts: &std::path::Path,
         role: ServerRole,
+    ) -> crate::util::error::Result<Self> {
+        let store = Arc::new(BlockStore::new(
+            kv::DEFAULT_BLOCK_TOKENS,
+            kv::DEFAULT_CAPACITY_BLOCKS,
+        ));
+        Self::load_shared(artifacts, role, store)
+    }
+
+    /// Load with a settled-block store shared across servers of the same
+    /// role (what [`real_factory`] does for every pool worker).
+    pub fn load_shared(
+        artifacts: &std::path::Path,
+        role: ServerRole,
+        store: Arc<BlockStore<Vec<f32>>>,
     ) -> crate::util::error::Result<Self> {
         let model_role = match role {
             ServerRole::Target => ModelRole::Target,
             ServerRole::Drafter => ModelRole::Drafter,
         };
-        let rt = ModelRuntime::load(artifacts, model_role)?;
+        let rt = ModelRuntime::load_shared(artifacts, model_role, store)?;
+        // The one place a session is constructed; from here on it is
+        // recycled via rollback/resync, never replaced.
         let sess = rt.new_session()?;
-        Ok(Self { rt, sess })
+        Ok(Self { rt, sess, reuse: KvReuse::default() })
+    }
+
+    /// Lifetime (prefill, decode-step) forward counts of the underlying
+    /// runtime — the KV-reuse tests' observable.
+    pub fn forward_counts(&self) -> (u64, u64) {
+        self.rt.forward_counts()
     }
 }
 
 impl LmServer for RealServer {
     fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
         assert!(from >= 1 && to > from && ctx.len() >= to - 1, "bad range {from}..{to}");
-        let shared = ctx.common_prefix_with(&self.sess.tokens);
+        // Roll back to the shared prefix, then restore any settled blocks
+        // the store holds for the continuation.
+        self.rt.resync(&mut self.sess, ctx);
 
         let mut preds = Vec::with_capacity(to - from);
-        if shared == 0 || self.sess.pos == 0 {
-            // Cold (or fully divergent) cache: prefill through the first
-            // needed prediction, then decode the rest. Prefill is the one
-            // place the context is materialized — the executable wants a
-            // contiguous padded buffer.
+        if self.sess.pos == 0 {
+            // Truly cold (no shared prefix, no reusable blocks): prefill
+            // through the first needed prediction, then decode the rest.
+            // Prefill is the one place the context is materialized — the
+            // executable wants a contiguous padded buffer. The session is
+            // rolled back and reused; its cache literal is recycled as
+            // the prefill executable's functional input.
             let pre = from.min(ctx.len()); // prefill ctx[..pre] predicts index `pre`
-            self.sess = self.rt.new_session().expect("session");
             let prompt = ctx.to_vec_range(0, pre);
             let logits = self.rt.prefill(&mut self.sess, &prompt).expect("prefill");
             preds.push(argmax(&logits));
@@ -58,13 +92,16 @@ impl LmServer for RealServer {
                 let logits = self.rt.decode_step(&mut self.sess, tok).expect("decode");
                 preds.push(argmax(&logits));
             }
+            self.reuse.tokens_redecoded += (to - 1) as u64;
+            self.rt.publish_settled(&mut self.sess);
             // preds covers indices pre..to, and pre == from here.
             return preds;
         }
 
-        // Warm cache: roll back to the useful prefix and decode forward —
-        // only the divergent suffix is processed (or touched at all).
-        let resume = shared.min(from - 1);
+        // Warm (or block-restored) cache: roll back to the useful prefix
+        // and decode forward — only the divergent suffix is processed (or
+        // touched at all).
+        let resume = self.sess.pos.min(from - 1);
         self.rt.rollback(&mut self.sess, resume);
         for (off, tok) in ctx.iter_range(resume, to - 1).enumerate() {
             let logits = self.rt.decode_step(&mut self.sess, tok).expect("decode");
@@ -72,6 +109,9 @@ impl LmServer for RealServer {
                 preds.push(argmax(&logits));
             }
         }
+        self.reuse.tokens_reused += resume as u64;
+        self.reuse.tokens_redecoded += (to - 1 - resume) as u64;
+        self.rt.publish_settled(&mut self.sess);
         debug_assert_eq!(preds.len(), to - from);
         preds
     }
@@ -81,7 +121,8 @@ impl LmServer for RealServer {
     }
 
     fn advance(&mut self, ctx: &TokenRope) {
-        // Drop any divergent KV suffix now so the next `predictions`
+        // Drop any divergent KV suffix (and restore whatever settled
+        // blocks cover the new ground) now, so the next `predictions`
         // decodes only new tokens. Forward passes stay where they are
         // charged: in `predictions`.
         if self.sess.pos > 0 {
@@ -92,13 +133,31 @@ impl LmServer for RealServer {
     fn cached_len(&self) -> usize {
         self.sess.tokens.len()
     }
+
+    fn kv_reuse(&self) -> KvReuse {
+        self.reuse
+    }
 }
 
 /// Factory loading servers from an artifact directory. Compilation happens
-/// once per server thread at startup (analogous to model load on a GPU).
+/// once per server thread at startup (analogous to model load on a GPU);
+/// all workers of one role share a settled-block store, so speculation
+/// streams survive worker hops without re-decoding.
 pub fn real_factory(artifacts: PathBuf) -> ServerFactory {
+    let target_store = Arc::new(BlockStore::new(
+        kv::DEFAULT_BLOCK_TOKENS,
+        kv::DEFAULT_CAPACITY_BLOCKS,
+    ));
+    let drafter_store = Arc::new(BlockStore::new(
+        kv::DEFAULT_BLOCK_TOKENS,
+        kv::DEFAULT_CAPACITY_BLOCKS,
+    ));
     Arc::new(move |role, _id| {
-        Box::new(RealServer::load(&artifacts, role).expect("loading AOT artifacts"))
+        let store = match role {
+            ServerRole::Target => target_store.clone(),
+            ServerRole::Drafter => drafter_store.clone(),
+        };
+        Box::new(RealServer::load_shared(&artifacts, role, store).expect("loading AOT artifacts"))
     })
 }
 
@@ -142,5 +201,31 @@ mod tests {
         assert_eq!(s.cached_len(), 3);
         let a2 = s.predictions(&ctx_a, 4, 7); // resync back
         assert_eq!(a1, a2);
+    }
+
+    /// The cold path through the block store: a second worker sharing the
+    /// store serves a warm stream with zero prefills and a single decode
+    /// step — lookup + short decode, not a full prefill.
+    #[test]
+    fn cold_server_short_decodes_via_shared_store() {
+        let Some(dir) = artifacts() else { return };
+        let store = Arc::new(crate::runtime::kv::BlockStore::new(4, 64));
+        let mut s1 = RealServer::load_shared(&dir, ServerRole::Target, store.clone()).unwrap();
+        let mut ctx = TokenRope::from_slice(&(30..42).collect::<Vec<u32>>()); // L = 12
+        ctx.freeze();
+        let want = s1.predictions(&ctx, 12, 13);
+        assert_eq!(s1.forward_counts(), (1, 0), "warm server should prefill once");
+
+        let mut s2 = RealServer::load_shared(&dir, ServerRole::Target, store).unwrap();
+        let got = s2.predictions(&ctx, 12, 13);
+        assert_eq!(got, want, "restored rows changed the prediction");
+        assert_eq!(
+            s2.forward_counts(),
+            (0, 1),
+            "cold path must be a block-store restore + one decode, not a prefill"
+        );
+        let reuse = s2.kv_reuse();
+        assert_eq!(reuse.tokens_reused, 11);
+        assert_eq!(reuse.tokens_redecoded, 1);
     }
 }

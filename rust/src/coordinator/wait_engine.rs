@@ -16,9 +16,10 @@
 //! Waits are hybrid sleep+spin so sub-millisecond TPOTs (Vicuna-68M is
 //! 2.5 ms; our sweeps go lower) stay accurate.
 
-use super::{LmServer, ServerFactory, ServerRole};
+use super::{KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::config::LatencyProfile;
 use crate::context::{PrefixWitness, TokenRope};
+use crate::runtime::kv::{self, BlockStore, KvBlock};
 use crate::util::rng::splitmix64;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -108,6 +109,16 @@ impl Oracle {
 /// chain: `hashes[i]` is the chain value for `tokens[..i]`, so a call
 /// whose context extends the cached prefix hashes only the new tokens
 /// (O(1) per new token) instead of rehashing O(L) per predicted position.
+///
+/// Wait servers also model the real engine's settled-block sharing: all
+/// servers built by one [`WaitEngine::factory`] call share a
+/// [`BlockStore`] of hash-chain checkpoints (the chain is role-agnostic —
+/// the role only enters at token selection), so a cold or divergent
+/// server *restores* spans a sibling already walked instead of
+/// re-hashing them, exactly as the PJRT engine restores KV rows. The
+/// [`KvReuse`] counters make the reuse observable: wait-mode runs
+/// exercise the pool's affinity scheduler with the same accounting the
+/// real engine reports.
 pub struct WaitServer {
     role: ServerRole,
     profile: LatencyProfile,
@@ -119,6 +130,17 @@ pub struct WaitServer {
     /// `hashes[i]` = chain hash of `tokens[..i]`; always `tokens.len()+1`
     /// entries.
     hashes: Vec<u64>,
+    /// `keys[i]` = block-store content key of `tokens[..i]` (same length
+    /// invariant as `hashes`), so publishing needs no rehash of settled
+    /// ground.
+    keys: Vec<u64>,
+    /// Settled-block store shared with every server of this factory;
+    /// payload = the oracle chain values for the block's positions.
+    store: Arc<BlockStore<Vec<u64>>>,
+    /// Chain length already offered to the store (publish watermark).
+    published: usize,
+    /// Cumulative reuse accounting (see [`LmServer::kv_reuse`]).
+    reuse: KvReuse,
     /// Storage-identity witness of the validated prefix, so a context
     /// that structurally extends it (the drafter's steady state) skips
     /// the O(L) token re-comparison entirely.
@@ -130,6 +152,8 @@ impl WaitServer {
     /// `ctx[..upto]`. The cache is cut only at a true divergence: a
     /// shorter task (e.g. the chain fallback, a truncated view of the
     /// same stream) must not evict state a longer block task just built.
+    /// Extension first restores whole blocks from the shared store, then
+    /// hashes only the remainder stepwise.
     fn resync(&mut self, ctx: &TokenRope, upto: usize) {
         // Tokens the witness proves identical by storage identity, then a
         // token compare over the (small) residue only.
@@ -139,16 +163,78 @@ impl WaitServer {
             // Real divergence: drop the dead branch.
             self.tokens.truncate(matched);
             self.hashes.truncate(matched + 1);
+            self.keys.truncate(matched + 1);
+            self.published = self.published.min(matched);
+        }
+        // Positions already covered are served from the chain, not
+        // re-hashed — the wait-mode "KV rows reused".
+        self.reuse.tokens_reused += self.tokens.len().min(upto) as u64;
+        if upto > self.tokens.len() {
+            self.restore_blocks(ctx, upto);
         }
         if upto > self.tokens.len() {
+            let new = upto - self.tokens.len();
             let mut h = *self.hashes.last().unwrap();
+            let mut k = *self.keys.last().unwrap();
             for tok in ctx.iter_range(self.tokens.len(), upto) {
                 h = self.oracle.hash_step(h, tok);
+                k = kv::key_step(k, tok);
                 self.tokens.push(tok);
                 self.hashes.push(h);
+                self.keys.push(k);
             }
+            self.reuse.tokens_redecoded += new as u64;
         }
+        self.publish_blocks();
         self.witness.record(ctx, self.tokens.len().min(ctx.len()));
+    }
+
+    /// Extend the chain over `ctx` from whole blocks the store already
+    /// holds (published by this or any sibling server). Restored spans
+    /// count as reused — they are exactly the rows the real engine would
+    /// not re-decode.
+    fn restore_blocks(&mut self, ctx: &TokenRope, upto: usize) {
+        let b = self.store.block_tokens();
+        let mut start = (self.tokens.len() / b) * b;
+        while start + b <= ctx.len() && self.tokens.len() < upto {
+            let expect: Vec<u32> = ctx.iter_range(start, start + b).collect();
+            let key = expect.iter().fold(self.keys[start], |k, &t| kv::key_step(k, t));
+            let Some(block) = self.store.lookup(key, start, &expect) else { break };
+            if block.payload.len() != b {
+                break; // foreign payload shape: treat as a miss
+            }
+            let covered = self.tokens.len();
+            for (i, &tok) in expect.iter().enumerate().skip(covered - start) {
+                self.tokens.push(tok);
+                self.hashes.push(block.payload[i]);
+                let k = kv::key_step(self.keys[start + i], tok);
+                self.keys.push(k);
+            }
+            self.reuse.tokens_reused += (start + b - covered) as u64;
+            start += b;
+        }
+    }
+
+    /// Offer every newly-completed block of the chain to the store.
+    fn publish_blocks(&mut self) {
+        let b = self.store.block_tokens();
+        let end = (self.tokens.len() / b) * b;
+        let mut s = (self.published / b) * b;
+        while s + b <= end {
+            let key = self.keys[s + b];
+            if !self.store.contains(key) {
+                self.store.publish(
+                    key,
+                    KvBlock {
+                        start: s,
+                        tokens: self.tokens[s..s + b].to_vec(),
+                        payload: self.hashes[s + 1..s + b + 1].to_vec(),
+                    },
+                );
+            }
+            s += b;
+        }
+        self.published = end.max(self.published);
     }
 }
 
@@ -179,6 +265,10 @@ impl LmServer for WaitServer {
     fn cached_len(&self) -> usize {
         self.tokens.len()
     }
+
+    fn kv_reuse(&self) -> KvReuse {
+        self.reuse
+    }
 }
 
 /// Factory for wait-mode runs.
@@ -196,6 +286,13 @@ impl WaitEngine {
     pub fn factory(&self) -> ServerFactory {
         let this = self.clone();
         let oracle = Arc::new(this.oracle.clone());
+        // One settled-block store per factory: every server built from it
+        // (targets and drafters — the chain is role-agnostic) shares hash
+        // checkpoints, mirroring the real engine's per-role KV stores.
+        let store = Arc::new(BlockStore::new(
+            kv::DEFAULT_BLOCK_TOKENS,
+            kv::DEFAULT_CAPACITY_BLOCKS,
+        ));
         Arc::new(move |role, _id| {
             Box::new(WaitServer {
                 role,
@@ -208,6 +305,10 @@ impl WaitEngine {
                 max_context: this.max_context,
                 tokens: Vec::new(),
                 hashes: vec![oracle.hash_init()],
+                keys: vec![kv::key_init()],
+                store: store.clone(),
+                published: 0,
+                reuse: KvReuse::default(),
                 witness: PrefixWitness::default(),
             })
         })
@@ -323,6 +424,136 @@ mod tests {
         assert_eq!(s.cached_len(), 64);
         let mut fresh = f(ServerRole::Drafter, 0);
         assert_eq!(s.predictions(&ctx, 64, 65), fresh.predictions(&ctx, 64, 65));
+    }
+
+    fn zero_latency_engine(p: f64, seed: u64) -> WaitEngine {
+        WaitEngine {
+            target: LatencyProfile::uniform(0.0),
+            drafter: LatencyProfile::uniform(0.0),
+            oracle: Oracle { vocab: 256, acceptance_rate: p, seed },
+            max_context: 4096,
+        }
+    }
+
+    /// The KV-reuse acceptance property, wait-mode side: after a
+    /// rejection at position r in a length-L context, the server
+    /// re-decodes (re-hashes) exactly the divergent suffix — the counters
+    /// prove no settled ground is re-walked.
+    #[test]
+    fn rejection_redecodes_only_divergent_suffix() {
+        const L: usize = 64;
+        const R: usize = 40;
+        let f = zero_latency_engine(0.6, 51).factory();
+        let mut s = f(ServerRole::Target, 0);
+        let mut a = TokenRope::from_slice(&(0..L as u32).collect::<Vec<_>>());
+        a.freeze();
+        let _ = s.predictions(&a, L, L + 1);
+        assert_eq!(s.cached_len(), L);
+
+        // Correction stream: shares a[..R], then diverges and regrows to L.
+        let mut c = a.truncated(R);
+        c.push(999);
+        for t in 0..(L - R - 1) as u32 {
+            c.push(500 + t);
+        }
+        c.freeze();
+        assert_eq!(c.len(), L);
+
+        let before = s.kv_reuse();
+        let _ = s.predictions(&c, L, L + 1);
+        let delta = s.kv_reuse() - before;
+        assert_eq!(delta.tokens_redecoded, (L - R) as u64, "re-decoded beyond the suffix");
+        assert_eq!(delta.tokens_reused, R as u64, "settled prefix not reused");
+        assert_eq!(s.cached_len(), L);
+    }
+
+    /// Cross-server settled-block sharing: a cold sibling from the same
+    /// factory restores the whole prefix from the store and re-hashes
+    /// nothing — the wait-mode analog of "cold path = block-store lookup
+    /// + short decode", counted through the store.
+    #[test]
+    fn cold_server_restores_from_shared_store() {
+        const L: usize = 64; // multiple of the 16-token block size
+        let f = zero_latency_engine(0.7, 53).factory();
+        let mut warm = f(ServerRole::Target, 0);
+        let mut ctx = TokenRope::from_slice(&(0..L as u32).collect::<Vec<_>>());
+        ctx.freeze();
+        let want = warm.predictions(&ctx, L, L + 1);
+
+        let mut cold = f(ServerRole::Target, 1);
+        assert_eq!(cold.cached_len(), 0);
+        let before = cold.kv_reuse();
+        let got = cold.predictions(&ctx, L, L + 1);
+        let delta = cold.kv_reuse() - before;
+        assert_eq!(got, want, "restored chain diverged from the walked one");
+        assert_eq!(delta.tokens_redecoded, 0, "cold server re-hashed published blocks");
+        assert_eq!(delta.tokens_reused, L as u64);
+    }
+
+    /// A chain-fallback context that is a strict prefix (truncated view)
+    /// of the cached tokens must not evict the longer chain the block
+    /// tasks already built.
+    #[test]
+    fn truncated_view_does_not_evict_longer_chain() {
+        const L: usize = 48;
+        const CUT: usize = 20;
+        let f = zero_latency_engine(0.5, 57).factory();
+        let mut s = f(ServerRole::Target, 0);
+        let mut ctx = TokenRope::from_slice(&(0..L as u32).collect::<Vec<_>>());
+        ctx.freeze();
+        let long = s.predictions(&ctx, L, L + 1);
+        assert_eq!(s.cached_len(), L);
+
+        // The chain fallback dispatches a truncated view of the same rope.
+        let before = s.kv_reuse();
+        let _ = s.predictions(&ctx.truncated(CUT), CUT, CUT + 1);
+        let delta = s.kv_reuse() - before;
+        assert_eq!(s.cached_len(), L, "strict-prefix view evicted the longer chain");
+        assert_eq!(delta.tokens_redecoded, 0, "prefix view re-hashed cached ground");
+
+        // The long chain is still live: re-asking costs no re-hash and
+        // returns the same prediction.
+        let before = s.kv_reuse();
+        assert_eq!(s.predictions(&ctx, L, L + 1), long);
+        assert_eq!((s.kv_reuse() - before).tokens_redecoded, 0);
+    }
+
+    /// The PrefixWitness must stay valid across a divergence-then-extend
+    /// sequence: serving a divergent branch and then returning to the
+    /// original stream (extended further) keeps predictions identical to
+    /// a fresh server's and re-hashes only genuinely new tokens.
+    #[test]
+    fn witness_survives_divergence_then_extend() {
+        const L: usize = 32;
+        const R: usize = 12;
+        let f = zero_latency_engine(0.4, 59).factory();
+        let mut s = f(ServerRole::Target, 0);
+        let mut a = TokenRope::from_slice(&(0..L as u32).collect::<Vec<_>>());
+        a.freeze();
+        let _ = s.predictions(&a, L, L + 1);
+
+        // Divergent branch sharing a[..R].
+        let mut b = a.truncated(R);
+        for t in 0..6u32 {
+            b.push(200 + t);
+        }
+        b.freeze();
+        let _ = s.predictions(&b, b.len(), b.len() + 1);
+        assert_eq!(s.cached_len(), b.len());
+
+        // Back to (an extension of) the original stream.
+        let mut ext = a.clone();
+        ext.push(77);
+        ext.push(78);
+        ext.freeze();
+        let got = s.predictions(&ext, ext.len(), ext.len() + 1);
+        let mut fresh = zero_latency_engine(0.4, 59).factory()(ServerRole::Target, 0);
+        assert_eq!(
+            got,
+            fresh.predictions(&ext, ext.len(), ext.len() + 1),
+            "witness corruption changed predictions after divergence-then-extend"
+        );
+        assert_eq!(s.cached_len(), ext.len());
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //!   PJRT executions (`pjrt` cargo feature).
 //! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
 //!   from JAX/Pallas by `python/compile/aot.py`) into PJRT CPU executables;
-//!   npy weight loading, sampling, KV-cache state, byte tokenizer. The
+//!   npy weight loading, sampling, KV-cache state, byte tokenizer, and
+//!   [`runtime::kv`] — the settled-block store (fixed-size, ref-counted,
+//!   prefix-keyed KV blocks shared across sessions and same-role workers,
+//!   so resync restores rolled-back state instead of re-decoding it). The
 //!   PJRT client proper is gated behind the `pjrt` feature (stubbed in the
 //!   default dependency-free build).
 //! - [`server`] — the serving front: a multi-session scheduler. Requests

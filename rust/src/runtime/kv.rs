@@ -1,0 +1,306 @@
+//! Settled KV blocks: the cache as a shareable, prefix-keyed resource.
+//!
+//! The paper charges each target server one forward per verification task
+//! because "each server maintains its own KV cache" — and until now our
+//! engines lived down to that: `ModelRuntime::resync` only *rolled back*
+//! a session's cache, so any suffix beyond the shared prefix was
+//! re-decoded even when another session (or another pool worker serving
+//! the same stream) had already paid for those exact rows. [`BlockStore`]
+//! removes the re-decode:
+//!
+//! - The cache is carved into **fixed-size token blocks** ([`KvBlock`]):
+//!   block `i` covers positions `[i*B, (i+1)*B)` of some token stream and
+//!   carries an engine-specific payload (the real engine stores the
+//!   cache rows for those positions; the wait engine stores its oracle
+//!   hash-chain checkpoints — the same reuse, modeled).
+//! - Blocks are **prefix-keyed**: the key is a rolling content hash of
+//!   the *entire* prefix through the block's end ([`key_init`] /
+//!   [`key_step`]), so a block is only ever reused for a context whose
+//!   whole prefix matches — and lookups additionally verify the block's
+//!   covered tokens, so a key collision degrades to a miss, never to
+//!   corruption.
+//! - Blocks are **ref-counted** (`Arc`): eviction drops the store's
+//!   reference, but a session holding a block it restored from keeps the
+//!   data alive. Eviction itself is least-recently-used under a block
+//!   capacity.
+//!
+//! A store is shared across every `Session` of a `ModelRuntime` and — via
+//! the engine factories — across all pool workers of one role (identical
+//! weights produce bit-identical rows for identical prefixes, so sharing
+//! across runtimes of the same model is sound). A rolled-back or
+//! divergent session *restores* settled blocks instead of leaving the
+//! suffix to be re-decoded; the pool's `kv_tokens_reused` /
+//! `kv_tokens_redecoded` counters measure the win.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default tokens per block. Small enough that partially-settled tails
+/// waste little, large enough that per-block bookkeeping stays trivial
+/// next to a forward pass.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+/// Default store capacity, in blocks (LRU-evicted beyond this).
+pub const DEFAULT_CAPACITY_BLOCKS: usize = 4096;
+
+/// Chain state for the empty prefix (the content-key analog of a hash
+/// IV; distinct from the wait-engine oracle's chain so the two key
+/// spaces never alias).
+#[inline]
+pub fn key_init() -> u64 {
+    0xa076_1d64_78bd_642f
+}
+
+/// Extend the prefix key by one token.
+#[inline]
+pub fn key_step(h: u64, tok: u32) -> u64 {
+    let mut x = h ^ 0x2545_f491_4f6c_dd1d ^ tok as u64;
+    crate::util::rng::splitmix64(&mut x)
+}
+
+/// Prefix key of a whole token sequence (a left fold of [`key_step`]).
+pub fn key_of<I: IntoIterator<Item = u32>>(tokens: I) -> u64 {
+    tokens.into_iter().fold(key_init(), key_step)
+}
+
+/// One settled cache block: `tokens` covers stream positions
+/// `[start, start + tokens.len())`, and `payload` is whatever the engine
+/// needs to restore those positions without re-decoding them.
+#[derive(Debug)]
+pub struct KvBlock<P> {
+    pub start: usize,
+    pub tokens: Vec<u32>,
+    pub payload: P,
+}
+
+/// Store health counters (atomic; shared freely with metrics).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    published: AtomicU64,
+    evicted: AtomicU64,
+    tokens_restored: AtomicU64,
+}
+
+impl StoreStats {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+    /// Tokens handed back by successful lookups.
+    pub fn tokens_restored(&self) -> u64 {
+        self.tokens_restored.load(Ordering::Relaxed)
+    }
+}
+
+struct Inner<P> {
+    /// key -> (block, last-use stamp).
+    map: HashMap<u64, (Arc<KvBlock<P>>, u64)>,
+    /// stamp -> key, ordered: the LRU index. Stamps are unique (the
+    /// clock advances on every lookup/publish), so eviction is
+    /// `pop_first` and a touch is one remove + insert — O(log n), never
+    /// a full-map scan while every worker waits on the mutex.
+    by_stamp: BTreeMap<u64, u64>,
+    /// Monotonic use counter backing the LRU stamps.
+    clock: u64,
+}
+
+/// A shared, bounded store of settled KV blocks. All methods take `&self`
+/// (one short mutex hold each), so a store can sit behind an `Arc` shared
+/// by every session and worker of a model.
+pub struct BlockStore<P> {
+    block_tokens: usize,
+    capacity: usize,
+    inner: Mutex<Inner<P>>,
+    stats: StoreStats,
+}
+
+impl<P> BlockStore<P> {
+    pub fn new(block_tokens: usize, capacity_blocks: usize) -> Self {
+        assert!(block_tokens >= 1 && capacity_blocks >= 1);
+        Self {
+            block_tokens,
+            capacity: capacity_blocks,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                by_stamp: BTreeMap::new(),
+                clock: 0,
+            }),
+            stats: StoreStats::default(),
+        }
+    }
+
+    /// Tokens per block — every published block must cover exactly this
+    /// many.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    /// Whether `key` is present — the cheap pre-check publishers use to
+    /// skip payload extraction for blocks the store already holds. No
+    /// LRU touch, no stats.
+    pub fn contains(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&key)
+    }
+
+    /// Verified lookup: the block under `key` must start at `start` and
+    /// cover exactly `expect` — a colliding or stale key is a miss, so a
+    /// restored block can never desynchronize a cache from its context.
+    pub fn lookup(&self, key: u64, start: usize, expect: &[u32]) -> Option<Arc<KvBlock<P>>> {
+        let found = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            let hit = match inner.map.get_mut(&key) {
+                Some((block, stamp)) if block.start == start && block.tokens == expect => {
+                    let old = std::mem::replace(stamp, clock);
+                    Some((block.clone(), old))
+                }
+                _ => None,
+            };
+            hit.map(|(block, old_stamp)| {
+                inner.by_stamp.remove(&old_stamp);
+                inner.by_stamp.insert(clock, key);
+                block
+            })
+        };
+        match &found {
+            Some(_) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .tokens_restored
+                    .fetch_add(expect.len() as u64, Ordering::Relaxed);
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        found
+    }
+
+    /// Insert a block under `key` if absent, evicting the least-recently
+    /// used block past capacity. Returns whether it was inserted (an
+    /// already-present key is left untouched: first writer wins; the
+    /// content is identical by construction).
+    pub fn publish(&self, key: u64, block: KvBlock<P>) -> bool {
+        assert_eq!(
+            block.tokens.len(),
+            self.block_tokens,
+            "block must cover exactly block_tokens tokens"
+        );
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&key) {
+            return false;
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.map.insert(key, (Arc::new(block), clock));
+        inner.by_stamp.insert(clock, key);
+        self.stats.published.fetch_add(1, Ordering::Relaxed);
+        while inner.map.len() > self.capacity {
+            // At steady state every publish past capacity evicts once;
+            // the stamp index makes that O(log n), not a map scan under
+            // the mutex every worker shares.
+            let (_, coldest) = inner.by_stamp.pop_first().expect("non-empty LRU index");
+            inner.map.remove(&coldest);
+            self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(start: usize, tokens: &[u32]) -> KvBlock<Vec<u32>> {
+        KvBlock { start, tokens: tokens.to_vec(), payload: tokens.to_vec() }
+    }
+
+    #[test]
+    fn key_chain_is_prefix_sensitive() {
+        let a = key_of([1, 2, 3]);
+        assert_eq!(a, key_of([1, 2, 3]));
+        assert_ne!(a, key_of([1, 2, 4]));
+        assert_ne!(a, key_of([1, 2]));
+        // Incremental fold matches the one-shot fold.
+        assert_eq!(key_step(key_of([1, 2]), 3), a);
+    }
+
+    #[test]
+    fn publish_then_lookup_roundtrip() {
+        let store: BlockStore<Vec<u32>> = BlockStore::new(4, 8);
+        let toks = [5u32, 6, 7, 8];
+        let key = key_of([1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(store.publish(key, block(4, &toks)));
+        assert!(!store.publish(key, block(4, &toks)), "duplicate publish must no-op");
+        assert_eq!(store.len(), 1);
+
+        let got = store.lookup(key, 4, &toks).expect("hit");
+        assert_eq!(got.payload, toks.to_vec());
+        assert_eq!(store.stats().hits(), 1);
+        assert_eq!(store.stats().tokens_restored(), 4);
+        // Wrong start or wrong content under the same key is a miss.
+        assert!(store.lookup(key, 0, &toks).is_none());
+        assert!(store.lookup(key, 4, &[5, 6, 7, 9]).is_none());
+        assert_eq!(store.stats().misses(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_respects_recent_use() {
+        let store: BlockStore<Vec<u32>> = BlockStore::new(2, 2);
+        let k = |i: u32| key_of([i, i + 1]);
+        let b = |i: u32| block(0, &[i, i + 1]);
+        store.publish(k(0), b(0));
+        store.publish(k(1), b(1));
+        // Touch block 0 so block 1 is the LRU victim.
+        assert!(store.lookup(k(0), 0, &[0, 1]).is_some());
+        store.publish(k(2), b(2));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats().evicted(), 1);
+        assert!(store.lookup(k(0), 0, &[0, 1]).is_some(), "recently-used block evicted");
+        assert!(store.lookup(k(1), 0, &[1, 2]).is_none(), "LRU block survived");
+    }
+
+    #[test]
+    fn evicted_block_stays_alive_while_referenced() {
+        let store: BlockStore<Vec<u32>> = BlockStore::new(2, 1);
+        let key = key_of([9, 9]);
+        store.publish(key, block(0, &[9, 9]));
+        let held = store.lookup(key, 0, &[9, 9]).unwrap();
+        // Force the eviction of the held block.
+        store.publish(key_of([3, 3]), block(0, &[3, 3]));
+        assert!(store.lookup(key, 0, &[9, 9]).is_none(), "evicted from the store");
+        // …but the Arc the session holds is still the data.
+        assert_eq!(held.payload, vec![9, 9]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_block_size_is_rejected() {
+        let store: BlockStore<Vec<u32>> = BlockStore::new(4, 8);
+        store.publish(key_of([1]), block(0, &[1]));
+    }
+}

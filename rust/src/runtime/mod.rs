@@ -3,6 +3,10 @@
 //!
 //! - [`npy`] — reads the weight arrays dumped by `aot.py`.
 //! - [`manifest`] — the artifact contract (`artifacts/manifest.json`).
+//! - [`kv`] — settled KV blocks: the cache as fixed-size, ref-counted,
+//!   prefix-keyed blocks shared across sessions (and, via the engine
+//!   factories, across pool workers of one role), so resync *restores*
+//!   rolled-back state instead of re-decoding it.
 //! - [`pjrt`] — PJRT CPU client wrapper: compile HLO text once, then
 //!   prefill/decode with a functional KV cache owned by Rust. Gated
 //!   behind the `pjrt` cargo feature; the default build substitutes a
@@ -11,6 +15,7 @@
 //!   rejection-sampling verification rule.
 //! - [`tokenizer`] — byte-level text <-> token ids.
 
+pub mod kv;
 pub mod manifest;
 pub mod npy;
 #[cfg(feature = "pjrt")]

@@ -11,11 +11,14 @@
 //! bindings); the default offline build substitutes `pjrt_stub.rs`, which
 //! mirrors this module's surface and fails loading with a clear error.
 
+use super::kv::{self, BlockStore, KvBlock};
 use super::manifest::{Manifest, ModelEntry};
 use super::npy::{load_npy, NpyData};
 use crate::bail;
 use crate::util::error::{Context, Result};
+use std::cell::Cell;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Which of the pair to load.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +37,15 @@ pub struct ModelRuntime {
     pub max_seq: usize,
     cache_elems: usize,
     cache_dims: Vec<i64>,
+    /// Settled-block store shared by every session of this runtime — and,
+    /// when loaded via [`ModelRuntime::load_shared`], by sibling runtimes
+    /// of the same role (identical weights produce identical rows).
+    /// Payload = the raw cache rows of the block's token span.
+    store: Arc<BlockStore<Vec<f32>>>,
+    /// Forward-pass counters (prefills, decode steps) — the observable
+    /// the KV-reuse tests gate on.
+    prefills: Cell<u64>,
+    decode_steps: Cell<u64>,
 }
 
 /// Mutable per-sequence state: the KV cache and its fill level.
@@ -43,20 +55,49 @@ pub struct Session {
     pub pos: usize,
     /// The context tokens processed so far (for rollback/resync checks).
     pub tokens: Vec<u32>,
+    /// `keys[i]` = block-store content key of `tokens[..i]` (always
+    /// `tokens.len() + 1` entries), so publishing never rehashes settled
+    /// ground.
+    keys: Vec<u64>,
+    /// Token count already offered to the store (publish watermark).
+    published: usize,
 }
 
 impl ModelRuntime {
-    /// Load one model from the artifact directory.
+    /// Load one model from the artifact directory with a private block
+    /// store (sessions of this runtime still share it).
     pub fn load(dir: &Path, role: ModelRole) -> Result<ModelRuntime> {
+        Self::load_shared(
+            dir,
+            role,
+            Arc::new(BlockStore::new(kv::DEFAULT_BLOCK_TOKENS, kv::DEFAULT_CAPACITY_BLOCKS)),
+        )
+    }
+
+    /// Load one model, attaching `store` — share one store across every
+    /// runtime of the same role (same weights ⇒ bit-identical KV rows for
+    /// identical prefixes) so a cold worker restores blocks a sibling
+    /// already decoded. Never share a store across roles: the payload
+    /// shape differs and would be rejected block by block.
+    pub fn load_shared(
+        dir: &Path,
+        role: ModelRole,
+        store: Arc<BlockStore<Vec<f32>>>,
+    ) -> Result<ModelRuntime> {
         let manifest = Manifest::load(dir)?;
         let entry = match role {
             ModelRole::Target => &manifest.target,
             ModelRole::Drafter => &manifest.drafter,
         };
-        Self::load_entry(entry, manifest.config.vocab, manifest.config.max_seq)
+        Self::load_entry(entry, manifest.config.vocab, manifest.config.max_seq, store)
     }
 
-    fn load_entry(entry: &ModelEntry, vocab: usize, max_seq: usize) -> Result<ModelRuntime> {
+    fn load_entry(
+        entry: &ModelEntry,
+        vocab: usize,
+        max_seq: usize,
+        store: Arc<BlockStore<Vec<f32>>>,
+    ) -> Result<ModelRuntime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
 
         let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
@@ -96,16 +137,39 @@ impl ModelRuntime {
             max_seq,
             cache_elems,
             cache_dims,
+            store,
+            prefills: Cell::new(0),
+            decode_steps: Cell::new(0),
         })
     }
 
-    /// Fresh session with a zeroed KV cache.
+    /// Fresh session with a zeroed KV cache. Construction only — a live
+    /// session is recycled with [`rollback`](Self::rollback)/
+    /// [`resync`](Self::resync), never replaced (the cache literal is the
+    /// one allocation worth keeping).
     pub fn new_session(&self) -> Result<Session> {
         let zeros = vec![0f32; self.cache_elems];
         let cache = xla::Literal::vec1(zeros.as_slice())
             .reshape(&self.cache_dims)
             .context("shaping KV cache")?;
-        Ok(Session { cache, pos: 0, tokens: Vec::new() })
+        Ok(Session {
+            cache,
+            pos: 0,
+            tokens: Vec::new(),
+            keys: vec![kv::key_init()],
+            published: 0,
+        })
+    }
+
+    /// The settled-block store backing this runtime's sessions.
+    pub fn store(&self) -> &Arc<BlockStore<Vec<f32>>> {
+        &self.store
+    }
+
+    /// Lifetime (prefill, decode-step) forward counts — what the KV-reuse
+    /// tests observe to prove settled ground is not re-decoded.
+    pub fn forward_counts(&self) -> (u64, u64) {
+        (self.prefills.get(), self.decode_steps.get())
     }
 
     /// Process a whole prompt with the prefill executable; returns the
@@ -141,6 +205,12 @@ impl ModelRuntime {
         sess.cache = new_cache;
         sess.pos = prompt.len();
         sess.tokens = prompt.to_vec();
+        sess.keys.truncate(1);
+        for &t in prompt {
+            sess.keys.push(kv::key_step(*sess.keys.last().unwrap(), t));
+        }
+        sess.published = 0;
+        self.prefills.set(self.prefills.get() + 1);
         logits.to_vec::<f32>().context("prefill logits")
     }
 
@@ -168,6 +238,8 @@ impl ModelRuntime {
         sess.cache = new_cache;
         sess.pos += 1;
         sess.tokens.push(token);
+        sess.keys.push(kv::key_step(*sess.keys.last().unwrap(), token));
+        self.decode_steps.set(self.decode_steps.get() + 1);
         logits.to_vec::<f32>().context("decode logits")
     }
 
@@ -178,16 +250,127 @@ impl ModelRuntime {
         assert!(len <= sess.pos, "rollback {len} beyond pos {}", sess.pos);
         sess.pos = len;
         sess.tokens.truncate(len);
+        sess.keys.truncate(len + 1);
+        sess.published = sess.published.min(len);
     }
 
     /// Resynchronize `sess` to `ctx`: roll back to the longest shared
-    /// prefix and return its length — the KV-reuse primitive. The caller
-    /// then decodes only `ctx[resume..]`; settled ground is never
-    /// re-processed (or re-copied: `ctx` is a shared rope).
+    /// prefix, then *restore* any settled blocks the store holds for the
+    /// continuation — the KV-reuse primitive. Returns the resume length
+    /// (`sess.pos` after restore); the caller decodes only
+    /// `ctx[resume..]`. Settled ground is never re-processed (or
+    /// re-copied: `ctx` is a shared rope), and ground any sibling session
+    /// already decoded is never re-decoded either.
     pub fn resync(&self, sess: &mut Session, ctx: &crate::context::TokenRope) -> usize {
         let resume = ctx.common_prefix_with(&sess.tokens);
         self.rollback(sess, resume);
-        resume
+        self.restore_blocks(sess, ctx);
+        sess.pos
+    }
+
+    /// Extend `sess` over `ctx` from whole blocks already in the store.
+    /// The first candidate block starts at the aligned floor of the
+    /// current position (its overlap with live rows rewrites identical
+    /// content); the chain stops at the first miss. One cache readback +
+    /// rebuild covers every restored block.
+    fn restore_blocks(&self, sess: &mut Session, ctx: &crate::context::TokenRope) {
+        let b = self.store.block_tokens();
+        let base = (sess.pos / b) * b;
+        let row_elems = self.cache_elems / self.max_seq;
+        let mut found: Vec<Arc<KvBlock<Vec<f32>>>> = Vec::new();
+        let mut start = base;
+        let mut key = sess.keys[start];
+        while start + b <= ctx.len().min(self.max_seq) {
+            let expect: Vec<u32> = ctx.iter_range(start, start + b).collect();
+            let next_key = expect.iter().fold(key, |k, &t| kv::key_step(k, t));
+            let Some(block) = self.store.lookup(next_key, start, &expect) else { break };
+            if block.payload.len() != b * row_elems {
+                break; // foreign payload shape (wrong model): a miss
+            }
+            found.push(block);
+            key = next_key;
+            start += b;
+        }
+        if start <= sess.pos {
+            return; // nothing beyond what the cache already covers
+        }
+        let Ok(mut flat) = sess.cache.to_vec::<f32>() else { return };
+        for (i, block) in found.iter().enumerate() {
+            self.scatter_rows(&mut flat, base + i * b, &block.payload);
+        }
+        let Ok(cache) = xla::Literal::vec1(flat.as_slice()).reshape(&self.cache_dims) else {
+            return;
+        };
+        sess.cache = cache;
+        sess.tokens.truncate(base);
+        sess.keys.truncate(base + 1);
+        for block in &found {
+            for &t in &block.tokens {
+                sess.tokens.push(t);
+                sess.keys.push(kv::key_step(*sess.keys.last().unwrap(), t));
+            }
+        }
+        sess.pos = start;
+        sess.published = sess.published.max(start);
+    }
+
+    /// Offer every completed block of `sess` the store lacks. The cache
+    /// readback is skipped entirely when all candidate keys are present
+    /// (the steady state: at most one new block per `block_tokens` new
+    /// tokens).
+    pub fn publish_settled(&self, sess: &mut Session) {
+        let b = self.store.block_tokens();
+        let end = (sess.pos / b) * b;
+        let mut missing: Vec<usize> = Vec::new();
+        let mut s = (sess.published / b) * b;
+        while s + b <= end {
+            if !self.store.contains(sess.keys[s + b]) {
+                missing.push(s);
+            }
+            s += b;
+        }
+        sess.published = sess.published.max(end);
+        if missing.is_empty() {
+            return;
+        }
+        let Ok(flat) = sess.cache.to_vec::<f32>() else { return };
+        for s in missing {
+            self.store.publish(
+                sess.keys[s + b],
+                KvBlock {
+                    start: s,
+                    tokens: sess.tokens[s..s + b].to_vec(),
+                    payload: self.gather_rows(&flat, s, b),
+                },
+            );
+        }
+    }
+
+    /// Cache rows for token positions `[start, start + len)`, gathered
+    /// across the `(layer, k/v, head)` planes of the flat
+    /// `[n_layers, 2, n_heads, max_seq, head_dim]` cache.
+    fn gather_rows(&self, flat: &[f32], start: usize, len: usize) -> Vec<f32> {
+        let d = *self.cache_dims.last().expect("cache dims") as usize;
+        let planes = self.cache_elems / (self.max_seq * d);
+        let mut out = Vec::with_capacity(planes * len * d);
+        for p in 0..planes {
+            let base = p * self.max_seq * d;
+            out.extend_from_slice(&flat[base + start * d..base + (start + len) * d]);
+        }
+        out
+    }
+
+    /// Inverse of [`gather_rows`](Self::gather_rows): write a block's
+    /// rows back at `start`.
+    fn scatter_rows(&self, flat: &mut [f32], start: usize, payload: &[f32]) {
+        let d = *self.cache_dims.last().expect("cache dims") as usize;
+        let planes = self.cache_elems / (self.max_seq * d);
+        let len = payload.len() / (planes * d);
+        for p in 0..planes {
+            let base = p * self.max_seq * d;
+            flat[base + start * d..base + (start + len) * d]
+                .copy_from_slice(&payload[p * len * d..(p + 1) * len * d]);
+        }
     }
 
     /// Platform info string (for logs).
@@ -269,5 +452,63 @@ mod tests {
         let mut sess = rt.new_session().unwrap();
         rt.prefill(&mut sess, &vec![1; rt.max_seq]).unwrap();
         assert!(rt.decode_step(&mut sess, 1).is_err());
+    }
+
+    /// The tentpole mechanism, real-engine side: a second session of the
+    /// same runtime restores published blocks through `resync` at zero
+    /// forward cost, and the restored cache is numerically live.
+    #[test]
+    fn resync_restores_settled_blocks_across_sessions() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = Arc::new(BlockStore::new(4, 64));
+        let rt = ModelRuntime::load_shared(dir, ModelRole::Drafter, store.clone()).unwrap();
+        let mut s1 = rt.new_session().unwrap();
+        let prompt: Vec<u32> = (1..=12).collect();
+        rt.prefill(&mut s1, &prompt).unwrap();
+        rt.publish_settled(&mut s1);
+        assert_eq!(store.len(), 3, "12 tokens at block size 4");
+
+        let (pf0, dc0) = rt.forward_counts();
+        let mut s2 = rt.new_session().unwrap();
+        let ctx = crate::context::TokenRope::from_slice(&prompt);
+        let resume = rt.resync(&mut s2, &ctx);
+        assert_eq!(resume, 12, "restore did not cover the published prefix");
+        assert_eq!(s2.tokens, prompt);
+        assert_eq!(rt.forward_counts(), (pf0, dc0), "restore must cost no forwards");
+
+        // The restored cache must be bit-equivalent in effect: the next
+        // decode step agrees with the session that computed the rows.
+        let a = rt.decode_step(&mut s1, 77).unwrap();
+        let b = rt.decode_step(&mut s2, 77).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    /// After a rejection at position r, resync + decode touches only the
+    /// divergent suffix even when the session restores the settled ground
+    /// from blocks rather than its own rolled-back rows.
+    #[test]
+    fn rejection_decodes_only_divergent_suffix() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = Arc::new(BlockStore::new(4, 64));
+        let rt = ModelRuntime::load_shared(dir, ModelRole::Drafter, store.clone()).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        let stream: Vec<u32> = (10..26).collect(); // L = 16, blocks of 4
+        rt.prefill(&mut sess, &stream).unwrap();
+        rt.publish_settled(&mut sess);
+
+        // Reject at r = 10: corrected stream shares stream[..10].
+        let mut corrected = stream[..10].to_vec();
+        corrected.extend([99u32, 98, 97, 96, 95, 94]);
+        let ctx = crate::context::TokenRope::from_slice(&corrected);
+        let resume = rt.resync(&mut sess, &ctx);
+        assert_eq!(resume, 10, "rollback must keep the shared prefix");
+        let (_, dc0) = rt.forward_counts();
+        for &t in &corrected[10..] {
+            rt.decode_step(&mut sess, t).unwrap();
+        }
+        let (_, dc1) = rt.forward_counts();
+        assert_eq!(dc1 - dc0, 6, "re-decoded more than the divergent suffix");
     }
 }

@@ -8,9 +8,11 @@
 //! Enable the real runtime with `--features pjrt` after adding the
 //! vendored `xla` bindings to `rust/Cargo.toml` (see the comment there).
 
+use super::kv::BlockStore;
 use crate::bail;
 use crate::util::error::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Which of the pair to load.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,7 +47,27 @@ impl ModelRuntime {
         );
     }
 
+    /// Same surface as the real runtime's shared-store loader; the store
+    /// is accepted (and dropped) so factories compile unchanged.
+    pub fn load_shared(
+        dir: &Path,
+        role: ModelRole,
+        _store: Arc<BlockStore<Vec<f32>>>,
+    ) -> Result<ModelRuntime> {
+        Self::load(dir, role)
+    }
+
     pub fn new_session(&self) -> Result<Session> {
+        match self.unconstructible {}
+    }
+
+    /// The settled-block store backing this runtime's sessions.
+    pub fn store(&self) -> &Arc<BlockStore<Vec<f32>>> {
+        match self.unconstructible {}
+    }
+
+    /// Lifetime (prefill, decode-step) forward counts.
+    pub fn forward_counts(&self) -> (u64, u64) {
         match self.unconstructible {}
     }
 
@@ -62,8 +84,14 @@ impl ModelRuntime {
     }
 
     /// Same surface as the real runtime's KV-reuse primitive: roll back to
-    /// the longest prefix shared with `ctx`, return the resume length.
+    /// the longest prefix shared with `ctx`, restore any settled blocks
+    /// covering the continuation, and return the resume length.
     pub fn resync(&self, _sess: &mut Session, _ctx: &crate::context::TokenRope) -> usize {
+        match self.unconstructible {}
+    }
+
+    /// Offer every completed block of `sess` the store lacks.
+    pub fn publish_settled(&self, _sess: &mut Session) {
         match self.unconstructible {}
     }
 

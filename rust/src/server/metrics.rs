@@ -54,12 +54,27 @@ pub struct Snapshot {
     pub active_sessions: usize,
     /// Verification tasks the shared pool's workers ran (0 without a pool).
     pub pool_tasks: u64,
-    /// Mean submit→pop queue wait of pool tasks, µs. The serving-level
-    /// symptom of an oversubscribed SP budget.
+    /// Mean submit→pop queue wait of pool tasks, µs — over every popped
+    /// task including skipped ones, so rejection-staled tasks don't
+    /// vanish from the gauge. The serving-level symptom of an
+    /// oversubscribed SP budget.
     pub pool_queue_wait_us_mean: f64,
     /// Mean pop→forward dispatch overhead of pool tasks, µs. The
     /// coordination tax per task — what the zero-copy hot path minimizes.
     pub pool_dispatch_us_mean: f64,
+    /// Pool tasks popped but skipped because a rejection staled their
+    /// generation while they queued.
+    pub pool_skipped_stale: u64,
+    /// Pool tasks popped but skipped because their session had departed.
+    pub pool_skipped_departed: u64,
+    /// Fraction of pool pops that stayed on the worker's previous session
+    /// (warm KV state); 0 when nothing ran.
+    pub pool_affinity_hit_rate: f64,
+    /// Context positions pool forwards served from incremental KV state
+    /// (retained or block-restored) instead of re-decoding.
+    pub kv_tokens_reused: u64,
+    /// Context positions pool forwards re-decoded.
+    pub kv_tokens_redecoded: u64,
 }
 
 impl Metrics {
@@ -147,6 +162,20 @@ impl Metrics {
                 .pool_stats
                 .as_ref()
                 .map_or(0.0, |s| s.dispatch_us_mean()),
+            pool_skipped_stale: self.pool_stats.as_ref().map_or(0, |s| s.skipped_stale()),
+            pool_skipped_departed: self
+                .pool_stats
+                .as_ref()
+                .map_or(0, |s| s.skipped_departed()),
+            pool_affinity_hit_rate: self
+                .pool_stats
+                .as_ref()
+                .map_or(0.0, |s| s.affinity_hit_rate()),
+            kv_tokens_reused: self.pool_stats.as_ref().map_or(0, |s| s.kv_tokens_reused()),
+            kv_tokens_redecoded: self
+                .pool_stats
+                .as_ref()
+                .map_or(0, |s| s.kv_tokens_redecoded()),
         }
     }
 }
@@ -157,7 +186,9 @@ impl Snapshot {
         format!(
             "requests={} tokens={} active={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
              e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | \
-             {:.1} tok/s over {:.0}ms | pool tasks={} wait={:.0}µs dispatch={:.1}µs",
+             {:.1} tok/s over {:.0}ms | pool tasks={} wait={:.0}µs dispatch={:.1}µs \
+             skipped stale={} departed={} | affinity={:.0}% | \
+             kv reused={} redecoded={}",
             self.requests,
             self.tokens,
             self.active_sessions,
@@ -173,6 +204,11 @@ impl Snapshot {
             self.pool_tasks,
             self.pool_queue_wait_us_mean,
             self.pool_dispatch_us_mean,
+            self.pool_skipped_stale,
+            self.pool_skipped_departed,
+            self.pool_affinity_hit_rate * 100.0,
+            self.kv_tokens_reused,
+            self.kv_tokens_redecoded,
         )
     }
 }
@@ -238,6 +274,11 @@ mod tests {
         assert_eq!(s.pool_tasks, 0);
         assert_eq!(s.pool_queue_wait_us_mean, 0.0);
         assert_eq!(s.pool_dispatch_us_mean, 0.0);
+        assert_eq!(s.pool_skipped_stale, 0);
+        assert_eq!(s.pool_skipped_departed, 0);
+        assert_eq!(s.pool_affinity_hit_rate, 0.0);
+        assert_eq!(s.kv_tokens_reused, 0);
+        assert_eq!(s.kv_tokens_redecoded, 0);
 
         let stats = Arc::new(PoolStats::default());
         m.attach_pool_stats(stats.clone());
@@ -248,6 +289,36 @@ mod tests {
         assert!((s.pool_queue_wait_us_mean - 20.0).abs() < 1e-9);
         assert!((s.pool_dispatch_us_mean - 3.0).abs() < 1e-9);
         assert!(s.render().contains("pool tasks=2"));
+    }
+
+    #[test]
+    fn skipped_affinity_and_kv_gauges_are_reported() {
+        use crate::coordinator::KvReuse;
+        let mut m = Metrics::new();
+        let stats = Arc::new(PoolStats::default());
+        m.attach_pool_stats(stats.clone());
+
+        stats.record(10_000, 2_000);
+        // Skipped tasks carry their wait into the (un-survivor-biased)
+        // mean: (10µs + 50µs) over 2 popped tasks.
+        stats.record_skipped(false, 50_000);
+        stats.record_skipped(true, 0);
+        stats.record_affinity(true);
+        stats.record_affinity(true);
+        stats.record_affinity(false);
+        stats.record_kv(KvReuse { tokens_reused: 128, tokens_redecoded: 32 });
+
+        let s = m.snapshot();
+        assert_eq!(s.pool_skipped_stale, 1);
+        assert_eq!(s.pool_skipped_departed, 1);
+        assert!((s.pool_queue_wait_us_mean - 60.0 / 3.0).abs() < 1e-9);
+        assert!((s.pool_affinity_hit_rate - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.kv_tokens_reused, 128);
+        assert_eq!(s.kv_tokens_redecoded, 32);
+        let text = s.render();
+        assert!(text.contains("skipped stale=1 departed=1"), "render: {text}");
+        assert!(text.contains("affinity=67%"), "render: {text}");
+        assert!(text.contains("kv reused=128 redecoded=32"), "render: {text}");
     }
 
     #[test]

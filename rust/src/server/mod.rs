@@ -57,7 +57,18 @@ enum Backend {
 }
 
 impl Backend {
-    fn new(algo: AlgoKind, factory: &ServerFactory, pool: Option<&Arc<TargetPool>>) -> Self {
+    /// `worker_id` is the scheduler worker constructing this backend:
+    /// threaded into the factory so concurrent workers get distinct
+    /// `(role, id)` pairs — a factory that seeds per-server state by id
+    /// must never see two live servers aliasing the same stream. (DSI
+    /// backends identify their drafter by pool session id instead, which
+    /// is unique across workers by construction.)
+    fn new(
+        algo: AlgoKind,
+        factory: &ServerFactory,
+        pool: Option<&Arc<TargetPool>>,
+        worker_id: usize,
+    ) -> Self {
         match algo {
             AlgoKind::Dsi => {
                 let pool = pool.expect("DSI serving requires the shared target pool");
@@ -69,10 +80,12 @@ impl Backend {
             // rather than silently running non-SI. The discrete-event
             // simulator has the faithful PEARL model.
             AlgoKind::Si | AlgoKind::Pearl => Backend::Paired {
-                target: factory(ServerRole::Target, 0),
-                drafter: factory(ServerRole::Drafter, 0),
+                target: factory(ServerRole::Target, worker_id),
+                drafter: factory(ServerRole::Drafter, worker_id),
             },
-            AlgoKind::NonSi => Backend::Single { target: factory(ServerRole::Target, 0) },
+            AlgoKind::NonSi => {
+                Backend::Single { target: factory(ServerRole::Target, worker_id) }
+            }
         }
     }
 
@@ -207,7 +220,7 @@ impl Server {
         let depth = self.max_speculation_depth;
 
         std::thread::scope(|s| {
-            for _ in 0..n_workers {
+            for wid in 0..n_workers {
                 let job_rx = job_rx.clone();
                 let resp_tx = resp_tx.clone();
                 let factory = self.factory.clone();
@@ -249,7 +262,7 @@ impl Server {
                         };
                         let out = backend
                             .get_or_insert_with(|| {
-                                Backend::new(algo, &factory, pool.as_ref())
+                                Backend::new(algo, &factory, pool.as_ref(), wid)
                             })
                             .run(&cfg);
                         active.fetch_sub(1, Ordering::AcqRel);

@@ -1,0 +1,175 @@
+//! Compile-surface shim of the `xla` PJRT bindings.
+//!
+//! This crate exists so `cargo check --features pjrt` can type-check
+//! `dsi::runtime::pjrt` (the non-stub half of the runtime) without the
+//! real vendored bindings: it mirrors exactly the types and signatures
+//! that module uses, and every load-bearing entry point fails at runtime
+//! with a descriptive error from [`PjRtClient::cpu`] — nothing past
+//! client construction is reachable. Drop the real `xla-rs` bindings
+//! into `vendor/xla-rs` to execute models; the API below is the contract
+//! they must satisfy.
+//!
+//! Thread-model fidelity: the real `PjRtClient` is `Rc`-based (not
+//! `Send`), and the rest of the repo is built around that constraint
+//! (servers are constructed inside their owning thread). The shim keeps
+//! the client and executables `!Send` via a phantom `Rc` so threading
+//! regressions are caught at check time, not at vendoring time.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Marker making a type `!Send`/`!Sync`, like the real `Rc`-based
+/// handles.
+type NotSend = PhantomData<Rc<()>>;
+
+/// Shim error: everything fails with this until real bindings are
+/// vendored.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Self {
+            msg: format!(
+                "{what}: vendor/xla-rs is the compile-surface shim — vendor the real \
+                 xla bindings to execute models"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be built from / read back as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor value.
+pub struct Literal {
+    _not_send: NotSend,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _not_send: PhantomData }
+    }
+
+    /// Reinterpret with the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    /// Destructure a 2-tuple literal.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple2"))
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _not_send: NotSend,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    _not_send: NotSend,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _not_send: PhantomData }
+    }
+}
+
+/// Device-resident output buffer.
+pub struct PjRtBuffer {
+    _not_send: NotSend,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _not_send: NotSend,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; one result vector per
+    /// device, one buffer per output.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client (CPU platform in this repo). `Rc`-based in the real
+/// bindings, hence `!Send` here too.
+pub struct PjRtClient {
+    _not_send: NotSend,
+}
+
+impl PjRtClient {
+    /// Always fails in the shim — the one runtime gate every caller hits
+    /// first.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "shim".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_the_shim() {
+        let err = PjRtClient::cpu().err().expect("shim client must not construct");
+        assert!(err.to_string().contains("shim"), "unhelpful error: {err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[0f32]).reshape(&[1]).is_err());
+        assert!(Literal::vec1(&[1i32]).to_vec::<i32>().is_err());
+    }
+}
