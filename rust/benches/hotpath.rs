@@ -15,7 +15,11 @@
 //! - **affinity hit rate** — with a dedicated 2-session A/B probe
 //!   (affinity scheduling vs the FIFO control) asserting that workers
 //!   lock onto sessions (hit rate > 0.5) without giving up pool
-//!   throughput.
+//!   throughput,
+//! - **batch occupancy** — lanes per batched forward, with a 4-session
+//!   batched-vs-serial probe asserting the micro-batched plane settles
+//!   tokens ≥ 1.2x faster than the serial control (`batch_cap = 1`) with
+//!   occupancy > 1.5.
 //!
 //! Results land in `BENCH_hotpath.json` (override the path with
 //! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
@@ -35,6 +39,50 @@ use dsi::util::json::{num, obj, Json};
 use dsi::util::Rng64;
 use dsi::workload::Request;
 use std::time::Instant;
+
+/// Four sessions generating concurrently on a 2-worker (oversubscribed)
+/// pool with the given micro-batch cap; returns (settled tokens per
+/// second, batch occupancy mean). `batch_cap = 1` is the serial control —
+/// the A/B the batched-plane throughput gate compares against.
+fn batching_probe(batch_cap: usize, smoke: bool) -> (f64, f64) {
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.2),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 101 },
+        max_context: 8192,
+    };
+    let pool = TargetPool::new_with_batch_cap(&eng.factory(), 2, SchedPolicy::Affinity, batch_cap);
+    let stats = pool.stats();
+    let requests: u32 = if smoke { 1 } else { 2 };
+    let n_tokens: usize = if smoke { 24 } else { 48 };
+    let t0 = Instant::now();
+    let settled: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4u32)
+            .map(|sid| {
+                let pool = &pool;
+                let factory = eng.factory();
+                s.spawn(move || {
+                    let mut session = DsiSession::new(pool, &factory);
+                    let mut settled = 0usize;
+                    for r in 0..requests {
+                        let cfg = OnlineConfig {
+                            prompt: vec![sid + 1, 50 + sid, 130 + r],
+                            n_tokens,
+                            lookahead: 2,
+                            sp_degree: 4,
+                            max_speculation_depth: 64,
+                        };
+                        settled += session.generate(&cfg).tokens.len();
+                    }
+                    settled
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    (settled as f64 / elapsed, stats.batch_occupancy_mean())
+}
 
 /// Two sessions generating concurrently on a 2-worker pool under the
 /// given scheduling policy; returns (affinity hit rate, dispatched tasks
@@ -145,6 +193,7 @@ fn main() {
     println!("  kv tokens reused        {:>10}", snap.kv_tokens_reused);
     println!("  kv tokens redecoded     {:>10}", snap.kv_tokens_redecoded);
     println!("  affinity hit rate       {:>10.2}", snap.pool_affinity_hit_rate);
+    println!("  batch occupancy (mean)  {:>10.2}", snap.pool_batch_occupancy_mean);
 
     // The 2-session scheduling probe: affinity must lock workers onto
     // sessions (hit rate > 0.5) without costing pool task throughput
@@ -153,6 +202,18 @@ fn main() {
     let (fifo_hit, fifo_tps) = affinity_probe(SchedPolicy::Fifo, smoke);
     println!("\n  2-session probe: affinity hit {aff_hit:.2} ({aff_tps:.0} tasks/s) \
          vs fifo hit {fifo_hit:.2} ({fifo_tps:.0} tasks/s)");
+
+    // The batched-plane probe: 4 sessions on an oversubscribed 2-worker
+    // pool, micro-batched vs the serial control (batch_cap = 1). This is
+    // where the max-not-sum batch latency model pays off.
+    let (batched_tps, batched_occ) = batching_probe(8, smoke);
+    let (serial_tps, _) = batching_probe(1, smoke);
+    let batch_speedup = batched_tps / serial_tps;
+    println!(
+        "  4-session batching probe: batched {batched_tps:.0} tok/s \
+         (occupancy {batched_occ:.2}) vs serial {serial_tps:.0} tok/s \
+         = {batch_speedup:.2}x"
+    );
 
     let out = obj(vec![
         ("bench", Json::Str("hotpath".into())),
@@ -182,6 +243,7 @@ fn main() {
         ("kv_tokens_reused", num(snap.kv_tokens_reused as f64)),
         ("kv_tokens_redecoded", num(snap.kv_tokens_redecoded as f64)),
         ("affinity_hit_rate", num(snap.pool_affinity_hit_rate)),
+        ("batch_occupancy_mean", num(snap.pool_batch_occupancy_mean)),
         (
             "affinity_probe_2_sessions",
             obj(vec![
@@ -189,6 +251,15 @@ fn main() {
                 ("tasks_per_s", num(aff_tps)),
                 ("hit_rate_fifo_control", num(fifo_hit)),
                 ("tasks_per_s_fifo_control", num(fifo_tps)),
+            ]),
+        ),
+        (
+            "batching_probe_4_sessions",
+            obj(vec![
+                ("tokens_per_s_batched", num(batched_tps)),
+                ("tokens_per_s_serial_control", num(serial_tps)),
+                ("speedup_x", num(batch_speedup)),
+                ("batch_occupancy_mean", num(batched_occ)),
             ]),
         ),
     ]);
@@ -215,5 +286,20 @@ fn main() {
     assert!(
         aff_tps >= fifo_tps * 0.6,
         "affinity collapsed pool throughput: {aff_tps:.0} vs fifo {fifo_tps:.0} tasks/s"
+    );
+    // The batched-plane acceptance gates: micro-batches must genuinely
+    // form (occupancy well above 1 lane per forward) and the max-not-sum
+    // latency model must buy real throughput over the serial control at
+    // 4 concurrent sessions. The wait engine's per-lane cost is 5% of a
+    // forward, so a healthy plane lands near the occupancy factor; 1.2x
+    // only catches a collapse back to serialization.
+    assert!(
+        batched_occ > 1.5,
+        "batched plane degenerated to serial: occupancy {batched_occ:.2}"
+    );
+    assert!(
+        batch_speedup >= 1.2,
+        "batched plane below the 1.2x bar: {batched_tps:.0} vs serial \
+         {serial_tps:.0} tok/s ({batch_speedup:.2}x)"
     );
 }

@@ -21,6 +21,10 @@
 //! node resource: [`pool::TargetPool`] owns the target workers, tasks are
 //! tagged `(session, generation)`, and any number of [`DsiSession`]s run
 //! concurrently against one pool with per-session rejection staling.
+//! Workers drain bounded cross-session *micro-batches* and execute them
+//! through [`LmServer::predict_batch`] — one batched forward per drain,
+//! charged `max`(lane costs) rather than their sum — so DSI's deliberate
+//! flood of verification tasks fills lanes instead of serializing.
 
 mod dsi;
 mod nonsi;
@@ -32,7 +36,7 @@ pub mod wait_engine;
 pub use dsi::{run_dsi, DsiSession};
 pub use nonsi::{run_nonsi, run_nonsi_with};
 pub use pool::{PoolHandle, PoolStats, SchedPolicy, SessionMsg, TargetPool, VerifyResult};
-pub use real_engine::{real_factory, RealServer};
+pub use real_engine::{real_factory, real_factory_with_kv, RealServer};
 pub use si::{run_si, run_si_with};
 pub use wait_engine::{WaitEngine, WaitServer};
 
@@ -67,6 +71,18 @@ impl std::ops::Sub for KvReuse {
     }
 }
 
+/// One lane of a batched verification forward: a shared [`TokenRope`]
+/// view of the stream plus the `[from, to)` prediction span — exactly the
+/// payload of one `predictions` call. Pool workers move a popped task's
+/// rope straight into a `BatchReq` (no clone), so batching adds no copies
+/// to the hot path.
+#[derive(Debug, Clone)]
+pub struct BatchReq {
+    pub ctx: TokenRope,
+    pub from: usize,
+    pub to: usize,
+}
+
 /// A model server owned by exactly one thread (target-pool worker, drafter
 /// thread, or an inline baseline loop).
 ///
@@ -81,8 +97,24 @@ pub trait LmServer {
     /// whose prefix is `ctx` (`ctx.len() >= to - 1`, `from >= 1`):
     /// `result[i]` is the model's next-token prediction given
     /// `ctx[..from + i]`. One call == one verification task == one
-    /// (batched) forward pass in the latency model.
+    /// (batched) forward pass in the latency model. Engines with a native
+    /// batched plane implement this as the single-lane wrapper of
+    /// [`predict_batch`](Self::predict_batch)'s core.
     fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32>;
+
+    /// Run every lane of `reqs` as ONE batched forward, returning each
+    /// lane's predictions in order. The contract is strict losslessness:
+    /// `result[i]` must be bit-identical to what a serial
+    /// `predictions(reqs[i].ctx, ..)` sequence would return — batching
+    /// may only change *latency*, never tokens. The default is the serial
+    /// fallback (one forward per lane), so stateless or single-stream
+    /// servers need no batching knowledge; the wait engine overrides it
+    /// to charge `max`(lane costs) + a small per-lane cost instead of the
+    /// sum, and the real engine decodes lanes in lockstep over per-lane
+    /// KV sessions.
+    fn predict_batch(&mut self, reqs: &[BatchReq]) -> Vec<Vec<u32>> {
+        reqs.iter().map(|r| self.predictions(&r.ctx, r.from, r.to)).collect()
+    }
 
     /// Upper bound on context length (KV capacity). Drafting and
     /// speculation stop at this horizon.

@@ -29,6 +29,14 @@
 //!   tasks while others wait, so a chatty session cannot starve its
 //!   neighbors. [`SchedPolicy::Fifo`] (oldest-head across all sessions)
 //!   remains available as the A/B control the bench compares against.
+//! - **Micro-batching**: a worker pop drains up to
+//!   [`BATCH_CAP_DEFAULT`] tasks (affinity-first within the drain, then
+//!   oldest-head steals, streak bound still enforced) and runs them as
+//!   ONE [`LmServer::predict_batch`] forward — the batched verification
+//!   plane. Staleness is re-checked per task at pop (skips never reach a
+//!   lane) and again at completion (a generation staled mid-forward sends
+//!   nothing). Affinity and queue-wait accounting stay *per task*;
+//!   [`PoolStats::batch_occupancy_mean`] reports lanes per forward.
 //! - **Timing**: each task's submit→pop queue wait and pop→forward
 //!   dispatch overhead accumulate in [`PoolStats`] — including tasks that
 //!   were popped but *skipped* (staled or departed), which are counted
@@ -43,19 +51,35 @@
 //! [`TargetPool::register`]; dropping the handle unregisters the session
 //! and purges its queued tasks.
 
-use super::{KvReuse, LmServer, ServerFactory, ServerRole};
+use super::{BatchReq, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Consecutive same-session tasks a worker serves before it must steal
 /// an oldest-waiting other-session task (if one exists). Bounds the
 /// neighbor wait a warm session can impose to `AFFINITY_STREAK_MAX`
-/// forwards per competing worker.
+/// forwards per competing worker. The bound is enforced *inside*
+/// micro-batch drains too: a drain switches sessions once the streak
+/// trips, so a full batch can't be monopolized by one chatty stream
+/// while others wait.
 pub const AFFINITY_STREAK_MAX: usize = 8;
+
+/// Default micro-batch drain cap: the most tasks one worker pop folds
+/// into a single [`LmServer::predict_batch`] forward. Small enough that a
+/// straggler lane adds little padding, large enough to absorb the task
+/// flood DSI's speculation parallelism deliberately creates. `1`
+/// reproduces the pre-batching serial plane (the bench's A/B control).
+pub const BATCH_CAP_DEFAULT: usize = 8;
+
+/// How long a worker whose drain came up short lets near-simultaneous
+/// submits land before running a partial batch. Only paid when more than
+/// one session is registered (cross-session traffic is what fills lanes)
+/// and at most once per drain, so single-stream latency is untouched.
+const BATCH_DRAIN_WINDOW: Duration = Duration::from_micros(200);
 
 /// Worker scheduling policy for the shared queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,9 +131,10 @@ struct VerifyTask {
     submitted: Instant,
 }
 
-/// What a worker's pop yields.
+/// What a worker's pop yields: a non-empty micro-batch of tasks to run
+/// as one batched forward, or the shutdown token.
 enum Popped {
-    Task(VerifyTask),
+    Batch(Vec<VerifyTask>),
     Shutdown,
 }
 
@@ -176,6 +201,9 @@ pub struct PoolStats {
     affinity_hits: AtomicU64,
     /// Pops that switched the worker to a different session.
     affinity_misses: AtomicU64,
+    /// Batched forwards executed (every dispatched task rides in exactly
+    /// one; `tasks / batches` is the lane occupancy).
+    batches: AtomicU64,
     /// Context positions served from incremental KV state across all
     /// dispatched forwards (differenced from [`LmServer::kv_reuse`]).
     kv_tokens_reused: AtomicU64,
@@ -199,6 +227,27 @@ impl PoolStats {
             self.skipped_stale.fetch_add(1, Ordering::Relaxed);
         }
         self.skipped_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+    }
+
+    /// Record one batched forward (its lanes were each `record`ed).
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Batched forwards executed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean lanes per batched forward (0 before any forward ran). The
+    /// batching win is real exactly when this exceeds 1: N lanes settle
+    /// for one `max`-cost forward instead of N summed ones.
+    pub fn batch_occupancy_mean(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            return 0.0;
+        }
+        self.tasks() as f64 / b as f64
     }
 
     /// Record whether a pop stayed on the worker's previous session.
@@ -281,6 +330,8 @@ struct PoolShared {
     queue: Mutex<Queues>,
     cv: Condvar,
     policy: SchedPolicy,
+    /// Micro-batch drain cap (>= 1; 1 == the serial plane).
+    batch_cap: usize,
     routes: Mutex<HashMap<u64, Route>>,
     /// Bumped on every register/unregister; workers revalidate their local
     /// route cache against it, so a departed session is still skipped
@@ -304,32 +355,72 @@ impl PoolShared {
         self.cv.notify_one();
     }
 
-    /// Pop the next task for a worker whose last-served session is
-    /// `preferred`. Under [`SchedPolicy::Affinity`] the worker stays on
-    /// its warm session when it has work — unless `force_steal` (streak
-    /// bound hit), in which case an oldest-waiting other-session task is
-    /// taken if any exists; with no own work it steals the oldest head.
-    /// Under [`SchedPolicy::Fifo`] it always takes the oldest head.
-    fn pop(&self, preferred: Option<u64>, force_steal: bool) -> Popped {
+    /// Session the next drained task should come from, given the session
+    /// last taken (`cur`) and the live streak count. Mirrors the serial
+    /// pick rule so batching changes only *when* tasks run, not *which*
+    /// run next: affinity stays on the current session until it drains or
+    /// the streak bound trips, then steals the oldest-waiting head; FIFO
+    /// always takes the oldest head.
+    fn pick_next(&self, q: &Queues, cur: Option<u64>, streak: usize) -> Option<u64> {
+        let own = cur.filter(|s| q.subs.contains_key(s));
+        match self.policy {
+            SchedPolicy::Fifo => q.oldest_head(None),
+            SchedPolicy::Affinity if streak >= AFFINITY_STREAK_MAX => {
+                q.oldest_head(cur).or(own)
+            }
+            SchedPolicy::Affinity => own.or_else(|| q.oldest_head(None)),
+        }
+    }
+
+    /// Pop a micro-batch for a worker whose last-served session is
+    /// `preferred` with `streak_in` consecutive same-session forwards
+    /// behind it. Blocks for the first task, then drains up to
+    /// `batch_cap` under the same pick rule (the streak keeps advancing
+    /// inside the drain, so the anti-starvation bound holds per task,
+    /// not per batch). A short-of-cap drain waits [`BATCH_DRAIN_WINDOW`]
+    /// once — only when other sessions are registered — so
+    /// near-simultaneous cross-session submits share one forward.
+    fn pop_batch(&self, preferred: Option<u64>, streak_in: usize) -> Popped {
         let mut q = self.queue.lock().unwrap();
         loop {
-            let own = preferred.filter(|s| q.subs.contains_key(s));
-            let pick = match self.policy {
-                SchedPolicy::Fifo => q.oldest_head(None),
-                SchedPolicy::Affinity if force_steal => q.oldest_head(preferred).or(own),
-                SchedPolicy::Affinity => own.or_else(|| q.oldest_head(None)),
+            let Some(first) = self.pick_next(&q, preferred, streak_in) else {
+                // Shutdown only once every queued task is drained: a
+                // handle that submitted before the pool dropped still
+                // gets its result (or its recorded skip), never a silent
+                // abandonment.
+                if q.shutdown > 0 {
+                    q.shutdown -= 1;
+                    return Popped::Shutdown;
+                }
+                q = self.cv.wait(q).unwrap();
+                continue;
             };
-            if let Some(sid) = pick {
-                return Popped::Task(q.pop_from(sid));
+            let mut batch = vec![q.pop_from(first)];
+            let mut cur = first;
+            let mut streak = if Some(first) == preferred { streak_in + 1 } else { 1 };
+            let mut window_spent = false;
+            while batch.len() < self.batch_cap {
+                match self.pick_next(&q, Some(cur), streak) {
+                    Some(sid) => {
+                        streak = if sid == cur { streak + 1 } else { 1 };
+                        cur = sid;
+                        batch.push(q.pop_from(sid));
+                    }
+                    None if !window_spent && self.active.load(Ordering::Acquire) > 1 => {
+                        window_spent = true;
+                        let (qq, _t) = self.cv.wait_timeout(q, BATCH_DRAIN_WINDOW).unwrap();
+                        q = qq;
+                    }
+                    None => break,
+                }
             }
-            // Shutdown only once every queued task is drained: a handle
-            // that submitted before the pool dropped still gets its
-            // result (or its recorded skip), never a silent abandonment.
-            if q.shutdown > 0 {
-                q.shutdown -= 1;
-                return Popped::Shutdown;
+            // The drain-window wait may have consumed a push notification
+            // meant for an idle sibling; re-notify if work remains so no
+            // task sits queued behind a sleeping worker.
+            if !q.subs.is_empty() {
+                self.cv.notify_one();
             }
-            q = self.cv.wait(q).unwrap();
+            return Popped::Batch(batch);
         }
     }
 
@@ -427,15 +518,29 @@ impl TargetPool {
         Self::new_with_policy(factory, size, SchedPolicy::Affinity)
     }
 
+    /// Spawn `size` workers under `policy` with the default micro-batch
+    /// cap ([`BATCH_CAP_DEFAULT`]).
+    pub fn new_with_policy(factory: &ServerFactory, size: usize, policy: SchedPolicy) -> Self {
+        Self::new_with_batch_cap(factory, size, policy, BATCH_CAP_DEFAULT)
+    }
+
     /// Spawn `size` workers, each constructing its own target server from
     /// `factory` (servers are built inside their owning thread — the PJRT
-    /// client is not `Send`), scheduling the shared queue under `policy`.
-    pub fn new_with_policy(factory: &ServerFactory, size: usize, policy: SchedPolicy) -> Self {
+    /// client is not `Send`), scheduling the shared queue under `policy`
+    /// and draining up to `batch_cap` tasks per batched forward
+    /// (`batch_cap = 1` is the serial A/B control).
+    pub fn new_with_batch_cap(
+        factory: &ServerFactory,
+        size: usize,
+        policy: SchedPolicy,
+        batch_cap: usize,
+    ) -> Self {
         assert!(size >= 1, "pool needs at least one worker");
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(Queues::default()),
             cv: Condvar::new(),
             policy,
+            batch_cap: batch_cap.max(1),
             routes: Mutex::new(HashMap::new()),
             route_epoch: AtomicU64::new(0),
             next_session: AtomicU64::new(1),
@@ -461,37 +566,43 @@ impl TargetPool {
                 // were served (the anti-starvation streak).
                 let mut last_session: Option<u64> = None;
                 let mut streak = 0usize;
+                // Per-lane metadata of the batch being dispatched (the
+                // rope itself moves into the BatchReq).
+                struct Lane {
+                    session: u64,
+                    gen: u64,
+                    from: usize,
+                    wait_ns: u64,
+                }
                 loop {
-                    let popped_task =
-                        match shared.pop(last_session, streak >= AFFINITY_STREAK_MAX) {
-                            Popped::Shutdown => break,
-                            Popped::Task(t) => t,
-                        };
-                    let VerifyTask { session, gen, ctx, from, to, submitted } = popped_task;
+                    let batch = match shared.pop_batch(last_session, streak) {
+                        Popped::Shutdown => break,
+                        Popped::Batch(b) => b,
+                    };
                     let popped = Instant::now();
-                    let wait_ns = popped.duration_since(submitted).as_nanos() as u64;
 
                     let epoch = shared.route_epoch.load(Ordering::Acquire);
                     if epoch != cache_epoch {
                         cache.clear();
                         cache_epoch = epoch;
                     }
-                    if !cache.contains_key(&session) {
-                        let routes = shared.routes.lock().unwrap();
-                        if let Some(r) = routes.get(&session) {
-                            cache.insert(session, (r.gen.clone(), r.tx.clone()));
+                    // Pop-time staleness pass: a departed session or an
+                    // advanced generation means the lane would be wasted
+                    // padding. Skips are still counted — with their queue
+                    // wait — so the wait gauge keeps the tasks that
+                    // waited through a rejection.
+                    let mut lanes: Vec<Lane> = Vec::with_capacity(batch.len());
+                    let mut reqs: Vec<BatchReq> = Vec::with_capacity(batch.len());
+                    for t in batch {
+                        let VerifyTask { session, gen, ctx, from, to, submitted } = t;
+                        let wait_ns = popped.duration_since(submitted).as_nanos() as u64;
+                        if !cache.contains_key(&session) {
+                            let routes = shared.routes.lock().unwrap();
+                            if let Some(r) = routes.get(&session) {
+                                cache.insert(session, (r.gen.clone(), r.tx.clone()));
+                            }
                         }
-                    }
-                    // Route lookup doubles as the staleness check: a
-                    // departed session or an advanced generation means the
-                    // forward would be wasted. Skips are still counted —
-                    // with their queue wait — so the wait gauge keeps the
-                    // tasks that waited through a rejection. The send goes
-                    // through the cached Sender by reference — no clone
-                    // per task; eviction on a dead channel is deferred
-                    // past the borrow.
-                    let send_failed = {
-                        let Some((cur, tx)) = cache.get(&session) else {
+                        let Some((cur, _)) = cache.get(&session) else {
                             shared.stats.record_skipped(true, wait_ns);
                             continue;
                         };
@@ -500,33 +611,61 @@ impl TargetPool {
                             shared.stats.record_skipped(false, wait_ns);
                             continue;
                         }
-                        // Affinity state tracks *dispatched forwards* only:
-                        // a skipped task never warmed (or used) this
-                        // server's KV state, so it must neither move the
-                        // hit-rate gauge nor advance the streak.
-                        let hit = last_session == Some(session);
+                        lanes.push(Lane { session, gen, from, wait_ns });
+                        reqs.push(BatchReq { ctx, from, to });
+                    }
+                    if lanes.is_empty() {
+                        continue; // the whole drain was stale padding
+                    }
+                    // Affinity state tracks *dispatched lanes* only, per
+                    // task (not per batch): a skipped task never warmed
+                    // (or used) this server's KV state, so it must
+                    // neither move the hit-rate gauge nor advance the
+                    // streak.
+                    for lane in &lanes {
+                        let hit = last_session == Some(lane.session);
                         shared.stats.record_affinity(hit);
                         streak = if hit { streak + 1 } else { 1 };
-                        last_session = Some(session);
-                        shared
-                            .stats
-                            .record(wait_ns, popped.elapsed().as_nanos() as u64);
-                        let kv_before = server.kv_reuse();
-                        let preds = server.predictions(&ctx, from, to);
-                        shared.stats.record_kv(server.kv_reuse() - kv_before);
-                        // If the generation staled mid-forward the
-                        // coordinator drops the result by tag; if the
-                        // session departed, the send just fails.
-                        tx.send(SessionMsg::Verify(VerifyResult {
-                            session,
-                            gen,
-                            from,
-                            preds,
-                        }))
-                        .is_err()
-                    };
-                    if send_failed {
-                        cache.remove(&session);
+                        last_session = Some(lane.session);
+                    }
+                    // Dispatch overhead (routing + staleness checks) is a
+                    // per-batch cost; split it across lanes so the
+                    // per-task mean stays comparable to the serial plane.
+                    let dispatch_ns = popped.elapsed().as_nanos() as u64 / lanes.len() as u64;
+                    for lane in &lanes {
+                        shared.stats.record(lane.wait_ns, dispatch_ns);
+                    }
+                    shared.stats.record_batch();
+                    let kv_before = server.kv_reuse();
+                    let preds = server.predict_batch(&reqs);
+                    shared.stats.record_kv(server.kv_reuse() - kv_before);
+                    debug_assert_eq!(preds.len(), lanes.len(), "lane count");
+                    for (lane, preds) in lanes.into_iter().zip(preds) {
+                        // Completion-time staleness re-check: a lane whose
+                        // generation a rejection staled mid-forward sends
+                        // nothing (the coordinator would drop it by tag
+                        // anyway); a departed session just fails the send.
+                        // The send goes through the cached Sender by
+                        // reference — no clone per task; eviction on a
+                        // dead channel is deferred past the borrow.
+                        let send_failed = {
+                            let Some((cur, tx)) = cache.get(&lane.session) else {
+                                continue;
+                            };
+                            if lane.gen != cur.load(Ordering::Acquire) {
+                                continue;
+                            }
+                            tx.send(SessionMsg::Verify(VerifyResult {
+                                session: lane.session,
+                                gen: lane.gen,
+                                from: lane.from,
+                                preds,
+                            }))
+                            .is_err()
+                        };
+                        if send_failed {
+                            cache.remove(&lane.session);
+                        }
                     }
                 }
             }));
@@ -754,7 +893,8 @@ mod tests {
 
     /// The streak bound: a session with a continuously full sub-queue
     /// must not starve a neighbor — after `AFFINITY_STREAK_MAX`
-    /// consecutive same-session tasks, the worker steals the waiting one.
+    /// consecutive same-session tasks (counted across batch drains), the
+    /// worker steals the waiting one.
     #[test]
     fn streak_bound_prevents_starvation() {
         let pool = pool_with_latency(1, 30.0);
@@ -771,16 +911,21 @@ mod tests {
         b.submit(0, rope(&[2, 2, 2]), 2, 3);
 
         // B's one task is younger than every queued A task, yet it must
-        // be served before A's sub-queue drains.
+        // be served before A's sub-queue drains: when it arrives, some A
+        // results must still be outstanding (queued or in a later batch).
         assert!(
             rx_b.recv_timeout(Duration::from_millis(30 * 12 + 500)).is_ok(),
             "B starved behind A's streak"
         );
+        let mut got = 0;
+        while let Ok(SessionMsg::Verify(_)) = rx_a.try_recv() {
+            got += 1;
+        }
         assert!(
-            pool.shared.queued_tasks_of(a.session_id()) > 0,
-            "B was only served after A fully drained"
+            got < AFFINITY_STREAK_MAX + 3,
+            "B was only served after A fully drained ({got} A results first)"
         );
-        let mut got = 0; // blocker + the streak submits all land on rx_a
+        // No A task lost: blocker + the streak submits all land on rx_a.
         while recv_verify(&rx_a).is_some() {
             got += 1;
         }
@@ -859,6 +1004,75 @@ mod tests {
             redecoded_after_first + 1,
             "extension re-decoded settled ground"
         );
+    }
+
+    /// Staleness purge inside a drained micro-batch: lanes whose
+    /// generation staled while they queued are skipped at pop — counted
+    /// with their wait, never dispatched — while fresh lanes of the same
+    /// drain are served normally.
+    #[test]
+    fn batched_drain_skips_staled_lanes() {
+        // An 80ms blocker keeps the single worker busy so all three of
+        // A's tasks are deterministically drained in ONE batch.
+        let pool = pool_with_latency(1, 80.0);
+        let (tx_blocker, rx_blocker) = channel();
+        let blocker = pool.register(tx_blocker);
+        blocker.submit(0, rope(&[9, 9, 9]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10)); // worker takes the blocker
+
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1]), 2, 3);
+        a.submit(7, rope(&[1, 1, 1, 1, 1]), 2, 3);
+        // Stale generation 0 directly on the route (bypassing the queue
+        // purge) so the WORKER must detect it per lane at pop.
+        pool.shared
+            .routes
+            .lock()
+            .unwrap()
+            .get(&a.session_id())
+            .expect("registered route")
+            .gen
+            .store(7, Ordering::Release);
+
+        assert!(recv_verify(&rx_blocker).is_some());
+        let r = recv_verify(&rx_a).expect("fresh-gen lane served");
+        assert_eq!(r.gen, 7);
+        assert!(rx_a.try_recv().is_err(), "a staled lane was dispatched");
+        let stats = pool.stats();
+        assert_eq!(stats.skipped_stale(), 2);
+        assert_eq!(stats.tasks(), 2, "blocker + the one fresh lane");
+        // Two batched forwards ran (blocker alone, then the 1-live-lane
+        // drain); skipped lanes don't inflate occupancy.
+        assert_eq!(stats.batches(), 2);
+        assert!((stats.batch_occupancy_mean() - 1.0).abs() < 1e-9);
+    }
+
+    /// Occupancy and per-task accounting under a multi-lane drain: three
+    /// queued tasks fold into one batched forward — `batches` counts
+    /// forwards while affinity and queue-wait accounting stay per task.
+    #[test]
+    fn batched_drain_counts_occupancy_and_per_task_affinity() {
+        let pool = pool_with_latency(1, 40.0);
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10)); // worker takes the blocker
+        a.submit(0, rope(&[1, 1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1, 1, 1]), 2, 3);
+        for _ in 0..4 {
+            assert!(recv_verify(&rx_a).is_some(), "lane result missing");
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.tasks(), 4);
+        assert_eq!(stats.batches(), 2, "3 queued tasks should drain as one batch");
+        assert!((stats.batch_occupancy_mean() - 2.0).abs() < 1e-9);
+        // Per-task (not per-batch) affinity accounting: every dispatched
+        // lane moved the gauge.
+        let hits = (stats.affinity_hit_rate() * 4.0).round() as u64;
+        assert_eq!(hits, 3, "blocker is a miss; every batched lane a hit");
     }
 
     /// The departure purge must remove EVERY queued task of the session —

@@ -16,17 +16,21 @@
 //! Requires the `pjrt` cargo feature; without it `runtime::pjrt` is the
 //! stub backend and [`RealServer::load`] returns a descriptive error.
 
-use super::{KvReuse, LmServer, ServerFactory, ServerRole};
+use super::{BatchReq, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
-use crate::runtime::kv::{self, BlockStore};
-use crate::runtime::pjrt::{ModelRole, ModelRuntime, Session};
+use crate::runtime::kv::{self, BlockStore, StoreStats};
+use crate::runtime::pjrt::{DecodeLane, ModelRole, ModelRuntime, Session};
 use crate::runtime::sampler::argmax;
 use std::path::PathBuf;
 use std::sync::Arc;
 
 pub struct RealServer {
     rt: ModelRuntime,
-    sess: Session,
+    /// Per-lane KV sessions. Lane 0 is the serial-path session
+    /// (`predictions` always runs there); batched calls spread their
+    /// streams across further lanes, each constructed once and then
+    /// recycled via rollback/resync like lane 0.
+    sessions: Vec<Session>,
     reuse: KvReuse,
 }
 
@@ -56,10 +60,11 @@ impl RealServer {
             ServerRole::Drafter => ModelRole::Drafter,
         };
         let rt = ModelRuntime::load_shared(artifacts, model_role, store)?;
-        // The one place a session is constructed; from here on it is
-        // recycled via rollback/resync, never replaced.
+        // The one place the serial-path session is constructed; from here
+        // on it is recycled via rollback/resync, never replaced (batched
+        // calls grow further lane sessions on demand, same discipline).
         let sess = rt.new_session()?;
-        Ok(Self { rt, sess, reuse: KvReuse::default() })
+        Ok(Self { rt, sessions: vec![sess], reuse: KvReuse::default() })
     }
 
     /// Lifetime (prefill, decode-step) forward counts of the underlying
@@ -69,51 +74,226 @@ impl RealServer {
     }
 }
 
+/// One verification task served on one lane session — the body of the old
+/// single-session `predictions`, free-standing so both the serial path
+/// (lane 0) and every batched lane run the identical code.
+fn serve_lane(
+    rt: &ModelRuntime,
+    sess: &mut Session,
+    reuse: &mut KvReuse,
+    ctx: &TokenRope,
+    from: usize,
+    to: usize,
+) -> Vec<u32> {
+    assert!(from >= 1 && to > from && ctx.len() >= to - 1, "bad range {from}..{to}");
+    // Roll back to the shared prefix, then restore any settled blocks
+    // the store holds for the continuation.
+    rt.resync(sess, ctx);
+
+    let mut preds = Vec::with_capacity(to - from);
+    if sess.pos == 0 {
+        // Truly cold (no shared prefix, no reusable blocks): prefill
+        // through the first needed prediction, then decode the rest.
+        // Prefill is the one place the context is materialized — the
+        // executable wants a contiguous padded buffer. The session is
+        // rolled back and reused; its cache literal is recycled as
+        // the prefill executable's functional input.
+        let pre = from.min(ctx.len()); // prefill ctx[..pre] predicts index `pre`
+        let prompt = ctx.to_vec_range(0, pre);
+        let logits = rt.prefill(sess, &prompt).expect("prefill");
+        preds.push(argmax(&logits));
+        for tok in ctx.iter_range(pre, to - 1) {
+            let logits = rt.decode_step(sess, tok).expect("decode");
+            preds.push(argmax(&logits));
+        }
+        reuse.tokens_redecoded += (to - 1) as u64;
+        rt.publish_settled(sess);
+        // preds covers indices pre..to, and pre == from here.
+        return preds;
+    }
+
+    // Warm (or block-restored) cache: roll back to the useful prefix
+    // and decode forward — only the divergent suffix is processed (or
+    // touched at all).
+    let resume = sess.pos.min(from - 1);
+    rt.rollback(sess, resume);
+    for (off, tok) in ctx.iter_range(resume, to - 1).enumerate() {
+        let logits = rt.decode_step(sess, tok).expect("decode");
+        if resume + off + 1 >= from {
+            preds.push(argmax(&logits));
+        }
+    }
+    reuse.tokens_reused += resume as u64;
+    reuse.tokens_redecoded += (to - 1 - resume) as u64;
+    rt.publish_settled(sess);
+    debug_assert_eq!(preds.len(), to - from);
+    preds
+}
+
 impl LmServer for RealServer {
     fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
-        assert!(from >= 1 && to > from && ctx.len() >= to - 1, "bad range {from}..{to}");
-        // Roll back to the shared prefix, then restore any settled blocks
-        // the store holds for the continuation.
-        self.rt.resync(&mut self.sess, ctx);
+        serve_lane(&self.rt, &mut self.sessions[0], &mut self.reuse, ctx, from, to)
+    }
 
-        let mut preds = Vec::with_capacity(to - from);
-        if self.sess.pos == 0 {
-            // Truly cold (no shared prefix, no reusable blocks): prefill
-            // through the first needed prediction, then decode the rest.
-            // Prefill is the one place the context is materialized — the
-            // executable wants a contiguous padded buffer. The session is
-            // rolled back and reused; its cache literal is recycled as
-            // the prefill executable's functional input.
-            let pre = from.min(ctx.len()); // prefill ctx[..pre] predicts index `pre`
-            let prompt = ctx.to_vec_range(0, pre);
-            let logits = self.rt.prefill(&mut self.sess, &prompt).expect("prefill");
-            preds.push(argmax(&logits));
-            for tok in ctx.iter_range(pre, to - 1) {
-                let logits = self.rt.decode_step(&mut self.sess, tok).expect("decode");
-                preds.push(argmax(&logits));
+    /// Batched verification over per-lane KV sessions. Each request is
+    /// routed to the lane whose session shares the longest prefix with
+    /// its context (cold requests spread over idle lanes); same-lane
+    /// requests are ordered into rounds, and each round's lanes decode in
+    /// lockstep through [`ModelRuntime::decode_batch`] after per-lane
+    /// resync/[`BlockStore`] restore (and prefill where truly cold).
+    /// Since the model is deterministic and every lane replays exactly
+    /// the serial per-stream resync+decode sequence, the output is
+    /// bit-identical to serial `predictions` calls.
+    fn predict_batch(&mut self, reqs: &[BatchReq]) -> Vec<Vec<u32>> {
+        if reqs.len() <= 1 {
+            // Single lane: keep the serial path (and lane 0's warmth).
+            return reqs.iter().map(|r| self.predictions(&r.ctx, r.from, r.to)).collect();
+        }
+        // Lane routing: warmest session wins. A cold request (no shared
+        // prefix anywhere) must never clobber a warm lane while a colder
+        // option exists: it takes an unclaimed *cold* lane, then a lane
+        // allocated lazily (bounded by the batch width — a KV cache is a
+        // real allocation, so lanes grow only when routing genuinely
+        // needs them), and only as a last resort the least-warm unclaimed
+        // lane. Same-stream requests fold onto their one warm lane and
+        // serialize into rounds there.
+        let mut claimed = vec![false; self.sessions.len()];
+        let mut lane_of: Vec<usize> = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let (mut best, mut best_score) = (0usize, 0usize);
+            for (i, sess) in self.sessions.iter().enumerate() {
+                let score = r.ctx.common_prefix_with(&sess.tokens);
+                if score > best_score {
+                    best = i;
+                    best_score = score;
+                }
             }
-            self.reuse.tokens_redecoded += (to - 1) as u64;
-            self.rt.publish_settled(&mut self.sess);
-            // preds covers indices pre..to, and pre == from here.
-            return preds;
+            if best_score > 0 {
+                // Warm somewhere: an equal-score free lane beats queueing
+                // behind this batch's claim on the best one.
+                if claimed[best] {
+                    if let Some(free) = (0..self.sessions.len()).find(|&i| {
+                        !claimed[i]
+                            && r.ctx.common_prefix_with(&self.sessions[i].tokens) == best_score
+                    }) {
+                        best = free;
+                    }
+                }
+            } else if let Some(cold) = (0..self.sessions.len())
+                .find(|&i| !claimed[i] && self.sessions[i].tokens.is_empty())
+            {
+                best = cold;
+            } else if self.sessions.len() < reqs.len() {
+                self.sessions.push(self.rt.new_session().expect("lane session"));
+                claimed.push(false);
+                best = self.sessions.len() - 1;
+            } else {
+                // All lanes warm and none allocatable: sacrifice the
+                // least-warm unclaimed lane (one always exists — claims
+                // so far < reqs.len() <= sessions.len()).
+                best = (0..self.sessions.len())
+                    .filter(|&i| !claimed[i])
+                    .min_by_key(|&i| self.sessions[i].tokens.len())
+                    .expect("an unclaimed lane");
+            }
+            claimed[best] = true;
+            lane_of.push(best);
+        }
+        // Same-lane requests execute in request order, one per round.
+        let mut next_round = vec![0usize; self.sessions.len()];
+        let mut rounds: Vec<Vec<usize>> = Vec::new();
+        for (ri, &li) in lane_of.iter().enumerate() {
+            let round = next_round[li];
+            next_round[li] += 1;
+            if rounds.len() <= round {
+                rounds.push(Vec::new());
+            }
+            rounds[round].push(ri);
         }
 
-        // Warm (or block-restored) cache: roll back to the useful prefix
-        // and decode forward — only the divergent suffix is processed (or
-        // touched at all).
-        let resume = self.sess.pos.min(from - 1);
-        self.rt.rollback(&mut self.sess, resume);
-        for (off, tok) in ctx.iter_range(resume, to - 1).enumerate() {
-            let logits = self.rt.decode_step(&mut self.sess, tok).expect("decode");
-            if resume + off + 1 >= from {
-                preds.push(argmax(&logits));
+        struct Plan {
+            lane: usize,
+            req: usize,
+            /// Context position of the first pending token.
+            start: usize,
+            /// Tokens still to decode on this lane (ctx[start..to-1]).
+            pending: Vec<u32>,
+        }
+        let mut out: Vec<Vec<u32>> =
+            reqs.iter().map(|r| Vec::with_capacity(r.to - r.from)).collect();
+        for round in rounds {
+            // Per-lane prep: resync + block restore, prefill where truly
+            // cold, and the pending-token plan — identical bookkeeping to
+            // `serve_lane`, split around the lockstep decode.
+            let mut plans: Vec<Plan> = Vec::with_capacity(round.len());
+            for ri in round {
+                let r = &reqs[ri];
+                assert!(
+                    r.from >= 1 && r.to > r.from && r.ctx.len() >= r.to - 1,
+                    "bad range {}..{}",
+                    r.from,
+                    r.to
+                );
+                let li = lane_of[ri];
+                let sess = &mut self.sessions[li];
+                self.rt.resync(sess, &r.ctx);
+                let start = if sess.pos == 0 {
+                    let pre = r.from.min(r.ctx.len());
+                    let prompt = r.ctx.to_vec_range(0, pre);
+                    let logits = self.rt.prefill(sess, &prompt).expect("prefill");
+                    out[ri].push(argmax(&logits));
+                    self.reuse.tokens_redecoded += pre as u64;
+                    pre
+                } else {
+                    let resume = sess.pos.min(r.from - 1);
+                    self.rt.rollback(sess, resume);
+                    self.reuse.tokens_reused += resume as u64;
+                    resume
+                };
+                let pending = r.ctx.to_vec_range(start, r.to - 1);
+                self.reuse.tokens_redecoded += (r.to - 1 - start) as u64;
+                plans.push(Plan { lane: li, req: ri, start, pending });
+            }
+            // Lockstep batched decode across this round's (disjoint)
+            // lanes, then map each lane's logits back to its request.
+            let mut lanes: Vec<(usize, &mut Session)> = self
+                .sessions
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| plans.iter().any(|p| p.lane == *i))
+                .collect();
+            lanes.sort_by_key(|(i, _)| {
+                plans.iter().position(|p| p.lane == *i).expect("planned lane")
+            });
+            let mut decode_lanes: Vec<DecodeLane> = lanes
+                .into_iter()
+                .map(|(i, sess)| {
+                    let p = plans.iter().find(|p| p.lane == i).expect("planned lane");
+                    DecodeLane { sess, tokens: &p.pending }
+                })
+                .collect();
+            // decode_lanes[j] corresponds to plans[j] (sorted above); the
+            // sink argmaxes each step as it lands — no logits buffering.
+            let mut steps = vec![0usize; plans.len()];
+            self.rt
+                .decode_batch(&mut decode_lanes, |j, logits| {
+                    let p = &plans[j];
+                    let pos = p.start + steps[j] + 1;
+                    steps[j] += 1;
+                    if pos >= reqs[p.req].from {
+                        out[p.req].push(argmax(&logits));
+                    }
+                })
+                .expect("batched decode");
+            drop(decode_lanes);
+            for p in &plans {
+                self.rt.publish_settled(&mut self.sessions[p.lane]);
             }
         }
-        self.reuse.tokens_reused += resume as u64;
-        self.reuse.tokens_redecoded += (to - 1 - resume) as u64;
-        self.rt.publish_settled(&mut self.sess);
-        debug_assert_eq!(preds.len(), to - from);
-        preds
+        for (r, preds) in reqs.iter().zip(&out) {
+            debug_assert_eq!(preds.len(), r.to - r.from, "lane output span");
+        }
+        out
     }
 
     fn max_context(&self) -> usize {
@@ -125,13 +305,13 @@ impl LmServer for RealServer {
         // blocks cover the new ground) now, so the next `predictions`
         // decodes only new tokens. Forward passes stay where they are
         // charged: in `predictions`.
-        if self.sess.pos > 0 {
-            self.rt.resync(&mut self.sess, ctx);
+        if self.sessions[0].pos > 0 {
+            self.rt.resync(&mut self.sessions[0], ctx);
         }
     }
 
     fn cached_len(&self) -> usize {
-        self.sess.tokens.len()
+        self.sessions[0].tokens.len()
     }
 
     fn kv_reuse(&self) -> KvReuse {
@@ -144,21 +324,28 @@ impl LmServer for RealServer {
 /// all workers of one role share a settled-block store, so speculation
 /// streams survive worker hops without re-decoding.
 pub fn real_factory(artifacts: PathBuf) -> ServerFactory {
-    let target_store = Arc::new(BlockStore::new(
-        kv::DEFAULT_BLOCK_TOKENS,
-        kv::DEFAULT_CAPACITY_BLOCKS,
-    ));
-    let drafter_store = Arc::new(BlockStore::new(
-        kv::DEFAULT_BLOCK_TOKENS,
-        kv::DEFAULT_CAPACITY_BLOCKS,
-    ));
-    Arc::new(move |role, _id| {
+    real_factory_with_kv(artifacts, kv::KvStoreConfig::default()).0
+}
+
+/// Like [`real_factory`], with explicit store sizing (the
+/// `--kv-block-tokens` / `--kv-capacity-blocks` plumbing). Also returns
+/// the two per-role store stat handles (target, drafter) so the serving
+/// metrics can render eviction pressure.
+pub fn real_factory_with_kv(
+    artifacts: PathBuf,
+    kv_cfg: kv::KvStoreConfig,
+) -> (ServerFactory, [Arc<StoreStats>; 2]) {
+    let target_store: Arc<BlockStore<Vec<f32>>> = Arc::new(kv_cfg.build());
+    let drafter_store: Arc<BlockStore<Vec<f32>>> = Arc::new(kv_cfg.build());
+    let stats = [target_store.stats_handle(), drafter_store.stats_handle()];
+    let factory: ServerFactory = Arc::new(move |role, _id| {
         let store = match role {
             ServerRole::Target => target_store.clone(),
             ServerRole::Drafter => drafter_store.clone(),
         };
         Box::new(RealServer::load_shared(&artifacts, role, store).expect("loading AOT artifacts"))
-    })
+    });
+    (factory, stats)
 }
 
 #[cfg(test)]
@@ -201,6 +388,45 @@ mod tests {
         assert_eq!(s.cached_len(), 3);
         let a2 = s.predictions(&ctx_a, 4, 7); // resync back
         assert_eq!(a1, a2);
+    }
+
+    /// Batched verification losslessness, real-engine side: a multi-lane
+    /// `predict_batch` over two distinct streams (plus a same-stream
+    /// extension that must round-trip through the same lane) returns
+    /// bit-identical predictions to serial `predictions` replay.
+    #[test]
+    fn predict_batch_matches_serial_predictions() {
+        let Some(dir) = artifacts() else { return };
+        let a = {
+            let mut r = TokenRope::from_slice(&[5, 9, 200, 31, 77, 12]);
+            r.freeze();
+            r
+        };
+        let b = {
+            let mut r = TokenRope::from_slice(&[8, 8, 101, 3]);
+            r.freeze();
+            r
+        };
+        let reqs = vec![
+            super::BatchReq { ctx: a.truncated(5), from: 4, to: 6 },
+            super::BatchReq { ctx: b.clone(), from: 3, to: 5 },
+            super::BatchReq { ctx: a.clone(), from: 5, to: 7 },
+        ];
+
+        let mut batched = RealServer::load(&dir, ServerRole::Target).unwrap();
+        let got = batched.predict_batch(&reqs);
+
+        let mut serial = RealServer::load(&dir, ServerRole::Target).unwrap();
+        for (req, got) in reqs.iter().zip(&got) {
+            assert_eq!(got.len(), req.to - req.from);
+            assert_eq!(
+                &serial.predictions(&req.ctx, req.from, req.to),
+                got,
+                "batched lane {}..{} diverged from serial",
+                req.from,
+                req.to
+            );
+        }
     }
 
     /// The cold path through the block store: a second worker sharing the

@@ -22,17 +22,23 @@
 //!   workers (speculation parallelism as a schedulable resource; tasks are
 //!   tagged `(session, generation)` with per-session rejection staling),
 //!   and [`coordinator::DsiSession`] is one generation stream — a private
-//!   drafter thread plus a registration on the shared pool. Forward passes
-//!   are pluggable: calibrated waits (the paper's methodology) or real
-//!   PJRT executions (`pjrt` cargo feature).
+//!   drafter thread plus a registration on the shared pool. The execution
+//!   plane is micro-batched: workers drain bounded cross-session batches
+//!   (affinity-first, streak-bounded) and run them through
+//!   `LmServer::predict_batch` as ONE batched forward charged
+//!   `max`(lane costs), with per-lane outputs bit-identical to serial.
+//!   Forward passes are pluggable: calibrated waits (the paper's
+//!   methodology) or real PJRT executions (`pjrt` cargo feature).
 //! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
 //!   from JAX/Pallas by `python/compile/aot.py`) into PJRT CPU executables;
-//!   npy weight loading, sampling, KV-cache state, byte tokenizer, and
-//!   [`runtime::kv`] — the settled-block store (fixed-size, ref-counted,
-//!   prefix-keyed KV blocks shared across sessions and same-role workers,
-//!   so resync restores rolled-back state instead of re-decoding it). The
-//!   PJRT client proper is gated behind the `pjrt` feature (stubbed in the
-//!   default dependency-free build).
+//!   npy weight loading, sampling, KV-cache state (including the ragged
+//!   lockstep `decode_batch` over independent lane sessions), byte
+//!   tokenizer, and [`runtime::kv`] — the settled-block store (fixed-size,
+//!   ref-counted, prefix-keyed KV blocks shared across sessions and
+//!   same-role workers, so resync restores rolled-back state instead of
+//!   re-decoding it; sizing via `--kv-block-tokens`/`--kv-capacity-blocks`).
+//!   The PJRT client proper is gated behind the `pjrt` feature (stubbed in
+//!   the default dependency-free build).
 //! - [`server`] — the serving front: a multi-session scheduler. Requests
 //!   are admitted from an arrival queue into up to `max_sessions`
 //!   concurrent generations; the [`server::router::Router`] re-plans each

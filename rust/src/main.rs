@@ -45,6 +45,13 @@ COMMANDS (system):
                           --profile instruction|summarization|code
                           --max-sessions N (concurrent generations, default 1)
                           --pool-size N (shared target pool, default 7)
+                          --sched-policy affinity|fifo (pool scheduling A/B)
+                          --batch-cap N (micro-batch lanes per forward,
+                            default 8; 1 = serial verification plane)
+                          --kv-block-tokens N (settled-block granularity,
+                            default 16)
+                          --kv-capacity-blocks N (block-store LRU capacity,
+                            default 4096)
                           --burst N (requests arriving together; 0 = all at t=0)
                           --gap MS (burst spacing, default 50)
   generate              generate text with the real AOT model pair
@@ -236,6 +243,26 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     let n_tokens = flag_usize(flags, "tokens", 32);
     let max_sessions = flag_usize(flags, "max-sessions", 1);
     let pool_size = flag_usize(flags, "pool-size", 7);
+    let sched_policy = match flags.get("sched-policy").map(String::as_str) {
+        None | Some("affinity") => dsi::coordinator::SchedPolicy::Affinity,
+        Some("fifo") => dsi::coordinator::SchedPolicy::Fifo,
+        Some(other) => return Err(format!("unknown sched-policy {other}").into()),
+    };
+    let batch_cap = flag_usize(flags, "batch-cap", dsi::coordinator::pool::BATCH_CAP_DEFAULT);
+    let kv_cfg = dsi::runtime::kv::KvStoreConfig {
+        block_tokens: flag_usize(
+            flags,
+            "kv-block-tokens",
+            dsi::runtime::kv::DEFAULT_BLOCK_TOKENS,
+        )
+        .max(1),
+        capacity_blocks: flag_usize(
+            flags,
+            "kv-capacity-blocks",
+            dsi::runtime::kv::DEFAULT_CAPACITY_BLOCKS,
+        )
+        .max(1),
+    };
     let burst = flag_usize(flags, "burst", 0);
     let gap_ms = flag_f64(flags, "gap", 50.0);
     let profile = match flags.get("profile").map(String::as_str).unwrap_or("instruction") {
@@ -246,15 +273,20 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     };
     let engine = flags.get("engine").map(String::as_str).unwrap_or("wait");
 
-    let (factory, target_lat, drafter_lat, max_prompt) = match engine {
+    // Store stat handles collected per engine so the metrics snapshot can
+    // render the block stores' eviction pressure.
+    let (factory, store_stats, target_lat, drafter_lat, max_prompt) = match engine {
         "real" => {
             let m = dsi::runtime::Manifest::load(artifacts)?;
             println!(
                 "serving real AOT pair ({} + {} layers)",
                 m.target.n_layers, m.drafter.n_layers
             );
+            let (factory, stats) =
+                dsi::coordinator::real_factory_with_kv(artifacts.to_path_buf(), kv_cfg);
             (
-                real_factory(artifacts.to_path_buf()),
+                factory,
+                stats.to_vec(),
                 LatencyProfile::uniform(4.0),
                 LatencyProfile::uniform(2.0),
                 m.config.max_seq.saturating_sub(n_tokens + 8),
@@ -267,7 +299,15 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
                 oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 1 },
                 max_context: 4096,
             };
-            (eng.factory(), eng.target, eng.drafter, 1024)
+            let store = std::sync::Arc::new(kv_cfg.build::<Vec<u64>>());
+            let stats = store.stats_handle();
+            (
+                eng.factory_with_store(store),
+                vec![stats],
+                eng.target,
+                eng.drafter,
+                1024,
+            )
         }
         other => return Err(format!("unknown engine {other}").into()),
     };
@@ -276,7 +316,12 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     let mut srv = Server::new(factory, router, algo)
         .with_max_depth(16)
         .with_max_sessions(max_sessions)
-        .with_pool_size(pool_size);
+        .with_pool_size(pool_size)
+        .with_sched_policy(sched_policy)
+        .with_batch_cap(batch_cap);
+    for stats in store_stats {
+        srv.attach_store_stats(stats);
+    }
     let mut gen = PromptGen::new(11, 256);
     let mut reqs = if burst > 0 {
         gen.bursts(n_requests, profile, n_tokens, burst, gap_ms)
@@ -288,7 +333,8 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     }
     println!(
         "serving {n_requests} {} requests x {n_tokens} tokens via {} \
-         ({engine} engine, {max_sessions} concurrent sessions, pool {pool_size})...\n",
+         ({engine} engine, {max_sessions} concurrent sessions, pool {pool_size}, \
+         {sched_policy:?} scheduling, batch cap {batch_cap})...\n",
         profile.name(),
         algo.name()
     );

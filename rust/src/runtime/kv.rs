@@ -43,6 +43,31 @@ pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 /// Default store capacity, in blocks (LRU-evicted beyond this).
 pub const DEFAULT_CAPACITY_BLOCKS: usize = 4096;
 
+/// Deployment-facing store sizing, threaded from the launcher's
+/// `--kv-block-tokens` / `--kv-capacity-blocks` flags down to the engine
+/// factories (the defaults above apply when unset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvStoreConfig {
+    pub block_tokens: usize,
+    pub capacity_blocks: usize,
+}
+
+impl Default for KvStoreConfig {
+    fn default() -> Self {
+        Self {
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            capacity_blocks: DEFAULT_CAPACITY_BLOCKS,
+        }
+    }
+}
+
+impl KvStoreConfig {
+    /// Build a store of this sizing.
+    pub fn build<P>(&self) -> BlockStore<P> {
+        BlockStore::new(self.block_tokens, self.capacity_blocks)
+    }
+}
+
 /// Chain state for the empty prefix (the content-key analog of a hash
 /// IV; distinct from the wait-engine oracle's chain so the two key
 /// spaces never alias).
@@ -121,7 +146,9 @@ pub struct BlockStore<P> {
     block_tokens: usize,
     capacity: usize,
     inner: Mutex<Inner<P>>,
-    stats: StoreStats,
+    /// Shared so serving metrics can watch eviction pressure without
+    /// holding the store itself alive (see [`BlockStore::stats_handle`]).
+    stats: Arc<StoreStats>,
 }
 
 impl<P> BlockStore<P> {
@@ -135,7 +162,7 @@ impl<P> BlockStore<P> {
                 by_stamp: BTreeMap::new(),
                 clock: 0,
             }),
-            stats: StoreStats::default(),
+            stats: Arc::new(StoreStats::default()),
         }
     }
 
@@ -156,6 +183,12 @@ impl<P> BlockStore<P> {
 
     pub fn stats(&self) -> &StoreStats {
         &self.stats
+    }
+
+    /// A shareable handle to this store's counters — what serving metrics
+    /// attach so snapshots render eviction pressure (`evicted`) live.
+    pub fn stats_handle(&self) -> Arc<StoreStats> {
+        self.stats.clone()
     }
 
     /// Whether `key` is present — the cheap pre-check publishers use to

@@ -48,6 +48,13 @@ pub struct ModelRuntime {
     decode_steps: Cell<u64>,
 }
 
+/// One lane of a batched decode ([`ModelRuntime::decode_batch`]): an
+/// independent session plus the tokens it still has to process, in order.
+pub struct DecodeLane<'a> {
+    pub sess: &'a mut Session,
+    pub tokens: &'a [u32],
+}
+
 /// Mutable per-sequence state: the KV cache and its fill level.
 pub struct Session {
     cache: xla::Literal,
@@ -241,6 +248,40 @@ impl ModelRuntime {
         sess.keys.push(kv::key_step(*sess.keys.last().unwrap(), token));
         self.decode_steps.set(self.decode_steps.get() + 1);
         logits.to_vec::<f32>().context("decode logits")
+    }
+
+    /// Ragged batched decode: process every lane's pending tokens in
+    /// lockstep rounds — round `s` decodes token `s` of each lane still
+    /// long enough; shorter lanes simply sit out, the ragged analog of
+    /// padding to the longest lane. Each step's logits are handed to
+    /// `sink(lane_index, logits)` immediately (lane steps arrive in token
+    /// order), so nothing is buffered — a round of wide lanes at a real
+    /// vocab would otherwise retain every step's full logits vector when
+    /// callers only keep an argmax. Lanes are independent sessions (each
+    /// with its own KV cache, each already `resync`'d — so each lane
+    /// reuses whatever [`BlockStore`] restores covered it), and the
+    /// per-lane token order is preserved, so the outputs are bit-identical
+    /// to serial `decode_step` chains.
+    ///
+    /// Today each round drives the per-lane decode executable once per
+    /// live lane; when the AOT pipeline emits a genuinely batched decode
+    /// HLO (lane-stacked inputs, padded to the longest lane), it drops in
+    /// here without touching callers — the session and ordering semantics
+    /// are already batch-shaped.
+    pub fn decode_batch(
+        &self,
+        lanes: &mut [DecodeLane<'_>],
+        mut sink: impl FnMut(usize, Vec<f32>),
+    ) -> Result<()> {
+        let rounds = lanes.iter().map(|l| l.tokens.len()).max().unwrap_or(0);
+        for s in 0..rounds {
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                if let Some(&tok) = lane.tokens.get(s) {
+                    sink(i, self.decode_step(lane.sess, tok)?);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Roll the session back so only the first `len` tokens remain. The

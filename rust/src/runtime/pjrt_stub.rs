@@ -35,6 +35,13 @@ pub struct Session {
     unconstructible: Never,
 }
 
+/// One lane of a batched decode — same surface as the real runtime's
+/// [`ModelRuntime::decode_batch`] lanes.
+pub struct DecodeLane<'a> {
+    pub sess: &'a mut Session,
+    pub tokens: &'a [u32],
+}
+
 enum Never {}
 
 impl ModelRuntime {
@@ -76,6 +83,16 @@ impl ModelRuntime {
     }
 
     pub fn decode_step(&self, _sess: &mut Session, _token: u32) -> Result<Vec<f32>> {
+        match self.unconstructible {}
+    }
+
+    /// Ragged batched decode over independent lane sessions — same
+    /// surface as the real runtime (per-step logits go to `sink`).
+    pub fn decode_batch(
+        &self,
+        _lanes: &mut [DecodeLane<'_>],
+        _sink: impl FnMut(usize, Vec<f32>),
+    ) -> Result<()> {
         match self.unconstructible {}
     }
 

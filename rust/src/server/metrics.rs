@@ -9,6 +9,7 @@
 //! `busy_ms` because `busy / span` is the node's effective parallelism.
 
 use crate::coordinator::pool::PoolStats;
+use crate::runtime::kv::StoreStats;
 use crate::stats::{percentile, OnlineStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -32,6 +33,9 @@ pub struct Metrics {
     active_gauge: Option<Arc<AtomicUsize>>,
     /// Dispatch-path timing of the shared target pool, if one is serving.
     pool_stats: Option<Arc<PoolStats>>,
+    /// Settled-block store counters (one handle per attached store — e.g.
+    /// per engine role); snapshots sum their eviction pressure.
+    store_stats: Vec<Arc<StoreStats>>,
 }
 
 /// A point-in-time summary.
@@ -70,11 +74,21 @@ pub struct Snapshot {
     /// Fraction of pool pops that stayed on the worker's previous session
     /// (warm KV state); 0 when nothing ran.
     pub pool_affinity_hit_rate: f64,
+    /// Batched forwards the pool workers executed (every dispatched task
+    /// rode in exactly one).
+    pub pool_batches: u64,
+    /// Mean verification lanes per batched forward (0 before any ran);
+    /// the batched-plane utilization gauge — 1.0 means the plane
+    /// degenerated to serial.
+    pub pool_batch_occupancy_mean: f64,
     /// Context positions pool forwards served from incremental KV state
     /// (retained or block-restored) instead of re-decoding.
     pub kv_tokens_reused: u64,
     /// Context positions pool forwards re-decoded.
     pub kv_tokens_redecoded: u64,
+    /// Settled blocks LRU-evicted across the attached block stores — the
+    /// memory-pressure symptom the spill/compaction roadmap item watches.
+    pub kv_blocks_evicted: u64,
 }
 
 impl Metrics {
@@ -92,6 +106,12 @@ impl Metrics {
     /// queue wait and dispatch overhead.
     pub fn attach_pool_stats(&mut self, stats: Arc<PoolStats>) {
         self.pool_stats = Some(stats);
+    }
+
+    /// Share a settled-block store's counters; snapshots sum eviction
+    /// pressure over every attached store.
+    pub fn attach_store_stats(&mut self, stats: Arc<StoreStats>) {
+        self.store_stats.push(stats);
     }
 
     /// Record that a request was dispatched at `now_ms` on the server's
@@ -171,11 +191,17 @@ impl Metrics {
                 .pool_stats
                 .as_ref()
                 .map_or(0.0, |s| s.affinity_hit_rate()),
+            pool_batches: self.pool_stats.as_ref().map_or(0, |s| s.batches()),
+            pool_batch_occupancy_mean: self
+                .pool_stats
+                .as_ref()
+                .map_or(0.0, |s| s.batch_occupancy_mean()),
             kv_tokens_reused: self.pool_stats.as_ref().map_or(0, |s| s.kv_tokens_reused()),
             kv_tokens_redecoded: self
                 .pool_stats
                 .as_ref()
                 .map_or(0, |s| s.kv_tokens_redecoded()),
+            kv_blocks_evicted: self.store_stats.iter().map(|s| s.evicted()).sum(),
         }
     }
 }
@@ -188,7 +214,7 @@ impl Snapshot {
              e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | \
              {:.1} tok/s over {:.0}ms | pool tasks={} wait={:.0}µs dispatch={:.1}µs \
              skipped stale={} departed={} | affinity={:.0}% | \
-             kv reused={} redecoded={}",
+             batches={} occupancy={:.2} | kv reused={} redecoded={} evicted={}",
             self.requests,
             self.tokens,
             self.active_sessions,
@@ -207,8 +233,11 @@ impl Snapshot {
             self.pool_skipped_stale,
             self.pool_skipped_departed,
             self.pool_affinity_hit_rate * 100.0,
+            self.pool_batches,
+            self.pool_batch_occupancy_mean,
             self.kv_tokens_reused,
             self.kv_tokens_redecoded,
+            self.kv_blocks_evicted,
         )
     }
 }
@@ -319,6 +348,38 @@ mod tests {
         assert!(text.contains("skipped stale=1 departed=1"), "render: {text}");
         assert!(text.contains("affinity=67%"), "render: {text}");
         assert!(text.contains("kv reused=128 redecoded=32"), "render: {text}");
+    }
+
+    /// The batched-plane and store-pressure gauges: lanes-per-forward
+    /// occupancy from the pool counters, summed evictions from every
+    /// attached block store.
+    #[test]
+    fn batch_occupancy_and_eviction_gauges_are_reported() {
+        use crate::runtime::kv::{key_of, BlockStore, KvBlock};
+        let mut m = Metrics::new();
+        let stats = Arc::new(PoolStats::default());
+        m.attach_pool_stats(stats.clone());
+        // 3 dispatched lanes over 2 batched forwards → occupancy 1.5.
+        stats.record(0, 0);
+        stats.record(0, 0);
+        stats.record(0, 0);
+        stats.record_batch();
+        stats.record_batch();
+
+        // A capacity-1 store: the second publish evicts the first block.
+        let store: BlockStore<Vec<u32>> = BlockStore::new(2, 1);
+        m.attach_store_stats(store.stats_handle());
+        let block = |t: &[u32]| KvBlock { start: 0, tokens: t.to_vec(), payload: t.to_vec() };
+        store.publish(key_of([1, 2]), block(&[1, 2]));
+        store.publish(key_of([3, 4]), block(&[3, 4]));
+
+        let s = m.snapshot();
+        assert_eq!(s.pool_batches, 2);
+        assert!((s.pool_batch_occupancy_mean - 1.5).abs() < 1e-9);
+        assert_eq!(s.kv_blocks_evicted, 1);
+        let text = s.render();
+        assert!(text.contains("batches=2 occupancy=1.50"), "render: {text}");
+        assert!(text.contains("evicted=1"), "render: {text}");
     }
 
     #[test]

@@ -15,8 +15,9 @@ pub mod router;
 use crate::config::AlgoKind;
 use crate::coordinator::{
     run_nonsi_with, run_si_with, DsiSession, LmServer, OnlineConfig, OnlineOutcome,
-    ServerFactory, ServerRole, TargetPool,
+    SchedPolicy, ServerFactory, ServerRole, TargetPool,
 };
+use crate::runtime::kv::StoreStats;
 use crate::runtime::tokenizer;
 use crate::workload::Request;
 use metrics::Metrics;
@@ -116,6 +117,11 @@ pub struct Server {
     max_sessions: usize,
     /// Shared target-pool size (defaults to the router's SP budget).
     pool_size: usize,
+    /// Pool scheduling policy (affinity by default; FIFO is the A/B
+    /// control, now selectable from the launcher via `--sched-policy`).
+    sched_policy: SchedPolicy,
+    /// Micro-batch drain cap for the pool workers (1 = serial plane).
+    batch_cap: usize,
     /// The node's target workers; lazily built on the first DSI serve and
     /// persistent across `serve` calls (model loading / HLO compilation
     /// happens once per worker, not once per request).
@@ -142,6 +148,8 @@ impl Server {
             max_speculation_depth: 24,
             max_sessions: 1,
             pool_size,
+            sched_policy: SchedPolicy::Affinity,
+            batch_cap: crate::coordinator::pool::BATCH_CAP_DEFAULT,
             pool: None,
             active,
             epoch: Instant::now(),
@@ -169,6 +177,29 @@ impl Server {
         self
     }
 
+    /// Select the shared pool's scheduling policy (default affinity;
+    /// FIFO is the A/B control). Takes effect before the pool is built.
+    pub fn with_sched_policy(mut self, policy: SchedPolicy) -> Self {
+        self.sched_policy = policy;
+        self
+    }
+
+    /// Cap the pool workers' micro-batch drains (default
+    /// [`BATCH_CAP_DEFAULT`](crate::coordinator::pool::BATCH_CAP_DEFAULT);
+    /// 1 reproduces the serial verification plane). Takes effect before
+    /// the pool is built.
+    pub fn with_batch_cap(mut self, cap: usize) -> Self {
+        self.batch_cap = cap.max(1);
+        self
+    }
+
+    /// Attach a settled-block store's counters so metrics snapshots
+    /// report its eviction pressure (callable once per store — e.g. the
+    /// target and drafter stores of the real engine).
+    pub fn attach_store_stats(&self, stats: Arc<StoreStats>) {
+        self.metrics.lock().unwrap().attach_store_stats(stats);
+    }
+
     /// Live acceptance estimate from the router (§F.2 online variant).
     pub fn acceptance_estimate(&self) -> f64 {
         self.router.lock().unwrap().acceptance_estimate()
@@ -191,7 +222,12 @@ impl Server {
             return Vec::new();
         }
         if self.algo == AlgoKind::Dsi && self.pool.is_none() {
-            let pool = Arc::new(TargetPool::new(&self.factory, self.pool_size));
+            let pool = Arc::new(TargetPool::new_with_batch_cap(
+                &self.factory,
+                self.pool_size,
+                self.sched_policy,
+                self.batch_cap,
+            ));
             // Surface the pool's queue-wait / dispatch-overhead counters
             // in metrics snapshots.
             self.metrics.lock().unwrap().attach_pool_stats(pool.stats());

@@ -1,0 +1,150 @@
+//! Acceptance gates for the batched verification plane (the cross-session
+//! micro-batching tentpole):
+//!
+//! 1. **Losslessness under batching** — DSI output through the batched
+//!    pool (default micro-batch cap) is bit-identical to non-SI greedy
+//!    decoding AND to the serial plane (`batch_cap = 1`), across
+//!    acceptance rates and under multi-session contention.
+//! 2. **The plane actually batches** — under concurrent sessions on an
+//!    oversubscribed pool, `batch_occupancy_mean` exceeds 1 (forwards
+//!    carry multiple lanes) without disturbing per-task accounting.
+//! 3. **Scheduler A/B stays wired** — `SchedPolicy::Fifo` through the
+//!    `Server` builder serves the same workload losslessly.
+
+use dsi::config::{AlgoKind, LatencyProfile};
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{run_nonsi, DsiSession, OnlineConfig, SchedPolicy, TargetPool};
+use dsi::server::router::Router;
+use dsi::server::Server;
+use dsi::workload::{PromptGen, PromptProfile};
+
+fn engine(p: f64, t: f64, d: f64, seed: u64) -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(t),
+        drafter: LatencyProfile::uniform(d),
+        oracle: Oracle { vocab: 256, acceptance_rate: p, seed },
+        max_context: 8192,
+    }
+}
+
+fn session_cfg(prompt: Vec<u32>, n_tokens: usize, sp: usize) -> OnlineConfig {
+    OnlineConfig {
+        prompt,
+        n_tokens,
+        lookahead: 2,
+        sp_degree: sp,
+        max_speculation_depth: 64,
+    }
+}
+
+/// Run `n_sessions` concurrent DSI generations on one pool with the given
+/// batch cap; returns each session's output tokens.
+fn run_concurrent(
+    eng: &WaitEngine,
+    prompts: &[Vec<u32>],
+    n_tokens: usize,
+    workers: usize,
+    batch_cap: usize,
+) -> Vec<Vec<u32>> {
+    let pool = TargetPool::new_with_batch_cap(
+        &eng.factory(),
+        workers,
+        SchedPolicy::Affinity,
+        batch_cap,
+    );
+    std::thread::scope(|s| {
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|prompt| {
+                let pool = &pool;
+                let factory = eng.factory();
+                let prompt = prompt.clone();
+                s.spawn(move || {
+                    let mut session = DsiSession::new(pool, &factory);
+                    session.generate(&session_cfg(prompt, n_tokens, 2)).tokens
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// THE batching correctness gate: batched execution is lossless — output
+/// bit-identical to non-SI greedy decoding and to the serial plane — for
+/// hopeless, mediocre, and perfect drafters, under 4-session contention
+/// on a 2-worker pool (so micro-batches genuinely form).
+#[test]
+fn batched_plane_is_bit_identical_to_serial_and_nonsi() {
+    for p in [0.0, 0.8, 1.0] {
+        let eng = engine(p, 2.0, 0.4, 71);
+        let prompts: Vec<Vec<u32>> = (0..4u32).map(|i| vec![i + 1, 60 + i, 120 + i]).collect();
+
+        let batched = run_concurrent(&eng, &prompts, 16, 2, 8);
+        let serial = run_concurrent(&eng, &prompts, 16, 2, 1);
+        for (i, prompt) in prompts.iter().enumerate() {
+            let nonsi = run_nonsi(&eng.factory(), &session_cfg(prompt.clone(), 16, 2));
+            assert_eq!(batched[i], nonsi.tokens, "batched plane lost tokens at p={p}, session {i}");
+            assert_eq!(serial[i], nonsi.tokens, "serial control lost tokens at p={p}, session {i}");
+        }
+    }
+}
+
+/// Under multi-session load on an oversubscribed pool the forwards must
+/// actually carry multiple lanes — occupancy above 1 — and the per-task
+/// counters must account every dispatched lane exactly once.
+#[test]
+fn micro_batches_form_under_concurrent_load() {
+    let eng = engine(0.9, 2.0, 0.3, 73);
+    let pool = TargetPool::new_with_batch_cap(&eng.factory(), 2, SchedPolicy::Affinity, 8);
+    let prompts: Vec<Vec<u32>> = (0..4u32).map(|i| vec![i + 3, 80 + i, 140 + i]).collect();
+    std::thread::scope(|s| {
+        for prompt in &prompts {
+            let pool = &pool;
+            let factory = eng.factory();
+            let prompt = prompt.clone();
+            s.spawn(move || {
+                let mut session = DsiSession::new(pool, &factory);
+                let _ = session.generate(&session_cfg(prompt, 24, 3));
+            });
+        }
+    });
+    let stats = pool.stats();
+    assert!(stats.tasks() > 0 && stats.batches() > 0);
+    assert!(
+        stats.batch_occupancy_mean() > 1.0,
+        "no micro-batches formed: occupancy {:.2} over {} forwards",
+        stats.batch_occupancy_mean(),
+        stats.batches()
+    );
+    assert!(
+        stats.batches() < stats.tasks(),
+        "batches ({}) not below tasks ({})",
+        stats.batches(),
+        stats.tasks()
+    );
+}
+
+/// The `--sched-policy` plumbing: a FIFO-scheduled, batched server serves
+/// the same workload losslessly (the A/B control stays a correctness
+/// peer, not just a bench mode).
+#[test]
+fn fifo_policy_through_server_builder_stays_lossless() {
+    let eng = engine(0.85, 2.0, 0.4, 79);
+    let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 4);
+    let mut srv = Server::new(eng.factory(), router, AlgoKind::Dsi)
+        .with_max_sessions(3)
+        .with_pool_size(4)
+        .with_sched_policy(SchedPolicy::Fifo)
+        .with_batch_cap(4);
+    let mut gen = PromptGen::new(21, 256);
+    let reqs = gen.closed_loop(5, PromptProfile::Instruction, 12);
+    let resps = srv.serve(&reqs);
+    assert_eq!(resps.len(), 5);
+    for (req, resp) in reqs.iter().zip(&resps) {
+        let nonsi = run_nonsi(&eng.factory(), &session_cfg(req.prompt.clone(), 12, 1));
+        assert_eq!(resp.tokens, nonsi.tokens, "req {} lost tokens under FIFO", req.id);
+    }
+    let snap = srv.metrics_snapshot();
+    assert!(snap.pool_batches > 0, "batch gauge not wired through Server");
+    assert!(snap.pool_batch_occupancy_mean >= 1.0);
+}
