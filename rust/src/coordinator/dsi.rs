@@ -55,10 +55,131 @@ use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
 use crate::context::TokenRope;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// The live control/telemetry surface of one DSI session, shared with the
+/// adaptive controller. The knob half is write-side for the controller:
+/// `lookahead` is applied at the next drafter-restart boundary (the block
+/// arithmetic `τ_j = (c0 + (j-1)k, c0 + jk]` must not change mid-stream),
+/// `sp_degree` — the session's live share of the pool, i.e. its in-flight
+/// block-task cap — is read at every dispatch. The telemetry half is
+/// write-side for the session: cumulative drafter forward cost (from the
+/// [`LmServer::forward_cost`](super::LmServer::forward_cost) surface, so
+/// wait-mode and real drafters report identically) and live
+/// accepted/rejected settle counts, which the controller differences per
+/// tick to feed the router's per-session estimators mid-generation.
+/// Everything is relaxed atomics: no knob or counter is ordering-coupled
+/// to the token stream, and a tick reading a half-updated pair only
+/// misestimates one interval.
+#[derive(Debug)]
+pub struct SessionCtl {
+    lookahead: AtomicUsize,
+    sp_degree: AtomicUsize,
+    /// Set once a controller has emitted a plan for this session;
+    /// request-boundary seeding then stops overwriting the learned
+    /// operating point (see [`seed_plan`](Self::seed_plan)).
+    controller_planned: AtomicBool,
+    drafter_cost_ns: AtomicU64,
+    drafter_steps: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// A point-in-time reading of a session's cumulative telemetry; the
+/// controller differences two readings to attribute activity to one tick.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CtlTelemetry {
+    pub drafter_cost_ms: f64,
+    pub drafter_steps: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl SessionCtl {
+    fn new() -> Self {
+        Self {
+            lookahead: AtomicUsize::new(1),
+            sp_degree: AtomicUsize::new(1),
+            controller_planned: AtomicBool::new(false),
+            drafter_cost_ns: AtomicU64::new(0),
+            drafter_steps: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Seed the operating point from a request's static plan. A no-op
+    /// once a controller has planned this session ([`set_plan`]), so a
+    /// reused session keeps its *learned* operating point across request
+    /// boundaries instead of falling back to the stale calibration for a
+    /// control interval. Without a controller the flag never sets and
+    /// every request's plan applies exactly — the static plane unchanged.
+    ///
+    /// [`set_plan`]: Self::set_plan
+    pub fn seed_plan(&self, lookahead: usize, sp_degree: usize) {
+        if !self.controller_planned.load(Ordering::Relaxed) {
+            self.lookahead.store(lookahead.max(1), Ordering::Relaxed);
+            self.sp_degree.store(sp_degree.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Set the live operating point (clamped to >= 1 each) — the
+    /// controller's write path; it also pins the plan against
+    /// request-boundary reseeding. The lookahead lands at the next
+    /// restart boundary; the SP share at the next dispatch.
+    pub fn set_plan(&self, lookahead: usize, sp_degree: usize) {
+        self.lookahead.store(lookahead.max(1), Ordering::Relaxed);
+        self.sp_degree.store(sp_degree.max(1), Ordering::Relaxed);
+        self.controller_planned.store(true, Ordering::Relaxed);
+    }
+
+    /// The live (lookahead, sp_degree) operating point.
+    pub fn plan(&self) -> (usize, usize) {
+        (
+            self.lookahead.load(Ordering::Relaxed),
+            self.sp_degree.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Accumulate one drafter call's measured forward cost.
+    fn record_drafter_cost(&self, delta: super::ForwardCost) {
+        self.drafter_cost_ns
+            .fetch_add((delta.spent_ms * 1e6) as u64, Ordering::Relaxed);
+        self.drafter_steps.fetch_add(delta.forwards, Ordering::Relaxed);
+    }
+
+    /// Record one settle outcome (accept or reject) as it happens.
+    fn record_settle(&self, accepted: bool) {
+        if accepted {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The live in-flight block-task cap (>= 1).
+    fn live_sp(&self) -> usize {
+        self.sp_degree.load(Ordering::Relaxed).max(1)
+    }
+
+    /// The live lookahead (>= 1).
+    fn live_lookahead(&self) -> usize {
+        self.lookahead.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Cumulative telemetry snapshot.
+    pub fn telemetry(&self) -> CtlTelemetry {
+        CtlTelemetry {
+            drafter_cost_ms: self.drafter_cost_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            drafter_steps: self.drafter_steps.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// Drafter control messages.
 enum Ctrl {
@@ -96,6 +217,7 @@ pub struct DsiSession {
     depth: Arc<AtomicUsize>,
     drafter_calls_ctr: Arc<AtomicUsize>,
     drafter_handle: Option<std::thread::JoinHandle<()>>,
+    ctl: Arc<SessionCtl>,
     gen: u64,
 }
 
@@ -108,6 +230,7 @@ impl DsiSession {
         let frontier = Arc::new(AtomicUsize::new(0));
         let depth = Arc::new(AtomicUsize::new(usize::MAX));
         let drafter_calls_ctr = Arc::new(AtomicUsize::new(0));
+        let ctl = Arc::new(SessionCtl::new());
 
         // --- drafter thread ---
         let (ctrl_tx, ctrl_rx): (Sender<Ctrl>, Receiver<Ctrl>) = channel();
@@ -117,6 +240,7 @@ impl DsiSession {
             let frontier = frontier.clone();
             let depth = depth.clone();
             let calls = drafter_calls_ctr.clone();
+            let ctl = ctl.clone();
             // The drafter's factory id is the pool-unique session id —
             // concurrent sessions must never hand their factories the
             // same (Drafter, id) pair, or id-seeded engines would alias
@@ -181,7 +305,9 @@ impl DsiSession {
                         }
                         continue;
                     }
+                    let cost_before = server.forward_cost();
                     let tok = server.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+                    ctl.record_drafter_cost(server.forward_cost() - cost_before);
                     calls.fetch_add(1, Ordering::Relaxed);
                     ctx.push(tok);
                     if tx
@@ -203,6 +329,7 @@ impl DsiSession {
             depth,
             drafter_calls_ctr,
             drafter_handle: Some(drafter_handle),
+            ctl,
             gen: 0,
         }
     }
@@ -212,13 +339,29 @@ impl DsiSession {
         self.handle.session_id()
     }
 
+    /// The session's live control/telemetry surface — the handle the
+    /// adaptive controller plans through and reads telemetry from.
+    pub fn ctl(&self) -> Arc<SessionCtl> {
+        self.ctl.clone()
+    }
+
     /// Run one generation. `cfg.sp_degree` is this session's share of the
     /// pool: the cap on its concurrently in-flight block-verification
     /// tasks (the chain fallback is exempt — it guarantees non-SI pace).
     pub fn generate(&mut self, cfg: &OnlineConfig) -> OnlineOutcome {
         assert!(cfg.lookahead >= 1);
-        let k = cfg.lookahead;
-        let max_inflight = cfg.sp_degree.max(1);
+        // The request's plan seeds the live operating point (unless a
+        // controller has since planned this session — then its learned
+        // plan survives the request boundary); under adaptive serving the
+        // controller re-plans while we run. The lookahead is re-read at
+        // restart boundaries only (the τ_j block arithmetic is anchored
+        // at the generation start c0, so k must not move mid-stream); the
+        // in-flight cap is re-read at every dispatch. With no controller
+        // attached both stay exactly the request's values — the static
+        // plane is unchanged.
+        let ctl = self.ctl.clone();
+        ctl.seed_plan(cfg.lookahead, cfg.sp_degree);
+        let mut k = ctl.live_lookahead();
 
         // Fresh request: bump the generation (staling any leftovers from
         // the previous request), point the drafter at the new prompt.
@@ -270,7 +413,7 @@ impl DsiSession {
 
         macro_rules! dispatch_ready_tasks {
             () => {
-                while spec.len() - c0 >= next_task * k && inflight.len() < max_inflight {
+                while spec.len() - c0 >= next_task * k && inflight.len() < ctl.live_sp() {
                     let (from, to) =
                         (c0 + (next_task - 1) * k + 1, c0 + next_task * k + 1);
                     // Context = generation-start prefix + draft blocks
@@ -362,6 +505,7 @@ impl DsiSession {
                     settled += 1;
                     settle_ms.push(now);
                     accepted_drafts += 1;
+                    ctl.record_settle(true);
                     self.frontier.store(settled, Ordering::Release);
                     // fall through: more positions may settle from this result
                 } else {
@@ -375,6 +519,7 @@ impl DsiSession {
                     settled = spec.len();
                     settle_ms.push(now);
                     rejections += 1;
+                    ctl.record_settle(false);
                     self.frontier.store(settled, Ordering::Release);
                     if settled >= goal {
                         break 'main;
@@ -390,6 +535,9 @@ impl DsiSession {
                     inflight.clear();
                     c0 = settled;
                     next_task = 1;
+                    // Restart boundary: apply any live re-plan of the
+                    // lookahead (the new blocks anchor at the new c0).
+                    k = ctl.live_lookahead();
                     crate::context::note_full_clone(spec.len());
                     let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: spec.clone() });
                     continue 'settle;
@@ -559,6 +707,58 @@ mod tests {
         let out = run_dsi(&eng.factory(), &c);
         let nonsi = run_nonsi(&eng.factory(), &c);
         assert_eq!(out.tokens, nonsi.tokens);
+    }
+
+    /// Request-boundary seeding must not stomp a controller's learned
+    /// plan: `seed_plan` applies only until `set_plan` has pinned one.
+    #[test]
+    fn controller_plan_survives_request_boundaries() {
+        let ctl = SessionCtl::new();
+        ctl.seed_plan(2, 1); // first request's static plan
+        assert_eq!(ctl.plan(), (2, 1));
+        ctl.set_plan(4, 3); // a controller takes over
+        ctl.seed_plan(12, 1); // next request re-seeds from stale calibration
+        assert_eq!(ctl.plan(), (4, 3), "request boundary stomped the learned plan");
+    }
+
+    /// A live re-plan through the session's control surface lands without
+    /// a respawn and without costing losslessness: the controller thread
+    /// retunes (lookahead, sp) while the generation runs; the new
+    /// lookahead applies at restart boundaries and the output still
+    /// matches non-SI bit-for-bit. Telemetry mirrors the run's outcomes.
+    #[test]
+    fn live_replan_applies_and_stays_lossless() {
+        let eng = engine(0.5, 2.0, 0.4, 61);
+        let pool = TargetPool::new(&eng.factory(), 3);
+        let mut session = DsiSession::new(&pool, &eng.factory());
+        let ctl = session.ctl();
+        let c = cfg(30, 2, 1);
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let ctl_thread = {
+            let done = done.clone();
+            let ctl = session.ctl();
+            std::thread::spawn(move || {
+                while !done.load(Ordering::Acquire) {
+                    ctl.set_plan(4, 3);
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        };
+        let out = session.generate(&c);
+        done.store(true, Ordering::Release);
+        ctl_thread.join().unwrap();
+
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens, "live re-plan broke losslessness");
+        assert_eq!(ctl.plan(), (4, 3), "controller plan not retained");
+        let t = ctl.telemetry();
+        assert_eq!(
+            (t.accepted + t.rejected) as usize,
+            out.accepted_drafts + out.rejections,
+            "settle telemetry diverged from the outcome counters"
+        );
+        assert!(t.drafter_steps > 0, "drafter cost telemetry never fed");
+        assert!(t.drafter_cost_ms > 0.0);
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod real_engine;
 mod si;
 pub mod wait_engine;
 
-pub use dsi::{run_dsi, DsiSession};
+pub use dsi::{run_dsi, CtlTelemetry, DsiSession, SessionCtl};
 pub use nonsi::{run_nonsi, run_nonsi_with};
 pub use pool::{PoolHandle, PoolStats, SchedPolicy, SessionMsg, TargetPool, VerifyResult};
 pub use real_engine::{real_factory, real_factory_with_kv, RealServer};
@@ -67,6 +67,33 @@ impl std::ops::Sub for KvReuse {
             tokens_redecoded: self
                 .tokens_redecoded
                 .saturating_sub(before.tokens_redecoded),
+        }
+    }
+}
+
+/// Cumulative measured forward cost of one server: milliseconds spent in
+/// (or, for the wait engine, *charged for*) forward passes, and the number
+/// of verification tasks those forwards served (a batched forward counts
+/// one per lane). `spent_ms / forwards` is therefore the server's measured
+/// effective per-task cost — the live analog of the calibrated TPOT that
+/// the adaptive control plane's Equation-1 replanning consumes. Both
+/// engines report through this one surface (the wait engine its exact
+/// charged waits, the real engine its wall time around real forwards), so
+/// wait-mode runs exercise the identical controller. Callers difference
+/// two readings to attribute cost to one call, exactly like [`KvReuse`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ForwardCost {
+    pub spent_ms: f64,
+    pub forwards: u64,
+}
+
+impl std::ops::Sub for ForwardCost {
+    type Output = ForwardCost;
+    /// Delta between two cumulative readings (saturating, defensively).
+    fn sub(self, before: ForwardCost) -> ForwardCost {
+        ForwardCost {
+            spent_ms: (self.spent_ms - before.spent_ms).max(0.0),
+            forwards: self.forwards.saturating_sub(before.forwards),
         }
     }
 }
@@ -147,6 +174,16 @@ pub trait LmServer {
     /// readings to attribute reuse to one call.
     fn kv_reuse(&self) -> KvReuse {
         KvReuse::default()
+    }
+
+    /// Cumulative measured [`ForwardCost`] over this server's lifetime
+    /// (zero for a server that doesn't report — the estimators then stay
+    /// cold and the planner keeps its calibrated fallback). The pool
+    /// workers difference this around each forward to feed the target-side
+    /// latency estimator; the DSI drafter thread does the same for the
+    /// drafter side.
+    fn forward_cost(&self) -> ForwardCost {
+        ForwardCost::default()
     }
 }
 

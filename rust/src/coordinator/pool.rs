@@ -51,7 +51,7 @@
 //! [`TargetPool::register`]; dropping the handle unregisters the session
 //! and purges its queued tasks.
 
-use super::{BatchReq, KvReuse, LmServer, ServerFactory, ServerRole};
+use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -204,6 +204,14 @@ pub struct PoolStats {
     /// Batched forwards executed (every dispatched task rides in exactly
     /// one; `tasks / batches` is the lane occupancy).
     batches: AtomicU64,
+    /// Summed measured model forward cost of dispatched forwards, ns —
+    /// differenced from [`LmServer::forward_cost`] around each batched
+    /// forward. With `forward_lanes` this is the live target per-task
+    /// cost the adaptive controller's Equation-1 replanning estimates
+    /// from (the measured counterpart of the calibrated TPOT).
+    forward_cost_ns: AtomicU64,
+    /// Tasks (lanes) the summed forward cost covers.
+    forward_lanes: AtomicU64,
     /// Context positions served from incremental KV state across all
     /// dispatched forwards (differenced from [`LmServer::kv_reuse`]).
     kv_tokens_reused: AtomicU64,
@@ -232,6 +240,33 @@ impl PoolStats {
     /// Record one batched forward (its lanes were each `record`ed).
     pub fn record_batch(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulate one batched forward's measured model cost.
+    pub fn record_forward_cost(&self, delta: ForwardCost) {
+        self.forward_cost_ns
+            .fetch_add((delta.spent_ms * 1e6) as u64, Ordering::Relaxed);
+        self.forward_lanes.fetch_add(delta.forwards, Ordering::Relaxed);
+    }
+
+    /// Cumulative measured forward cost: (ns summed, lanes covered). The
+    /// controller differences two readings per tick to feed its live
+    /// target-latency estimator.
+    pub fn forward_cost_totals(&self) -> (u64, u64) {
+        (
+            self.forward_cost_ns.load(Ordering::Relaxed),
+            self.forward_lanes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Mean measured model cost per dispatched task, ms (0 before any
+    /// forward reported).
+    pub fn forward_ms_per_task(&self) -> f64 {
+        let (ns, lanes) = self.forward_cost_totals();
+        if lanes == 0 {
+            return 0.0;
+        }
+        ns as f64 / lanes as f64 / 1e6
     }
 
     /// Batched forwards executed.
@@ -330,8 +365,11 @@ struct PoolShared {
     queue: Mutex<Queues>,
     cv: Condvar,
     policy: SchedPolicy,
-    /// Micro-batch drain cap (>= 1; 1 == the serial plane).
-    batch_cap: usize,
+    /// Micro-batch drain cap (>= 1; 1 == the serial plane). Atomic so the
+    /// adaptive controller can retune it at runtime — admission-aware
+    /// batch sizing — without respawning workers; each drain reads it
+    /// once at pop.
+    batch_cap: AtomicUsize,
     routes: Mutex<HashMap<u64, Route>>,
     /// Bumped on every register/unregister; workers revalidate their local
     /// route cache against it, so a departed session is still skipped
@@ -381,6 +419,8 @@ impl PoolShared {
     /// once — only when other sessions are registered — so
     /// near-simultaneous cross-session submits share one forward.
     fn pop_batch(&self, preferred: Option<u64>, streak_in: usize) -> Popped {
+        // One cap per drain: a runtime retune applies from the next pop.
+        let batch_cap = self.batch_cap.load(Ordering::Relaxed).max(1);
         let mut q = self.queue.lock().unwrap();
         loop {
             let Some(first) = self.pick_next(&q, preferred, streak_in) else {
@@ -399,7 +439,7 @@ impl PoolShared {
             let mut cur = first;
             let mut streak = if Some(first) == preferred { streak_in + 1 } else { 1 };
             let mut window_spent = false;
-            while batch.len() < self.batch_cap {
+            while batch.len() < batch_cap {
                 match self.pick_next(&q, Some(cur), streak) {
                     Some(sid) => {
                         streak = if sid == cur { streak + 1 } else { 1 };
@@ -540,7 +580,7 @@ impl TargetPool {
             queue: Mutex::new(Queues::default()),
             cv: Condvar::new(),
             policy,
-            batch_cap: batch_cap.max(1),
+            batch_cap: AtomicUsize::new(batch_cap.max(1)),
             routes: Mutex::new(HashMap::new()),
             route_epoch: AtomicU64::new(0),
             next_session: AtomicU64::new(1),
@@ -637,8 +677,12 @@ impl TargetPool {
                     }
                     shared.stats.record_batch();
                     let kv_before = server.kv_reuse();
+                    let cost_before = server.forward_cost();
                     let preds = server.predict_batch(&reqs);
                     shared.stats.record_kv(server.kv_reuse() - kv_before);
+                    shared
+                        .stats
+                        .record_forward_cost(server.forward_cost() - cost_before);
                     debug_assert_eq!(preds.len(), lanes.len(), "lane count");
                     for (lane, preds) in lanes.into_iter().zip(preds) {
                         // Completion-time staleness re-check: a lane whose
@@ -676,6 +720,32 @@ impl TargetPool {
     /// Number of worker threads (the node's SP budget realized).
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// The current micro-batch drain cap.
+    pub fn batch_cap(&self) -> usize {
+        self.shared.batch_cap.load(Ordering::Relaxed)
+    }
+
+    /// Retune the micro-batch drain cap at runtime (clamped to >= 1; no
+    /// worker respawn — each drain reads the cap once at pop). The
+    /// adaptive controller's admission-aware batch sizing calls this as
+    /// queue depth and the latency SLO move.
+    pub fn set_batch_cap(&self, cap: usize) {
+        self.shared.batch_cap.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    /// Verification tasks currently queued across all sessions — the
+    /// admission-pressure signal the controller sizes batches from.
+    pub fn queued_depth(&self) -> usize {
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .subs
+            .values()
+            .map(VecDeque::len)
+            .sum()
     }
 
     /// Sessions currently registered.
@@ -1073,6 +1143,43 @@ mod tests {
         // lane moved the gauge.
         let hits = (stats.affinity_hit_rate() * 4.0).round() as u64;
         assert_eq!(hits, 3, "blocker is a miss; every batched lane a hit");
+    }
+
+    /// Runtime batch-cap retune + the measured-forward-cost feed: the cap
+    /// applies from the next drain (no worker respawn), `queued_depth`
+    /// reports admission pressure, and every dispatched forward
+    /// accumulates its measured model cost for the controller to read.
+    #[test]
+    fn runtime_batch_cap_and_forward_cost_feed() {
+        let pool = pool_with_latency(1, 30.0);
+        assert_eq!(pool.batch_cap(), BATCH_CAP_DEFAULT);
+        pool.set_batch_cap(0); // clamped to the serial plane, not zero
+        assert_eq!(pool.batch_cap(), 1);
+
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10)); // worker takes the blocker
+        a.submit(0, rope(&[1, 1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 2, 3);
+        assert!(pool.queued_depth() >= 1, "queued tasks invisible to the gauge");
+        for _ in 0..3 {
+            assert!(recv_verify(&rx_a).is_some());
+        }
+        let stats = pool.stats();
+        // Cap 1: the queued tasks drained as separate serial forwards
+        // despite arriving while the worker was busy.
+        assert_eq!(stats.batches(), 3, "cap retune not applied at drain");
+        // The wait engine charges 30ms per forward; each dispatched task
+        // must have carried that cost into the pool's estimator feed.
+        let (_, lanes) = stats.forward_cost_totals();
+        assert_eq!(lanes, 3);
+        assert!(
+            stats.forward_ms_per_task() >= 29.0,
+            "measured cost {}ms/task lost the charged forward",
+            stats.forward_ms_per_task()
+        );
+        assert_eq!(pool.queued_depth(), 0);
     }
 
     /// The departure purge must remove EVERY queued task of the session —

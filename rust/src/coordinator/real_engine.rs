@@ -16,7 +16,7 @@
 //! Requires the `pjrt` cargo feature; without it `runtime::pjrt` is the
 //! stub backend and [`RealServer::load`] returns a descriptive error.
 
-use super::{BatchReq, KvReuse, LmServer, ServerFactory, ServerRole};
+use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
 use crate::runtime::kv::{self, BlockStore, StoreStats};
 use crate::runtime::pjrt::{DecodeLane, ModelRole, ModelRuntime, Session};
@@ -32,6 +32,10 @@ pub struct RealServer {
     /// recycled via rollback/resync like lane 0.
     sessions: Vec<Session>,
     reuse: KvReuse,
+    /// Measured wall time spent serving forward-dominated calls, and the
+    /// tasks (lanes) those forwards served — the real engine's side of the
+    /// [`ForwardCost`] surface the adaptive controller's estimators read.
+    cost: ForwardCost,
 }
 
 impl RealServer {
@@ -64,7 +68,12 @@ impl RealServer {
         // on it is recycled via rollback/resync, never replaced (batched
         // calls grow further lane sessions on demand, same discipline).
         let sess = rt.new_session()?;
-        Ok(Self { rt, sessions: vec![sess], reuse: KvReuse::default() })
+        Ok(Self {
+            rt,
+            sessions: vec![sess],
+            reuse: KvReuse::default(),
+            cost: ForwardCost::default(),
+        })
     }
 
     /// Lifetime (prefill, decode-step) forward counts of the underlying
@@ -132,7 +141,12 @@ fn serve_lane(
 
 impl LmServer for RealServer {
     fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
-        serve_lane(&self.rt, &mut self.sessions[0], &mut self.reuse, ctx, from, to)
+        let t0 = std::time::Instant::now();
+        let preds =
+            serve_lane(&self.rt, &mut self.sessions[0], &mut self.reuse, ctx, from, to);
+        self.cost.spent_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.cost.forwards += 1;
+        preds
     }
 
     /// Batched verification over per-lane KV sessions. Each request is
@@ -149,6 +163,7 @@ impl LmServer for RealServer {
             // Single lane: keep the serial path (and lane 0's warmth).
             return reqs.iter().map(|r| self.predictions(&r.ctx, r.from, r.to)).collect();
         }
+        let batch_t0 = std::time::Instant::now();
         // Lane routing: warmest session wins. A cold request (no shared
         // prefix anywhere) must never clobber a warm lane while a colder
         // option exists: it takes an unclaimed *cold* lane, then a lane
@@ -293,6 +308,10 @@ impl LmServer for RealServer {
         for (r, preds) in reqs.iter().zip(&out) {
             debug_assert_eq!(preds.len(), r.to - r.from, "lane output span");
         }
+        // The batch's wall time spreads over its lanes: spent/forwards is
+        // the effective per-task cost, matching the wait engine's charge.
+        self.cost.spent_ms += batch_t0.elapsed().as_secs_f64() * 1e3;
+        self.cost.forwards += reqs.len() as u64;
         out
     }
 
@@ -316,6 +335,10 @@ impl LmServer for RealServer {
 
     fn kv_reuse(&self) -> KvReuse {
         self.reuse
+    }
+
+    fn forward_cost(&self) -> ForwardCost {
+        self.cost
     }
 }
 

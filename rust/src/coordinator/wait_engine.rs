@@ -16,7 +16,7 @@
 //! Waits are hybrid sleep+spin so sub-millisecond TPOTs (Vicuna-68M is
 //! 2.5 ms; our sweeps go lower) stay accurate.
 
-use super::{BatchReq, KvReuse, LmServer, ServerFactory, ServerRole};
+use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::config::LatencyProfile;
 use crate::context::{PrefixWitness, TokenRope};
 use crate::runtime::kv::{self, BlockStore, KvBlock};
@@ -134,6 +134,10 @@ pub struct WaitServer {
     profile: LatencyProfile,
     oracle: Arc<Oracle>,
     forwards: usize,
+    /// Summed charged forward latency, ms — the wait engine's measured
+    /// forward cost is exactly what its latency model charged, so the
+    /// adaptive controller sees the modeled TPOT without scheduling noise.
+    spent_ms: f64,
     max_context: usize,
     /// Tokens the chain currently covers.
     tokens: Vec<u32>,
@@ -269,7 +273,9 @@ impl WaitServer {
 impl LmServer for WaitServer {
     fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
         // One verification task == one forward == one wait.
-        precise_wait(self.profile.forward_ms(self.forwards));
+        let ms = self.profile.forward_ms(self.forwards);
+        precise_wait(ms);
+        self.spent_ms += ms;
         self.forwards += 1;
         self.lane_predictions(ctx, from, to)
     }
@@ -288,7 +294,9 @@ impl LmServer for WaitServer {
         let base = (0..reqs.len())
             .map(|i| self.profile.forward_ms(self.forwards + i))
             .fold(0.0f64, f64::max);
-        precise_wait(base * (1.0 + BATCH_LANE_COST_FRAC * (reqs.len() - 1) as f64));
+        let charged = base * (1.0 + BATCH_LANE_COST_FRAC * (reqs.len() - 1) as f64);
+        precise_wait(charged);
+        self.spent_ms += charged;
         self.forwards += reqs.len();
         reqs.iter().map(|r| self.lane_predictions(&r.ctx, r.from, r.to)).collect()
     }
@@ -308,6 +316,10 @@ impl LmServer for WaitServer {
 
     fn kv_reuse(&self) -> KvReuse {
         self.reuse
+    }
+
+    fn forward_cost(&self) -> ForwardCost {
+        ForwardCost { spent_ms: self.spent_ms, forwards: self.forwards as u64 }
     }
 }
 
@@ -349,6 +361,7 @@ impl WaitEngine {
                 },
                 oracle: oracle.clone(),
                 forwards: 0,
+                spent_ms: 0.0,
                 max_context: this.max_context,
                 tokens: Vec::new(),
                 hashes: vec![oracle.hash_init()],
@@ -480,6 +493,38 @@ mod tests {
                 req.to
             );
         }
+    }
+
+    /// The measured-forward-cost surface: the wait engine reports exactly
+    /// what its latency model charged — per-task TPOT after warm-up, the
+    /// max-not-sum batched charge spread over its lanes — so the adaptive
+    /// controller's estimators see the modeled rates noise-free.
+    #[test]
+    fn forward_cost_reports_charged_waits() {
+        let eng = WaitEngine {
+            target: LatencyProfile::new(4.0, 2.0),
+            drafter: LatencyProfile::uniform(1.0),
+            oracle: oracle(0.9),
+            max_context: 4096,
+        };
+        let mut s = eng.factory()(ServerRole::Target, 0);
+        assert_eq!(s.forward_cost(), ForwardCost::default());
+        let ctx = TokenRope::from_slice(&[1, 2, 3, 4, 5]);
+        let _ = s.predictions(&ctx, 2, 6); // TTFT forward: 4ms
+        let _ = s.predictions(&ctx, 2, 6); // TPOT forward: 2ms
+        let fc = s.forward_cost();
+        assert_eq!(fc.forwards, 2);
+        assert!((fc.spent_ms - 6.0).abs() < 1e-9, "charged {} != 6ms", fc.spent_ms);
+
+        // A 3-lane batch charges max + 2 * 5% of base, over 3 more tasks.
+        let before = s.forward_cost();
+        let reqs: Vec<BatchReq> = (0..3)
+            .map(|_| BatchReq { ctx: ctx.clone(), from: 2, to: 6 })
+            .collect();
+        let _ = s.predict_batch(&reqs);
+        let delta = s.forward_cost() - before;
+        assert_eq!(delta.forwards, 3);
+        assert!((delta.spent_ms - 2.0 * 1.1).abs() < 1e-9, "batched charge {}", delta.spent_ms);
     }
 
     /// The rolling chain must be invisible to callers: predictions after

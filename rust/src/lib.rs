@@ -43,10 +43,19 @@
 //!   are admitted from an arrival queue into up to `max_sessions`
 //!   concurrent generations; the [`server::router::Router`] re-plans each
 //!   generation's (lookahead, SP) operating point via Equation 1 at its
-//!   share of the node's SP budget as sessions join and leave; DSI
-//!   sessions contend for one shared target pool; [`server::metrics`]
-//!   reports latency percentiles plus wall-span throughput and an
-//!   active-sessions gauge.
+//!   share of the node's SP budget as sessions join and leave — and now
+//!   carries live per-session estimators (EWMA acceptance, measured
+//!   drafter/target costs from the `LmServer::forward_cost` surface) with
+//!   calibrated fallbacks; [`server::controller`] is the adaptive control
+//!   plane: a periodic tick that re-solves Equation 1 per session from
+//!   the live estimates, water-fills the SP budget unevenly (min-max on
+//!   expected per-token latency, remainder never stranded), and sizes the
+//!   pool's micro-batch cap from queue depth and the `--slo-ms` target —
+//!   all applied through atomics at runtime, with the static planner kept
+//!   bit-identical as the A/B control; DSI sessions contend for one
+//!   shared target pool; [`server::metrics`] reports latency percentiles
+//!   plus wall-span throughput, an active-sessions gauge, and per-session
+//!   (lookahead, sp_share, acceptance, measured TPOT) controller gauges.
 //! - [`workload`] — synthetic prompt corpora and arrival processes
 //!   (closed-loop, Poisson open-loop, and bursty concurrent arrivals).
 //! - [`stats`] — acceptance-rate estimation (geometric fit, §F.2), summary

@@ -52,6 +52,14 @@ COMMANDS (system):
                             default 16)
                           --kv-capacity-blocks N (block-store LRU capacity,
                             default 4096)
+                          --adaptive on|off (adaptive control plane: live
+                            estimators drive Equation-1 replanning, uneven
+                            SP water-filling, admission-aware batch sizing;
+                            default on — off is the static-planner A/B)
+                          --slo-ms MS (per-token latency target the
+                            admission-aware batch sizing protects; 0 = off)
+                          --control-interval MS (controller tick period,
+                            default 25)
                           --burst N (requests arriving together; 0 = all at t=0)
                           --gap MS (burst spacing, default 50)
   generate              generate text with the real AOT model pair
@@ -249,6 +257,13 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         Some(other) => return Err(format!("unknown sched-policy {other}").into()),
     };
     let batch_cap = flag_usize(flags, "batch-cap", dsi::coordinator::pool::BATCH_CAP_DEFAULT);
+    let adaptive = match flags.get("adaptive").map(String::as_str) {
+        None | Some("on") => true,
+        Some("off") => false,
+        Some(other) => return Err(format!("unknown adaptive mode {other}").into()),
+    };
+    let slo_ms = flag_f64(flags, "slo-ms", 0.0); // <= 0 disables the SLO clamp
+    let control_interval_ms = flag_f64(flags, "control-interval", 25.0);
     let kv_cfg = dsi::runtime::kv::KvStoreConfig {
         block_tokens: flag_usize(
             flags,
@@ -318,7 +333,10 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         .with_max_sessions(max_sessions)
         .with_pool_size(pool_size)
         .with_sched_policy(sched_policy)
-        .with_batch_cap(batch_cap);
+        .with_batch_cap(batch_cap)
+        .with_adaptive(adaptive)
+        .with_slo_ms(slo_ms)
+        .with_control_interval_ms(control_interval_ms);
     for stats in store_stats {
         srv.attach_store_stats(stats);
     }
@@ -334,9 +352,11 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     println!(
         "serving {n_requests} {} requests x {n_tokens} tokens via {} \
          ({engine} engine, {max_sessions} concurrent sessions, pool {pool_size}, \
-         {sched_policy:?} scheduling, batch cap {batch_cap})...\n",
+         {sched_policy:?} scheduling, batch cap {batch_cap}, \
+         {} planner)...\n",
         profile.name(),
-        algo.name()
+        algo.name(),
+        if adaptive { "adaptive" } else { "static" }
     );
     let t0 = std::time::Instant::now();
     let resps = srv.serve(&reqs);

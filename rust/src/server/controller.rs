@@ -1,0 +1,517 @@
+//! The adaptive speculation control plane: a periodic control tick that
+//! turns the paper's boot-time operating point into a served, measured
+//! quantity.
+//!
+//! DSI's speedup guarantee holds "given any drafters" only while
+//! (lookahead, SP) sits at the Equation-1 operating point for the
+//! *actual* acceptance rate and latencies. The static planner solves that
+//! equation once, from calibrated profiles, and re-solves only when
+//! sessions join or leave — so the moment a drafter drifts from its
+//! calibration (weak on this prompt, slow on this machine) the plan goes
+//! stale, which is exactly the SI-slower-than-non-SI regime the paper
+//! closes. The [`Controller`] closes it *online*:
+//!
+//! - **Estimator ingest.** Each tick differences every live session's
+//!   [`SessionCtl`] telemetry (drafter forward cost, accept/reject
+//!   settles) and the pool's measured per-task forward cost, and folds the
+//!   deltas into the [`Router`]'s per-session EWMAs — both engines report
+//!   through the one `LmServer::forward_cost` surface, so wait-mode runs
+//!   exercise this identical loop.
+//! - **Uneven SP allocation** ([`waterfill_sp`]). Instead of the even
+//!   split, the SP budget is water-filled: every session gets one server,
+//!   then each remaining server goes to the session whose *expected
+//!   per-token latency* at live estimates is currently worst — the
+//!   min-max allocation, which hands the marginal server to the
+//!   low-acceptance / slow-drafter session that benefits most. The
+//!   integer-division remainder the even split stranded is allocated by
+//!   construction.
+//! - **Equation-1 replanning.** Each session's lookahead is re-solved at
+//!   its allocated share and its live rates ([`Router::plan_live`]) and
+//!   applied through the session's [`SessionCtl`] — the lookahead lands at
+//!   the next drafter-restart boundary, the in-flight cap at the next
+//!   dispatch; no thread is respawned.
+//! - **Admission-aware batch sizing** ([`admission_batch_cap`]). The
+//!   pool's micro-batch cap follows observed queue depth (lanes beyond
+//!   what's queued are speculative padding) and the `--slo-ms` latency
+//!   target (lanes beyond the SLO's padding budget are latency debt),
+//!   applied live via [`TargetPool::set_batch_cap`].
+//!
+//! The static planner remains the A/B control: with the controller off,
+//! plans and outputs are bit-identical to the pre-adaptive server.
+
+use super::router::Router;
+use crate::config::{max_useful_sp, min_lookahead_for_sp, AlgoKind};
+use crate::coordinator::wait_engine::BATCH_LANE_COST_FRAC;
+use crate::coordinator::{CtlTelemetry, SessionCtl, TargetPool};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Live DSI sessions' control surfaces, keyed by pool session id. Workers
+/// register a session when they construct it and remove it when they
+/// exit; the controller snapshots the map each tick.
+pub type SessionRegistry = Arc<Mutex<HashMap<u64, Arc<SessionCtl>>>>;
+
+/// One session's live rates, resolved against the calibrated fallbacks —
+/// the water-filling input.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionRates {
+    pub session: u64,
+    pub acceptance: f64,
+    pub drafter_tpot_ms: f64,
+}
+
+/// Expected per-token latency of a DSI session granted `share` target
+/// servers, at target cost `t`, drafter cost `d`, acceptance `p`:
+/// the per-token drafting cost plus the amortized rejection stall. A
+/// rejection in a lookahead-k block is detected only once the block has
+/// finished drafting (up to `(k-1)·d` behind the mismatch) and verified
+/// (`t`); rejections arrive at rate `(1-p)` per settled token. A larger
+/// share buys a smaller Equation-1 lookahead, so the marginal server
+/// helps most where `(1-p)·(t + (k-1)·d)` is largest — the weak/slow
+/// drafter sessions. This is the objective [`waterfill_sp`] minimizes the
+/// maximum of.
+pub fn expected_token_latency_ms(t: f64, d: f64, p: f64, share: usize) -> f64 {
+    let k = min_lookahead_for_sp(t, d, share.max(1));
+    d + (1.0 - p.clamp(0.0, 1.0)) * (t + (k - 1) as f64 * d)
+}
+
+/// Water-filling SP allocation: every session gets one server (the
+/// never-starve floor the static planner also guarantees), then each
+/// remaining server goes to the session whose expected per-token latency
+/// is currently worst — the greedy min-max fill. Shares are capped at
+/// each session's useful maximum (§3.1); if every session is capped the
+/// residue is dealt round-robin so the budget is never silently dropped
+/// (an over-cap share is harmless — that session's tasks simply never
+/// queue). Returns one share per entry of `sessions`, summing to
+/// `budget` whenever `budget >= sessions.len()`.
+pub fn waterfill_sp(target_tpot_ms: f64, budget: usize, sessions: &[SessionRates]) -> Vec<usize> {
+    let n = sessions.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut shares = vec![1usize; n];
+    let mut left = budget.saturating_sub(n);
+    let caps: Vec<usize> = sessions
+        .iter()
+        .map(|s| max_useful_sp(target_tpot_ms, s.drafter_tpot_ms))
+        .collect();
+    while left > 0 {
+        let worst = (0..n)
+            .filter(|&i| shares[i] < caps[i])
+            .max_by(|&a, &b| {
+                let la = expected_token_latency_ms(
+                    target_tpot_ms,
+                    sessions[a].drafter_tpot_ms,
+                    sessions[a].acceptance,
+                    shares[a],
+                );
+                let lb = expected_token_latency_ms(
+                    target_tpot_ms,
+                    sessions[b].drafter_tpot_ms,
+                    sessions[b].acceptance,
+                    shares[b],
+                );
+                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+            });
+        match worst {
+            Some(i) => {
+                shares[i] += 1;
+                left -= 1;
+            }
+            None => {
+                // Everyone capped: deal the residue round-robin.
+                for share in shares.iter_mut() {
+                    if left == 0 {
+                        break;
+                    }
+                    *share += 1;
+                    left -= 1;
+                }
+            }
+        }
+    }
+    shares
+}
+
+/// Admission-aware micro-batch cap. Demand has two signals, because the
+/// instantaneous queue depth alone is spiky — a plane already folding
+/// near-simultaneous submits into B-lane batches via the drain window
+/// reads ~0 queued at most tick instants, and a depth-only law would tear
+/// it down to serial:
+///
+/// - `queued` across `workers`: backlog actually waiting right now;
+/// - `recent_occupancy`: mean lanes per batched forward over the last
+///   control interval — batches that really formed are demand by
+///   construction, so an active batched plane holds its cap while a truly
+///   idle one decays to serial.
+///
+/// The SLO side clamps lanes to what the *measured per-forward* cost
+/// affords: a B-lane forward costs ~`base·(1 + FRAC·(B-1))` under the
+/// engines' lane-cost model, so `forward_base_ms` must be the batched
+/// forward's wall cost (NOT the per-lane amortized cost — that deflates
+/// under batching and would let the clamp run away). Feeding the measured
+/// per-forward mean also makes the clamp self-correcting if the 5% prior
+/// understates real hardware: an over-budget batch raises the measured
+/// base, which tightens the next tick's cap. `slo_ms = f64::INFINITY`
+/// disables the clamp; `cap_max` is the configured ceiling
+/// (`--batch-cap`). Always returns >= 1.
+pub fn admission_batch_cap(
+    queued: usize,
+    workers: usize,
+    recent_occupancy: f64,
+    forward_base_ms: f64,
+    slo_ms: f64,
+    cap_max: usize,
+) -> usize {
+    let cap_max = cap_max.max(1);
+    // (manual div-ceil: usize::div_ceil needs Rust 1.73, MSRV is 1.70)
+    let workers = workers.max(1);
+    let backlog = ((queued + workers - 1) / workers).max(1);
+    let formed = if recent_occupancy.is_finite() && recent_occupancy > 1.0 {
+        recent_occupancy.ceil() as usize
+    } else {
+        1
+    };
+    let mut cap = backlog.max(formed).min(cap_max);
+    if slo_ms.is_finite() && slo_ms > 0.0 && forward_base_ms > 0.0 {
+        let extra_affordable = ((slo_ms / forward_base_ms - 1.0) / BATCH_LANE_COST_FRAC)
+            .clamp(0.0, (cap_max - 1) as f64);
+        cap = cap.min(1 + extra_affordable.floor() as usize);
+    }
+    cap
+}
+
+/// One session's slice of the controller's last emitted plan — rendered
+/// in metrics snapshots as the per-session observability surface.
+#[derive(Debug, Clone)]
+pub struct SessionGauge {
+    pub session: u64,
+    pub lookahead: usize,
+    pub sp_share: usize,
+    pub acceptance_ewma: f64,
+    pub drafter_tpot_ms: f64,
+}
+
+/// Controller counters and gauges, shared with `server::metrics` so
+/// snapshots render the control plane's state.
+#[derive(Debug, Default)]
+pub struct ControllerStats {
+    ticks: AtomicU64,
+    /// Ticks whose emitted allocation differed from the previous one.
+    replans: AtomicU64,
+    /// The batch cap the last tick applied (0 before any planning tick).
+    batch_cap_current: AtomicUsize,
+    /// Live target per-task cost the last tick planned with, µs.
+    target_tpot_us: AtomicU64,
+    /// Per-session plan of the last planning tick (kept through idle
+    /// ticks so post-run snapshots still describe the served interval).
+    sessions: Mutex<Vec<SessionGauge>>,
+}
+
+impl ControllerStats {
+    /// Count one controller tick (planning or idle).
+    pub fn record_tick(&self) {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one planning tick's outcome (test hook + controller use).
+    pub fn record_plan(&self, replanned: bool, batch_cap: usize, target_tpot_ms: f64) {
+        if replanned {
+            self.replans.fetch_add(1, Ordering::Relaxed);
+        }
+        self.batch_cap_current.store(batch_cap, Ordering::Relaxed);
+        self.target_tpot_us
+            .store((target_tpot_ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    /// Replace the per-session gauge set (test hook + controller use).
+    pub fn set_session_gauges(&self, gauges: Vec<SessionGauge>) {
+        *self.sessions.lock().unwrap() = gauges;
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    pub fn replans(&self) -> u64 {
+        self.replans.load(Ordering::Relaxed)
+    }
+
+    pub fn batch_cap_current(&self) -> usize {
+        self.batch_cap_current.load(Ordering::Relaxed)
+    }
+
+    pub fn target_tpot_ms(&self) -> f64 {
+        self.target_tpot_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn session_gauges(&self) -> Vec<SessionGauge> {
+        self.sessions.lock().unwrap().clone()
+    }
+}
+
+/// The periodic re-planner. One instance runs per `Server::serve` call
+/// (on its own thread, outside the worker scope); every `tick` ingests
+/// telemetry and re-applies the allocation. All state it mutates is
+/// shared atomics/watches — nothing is respawned.
+pub struct Controller {
+    router: Arc<Mutex<Router>>,
+    registry: SessionRegistry,
+    pool: Arc<TargetPool>,
+    stats: Arc<ControllerStats>,
+    slo_ms: f64,
+    batch_cap_max: usize,
+    /// Telemetry watermarks from the previous tick, per session.
+    seen: HashMap<u64, CtlTelemetry>,
+    /// Pool counter watermarks (forward-cost ns, lanes, batches).
+    pool_seen: (u64, u64, u64),
+    /// Measured per-*forward* wall cost, ms — the batched forward's cost
+    /// including lane padding, NOT amortized over lanes. This is what the
+    /// SLO clamp budgets against (the per-lane cost feeds Equation-1
+    /// capacity planning through the router instead).
+    forward_base_ms: crate::stats::Ewma,
+    /// Last applied (lookahead, sp_share) per session, for `replans`.
+    last_plan: HashMap<u64, (usize, usize)>,
+}
+
+impl Controller {
+    pub fn new(
+        router: Arc<Mutex<Router>>,
+        registry: SessionRegistry,
+        pool: Arc<TargetPool>,
+        stats: Arc<ControllerStats>,
+        slo_ms: f64,
+        batch_cap_max: usize,
+    ) -> Self {
+        Self {
+            router,
+            registry,
+            pool,
+            stats,
+            slo_ms,
+            batch_cap_max,
+            seen: HashMap::new(),
+            pool_seen: (0, 0, 0),
+            forward_base_ms: crate::stats::Ewma::new(0.2),
+            last_plan: HashMap::new(),
+        }
+    }
+
+    /// One control tick: difference telemetry into the estimators,
+    /// water-fill the SP budget, re-solve Equation 1 per session at the
+    /// live rates, and retune the pool's batch cap.
+    pub fn tick(&mut self) {
+        self.stats.record_tick();
+
+        // Registry snapshot (never hold the registry lock against the
+        // router's — workers take the router lock on their dispatch path).
+        let regs: Vec<(u64, Arc<SessionCtl>)> = {
+            let g = self.registry.lock().unwrap();
+            g.iter().map(|(sid, ctl)| (*sid, ctl.clone())).collect()
+        };
+        self.seen.retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
+        self.last_plan.retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
+
+        let mut router = self.router.lock().unwrap();
+
+        // Pool-plane cost deltas: the per-lane mean feeds the router's
+        // Equation-1 capacity estimator; the per-forward mean (batched
+        // wall cost, padding included) feeds the SLO clamp; the interval
+        // occupancy is the batched-plane demand floor.
+        let stats = self.pool.stats();
+        let (ns, lanes) = stats.forward_cost_totals();
+        let batches = stats.batches();
+        let d_ns = ns - self.pool_seen.0;
+        let d_lanes = lanes - self.pool_seen.1;
+        let d_batches = batches - self.pool_seen.2;
+        if d_lanes > 0 {
+            router.observe_target_forward_ms(d_ns as f64 / d_lanes as f64 / 1e6);
+        }
+        if d_batches > 0 {
+            self.forward_base_ms.observe(d_ns as f64 / d_batches as f64 / 1e6);
+        }
+        let interval_occupancy = if d_batches > 0 {
+            d_lanes as f64 / d_batches as f64
+        } else {
+            1.0
+        };
+        self.pool_seen = (ns, lanes, batches);
+
+        // Per-session telemetry deltas → per-session estimators.
+        for (sid, ctl) in &regs {
+            let now = ctl.telemetry();
+            let prev = self.seen.entry(*sid).or_default();
+            let steps = now.drafter_steps.saturating_sub(prev.drafter_steps);
+            if steps > 0 {
+                let ms = (now.drafter_cost_ms - prev.drafter_cost_ms).max(0.0);
+                router.observe_drafter_ms(*sid, ms / steps as f64);
+            }
+            let acc = now.accepted.saturating_sub(prev.accepted);
+            let rej = now.rejected.saturating_sub(prev.rejected);
+            router.observe_session_delta(*sid, acc as usize, rej as usize);
+            *prev = now;
+        }
+
+        if regs.is_empty() {
+            // Nothing to plan. Keep the last gauges — they describe the
+            // served interval — and leave the batch cap where it is.
+            return;
+        }
+
+        // Water-fill the budget at live rates, re-solve Equation 1.
+        let calibrated_target_ms = router.target.tpot_ms;
+        let t = router.live_target_tpot_ms();
+        let rates: Vec<SessionRates> = regs
+            .iter()
+            .map(|(sid, _)| SessionRates {
+                session: *sid,
+                acceptance: router.live_acceptance(*sid),
+                drafter_tpot_ms: router.live_drafter_tpot_ms(*sid),
+            })
+            .collect();
+        let shares = waterfill_sp(t, router.sp_budget, &rates);
+        let mut gauges = Vec::with_capacity(regs.len());
+        let mut replanned = false;
+        for (((sid, ctl), rate), &share) in regs.iter().zip(&rates).zip(&shares) {
+            let plan = router.plan_live(AlgoKind::Dsi, *sid, share);
+            // The in-flight cap is the allocated share (an over-cap share
+            // only means this session's tasks never queue); the lookahead
+            // is Equation 1's at the live rates.
+            ctl.set_plan(plan.lookahead, share);
+            // A session's FIRST emission is the boot allocation, not a
+            // re-plan: `replans` counts only genuine operating-point
+            // movement, so the "did it ever re-plan" gates can't be
+            // satisfied by a controller that never moves.
+            if let Some(prev) = self.last_plan.get(sid) {
+                if *prev != (plan.lookahead, share) {
+                    replanned = true;
+                }
+            }
+            self.last_plan.insert(*sid, (plan.lookahead, share));
+            gauges.push(SessionGauge {
+                session: *sid,
+                lookahead: plan.lookahead,
+                sp_share: share,
+                acceptance_ewma: rate.acceptance,
+                drafter_tpot_ms: rate.drafter_tpot_ms,
+            });
+        }
+        drop(router);
+
+        // Admission-aware batch sizing, applied live (no respawn). The
+        // SLO budgets against the measured per-forward cost (calibrated
+        // fallback until the pool plane reports).
+        let base_ms = self.forward_base_ms.get().unwrap_or(calibrated_target_ms);
+        let cap = admission_batch_cap(
+            self.pool.queued_depth(),
+            self.pool.size(),
+            interval_occupancy,
+            base_ms,
+            self.slo_ms,
+            self.batch_cap_max,
+        );
+        self.pool.set_batch_cap(cap);
+        self.stats.record_plan(replanned, cap, t);
+        self.stats.set_session_gauges(gauges);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::required_sp;
+
+    fn rates(session: u64, p: f64, d: f64) -> SessionRates {
+        SessionRates { session, acceptance: p, drafter_tpot_ms: d }
+    }
+
+    /// The marginal server goes to the weak/slow session until its useful
+    /// cap, then spills to the others — and the full budget is allocated.
+    #[test]
+    fn waterfill_prefers_the_worst_session() {
+        let t = 30.0;
+        let sessions = [rates(1, 0.95, 3.0), rates(2, 0.2, 15.0)];
+        let shares = waterfill_sp(t, 5, &sessions);
+        assert_eq!(shares.iter().sum::<usize>(), 5, "budget partially dropped");
+        // The weak slow-drafter session fills to its useful cap (2 at
+        // 50% relative latency), the strong one takes the rest.
+        assert_eq!(shares, vec![3, 2]);
+        // Every share admits an Equation-1 lookahead at the live rates.
+        for (s, &share) in sessions.iter().zip(&shares) {
+            let k = min_lookahead_for_sp(t, s.drafter_tpot_ms, share);
+            assert!(required_sp(t, s.drafter_tpot_ms, k) <= share);
+        }
+    }
+
+    #[test]
+    fn waterfill_floor_and_overcap_residue() {
+        // Budget below the session count: one each, nobody starved.
+        let sessions = [rates(1, 0.5, 3.0), rates(2, 0.5, 3.0), rates(3, 0.5, 3.0)];
+        assert_eq!(waterfill_sp(30.0, 2, &sessions), vec![1, 1, 1]);
+        // Budget beyond every useful cap: the residue is still dealt out.
+        let slow = [rates(1, 0.5, 30.0), rates(2, 0.5, 30.0)]; // caps at 1
+        let shares = waterfill_sp(30.0, 6, &slow);
+        assert_eq!(shares.iter().sum::<usize>(), 6, "over-cap residue dropped");
+        assert_eq!(waterfill_sp(30.0, 4, &[]), Vec::<usize>::new());
+    }
+
+    /// Expected latency is monotone: worse acceptance and slower drafters
+    /// cost more; more servers never hurt.
+    #[test]
+    fn expected_latency_monotonicity() {
+        let l = |p: f64, d: f64, s: usize| expected_token_latency_ms(30.0, d, p, s);
+        assert!(l(0.2, 3.0, 1) > l(0.9, 3.0, 1));
+        assert!(l(0.5, 15.0, 1) > l(0.5, 3.0, 1));
+        assert!(l(0.5, 3.0, 4) <= l(0.5, 3.0, 1));
+    }
+
+    #[test]
+    fn admission_cap_follows_queue_occupancy_and_slo() {
+        let inf = f64::INFINITY;
+        // Idle pool, no batches forming: serial plane.
+        assert_eq!(admission_batch_cap(0, 2, 1.0, 3.0, inf, 8), 1);
+        // Deep queue: fill lanes up to the configured ceiling.
+        assert_eq!(admission_batch_cap(16, 2, 1.0, 3.0, inf, 8), 8);
+        // Queue reads 0 at the tick instant but the plane has been
+        // forming ~3-lane batches via the drain window: the occupancy
+        // floor keeps the plane alive instead of tearing it down.
+        assert_eq!(admission_batch_cap(0, 2, 2.6, 3.0, inf, 8), 3);
+        // Loose SLO (6ms against a 3ms measured forward): affords more
+        // than the ceiling's worth of 5% lane padding.
+        assert_eq!(admission_batch_cap(16, 2, 1.0, 3.0, 6.0, 8), 8);
+        // SLO exactly one forward: no padding budget at all.
+        assert_eq!(admission_batch_cap(16, 2, 1.0, 3.0, 3.0, 8), 1);
+        // SLO below a single forward: still at least the serial lane.
+        assert_eq!(admission_batch_cap(16, 2, 1.0, 3.0, 2.0, 8), 1);
+        // Shallow queue bounds demand even under an infinite SLO.
+        assert_eq!(admission_batch_cap(3, 2, 1.0, 3.0, inf, 8), 2);
+        // The SLO clamps the occupancy floor too: if the measured
+        // per-forward cost already ate the budget, the plane shrinks
+        // regardless of how many lanes were forming (self-correction
+        // when the 5%-lane prior understates real hardware).
+        assert_eq!(admission_batch_cap(0, 2, 6.0, 3.4, 3.5, 8), 1);
+    }
+
+    #[test]
+    fn controller_stats_gauges() {
+        let s = ControllerStats::default();
+        assert_eq!((s.ticks(), s.replans(), s.batch_cap_current()), (0, 0, 0));
+        s.record_tick();
+        s.record_plan(true, 4, 2.5);
+        s.record_plan(false, 2, 3.0);
+        assert_eq!(s.ticks(), 1);
+        assert_eq!(s.replans(), 1);
+        assert_eq!(s.batch_cap_current(), 2);
+        assert!((s.target_tpot_ms() - 3.0).abs() < 1e-9);
+        s.set_session_gauges(vec![SessionGauge {
+            session: 9,
+            lookahead: 4,
+            sp_share: 2,
+            acceptance_ewma: 0.25,
+            drafter_tpot_ms: 1.5,
+        }]);
+        assert_eq!(s.session_gauges().len(), 1);
+        assert_eq!(s.session_gauges()[0].session, 9);
+    }
+}

@@ -8,6 +8,7 @@
 //! concurrent sessions; the per-request sum is still tracked separately as
 //! `busy_ms` because `busy / span` is the node's effective parallelism.
 
+use super::controller::{ControllerStats, SessionGauge};
 use crate::coordinator::pool::PoolStats;
 use crate::runtime::kv::StoreStats;
 use crate::stats::{percentile, OnlineStats};
@@ -36,6 +37,9 @@ pub struct Metrics {
     /// Settled-block store counters (one handle per attached store — e.g.
     /// per engine role); snapshots sum their eviction pressure.
     store_stats: Vec<Arc<StoreStats>>,
+    /// Adaptive control-plane counters and per-session gauges, if a
+    /// controller is attached (idle-zero otherwise).
+    controller_stats: Option<Arc<ControllerStats>>,
 }
 
 /// A point-in-time summary.
@@ -89,6 +93,21 @@ pub struct Snapshot {
     /// Settled blocks LRU-evicted across the attached block stores — the
     /// memory-pressure symptom the spill/compaction roadmap item watches.
     pub kv_blocks_evicted: u64,
+    /// Adaptive-controller ticks executed (0 when serving statically).
+    pub controller_ticks: u64,
+    /// Ticks whose emitted (lookahead, SP) allocation differed from the
+    /// previous one — how often the live operating point actually moved.
+    pub controller_replans: u64,
+    /// The admission-aware batch cap the controller last applied (0
+    /// before any planning tick / without a controller).
+    pub batch_cap_current: usize,
+    /// Live measured target per-task forward cost the controller last
+    /// planned with, ms (0 until the pool plane reported).
+    pub controller_target_tpot_ms: f64,
+    /// Per-session live plans and estimates from the controller's last
+    /// planning tick: (lookahead, sp_share, acceptance EWMA, measured
+    /// drafter TPOT).
+    pub per_session: Vec<SessionGauge>,
 }
 
 impl Metrics {
@@ -112,6 +131,11 @@ impl Metrics {
     /// pressure over every attached store.
     pub fn attach_store_stats(&mut self, stats: Arc<StoreStats>) {
         self.store_stats.push(stats);
+    }
+
+    /// Share the adaptive controller's counters and per-session gauges.
+    pub fn attach_controller_stats(&mut self, stats: Arc<ControllerStats>) {
+        self.controller_stats = Some(stats);
     }
 
     /// Record that a request was dispatched at `now_ms` on the server's
@@ -202,6 +226,20 @@ impl Metrics {
                 .as_ref()
                 .map_or(0, |s| s.kv_tokens_redecoded()),
             kv_blocks_evicted: self.store_stats.iter().map(|s| s.evicted()).sum(),
+            controller_ticks: self.controller_stats.as_ref().map_or(0, |s| s.ticks()),
+            controller_replans: self.controller_stats.as_ref().map_or(0, |s| s.replans()),
+            batch_cap_current: self
+                .controller_stats
+                .as_ref()
+                .map_or(0, |s| s.batch_cap_current()),
+            controller_target_tpot_ms: self
+                .controller_stats
+                .as_ref()
+                .map_or(0.0, |s| s.target_tpot_ms()),
+            per_session: self
+                .controller_stats
+                .as_ref()
+                .map_or_else(Vec::new, |s| s.session_gauges()),
         }
     }
 }
@@ -209,7 +247,7 @@ impl Metrics {
 impl Snapshot {
     /// Render as aligned text for logs and the e2e example.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} tokens={} active={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
              e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | \
              {:.1} tok/s over {:.0}ms | pool tasks={} wait={:.0}µs dispatch={:.1}µs \
@@ -238,7 +276,23 @@ impl Snapshot {
             self.kv_tokens_reused,
             self.kv_tokens_redecoded,
             self.kv_blocks_evicted,
-        )
+        );
+        if self.controller_ticks > 0 {
+            out.push_str(&format!(
+                " | ctl ticks={} replans={} cap={} target={:.2}ms",
+                self.controller_ticks,
+                self.controller_replans,
+                self.batch_cap_current,
+                self.controller_target_tpot_ms,
+            ));
+        }
+        for g in &self.per_session {
+            out.push_str(&format!(
+                "\n    session {}: k={} sp={} acc={:.2} drafter={:.2}ms",
+                g.session, g.lookahead, g.sp_share, g.acceptance_ewma, g.drafter_tpot_ms,
+            ));
+        }
+        out
     }
 }
 
@@ -380,6 +434,62 @@ mod tests {
         let text = s.render();
         assert!(text.contains("batches=2 occupancy=1.50"), "render: {text}");
         assert!(text.contains("evicted=1"), "render: {text}");
+    }
+
+    /// The per-session observability surface: attached controller stats
+    /// surface (lookahead, sp_share, acceptance_ewma, measured TPOT) per
+    /// session plus the controller counters, both in the snapshot fields
+    /// and the rendered text; without a controller everything idles at
+    /// zero/empty.
+    #[test]
+    fn controller_and_per_session_gauges_are_reported() {
+        let mut m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.controller_ticks, 0);
+        assert_eq!(s.controller_replans, 0);
+        assert_eq!(s.batch_cap_current, 0);
+        assert!(s.per_session.is_empty());
+        assert!(!s.render().contains("ctl ticks"), "idle render shows a controller");
+
+        let stats = Arc::new(ControllerStats::default());
+        m.attach_controller_stats(stats.clone());
+        stats.record_plan(true, 4, 2.75);
+        stats.set_session_gauges(vec![
+            SessionGauge {
+                session: 3,
+                lookahead: 4,
+                sp_share: 2,
+                acceptance_ewma: 0.21,
+                drafter_tpot_ms: 1.02,
+            },
+            SessionGauge {
+                session: 5,
+                lookahead: 2,
+                sp_share: 1,
+                acceptance_ewma: 0.9,
+                drafter_tpot_ms: 0.4,
+            },
+        ]);
+        // Two ticks, one of which re-planned.
+        for _ in 0..2 {
+            stats.record_tick();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.controller_ticks, 2);
+        assert_eq!(s.controller_replans, 1);
+        assert_eq!(s.batch_cap_current, 4);
+        assert!((s.controller_target_tpot_ms - 2.75).abs() < 1e-3);
+        assert_eq!(s.per_session.len(), 2);
+        assert_eq!(
+            (s.per_session[0].lookahead, s.per_session[0].sp_share),
+            (4, 2)
+        );
+        let text = s.render();
+        assert!(text.contains("ctl ticks=2 replans=1 cap=4"), "render: {text}");
+        assert!(
+            text.contains("session 3: k=4 sp=2 acc=0.21 drafter=1.02ms"),
+            "render: {text}"
+        );
     }
 
     #[test]

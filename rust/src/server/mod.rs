@@ -9,6 +9,7 @@
 //! sessions share one [`TargetPool`] — and [`metrics`] aggregates
 //! TTFT/TPOT/throughput over the true wall-clock span.
 
+pub mod controller;
 pub mod metrics;
 pub mod router;
 
@@ -20,12 +21,14 @@ use crate::coordinator::{
 use crate::runtime::kv::StoreStats;
 use crate::runtime::tokenizer;
 use crate::workload::Request;
+use controller::{Controller, ControllerStats, SessionRegistry};
 use metrics::Metrics;
 use router::{Plan, Router};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A completed request.
 #[derive(Debug, Clone)]
@@ -121,7 +124,22 @@ pub struct Server {
     /// control, now selectable from the launcher via `--sched-policy`).
     sched_policy: SchedPolicy,
     /// Micro-batch drain cap for the pool workers (1 = serial plane).
+    /// Under the adaptive controller this is the cap's *ceiling*; the
+    /// admission-aware sizing moves below it at runtime.
     batch_cap: usize,
+    /// Run the adaptive control plane (DSI only): live estimators,
+    /// Equation-1 replanning, uneven SP water-filling, admission-aware
+    /// batch sizing. Off by default — the static planner is the A/B
+    /// control and stays bit-identical to the pre-adaptive server.
+    adaptive: bool,
+    /// Per-token latency SLO the admission-aware batch sizing protects
+    /// (infinite = batch for throughput alone).
+    slo_ms: f64,
+    /// Controller tick period.
+    control_interval: Duration,
+    /// Controller counters/gauges, attached to metrics at construction so
+    /// snapshots always carry the fields (idle-zero when not adaptive).
+    controller_stats: Arc<ControllerStats>,
     /// The node's target workers; lazily built on the first DSI serve and
     /// persistent across `serve` calls (model loading / HLO compilation
     /// happens once per worker, not once per request).
@@ -138,8 +156,10 @@ impl Server {
     pub fn new(factory: ServerFactory, router: Router, algo: AlgoKind) -> Self {
         let pool_size = router.sp_budget;
         let active = Arc::new(AtomicUsize::new(0));
+        let controller_stats = Arc::new(ControllerStats::default());
         let mut metrics = Metrics::new();
         metrics.attach_active_gauge(active.clone());
+        metrics.attach_controller_stats(controller_stats.clone());
         Self {
             factory,
             router: Arc::new(Mutex::new(router)),
@@ -150,6 +170,10 @@ impl Server {
             pool_size,
             sched_policy: SchedPolicy::Affinity,
             batch_cap: crate::coordinator::pool::BATCH_CAP_DEFAULT,
+            adaptive: false,
+            slo_ms: f64::INFINITY,
+            control_interval: Duration::from_millis(25),
+            controller_stats,
             pool: None,
             active,
             epoch: Instant::now(),
@@ -190,6 +214,31 @@ impl Server {
     /// the pool is built.
     pub fn with_batch_cap(mut self, cap: usize) -> Self {
         self.batch_cap = cap.max(1);
+        self
+    }
+
+    /// Run (or not) the adaptive control plane: live per-session
+    /// estimators drive Equation-1 replanning, water-filled uneven SP
+    /// shares, and admission-aware batch sizing while generations are in
+    /// flight. Applies to DSI serving; the static planner (`false`, the
+    /// default) remains the A/B control with plans and outputs
+    /// bit-identical to the pre-adaptive server.
+    pub fn with_adaptive(mut self, on: bool) -> Self {
+        self.adaptive = on;
+        self
+    }
+
+    /// Per-token latency SLO for the admission-aware batch sizing, ms.
+    /// Non-positive or non-finite disables the SLO clamp (batching then
+    /// follows queue depth alone).
+    pub fn with_slo_ms(mut self, ms: f64) -> Self {
+        self.slo_ms = if ms.is_finite() && ms > 0.0 { ms } else { f64::INFINITY };
+        self
+    }
+
+    /// Adaptive-controller tick period, ms (clamped to >= 1ms).
+    pub fn with_control_interval_ms(mut self, ms: f64) -> Self {
+        self.control_interval = Duration::from_secs_f64(ms.max(1.0) / 1e3);
         self
     }
 
@@ -235,6 +284,35 @@ impl Server {
         }
         let n_workers = self.max_sessions.min(requests.len());
 
+        // The adaptive control plane: one controller thread per serve
+        // call, re-planning live while the workers generate. It touches
+        // only Arc-shared state (router, session registry, pool knobs),
+        // so it runs outside the worker scope and is joined after the
+        // scope drains. Statically-planned serves spawn nothing.
+        let registry: Option<SessionRegistry> = (self.adaptive
+            && self.algo == AlgoKind::Dsi)
+            .then(|| Arc::new(Mutex::new(HashMap::new())));
+        let ctl_stop = Arc::new(AtomicBool::new(false));
+        let ctl_thread = registry.as_ref().map(|reg| {
+            let mut ctl = Controller::new(
+                self.router.clone(),
+                reg.clone(),
+                self.pool.clone().expect("DSI serving built the pool"),
+                self.controller_stats.clone(),
+                self.slo_ms,
+                self.batch_cap,
+            );
+            let stop = ctl_stop.clone();
+            let interval = self.control_interval;
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    ctl.tick();
+                    std::thread::sleep(interval);
+                }
+            })
+        });
+        let adaptive = self.adaptive;
+
         // Admission order: by arrival time (stable on ties).
         let mut order: Vec<usize> = (0..requests.len()).collect();
         order.sort_by(|&a, &b| {
@@ -264,6 +342,7 @@ impl Server {
                 let metrics = self.metrics.clone();
                 let active = self.active.clone();
                 let pool = self.pool.clone();
+                let registry = registry.clone();
                 s.spawn(move || {
                     // Lazy: a worker that never receives a job never
                     // loads models or spawns a drafter.
@@ -287,8 +366,20 @@ impl Server {
                         // Re-plan the operating point at the current
                         // session count: the SP budget is a shared
                         // resource (Equation 1 at the per-session share).
-                        let plan: Plan =
-                            router.lock().unwrap().plan_shared(algo, n_active);
+                        // Adaptive boot plans take the remainder-aware
+                        // slot (integer-division leftovers are dispatched,
+                        // not stranded, until the first control tick
+                        // water-fills properly); the static path keeps the
+                        // historical floor split as the bit-identical A/B
+                        // control.
+                        let plan: Plan = {
+                            let r = router.lock().unwrap();
+                            if adaptive {
+                                r.plan_shared_all(algo, n_active)[0]
+                            } else {
+                                r.plan_shared(algo, n_active)
+                            }
+                        };
                         let cfg = OnlineConfig {
                             prompt: req.prompt.clone(),
                             n_tokens: req.max_new_tokens,
@@ -296,19 +387,40 @@ impl Server {
                             sp_degree: plan.sp_degree,
                             max_speculation_depth: depth,
                         };
-                        let out = backend
-                            .get_or_insert_with(|| {
-                                Backend::new(algo, &factory, pool.as_ref(), wid)
-                            })
-                            .run(&cfg);
+                        if backend.is_none() {
+                            let b = Backend::new(algo, &factory, pool.as_ref(), wid);
+                            // Hand the session's live control surface to
+                            // the adaptive controller.
+                            if let (Backend::Dsi(sess), Some(reg)) =
+                                (&b, registry.as_ref())
+                            {
+                                reg.lock()
+                                    .unwrap()
+                                    .insert(sess.session_id(), sess.ctl());
+                            }
+                            backend = Some(b);
+                        }
+                        let out = backend.as_mut().expect("backend built above").run(&cfg);
                         active.fetch_sub(1, Ordering::AcqRel);
 
-                        // Feed the acceptance estimator (§F.2 online
-                        // variant) with the true outcome counts.
-                        router
-                            .lock()
-                            .unwrap()
-                            .observe_run(out.accepted_drafts, out.rejections);
+                        // Feed the estimators with the true outcome
+                        // counts (§F.2 online variant). The global
+                        // counter always learns; the per-session EWMA is
+                        // fed here only on the static path — under the
+                        // controller it learns mid-run from telemetry
+                        // deltas instead, so nothing is double-counted.
+                        {
+                            let mut r = router.lock().unwrap();
+                            match backend.as_ref() {
+                                Some(Backend::Dsi(sess)) if !adaptive => r
+                                    .observe_session_run(
+                                        sess.session_id(),
+                                        out.accepted_drafts,
+                                        out.rejections,
+                                    ),
+                                _ => r.observe_run(out.accepted_drafts, out.rejections),
+                            }
+                        }
 
                         let resp = Response {
                             id: req.id,
@@ -330,6 +442,15 @@ impl Server {
                             break;
                         }
                     }
+                    // Worker exit: its session (if any) departs — drop
+                    // the live-control registration and the router's
+                    // estimator state for it.
+                    if let Some(Backend::Dsi(sess)) = backend.as_ref() {
+                        if let Some(reg) = registry.as_ref() {
+                            reg.lock().unwrap().remove(&sess.session_id());
+                        }
+                        router.lock().unwrap().retire_session(sess.session_id());
+                    }
                 });
             }
             drop(resp_tx);
@@ -347,6 +468,13 @@ impl Server {
             }
             drop(job_tx); // closes the admission queue; workers drain and exit
         });
+
+        // Workers joined: stop the control plane (its last applied plan
+        // and gauges persist in ControllerStats for post-run snapshots).
+        ctl_stop.store(true, Ordering::Release);
+        if let Some(h) = ctl_thread {
+            let _ = h.join();
+        }
 
         // All workers joined: drain responses back into request order.
         let mut slots: Vec<Option<Response>> = (0..requests.len()).map(|_| None).collect();

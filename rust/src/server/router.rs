@@ -1,17 +1,59 @@
-//! Operating-point router: turns calibrated latencies and the live
-//! acceptance-rate estimate into (lookahead, SP degree) per request.
+//! Operating-point router: turns calibrated latencies and live acceptance
+//! and latency estimates into (lookahead, SP degree) per session.
 //!
 //! Policy (§3.1/§4): given the GPU budget, reserve one server for the
 //! drafter, cap SP at the useful maximum `ceil(t_target/t_drafter)`, and
 //! pick the minimal lookahead satisfying Equation 1 — the paper's optimal
 //! choice, detecting rejections as early as the hardware allows.
+//!
+//! Since the adaptive control plane, the router carries two strata of
+//! evidence:
+//!
+//! - **Calibrated profiles** (boot-time `LatencyProfile`s) plus one global
+//!   accepted/rejected counter — the static planner's inputs, unchanged,
+//!   and the fallback whenever live evidence is cold.
+//! - **Live estimators**: a per-session EWMA of the acceptance rate and of
+//!   the measured drafter step cost (fed from each session's telemetry),
+//!   and a global EWMA of the measured target per-task forward cost (fed
+//!   from the pool's dispatch plane). The `live_*` accessors resolve these
+//!   against the calibrated fallbacks, so Equation-1 replanning always has
+//!   a usable operating point — warm sessions get their measured rates,
+//!   cold ones the calibration.
 
 use crate::config::{max_useful_sp, min_lookahead_for_sp, AlgoKind, LatencyProfile};
+use crate::stats::Ewma;
+use std::collections::HashMap;
 
-#[derive(Debug, Clone, Copy)]
+/// Newest-observation weight of the live estimators. Observations arrive
+/// once per control tick (not per token), so a fairly heavy alpha tracks
+/// genuine drift in a handful of ticks without chasing single-tick noise.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Observations before a live estimator outranks its calibrated fallback.
+const WARM_OBS: u64 = 2;
+
+/// Acceptance prior when neither the session nor the global counter has
+/// evidence yet: neutral-pessimistic, so an unknown session neither grabs
+/// extra servers nor starves while its first observations arrive.
+const ACCEPTANCE_PRIOR: f64 = 0.5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Plan {
     pub lookahead: usize,
     pub sp_degree: usize,
+}
+
+/// Live per-session evidence: acceptance and measured drafter step cost.
+#[derive(Debug, Clone)]
+struct SessionEstimator {
+    acceptance: Ewma,
+    drafter_tpot_ms: Ewma,
+}
+
+impl SessionEstimator {
+    fn new() -> Self {
+        Self { acceptance: Ewma::new(EWMA_ALPHA), drafter_tpot_ms: Ewma::new(EWMA_ALPHA) }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -23,12 +65,25 @@ pub struct Router {
     /// Streaming acceptance estimate (§F.2 geometric fit, online).
     accepted: u64,
     rejected: u64,
+    /// Live per-session estimators, keyed by pool session id.
+    sessions: HashMap<u64, SessionEstimator>,
+    /// Measured target per-task forward cost from the pool plane (the
+    /// target replicas are identical, so one estimator serves the node).
+    target_tpot_ms: Ewma,
 }
 
 impl Router {
     pub fn new(target: LatencyProfile, drafter: LatencyProfile, sp_budget: usize) -> Self {
         assert!(sp_budget >= 1);
-        Self { target, drafter, sp_budget, accepted: 0, rejected: 0 }
+        Self {
+            target,
+            drafter,
+            sp_budget,
+            accepted: 0,
+            rejected: 0,
+            sessions: HashMap::new(),
+            target_tpot_ms: Ewma::new(EWMA_ALPHA),
+        }
     }
 
     /// Live acceptance-rate estimate; NaN until observations arrive.
@@ -48,6 +103,98 @@ impl Router {
         self.rejected += rejections as u64;
     }
 
+    /// Record a finished generation's outcomes for `session` as well as
+    /// the global counter — the static serving path's feed, so per-session
+    /// estimates exist even when no controller runs.
+    pub fn observe_session_run(&mut self, session: u64, accepted: usize, rejections: usize) {
+        self.observe_run(accepted, rejections);
+        self.observe_session_delta(session, accepted, rejections);
+    }
+
+    /// Fold one telemetry interval's accept/reject counts into `session`'s
+    /// acceptance EWMA (and only there — the adaptive controller feeds
+    /// this mid-generation while the global counter keeps its own
+    /// post-run feed, so nothing is double-counted). Each settle event is
+    /// a Bernoulli(p) draw under §F.2.1, so the interval ratio is the
+    /// natural per-tick observation.
+    pub fn observe_session_delta(&mut self, session: u64, accepted: usize, rejections: usize) {
+        if accepted + rejections == 0 {
+            return;
+        }
+        let ratio = accepted as f64 / (accepted + rejections) as f64;
+        self.sessions
+            .entry(session)
+            .or_insert_with(SessionEstimator::new)
+            .acceptance
+            .observe(ratio);
+    }
+
+    /// Fold one measured drafter step cost (ms per drafter forward) into
+    /// `session`'s latency estimator.
+    pub fn observe_drafter_ms(&mut self, session: u64, ms_per_step: f64) {
+        if !(ms_per_step.is_finite() && ms_per_step > 0.0) {
+            return;
+        }
+        self.sessions
+            .entry(session)
+            .or_insert_with(SessionEstimator::new)
+            .drafter_tpot_ms
+            .observe(ms_per_step);
+    }
+
+    /// Fold one measured target per-task forward cost (ms, from the pool's
+    /// dispatch plane) into the node-wide target latency estimator.
+    pub fn observe_target_forward_ms(&mut self, ms_per_task: f64) {
+        if !(ms_per_task.is_finite() && ms_per_task > 0.0) {
+            return;
+        }
+        self.target_tpot_ms.observe(ms_per_task);
+    }
+
+    /// Drop a departed session's estimators.
+    pub fn retire_session(&mut self, session: u64) {
+        self.sessions.remove(&session);
+    }
+
+    /// Live acceptance estimate for `session`: its warm EWMA, else the
+    /// global estimate, else a neutral prior.
+    pub fn live_acceptance(&self, session: u64) -> f64 {
+        if let Some(p) = self
+            .sessions
+            .get(&session)
+            .filter(|e| e.acceptance.count() >= WARM_OBS)
+            .and_then(|e| e.acceptance.get())
+        {
+            return p;
+        }
+        let global = self.acceptance_estimate();
+        if global.is_finite() {
+            global
+        } else {
+            ACCEPTANCE_PRIOR
+        }
+    }
+
+    /// Live drafter step cost for `session`, ms: its warm EWMA, else the
+    /// calibrated profile.
+    pub fn live_drafter_tpot_ms(&self, session: u64) -> f64 {
+        self.sessions
+            .get(&session)
+            .filter(|e| e.drafter_tpot_ms.count() >= WARM_OBS)
+            .and_then(|e| e.drafter_tpot_ms.get())
+            .unwrap_or(self.drafter.tpot_ms)
+    }
+
+    /// Live target per-task forward cost, ms: the warm pool-plane EWMA,
+    /// else the calibrated profile.
+    pub fn live_target_tpot_ms(&self) -> f64 {
+        if self.target_tpot_ms.count() >= WARM_OBS {
+            self.target_tpot_ms.get().unwrap_or(self.target.tpot_ms)
+        } else {
+            self.target.tpot_ms
+        }
+    }
+
     /// The operating point for an algorithm with the whole node to itself.
     pub fn plan(&self, algo: AlgoKind) -> Plan {
         self.plan_shared(algo, 1)
@@ -59,8 +206,47 @@ impl Router {
     /// as sessions join and leave. A smaller share forces a larger
     /// lookahead (fewer, longer verification tasks per session) — the
     /// resource-vs-latency tradeoff of §3.1 at serving scale.
+    ///
+    /// This is the *floor* (evenly-split) share — the static planner's
+    /// historical behavior, kept bit-identical as the adaptive plane's A/B
+    /// control. The integer-division remainder it strands is handed out by
+    /// [`plan_shared_all`](Self::plan_shared_all) (and, at live estimates,
+    /// by the controller's water-filling).
     pub fn plan_shared(&self, algo: AlgoKind, active_sessions: usize) -> Plan {
         let share = (self.sp_budget / active_sessions.max(1)).max(1);
+        self.plan_at(algo, share, self.target.tpot_ms, self.drafter.tpot_ms)
+    }
+
+    /// Per-slot static allocation over `active_sessions` sessions: the SP
+    /// budget split as evenly as possible with the integer-division
+    /// remainder dealt round-robin to the first slots (budget 10 over 4
+    /// sessions → shares `[3, 3, 2, 2]`, never `[2, 2, 2, 2]` with two
+    /// servers silently stranded), each slot's lookahead re-solved via
+    /// Equation 1 at its share. Allocated SP sums to the budget whenever
+    /// `sp_budget >= active_sessions`; below that every session still gets
+    /// one server (the pool oversubscribes rather than starving anyone).
+    pub fn plan_shared_all(&self, algo: AlgoKind, active_sessions: usize) -> Vec<Plan> {
+        let n = active_sessions.max(1);
+        let base = self.sp_budget / n;
+        let rem = self.sp_budget % n;
+        (0..n)
+            .map(|slot| {
+                let share = (base + usize::from(slot < rem)).max(1);
+                self.plan_at(algo, share, self.target.tpot_ms, self.drafter.tpot_ms)
+            })
+            .collect()
+    }
+
+    /// The Equation-1 operating point for one session at live estimates:
+    /// `share` servers, the measured target cost, and `session`'s measured
+    /// drafter cost (each falling back to calibration until warm). The
+    /// adaptive controller calls this once per session per tick.
+    pub fn plan_live(&self, algo: AlgoKind, session: u64, share: usize) -> Plan {
+        self.plan_at(algo, share, self.live_target_tpot_ms(), self.live_drafter_tpot_ms(session))
+    }
+
+    /// Equation-1 planning core at explicit rates.
+    fn plan_at(&self, algo: AlgoKind, share: usize, target_ms: f64, drafter_ms: f64) -> Plan {
         match algo {
             AlgoKind::NonSi => Plan { lookahead: 1, sp_degree: 1 },
             AlgoKind::Si | AlgoKind::Pearl => Plan {
@@ -72,8 +258,8 @@ impl Router {
             AlgoKind::Dsi => {
                 // Don't allocate more target servers than can ever be
                 // concurrently busy (§3.1).
-                let sp = share.min(max_useful_sp(self.target.tpot_ms, self.drafter.tpot_ms));
-                let k = min_lookahead_for_sp(self.target.tpot_ms, self.drafter.tpot_ms, sp);
+                let sp = share.min(max_useful_sp(target_ms, drafter_ms)).max(1);
+                let k = min_lookahead_for_sp(target_ms, drafter_ms, sp);
                 Plan { lookahead: k, sp_degree: sp }
             }
         }
@@ -137,5 +323,64 @@ mod tests {
         let p = r.plan_shared(AlgoKind::Dsi, 9);
         assert_eq!(p.sp_degree, 1);
         assert!(p.lookahead >= 1);
+    }
+
+    /// The integer-division fix: budget 10 over 4 sessions must allocate
+    /// [3, 3, 2, 2] — allocated SP sums to the budget, no remainder
+    /// servers stranded — with every slot's lookahead satisfying
+    /// Equation 1 at its share.
+    #[test]
+    fn shared_all_distributes_the_remainder() {
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 10);
+        let plans = r.plan_shared_all(AlgoKind::Dsi, 4);
+        let shares: Vec<usize> = plans.iter().map(|p| p.sp_degree).collect();
+        assert_eq!(shares, vec![3, 3, 2, 2]);
+        assert_eq!(shares.iter().sum::<usize>(), 10, "budget partially stranded");
+        for p in &plans {
+            assert!(crate::config::required_sp(30.0, 3.0, p.lookahead) <= p.sp_degree);
+        }
+        // The floor plan (the A/B control) is the last slot's.
+        assert_eq!(r.plan_shared(AlgoKind::Dsi, 4).sp_degree, 2);
+
+        // Budget below the session count: one server each, nobody starved.
+        let tight = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 4);
+        let plans = tight.plan_shared_all(AlgoKind::Dsi, 9);
+        assert_eq!(plans.len(), 9);
+        assert!(plans.iter().all(|p| p.sp_degree == 1));
+    }
+
+    /// Live estimators fall back to calibration until warm, then track
+    /// the measured rates — and `plan_live` re-solves Equation 1 at them.
+    #[test]
+    fn live_estimates_fall_back_then_track() {
+        let mut r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 7);
+        // Cold: calibrated fallbacks and the neutral acceptance prior.
+        assert_eq!(r.live_target_tpot_ms(), 30.0);
+        assert_eq!(r.live_drafter_tpot_ms(42), 3.0);
+        assert_eq!(r.live_acceptance(42), 0.5);
+        let boot = r.plan_live(AlgoKind::Dsi, 42, 2);
+        assert_eq!(boot, r.plan_shared(AlgoKind::Dsi, 3), "cold plan_live != calibrated plan");
+
+        // One observation is still below the warm-up gate.
+        r.observe_drafter_ms(42, 9.0);
+        assert_eq!(r.live_drafter_tpot_ms(42), 3.0);
+
+        // Warm: the measured drafter is 3x slower than calibrated; the
+        // Equation-1 lookahead at the same share must shrink with it.
+        for _ in 0..8 {
+            r.observe_drafter_ms(42, 9.0);
+            r.observe_target_forward_ms(30.0);
+            r.observe_session_delta(42, 1, 4); // p ~ 0.2
+        }
+        assert!((r.live_drafter_tpot_ms(42) - 9.0).abs() < 1e-6);
+        assert!((r.live_acceptance(42) - 0.2).abs() < 1e-6);
+        let live = r.plan_live(AlgoKind::Dsi, 42, 2);
+        assert!(live.lookahead < boot.lookahead, "slower drafter must lower k at fixed SP");
+        assert!(crate::config::required_sp(30.0, 9.0, live.lookahead) <= live.sp_degree);
+
+        // Another session stays on calibration; retiring drops the state.
+        assert_eq!(r.live_drafter_tpot_ms(7), 3.0);
+        r.retire_session(42);
+        assert_eq!(r.live_drafter_tpot_ms(42), 3.0);
     }
 }

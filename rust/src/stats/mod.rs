@@ -78,6 +78,49 @@ impl OnlineStats {
     }
 }
 
+/// Bias-corrected exponentially-weighted moving average — the live
+/// estimator behind the adaptive control plane's per-session acceptance
+/// and latency tracking. Unlike a plain EWMA seeded at zero, the value is
+/// normalized by the accumulated weight, so early samples are unbiased
+/// (after one observation the estimate IS that observation) while drift
+/// still decays old evidence geometrically.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    /// Accumulated weight (the bias-correction normalizer).
+    norm: f64,
+    n: u64,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: the weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha {alpha} not in (0,1]");
+        Self { alpha, value: 0.0, norm: 0.0, n: 0 }
+    }
+
+    /// Fold in one observation (non-finite samples are dropped).
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.value = (1.0 - self.alpha) * self.value + self.alpha * x;
+        self.norm = (1.0 - self.alpha) * self.norm + self.alpha;
+        self.n += 1;
+    }
+
+    /// Observations folded in so far (the caller's warm-up gate).
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Bias-corrected estimate; `None` before any observation.
+    pub fn get(&self) -> Option<f64> {
+        (self.n > 0).then(|| self.value / self.norm)
+    }
+}
+
 /// Exact percentile over a sample (nearest-rank). Used for latency
 /// reporting (p50/p90/p99). Sorts a copy; not for hot paths.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
@@ -181,6 +224,24 @@ mod tests {
         assert_eq!(a.count(), all.count());
         assert!((a.mean() - all.mean()).abs() < 1e-9);
         assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_is_bias_corrected_and_tracks_drift() {
+        let mut e = Ewma::new(0.25);
+        assert!(e.get().is_none());
+        e.observe(10.0);
+        // Bias correction: the first estimate is the first sample exactly.
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-12);
+        for _ in 0..40 {
+            e.observe(2.0);
+        }
+        // Old evidence decays: the estimate converges to the new level.
+        assert!((e.get().unwrap() - 2.0).abs() < 1e-3);
+        assert_eq!(e.count(), 41);
+        // Non-finite samples are ignored.
+        e.observe(f64::NAN);
+        assert_eq!(e.count(), 41);
     }
 
     #[test]
