@@ -82,6 +82,10 @@ pub struct SessionCtl {
     /// request-boundary seeding then stops overwriting the learned
     /// operating point (see [`seed_plan`](Self::seed_plan)).
     controller_planned: AtomicBool,
+    /// Fair-share weight of the request being served (f64 bits; tenant
+    /// weight × SLO-class multiplier, default 1.0). Written by the server
+    /// at dispatch, read by the controller's weighted water-fill.
+    weight_bits: AtomicU64,
     drafter_cost_ns: AtomicU64,
     drafter_steps: AtomicU64,
     accepted: AtomicU64,
@@ -104,6 +108,7 @@ impl SessionCtl {
             lookahead: AtomicUsize::new(1),
             sp_degree: AtomicUsize::new(1),
             controller_planned: AtomicBool::new(false),
+            weight_bits: AtomicU64::new(1.0f64.to_bits()),
             drafter_cost_ns: AtomicU64::new(0),
             drafter_steps: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
@@ -134,6 +139,19 @@ impl SessionCtl {
         self.lookahead.store(lookahead.max(1), Ordering::Relaxed);
         self.sp_degree.store(sp_degree.max(1), Ordering::Relaxed);
         self.controller_planned.store(true, Ordering::Relaxed);
+    }
+
+    /// Set the fair-share weight of the request this session is serving
+    /// (tenant weight × SLO multiplier; clamped positive). Written by the
+    /// server at dispatch.
+    pub fn set_weight(&self, w: f64) {
+        let w = if w.is_finite() && w > 0.0 { w } else { 1.0 };
+        self.weight_bits.store(w.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The live fair-share weight (1.0 unless a tagged request set it).
+    pub fn weight(&self) -> f64 {
+        f64::from_bits(self.weight_bits.load(Ordering::Relaxed))
     }
 
     /// The live (lookahead, sp_degree) operating point.
@@ -475,6 +493,30 @@ impl DsiSession {
                     }
                     inflight.remove(&r.from);
                 }
+                SessionMsg::Reclaimed { gen: g, from } => {
+                    if g != gen {
+                        continue; // a rejection already staled it
+                    }
+                    // The pool cancelled one of our queued tasks on a
+                    // share shrink and handed it back. Forget its
+                    // in-flight coverage so the work is re-dispatched:
+                    // reclaims are newest-first, so reclaimed blocks form
+                    // a suffix of the dispatched ones — rewinding the
+                    // block cursor to the lowest handed-back τ_j makes
+                    // `dispatch_ready_tasks` resubmit them (identical
+                    // context, identical predictions) once the shrunken
+                    // share allows. A handed-back chain task re-arms the
+                    // stall fallback instead.
+                    if inflight.remove(&from).is_some() {
+                        if from > c0 && (from - c0 - 1) % k == 0 {
+                            let j = (from - c0 - 1) / k + 1;
+                            next_task = next_task.min(j);
+                        }
+                        if chain_dispatched_for == from {
+                            chain_dispatched_for = usize::MAX;
+                        }
+                    }
+                }
             }
             // Dispatch whatever became possible: new drafts may complete a
             // block, and a finished verification frees in-flight budget.
@@ -759,6 +801,56 @@ mod tests {
         );
         assert!(t.drafter_steps > 0, "drafter cost telemetry never fed");
         assert!(t.drafter_cost_ms > 0.0);
+    }
+
+    /// Preemptive reclaim end-to-end: a controller thread repeatedly
+    /// shrinks the session's share 4 → 1 and reclaims its queued pool
+    /// tasks mid-generation. The coordinator must absorb the `Reclaimed`
+    /// hand-backs (re-dispatching the blocks once budget allows) without
+    /// stalling, and the output must stay bit-identical to non-SI.
+    #[test]
+    fn preemptive_reclaim_mid_generation_stays_lossless() {
+        // Slow target + instant drafter on a 1-worker pool: the session's
+        // sub-queue is reliably deep when the reclaim fires.
+        let eng = engine(1.0, 20.0, 0.1, 67);
+        let pool = TargetPool::new(&eng.factory(), 1);
+        let mut session = DsiSession::new(&pool, &eng.factory());
+        let sid = session.session_id();
+        let ctl = session.ctl();
+        let stats = pool.stats();
+        let c = cfg(12, 1, 4);
+
+        let done = Arc::new(AtomicBool::new(false));
+        let out = std::thread::scope(|s| {
+            let controller = {
+                let done = done.clone();
+                let ctl = ctl.clone();
+                let pool = &pool;
+                s.spawn(move || {
+                    // Alternate a wide share (queue fills on the 1-worker
+                    // pool) with a shrink-plus-reclaim, like the adaptive
+                    // controller does on a water-fill change.
+                    while !done.load(Ordering::Acquire) {
+                        ctl.set_plan(1, 4);
+                        std::thread::sleep(Duration::from_millis(3));
+                        ctl.set_plan(1, 1);
+                        pool.reclaim_to_cap(sid, 1);
+                        std::thread::sleep(Duration::from_millis(3));
+                    }
+                })
+            };
+            let out = session.generate(&c);
+            done.store(true, Ordering::Release);
+            controller.join().unwrap();
+            out
+        });
+
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens, "reclaim broke losslessness");
+        assert!(
+            stats.reclaimed() > 0,
+            "no task was ever reclaimed — the scenario lost its teeth"
+        );
     }
 
     #[test]

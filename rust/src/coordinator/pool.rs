@@ -47,6 +47,15 @@
 //!   too, surfaced through `server::metrics::Snapshot` and the hot-path
 //!   bench.
 //!
+//! - **Preemptive reclaim**: when the adaptive controller's water-fill
+//!   shrinks a session's SP share, [`TargetPool::reclaim_to_cap`] cancels
+//!   that session's queued tasks above the new cap (newest-first — the
+//!   deepest speculative blocks), counts them under `reclaimed`, and
+//!   hands each back to its owner as [`SessionMsg::Reclaimed`] so the
+//!   coordinator re-dispatches once budget allows. Freed lanes serve the
+//!   sessions the plan chose within one tick instead of one generation;
+//!   running forwards are never touched.
+//!
 //! Sessions interact with the pool through a [`PoolHandle`] obtained from
 //! [`TargetPool::register`]; dropping the handle unregisters the session
 //! and purges its queued tasks.
@@ -116,6 +125,12 @@ pub enum SessionMsg {
     Draft { gen: u64, index: usize, token: u32 },
     /// A verification result from the target pool.
     Verify(VerifyResult),
+    /// A queued (never dispatched) task the pool cancelled when the
+    /// controller shrank this session's SP share. The coordinator must
+    /// forget the task's in-flight entry so the block is re-dispatched
+    /// (or the chain fallback re-armed) once budget allows — reclaim is
+    /// a hand-back, never a silent drop.
+    Reclaimed { gen: u64, from: usize },
     /// The session's drafter thread exited.
     DrafterStopped,
 }
@@ -217,6 +232,16 @@ pub struct PoolStats {
     kv_tokens_reused: AtomicU64,
     /// Context positions re-decoded across all dispatched forwards.
     kv_tokens_redecoded: AtomicU64,
+    /// Queued tasks cancelled by a preemptive SP-share shrink
+    /// ([`TargetPool::reclaim_to_cap`]) — distinct from `skipped_stale`:
+    /// the work was still valid, the controller just handed its lane to
+    /// another session. Each is announced to its owner as
+    /// [`SessionMsg::Reclaimed`].
+    reclaimed: AtomicU64,
+    /// Summed submit→reclaim queue wait of reclaimed tasks, ns — folded
+    /// into the wait mean like skips, so reclaim has no survivor bias
+    /// either.
+    reclaimed_wait_ns: AtomicU64,
 }
 
 impl PoolStats {
@@ -235,6 +260,17 @@ impl PoolStats {
             self.skipped_stale.fetch_add(1, Ordering::Relaxed);
         }
         self.skipped_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+    }
+
+    /// Record one share-shrink-reclaimed task and its queue wait.
+    pub fn record_reclaimed(&self, queue_wait_ns: u64) {
+        self.reclaimed.fetch_add(1, Ordering::Relaxed);
+        self.reclaimed_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+    }
+
+    /// Queued tasks cancelled by preemptive SP-share reclaim.
+    pub fn reclaimed(&self) -> u64 {
+        self.reclaimed.load(Ordering::Relaxed)
     }
 
     /// Record one batched forward (its lanes were each `record`ed).
@@ -338,15 +374,17 @@ impl PoolStats {
         self.kv_tokens_redecoded.load(Ordering::Relaxed)
     }
 
-    /// Mean submit→pop queue wait over every popped task — dispatched
-    /// *and* skipped — µs (0 when nothing was popped).
+    /// Mean submit→pop queue wait over every task that left the queue —
+    /// dispatched, skipped, *and* reclaimed — µs (0 when nothing left).
     pub fn queue_wait_us_mean(&self) -> f64 {
-        let n = self.tasks() + self.skipped_stale() + self.skipped_departed();
+        let n = self.tasks() + self.skipped_stale() + self.skipped_departed()
+            + self.reclaimed();
         if n == 0 {
             return 0.0;
         }
         let ns = self.queue_wait_ns.load(Ordering::Relaxed)
-            + self.skipped_wait_ns.load(Ordering::Relaxed);
+            + self.skipped_wait_ns.load(Ordering::Relaxed)
+            + self.reclaimed_wait_ns.load(Ordering::Relaxed);
         ns as f64 / n as f64 / 1e3
     }
 
@@ -482,6 +520,50 @@ impl PoolShared {
     /// `u64::MAX` behind.)
     fn purge_all(&self, session: u64) {
         self.queue.lock().unwrap().subs.remove(&session);
+    }
+
+    /// Preemptive SP-share reclaim: cancel `session`'s queued tasks
+    /// beyond `cap`, newest-first (the deepest speculative blocks — the
+    /// ones above the share watermark), keeping the oldest `cap` tasks
+    /// that cover the frontier. Running tasks are untouched (a lane is
+    /// never dropped mid-forward). Every cancelled task is counted in
+    /// [`PoolStats::reclaimed`] with its queue wait and announced to the
+    /// owning session as [`SessionMsg::Reclaimed`], so the coordinator
+    /// re-dispatches the work once budget allows. Returns the number of
+    /// tasks reclaimed.
+    fn reclaim_to_cap(&self, session: u64, cap: usize) -> usize {
+        let mut purged: Vec<VerifyTask> = Vec::new();
+        {
+            let mut q = self.queue.lock().unwrap();
+            if let Some(sub) = q.subs.get_mut(&session) {
+                while sub.len() > cap {
+                    purged.push(sub.pop_back().expect("len > cap implies non-empty"));
+                }
+                if sub.is_empty() {
+                    q.subs.remove(&session);
+                }
+            }
+        }
+        if purged.is_empty() {
+            return 0;
+        }
+        let now = Instant::now();
+        let tx = self
+            .routes
+            .lock()
+            .unwrap()
+            .get(&session)
+            .map(|r| r.tx.clone());
+        let n = purged.len();
+        for t in purged {
+            let wait_ns = now.duration_since(t.submitted).as_nanos() as u64;
+            self.stats.record_reclaimed(wait_ns);
+            if let Some(tx) = &tx {
+                // A departed session has no route; the count still stands.
+                let _ = tx.send(SessionMsg::Reclaimed { gen: t.gen, from: t.from });
+            }
+        }
+        n
     }
 
     #[cfg(test)]
@@ -751,6 +833,18 @@ impl TargetPool {
     /// Sessions currently registered.
     pub fn active_sessions(&self) -> usize {
         self.shared.active.load(Ordering::Acquire)
+    }
+
+    /// Preemptively reclaim `session`'s queued verification lanes down to
+    /// `cap` tasks (newest-first; running forwards are never touched).
+    /// Called by the adaptive controller when the water-fill shrinks a
+    /// session's SP share, so the freed lanes serve the sessions the
+    /// plan chose within one tick instead of one generation. Cancelled
+    /// tasks are counted as [`PoolStats::reclaimed`] and announced to
+    /// the owner via [`SessionMsg::Reclaimed`]. Returns the number of
+    /// tasks reclaimed.
+    pub fn reclaim_to_cap(&self, session: u64, cap: usize) -> usize {
+        self.shared.reclaim_to_cap(session, cap)
     }
 
     /// The pool's dispatch-path timing counters (shared; attach to
@@ -1180,6 +1274,68 @@ mod tests {
             stats.forward_ms_per_task()
         );
         assert_eq!(pool.queued_depth(), 0);
+    }
+
+    /// Preemptive SP-share reclaim: a shrink from 4 queued tasks to a cap
+    /// of 1 leaves ≤ 1 queued task; the rest are counted as `reclaimed`
+    /// (NOT `skipped_stale` — the work was valid, the share just moved)
+    /// and each cancelled task is handed back to the owner as a
+    /// `Reclaimed` message so the coordinator can re-dispatch it.
+    #[test]
+    fn share_shrink_reclaims_queued_tasks_above_cap() {
+        // 80ms blocker keeps the single worker busy so A's four tasks
+        // deterministically sit queued while we shrink the share.
+        let pool = pool_with_latency(1, 80.0);
+        let (tx_blocker, rx_blocker) = channel();
+        let blocker = pool.register(tx_blocker);
+        blocker.submit(0, rope(&[9, 9, 9]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10)); // worker takes the blocker
+
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        let sid = a.session_id();
+        // Four queued "blocks": from = 2, 3, 4, 5 in submit order.
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1]), 3, 4);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 4, 5);
+        a.submit(0, rope(&[1, 1, 1, 1, 1, 1]), 5, 6);
+        assert_eq!(pool.shared.queued_tasks_of(sid), 4);
+
+        // The controller shrank this session's share 4 → 1.
+        let n = pool.reclaim_to_cap(sid, 1);
+        assert_eq!(n, 3);
+        assert!(pool.shared.queued_tasks_of(sid) <= 1);
+
+        let stats = pool.stats();
+        assert_eq!(stats.reclaimed(), 3);
+        assert_eq!(stats.skipped_stale(), 0, "reclaim must not count as stale skip");
+        assert!(
+            stats.queue_wait_us_mean() > 0.0,
+            "reclaimed tasks' wait vanished from the gauge"
+        );
+
+        // Newest-first: the frontier-covering oldest task (from=2) stays;
+        // from = 3, 4, 5 come back as Reclaimed hand-backs.
+        let mut handed_back = Vec::new();
+        for _ in 0..3 {
+            match rx_a.recv_timeout(Duration::from_millis(500)) {
+                Ok(SessionMsg::Reclaimed { gen, from }) => {
+                    assert_eq!(gen, 0);
+                    handed_back.push(from);
+                }
+                other => panic!("expected Reclaimed, got {other:?}"),
+            }
+        }
+        handed_back.sort_unstable();
+        assert_eq!(handed_back, vec![3, 4, 5]);
+
+        // The surviving task is served once the blocker finishes.
+        assert!(recv_verify(&rx_blocker).is_some());
+        let r = recv_verify(&rx_a).expect("surviving lane served");
+        assert_eq!(r.from, 2);
+        // Reclaiming an empty / already-capped queue is a no-op.
+        assert_eq!(pool.reclaim_to_cap(sid, 1), 0);
+        assert_eq!(stats.reclaimed(), 3);
     }
 
     /// The departure purge must remove EVERY queued task of the session —

@@ -39,27 +39,38 @@
 //!   re-decoding it; sizing via `--kv-block-tokens`/`--kv-capacity-blocks`).
 //!   The PJRT client proper is gated behind the `pjrt` feature (stubbed in
 //!   the default dependency-free build).
-//! - [`server`] — the serving front: a multi-session scheduler. Requests
-//!   are admitted from an arrival queue into up to `max_sessions`
-//!   concurrent generations; the [`server::router::Router`] re-plans each
-//!   generation's (lookahead, SP) operating point via Equation 1 at its
-//!   share of the node's SP budget as sessions join and leave — and now
-//!   carries live per-session estimators (EWMA acceptance, measured
-//!   drafter/target costs from the `LmServer::forward_cost` surface) with
-//!   calibrated fallbacks; [`server::controller`] is the adaptive control
-//!   plane: a periodic tick that re-solves Equation 1 per session from
-//!   the live estimates, water-fills the SP budget unevenly (min-max on
-//!   expected per-token latency, remainder never stranded), and sizes the
-//!   pool's micro-batch cap from queue depth and the `--slo-ms` target —
-//!   all applied through atomics at runtime, with the static planner kept
-//!   bit-identical as the A/B control; DSI sessions contend for one
-//!   shared target pool; [`server::metrics`] reports latency percentiles
-//!   plus wall-span throughput, an active-sessions gauge, and per-session
-//!   (lookahead, sp_share, acceptance, measured TPOT) controller gauges.
-//! - [`workload`] — synthetic prompt corpora and arrival processes
-//!   (closed-loop, Poisson open-loop, and bursty concurrent arrivals).
+//! - [`server`] — the serving front: a continuous-batching multi-session
+//!   scheduler. Requests are admitted from an arrival queue into up to
+//!   `max_sessions` concurrent generations, and under the default
+//!   `AdmissionMode::Continuous` the next request is admitted the instant
+//!   a slot frees (run-to-completion gang waves are kept as the A/B
+//!   control); the [`server::router::Router`] re-plans each generation's
+//!   (lookahead, SP) operating point via Equation 1 at its share of the
+//!   node's SP budget as sessions join and leave — and carries live
+//!   per-session estimators (EWMA acceptance, measured drafter/target
+//!   costs from the `LmServer::forward_cost` surface) with calibrated
+//!   fallbacks; [`server::controller`] is the adaptive control plane: a
+//!   tick that re-solves Equation 1 per session from the live estimates,
+//!   water-fills the SP budget by *weighted* min-max on expected
+//!   per-token latency (tenant weight × SLO-class multiplier), and sizes
+//!   the pool's micro-batch cap from queue depth and the `--slo-ms`
+//!   target. Every admission/completion kicks the tick immediately
+//!   (membership-triggered replanning), and when a water-fill shrinks a
+//!   session's SP share the controller preemptively reclaims that
+//!   session's queued verify tasks above the new cap — counted, handed
+//!   back to the coordinator, never silently dropped. All applied through
+//!   atomics at runtime, with the static planner kept bit-identical as
+//!   the A/B control; DSI sessions contend for one shared target pool;
+//!   [`server::metrics`] reports streaming-histogram latency percentiles
+//!   (TTFT/e2e/TPOT p50/p99 in O(1) memory), wall-span throughput, an
+//!   active-sessions gauge, reclaim/kick counters, and per-session
+//!   (lookahead, sp_share, acceptance, TPOT, weight) controller gauges.
+//! - [`workload`] — synthetic prompt corpora, arrival processes
+//!   (closed-loop, Poisson, Markov-modulated bursty, diurnal open-loop),
+//!   and per-tenant tagging (weight + SLO class) for traced requests.
 //! - [`stats`] — acceptance-rate estimation (geometric fit, §F.2), summary
-//!   statistics, speedup ratios.
+//!   statistics, speedup ratios, and the streaming log-bucket histogram
+//!   backing serving percentiles.
 //! - [`report`] — regenerates every paper table/figure as text + CSV.
 //! - [`util`] — dependency-free substrates: PRNG, scoped parallel map,
 //!   JSON, benchkit, and `anyhow`-style error plumbing.

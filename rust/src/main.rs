@@ -11,9 +11,9 @@ use dsi::coordinator::{real_factory, run_dsi, run_nonsi, run_si, OnlineConfig};
 use dsi::report;
 use dsi::runtime::tokenizer;
 use dsi::server::router::Router;
-use dsi::server::Server;
+use dsi::server::{AdmissionMode, Server};
 use dsi::simulator::sweep::SweepSpec;
-use dsi::workload::{PromptGen, PromptProfile};
+use dsi::workload::{ArrivalProcess, PromptGen, PromptProfile, SloClass, TenantSpec};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -62,6 +62,17 @@ COMMANDS (system):
                             default 25)
                           --burst N (requests arriving together; 0 = all at t=0)
                           --gap MS (burst spacing, default 50)
+                          --admission continuous|rtc (mid-flight slot refill
+                            vs run-to-completion gang waves; default continuous)
+                          --arrival poisson|bursty|diurnal (open-loop arrival
+                            process; overrides --burst/--gap pacing)
+                          --rate R (mean arrival rate in req/s for --arrival,
+                            default 20)
+                          --tenant-weights CSV (e.g. 2,1 — requests tagged
+                            round-robin; weights drive the weighted min-max
+                            fair SP water-fill)
+                          --slo-classes CSV (interactive|standard|batch per
+                            tenant, default standard; scales tenant weight)
   generate              generate text with the real AOT model pair
                           --algo dsi|si|nonsi  --prompt STR  --tokens N
   calibrate             measure the tiny pair's TTFT/TPOT + acceptance rate
@@ -280,6 +291,49 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     };
     let burst = flag_usize(flags, "burst", 0);
     let gap_ms = flag_f64(flags, "gap", 50.0);
+    let admission = match flags.get("admission").map(String::as_str) {
+        None => AdmissionMode::Continuous,
+        Some(s) => {
+            AdmissionMode::parse(s).ok_or_else(|| format!("unknown admission mode {s}"))?
+        }
+    };
+    let rate = flag_f64(flags, "rate", 20.0).max(0.001);
+    let arrival = match flags.get("arrival").map(String::as_str) {
+        None => None,
+        Some("poisson") => Some(ArrivalProcess::Poisson { rate_per_s: rate }),
+        Some("bursty") => Some(ArrivalProcess::bursty_preset(rate)),
+        Some("diurnal") => Some(ArrivalProcess::Diurnal {
+            mean_rate_per_s: rate,
+            period_ms: 2_000.0,
+            amplitude: 0.8,
+        }),
+        Some(other) => return Err(format!("unknown arrival process {other}").into()),
+    };
+    let slos: Vec<SloClass> = match flags.get("slo-classes") {
+        None => Vec::new(),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                SloClass::parse(s.trim()).ok_or_else(|| format!("unknown slo class {s}"))
+            })
+            .collect::<Result<_, _>>()?,
+    };
+    let weights: Vec<f64> = match flags.get("tenant-weights") {
+        None => Vec::new(),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().map_err(|_| format!("bad tenant weight {s}")))
+            .collect::<Result<_, _>>()?,
+    };
+    // One tenant per CSV slot; missing weights default to 1.0, missing
+    // SLO classes to standard, so either flag works alone.
+    let tenants: Vec<TenantSpec> = (0..weights.len().max(slos.len()))
+        .map(|i| TenantSpec {
+            tenant: i as u32,
+            weight: weights.get(i).copied().unwrap_or(1.0),
+            slo: slos.get(i).copied().unwrap_or(SloClass::Standard),
+        })
+        .collect();
     let profile = match flags.get("profile").map(String::as_str).unwrap_or("instruction") {
         "instruction" => PromptProfile::Instruction,
         "summarization" => PromptProfile::Summarization,
@@ -336,16 +390,29 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         .with_batch_cap(batch_cap)
         .with_adaptive(adaptive)
         .with_slo_ms(slo_ms)
-        .with_control_interval_ms(control_interval_ms);
+        .with_control_interval_ms(control_interval_ms)
+        .with_admission_mode(admission);
     for stats in store_stats {
         srv.attach_store_stats(stats);
     }
     let mut gen = PromptGen::new(11, 256);
-    let mut reqs = if burst > 0 {
+    let mut reqs = if let Some(process) = arrival {
+        gen.trace_tagged(n_requests, profile, n_tokens, process, &tenants)
+    } else if burst > 0 {
         gen.bursts(n_requests, profile, n_tokens, burst, gap_ms)
     } else {
         gen.closed_loop(n_requests, profile, n_tokens)
     };
+    if arrival.is_none() && !tenants.is_empty() {
+        // Burst/closed-loop traces take the same round-robin tagging the
+        // open-loop trace applies internally.
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let spec = tenants[i % tenants.len()];
+            r.tenant = spec.tenant;
+            r.weight = spec.weight;
+            r.slo = spec.slo;
+        }
+    }
     for r in &mut reqs {
         r.prompt.truncate(max_prompt.max(4));
     }
@@ -353,11 +420,19 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         "serving {n_requests} {} requests x {n_tokens} tokens via {} \
          ({engine} engine, {max_sessions} concurrent sessions, pool {pool_size}, \
          {sched_policy:?} scheduling, batch cap {batch_cap}, \
-         {} planner)...\n",
+         {} planner, {} admission)...\n",
         profile.name(),
         algo.name(),
-        if adaptive { "adaptive" } else { "static" }
+        if adaptive { "adaptive" } else { "static" },
+        admission.name()
     );
+    if let Some(process) = arrival {
+        println!(
+            "open-loop arrivals: mean {:.1} req/s over {} tenants\n",
+            process.mean_rate_per_s(),
+            tenants.len().max(1)
+        );
+    }
     let t0 = std::time::Instant::now();
     let resps = srv.serve(&reqs);
     let wall = t0.elapsed().as_secs_f64();

@@ -19,12 +19,26 @@
 //!   exercise this identical loop.
 //! - **Uneven SP allocation** ([`waterfill_sp`]). Instead of the even
 //!   split, the SP budget is water-filled: every session gets one server,
-//!   then each remaining server goes to the session whose *expected
-//!   per-token latency* at live estimates is currently worst — the
-//!   min-max allocation, which hands the marginal server to the
-//!   low-acceptance / slow-drafter session that benefits most. The
-//!   integer-division remainder the even split stranded is allocated by
-//!   construction.
+//!   then each remaining server goes to the session whose *weighted
+//!   expected per-token latency* at live estimates is currently worst —
+//!   the weighted min-max allocation, which hands the marginal server to
+//!   the low-acceptance / slow-drafter / heavy-tenant session that
+//!   benefits most. Per-tenant weights and SLO-class multipliers flow in
+//!   through each session's [`SessionCtl`]; untagged sessions are
+//!   weight-1 and reproduce the unweighted fill. The integer-division
+//!   remainder the even split stranded is allocated by construction.
+//! - **Membership-triggered replanning** ([`TickSignal`]). Admissions and
+//!   completions kick the controller out of its inter-tick sleep, so the
+//!   water-fill and Equation-1 re-solve happen within one tick of every
+//!   membership change — continuous batching's reallocation path — not
+//!   only on the periodic timer.
+//! - **Preemptive SP reclaim.** When a tick *shrinks* a session's share,
+//!   the controller immediately purges that session's queued verify
+//!   tasks beyond the new cap ([`TargetPool::reclaim_to_cap`]): each
+//!   purged task is counted (`PoolStats::reclaimed`) and handed back to
+//!   its coordinator (`SessionMsg::Reclaimed`) so the generation stays
+//!   lossless, and the freed lanes reach the sessions this tick chose
+//!   rather than draining stale speculation for another generation.
 //! - **Equation-1 replanning.** Each session's lookahead is re-solved at
 //!   its allocated share and its live rates ([`Router::plan_live`]) and
 //!   applied through the session's [`SessionCtl`] — the lookahead lands at
@@ -52,6 +66,59 @@ use std::sync::{Arc, Mutex};
 /// exit; the controller snapshots the map each tick.
 pub type SessionRegistry = Arc<Mutex<HashMap<u64, Arc<SessionCtl>>>>;
 
+/// Wakes the controller thread out of its inter-tick sleep the moment
+/// pool membership changes (a session admitted or completed), so shares
+/// re-water-fill within one tick instead of up to a full interval later —
+/// the continuous-batching half of the latency story: freed servers reach
+/// the sessions the controller chose immediately, not after the next
+/// periodic timer.
+///
+/// A monotone epoch under a mutex + condvar. `kick()` bumps the epoch and
+/// notifies; the controller snapshots `epoch()` before each tick and then
+/// `wait_past(seen, interval)` — returning early iff a kick arrived
+/// *after* the snapshot. Kicks are never lost to races: one arriving
+/// between the snapshot and the wait is observed by the epoch comparison.
+#[derive(Debug, Default)]
+pub struct TickSignal {
+    epoch: Mutex<u64>,
+    cv: std::sync::Condvar,
+}
+
+impl TickSignal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Announce a membership change: bump the epoch and wake the waiter.
+    pub fn kick(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    /// Current epoch — snapshot this *before* the tick whose staleness
+    /// the following `wait_past` should measure.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Sleep until the epoch moves past `seen` or `timeout` elapses.
+    /// Returns `true` when woken by a kick (epoch advanced), `false` on
+    /// a plain timer expiry.
+    pub fn wait_past(&self, seen: u64, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.epoch.lock().unwrap();
+        while *g <= seen {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return *g > seen;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+        true
+    }
+}
+
 /// One session's live rates, resolved against the calibrated fallbacks —
 /// the water-filling input.
 #[derive(Debug, Clone, Copy)]
@@ -59,6 +126,11 @@ pub struct SessionRates {
     pub session: u64,
     pub acceptance: f64,
     pub drafter_tpot_ms: f64,
+    /// Fair-share weight (tenant weight × SLO-class multiplier, ≥ 0
+    /// finite; 1.0 = neutral). Scales the session's expected latency in
+    /// the water-fill objective, so a weight-2 tenant's stall counts
+    /// double when choosing where the marginal server goes.
+    pub weight: f64,
 }
 
 /// Expected per-token latency of a DSI session granted `share` target
@@ -78,8 +150,11 @@ pub fn expected_token_latency_ms(t: f64, d: f64, p: f64, share: usize) -> f64 {
 
 /// Water-filling SP allocation: every session gets one server (the
 /// never-starve floor the static planner also guarantees), then each
-/// remaining server goes to the session whose expected per-token latency
-/// is currently worst — the greedy min-max fill. Shares are capped at
+/// remaining server goes to the session whose *weighted* expected
+/// per-token latency is currently worst — the greedy weighted min-max
+/// fill. With uniform weights this is plain min-max; a weight-w session's
+/// stall counts w× in the objective, so heavier tenants (and tighter SLO
+/// classes) pull the marginal server sooner. Shares are capped at
 /// each session's useful maximum (§3.1); if every session is capped the
 /// residue is dealt round-robin so the budget is never silently dropped
 /// (an over-cap share is harmless — that session's tasks simply never
@@ -96,22 +171,32 @@ pub fn waterfill_sp(target_tpot_ms: f64, budget: usize, sessions: &[SessionRates
         .iter()
         .map(|s| max_useful_sp(target_tpot_ms, s.drafter_tpot_ms))
         .collect();
+    let weight = |i: usize| {
+        let w = sessions[i].weight;
+        if w.is_finite() && w > 0.0 {
+            w
+        } else {
+            1.0
+        }
+    };
     while left > 0 {
         let worst = (0..n)
             .filter(|&i| shares[i] < caps[i])
             .max_by(|&a, &b| {
-                let la = expected_token_latency_ms(
-                    target_tpot_ms,
-                    sessions[a].drafter_tpot_ms,
-                    sessions[a].acceptance,
-                    shares[a],
-                );
-                let lb = expected_token_latency_ms(
-                    target_tpot_ms,
-                    sessions[b].drafter_tpot_ms,
-                    sessions[b].acceptance,
-                    shares[b],
-                );
+                let la = weight(a)
+                    * expected_token_latency_ms(
+                        target_tpot_ms,
+                        sessions[a].drafter_tpot_ms,
+                        sessions[a].acceptance,
+                        shares[a],
+                    );
+                let lb = weight(b)
+                    * expected_token_latency_ms(
+                        target_tpot_ms,
+                        sessions[b].drafter_tpot_ms,
+                        sessions[b].acceptance,
+                        shares[b],
+                    );
                 la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
             });
         match worst {
@@ -191,6 +276,8 @@ pub struct SessionGauge {
     pub sp_share: usize,
     pub acceptance_ewma: f64,
     pub drafter_tpot_ms: f64,
+    /// Fair-share weight the water-fill used for this session.
+    pub weight: f64,
 }
 
 /// Controller counters and gauges, shared with `server::metrics` so
@@ -202,6 +289,12 @@ pub struct ControllerStats {
     replans: AtomicU64,
     /// The batch cap the last tick applied (0 before any planning tick).
     batch_cap_current: AtomicUsize,
+    /// Membership-change wakeups delivered to the controller (admissions
+    /// and completions that kicked it out of its inter-tick sleep).
+    membership_kicks: AtomicU64,
+    /// Queued verify tasks the controller preemptively reclaimed when a
+    /// tick shrank a session's SP share below its queue depth.
+    reclaims: AtomicU64,
     /// Live target per-task cost the last tick planned with, µs.
     target_tpot_us: AtomicU64,
     /// Per-session plan of the last planning tick (kept through idle
@@ -228,6 +321,24 @@ impl ControllerStats {
     /// Replace the per-session gauge set (test hook + controller use).
     pub fn set_session_gauges(&self, gauges: Vec<SessionGauge>) {
         *self.sessions.lock().unwrap() = gauges;
+    }
+
+    /// Count one membership-change wakeup (server-side admission plumbing).
+    pub fn record_membership_kick(&self) {
+        self.membership_kicks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count queued verify tasks preemptively reclaimed by share shrinks.
+    pub fn record_reclaims(&self, n: u64) {
+        self.reclaims.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn membership_kicks(&self) -> u64 {
+        self.membership_kicks.load(Ordering::Relaxed)
+    }
+
+    pub fn reclaims(&self) -> u64 {
+        self.reclaims.load(Ordering::Relaxed)
     }
 
     pub fn ticks(&self) -> u64 {
@@ -364,10 +475,11 @@ impl Controller {
         let t = router.live_target_tpot_ms();
         let rates: Vec<SessionRates> = regs
             .iter()
-            .map(|(sid, _)| SessionRates {
+            .map(|(sid, ctl)| SessionRates {
                 session: *sid,
                 acceptance: router.live_acceptance(*sid),
                 drafter_tpot_ms: router.live_drafter_tpot_ms(*sid),
+                weight: ctl.weight(),
             })
             .collect();
         let shares = waterfill_sp(t, router.sp_budget, &rates);
@@ -379,6 +491,19 @@ impl Controller {
             // only means this session's tasks never queue); the lookahead
             // is Equation 1's at the live rates.
             ctl.set_plan(plan.lookahead, share);
+            // Preemptive reclaim: a shrink takes effect in the pool NOW,
+            // not at this session's next dispatch — queued verify tasks
+            // beyond the new cap are purged (counted, handed back to the
+            // coordinator) so the freed lanes reach the sessions this
+            // very tick chose, rather than one generation later.
+            if let Some(&(_, prev_share)) = self.last_plan.get(sid) {
+                if share < prev_share {
+                    let n = self.pool.reclaim_to_cap(*sid, share);
+                    if n > 0 {
+                        self.stats.record_reclaims(n as u64);
+                    }
+                }
+            }
             // A session's FIRST emission is the boot allocation, not a
             // re-plan: `replans` counts only genuine operating-point
             // movement, so the "did it ever re-plan" gates can't be
@@ -395,6 +520,7 @@ impl Controller {
                 sp_share: share,
                 acceptance_ewma: rate.acceptance,
                 drafter_tpot_ms: rate.drafter_tpot_ms,
+                weight: rate.weight,
             });
         }
         drop(router);
@@ -423,7 +549,7 @@ mod tests {
     use crate::config::required_sp;
 
     fn rates(session: u64, p: f64, d: f64) -> SessionRates {
-        SessionRates { session, acceptance: p, drafter_tpot_ms: d }
+        SessionRates { session, acceptance: p, drafter_tpot_ms: d, weight: 1.0 }
     }
 
     /// The marginal server goes to the weak/slow session until its useful
@@ -510,8 +636,77 @@ mod tests {
             sp_share: 2,
             acceptance_ewma: 0.25,
             drafter_tpot_ms: 1.5,
+            weight: 1.0,
         }]);
         assert_eq!(s.session_gauges().len(), 1);
         assert_eq!(s.session_gauges()[0].session, 9);
+        assert_eq!((s.membership_kicks(), s.reclaims()), (0, 0));
+        s.record_membership_kick();
+        s.record_reclaims(3);
+        assert_eq!((s.membership_kicks(), s.reclaims()), (1, 3));
+    }
+
+    /// Weighted min-max: two identical sessions split evenly at uniform
+    /// weights, but a heavier weight pulls marginal servers to its
+    /// session; junk weights fall back to neutral instead of panicking.
+    #[test]
+    fn waterfill_weights_shift_the_marginal_server() {
+        let t = 30.0;
+        let even = [rates(1, 0.5, 3.0), rates(2, 0.5, 3.0)];
+        assert_eq!(waterfill_sp(t, 6, &even), vec![3, 3]);
+
+        let mut skew = even;
+        skew[0].weight = 4.0;
+        let shares = waterfill_sp(t, 6, &skew);
+        assert_eq!(shares.iter().sum::<usize>(), 6, "budget partially dropped");
+        assert!(
+            shares[0] > shares[1],
+            "weight-4 session must outrank its twin, got {:?}",
+            shares
+        );
+        // The floor still holds: the light session keeps one server even
+        // under extreme skew.
+        skew[0].weight = 1e9;
+        let harsh = waterfill_sp(t, 6, &skew);
+        assert!(harsh[1] >= 1);
+
+        let mut junk = even;
+        junk[0].weight = f64::NAN;
+        junk[1].weight = 0.0;
+        assert_eq!(waterfill_sp(t, 6, &junk), vec![3, 3], "junk weights = neutral");
+    }
+
+    /// The membership signal wakes a waiter early on kick, reports timer
+    /// expiries as such, and never loses a kick that lands between the
+    /// epoch snapshot and the wait.
+    #[test]
+    fn tick_signal_wakes_early_and_never_loses_a_kick() {
+        use std::time::{Duration, Instant};
+        let sig = Arc::new(TickSignal::new());
+
+        // Kick before the wait (the snapshot/race case): returns
+        // immediately with `true` even though the kick predates the call.
+        let seen = sig.epoch();
+        sig.kick();
+        let t0 = Instant::now();
+        assert!(sig.wait_past(seen, Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not sleep out the timeout");
+
+        // No kick: the full timeout elapses and the wait reports a timer
+        // expiry.
+        let seen = sig.epoch();
+        assert!(!sig.wait_past(seen, Duration::from_millis(20)));
+
+        // Kick from another thread mid-wait: early wakeup.
+        let seen = sig.epoch();
+        let sig2 = sig.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            sig2.kick();
+        });
+        assert!(sig.wait_past(seen, Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
     }
 }

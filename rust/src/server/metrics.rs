@@ -7,11 +7,16 @@
 //! Summing per-request busy time would double-count overlapping work under
 //! concurrent sessions; the per-request sum is still tracked separately as
 //! `busy_ms` because `busy / span` is the node's effective parallelism.
+//!
+//! Latency quantiles (TTFT / e2e / TPOT p50, p99) come from streaming
+//! [`LogHistogram`]s — O(1) memory per observation, ≤ ~4.5% relative
+//! quantile error — so a sustained-load serve never grows an unbounded
+//! sample buffer.
 
 use super::controller::{ControllerStats, SessionGauge};
 use crate::coordinator::pool::PoolStats;
 use crate::runtime::kv::StoreStats;
-use crate::stats::{percentile, OnlineStats};
+use crate::stats::{LogHistogram, OnlineStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -20,8 +25,11 @@ pub struct Metrics {
     ttft: OnlineStats,
     wall: OnlineStats,
     queue: OnlineStats,
-    ttft_samples: Vec<f64>,
-    wall_samples: Vec<f64>,
+    ttft_hist: LogHistogram,
+    wall_hist: LogHistogram,
+    /// Per-request mean time-per-output-token, ms — `(wall - ttft) /
+    /// (tokens - 1)`; single-token requests contribute no TPOT sample.
+    tpot_hist: LogHistogram,
     tokens: u64,
     requests: u64,
     /// Sum of per-request generation walls (overlaps under concurrency).
@@ -53,6 +61,11 @@ pub struct Snapshot {
     pub wall_mean_ms: f64,
     pub wall_p50_ms: f64,
     pub wall_p99_ms: f64,
+    /// Per-request mean time-per-output-token, ms (NaN until a request
+    /// with ≥ 2 output tokens completes).
+    pub tpot_mean_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
     pub queue_mean_ms: f64,
     /// Tokens per second over the first-dispatch..last-completion span.
     pub tokens_per_s: f64,
@@ -75,6 +88,10 @@ pub struct Snapshot {
     pub pool_skipped_stale: u64,
     /// Pool tasks popped but skipped because their session had departed.
     pub pool_skipped_departed: u64,
+    /// Queued pool tasks preemptively reclaimed by SP share shrinks
+    /// (purged from the queue and handed back to their coordinator, never
+    /// silently dropped).
+    pub pool_reclaimed: u64,
     /// Fraction of pool pops that stayed on the worker's previous session
     /// (warm KV state); 0 when nothing ran.
     pub pool_affinity_hit_rate: f64,
@@ -104,6 +121,12 @@ pub struct Snapshot {
     /// Live measured target per-task forward cost the controller last
     /// planned with, ms (0 until the pool plane reported).
     pub controller_target_tpot_ms: f64,
+    /// Membership-change wakeups (admissions/completions) that kicked the
+    /// controller out of its inter-tick sleep.
+    pub controller_membership_kicks: u64,
+    /// Queued verify tasks the controller preemptively reclaimed when a
+    /// tick shrank a session's SP share.
+    pub controller_reclaims: u64,
     /// Per-session live plans and estimates from the controller's last
     /// planning tick: (lookahead, sp_share, acceptance EWMA, measured
     /// drafter TPOT).
@@ -158,8 +181,12 @@ impl Metrics {
         self.ttft.push(resp.ttft_ms);
         self.wall.push(resp.wall_ms);
         self.queue.push(resp.queue_ms);
-        self.ttft_samples.push(resp.ttft_ms);
-        self.wall_samples.push(resp.wall_ms);
+        self.ttft_hist.push(resp.ttft_ms);
+        self.wall_hist.push(resp.wall_ms);
+        if resp.tokens.len() > 1 {
+            self.tpot_hist
+                .push((resp.wall_ms - resp.ttft_ms).max(0.0) / (resp.tokens.len() - 1) as f64);
+        }
         self.tokens += resp.tokens.len() as u64;
         self.requests += 1;
         self.busy_ms += resp.wall_ms;
@@ -181,11 +208,14 @@ impl Metrics {
             requests: self.requests,
             tokens: self.tokens,
             ttft_mean_ms: self.ttft.mean(),
-            ttft_p50_ms: percentile(&self.ttft_samples, 50.0),
-            ttft_p99_ms: percentile(&self.ttft_samples, 99.0),
+            ttft_p50_ms: self.ttft_hist.p50(),
+            ttft_p99_ms: self.ttft_hist.p99(),
             wall_mean_ms: self.wall.mean(),
-            wall_p50_ms: percentile(&self.wall_samples, 50.0),
-            wall_p99_ms: percentile(&self.wall_samples, 99.0),
+            wall_p50_ms: self.wall_hist.p50(),
+            wall_p99_ms: self.wall_hist.p99(),
+            tpot_mean_ms: self.tpot_hist.mean(),
+            tpot_p50_ms: self.tpot_hist.p50(),
+            tpot_p99_ms: self.tpot_hist.p99(),
             queue_mean_ms: self.queue.mean(),
             tokens_per_s: if span_ms > 0.0 {
                 self.tokens as f64 / (span_ms / 1e3)
@@ -211,6 +241,7 @@ impl Metrics {
                 .pool_stats
                 .as_ref()
                 .map_or(0, |s| s.skipped_departed()),
+            pool_reclaimed: self.pool_stats.as_ref().map_or(0, |s| s.reclaimed()),
             pool_affinity_hit_rate: self
                 .pool_stats
                 .as_ref()
@@ -236,6 +267,14 @@ impl Metrics {
                 .controller_stats
                 .as_ref()
                 .map_or(0.0, |s| s.target_tpot_ms()),
+            controller_membership_kicks: self
+                .controller_stats
+                .as_ref()
+                .map_or(0, |s| s.membership_kicks()),
+            controller_reclaims: self
+                .controller_stats
+                .as_ref()
+                .map_or(0, |s| s.reclaims()),
             per_session: self
                 .controller_stats
                 .as_ref()
@@ -249,9 +288,10 @@ impl Snapshot {
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests={} tokens={} active={} | ttft mean={:.2}ms p50={:.2} p99={:.2} | \
-             e2e mean={:.2}ms p50={:.2} p99={:.2} | queue mean={:.2}ms | \
+             e2e mean={:.2}ms p50={:.2} p99={:.2} | tpot mean={:.3}ms p50={:.3} p99={:.3} | \
+             queue mean={:.2}ms | \
              {:.1} tok/s over {:.0}ms | pool tasks={} wait={:.0}µs dispatch={:.1}µs \
-             skipped stale={} departed={} | affinity={:.0}% | \
+             skipped stale={} departed={} reclaimed={} | affinity={:.0}% | \
              batches={} occupancy={:.2} | kv reused={} redecoded={} evicted={}",
             self.requests,
             self.tokens,
@@ -262,6 +302,9 @@ impl Snapshot {
             self.wall_mean_ms,
             self.wall_p50_ms,
             self.wall_p99_ms,
+            self.tpot_mean_ms,
+            self.tpot_p50_ms,
+            self.tpot_p99_ms,
             self.queue_mean_ms,
             self.tokens_per_s,
             self.span_ms,
@@ -270,6 +313,7 @@ impl Snapshot {
             self.pool_dispatch_us_mean,
             self.pool_skipped_stale,
             self.pool_skipped_departed,
+            self.pool_reclaimed,
             self.pool_affinity_hit_rate * 100.0,
             self.pool_batches,
             self.pool_batch_occupancy_mean,
@@ -279,17 +323,24 @@ impl Snapshot {
         );
         if self.controller_ticks > 0 {
             out.push_str(&format!(
-                " | ctl ticks={} replans={} cap={} target={:.2}ms",
+                " | ctl ticks={} replans={} cap={} target={:.2}ms kicks={} reclaims={}",
                 self.controller_ticks,
                 self.controller_replans,
                 self.batch_cap_current,
                 self.controller_target_tpot_ms,
+                self.controller_membership_kicks,
+                self.controller_reclaims,
             ));
         }
         for g in &self.per_session {
             out.push_str(&format!(
-                "\n    session {}: k={} sp={} acc={:.2} drafter={:.2}ms",
-                g.session, g.lookahead, g.sp_share, g.acceptance_ewma, g.drafter_tpot_ms,
+                "\n    session {}: k={} sp={} acc={:.2} drafter={:.2}ms w={:.1}",
+                g.session,
+                g.lookahead,
+                g.sp_share,
+                g.acceptance_ewma,
+                g.drafter_tpot_ms,
+                g.weight,
             ));
         }
         out
@@ -312,6 +363,9 @@ mod tests {
             algo: AlgoKind::Dsi,
             lookahead: 2,
             sp_degree: 4,
+            tenant: 0,
+            weight: 1.0,
+            slo: crate::workload::SloClass::Standard,
         }
     }
 
@@ -461,6 +515,7 @@ mod tests {
                 sp_share: 2,
                 acceptance_ewma: 0.21,
                 drafter_tpot_ms: 1.02,
+                weight: 1.0,
             },
             SessionGauge {
                 session: 5,
@@ -468,6 +523,7 @@ mod tests {
                 sp_share: 1,
                 acceptance_ewma: 0.9,
                 drafter_tpot_ms: 0.4,
+                weight: 2.0,
             },
         ]);
         // Two ticks, one of which re-planned.
@@ -490,6 +546,59 @@ mod tests {
             text.contains("session 3: k=4 sp=2 acc=0.21 drafter=1.02ms"),
             "render: {text}"
         );
+    }
+
+    /// TPOT quantiles from the streaming histogram: per-request mean
+    /// time-per-output-token, within the log-bucket error bound, with
+    /// single-token requests contributing no sample.
+    #[test]
+    fn tpot_quantiles_are_reported() {
+        let mut m = Metrics::new();
+        assert!(m.snapshot().tpot_mean_ms.is_nan(), "empty TPOT must be NaN");
+        // 11 tokens, 10ms ttft, 110ms wall → (110-10)/10 = 10ms/token.
+        m.observe(&resp(10.0, 110.0, 11));
+        // 21 tokens, 20ms ttft, 60ms wall → 2ms/token.
+        m.observe(&resp(20.0, 60.0, 21));
+        // A single-token request has no inter-token gaps: no TPOT sample.
+        m.observe(&resp(5.0, 5.0, 1));
+        let s = m.snapshot();
+        assert!((s.tpot_mean_ms - 6.0).abs() < 1e-9, "exact mean, got {}", s.tpot_mean_ms);
+        // Histogram quantiles land within the ~9% bucket width.
+        assert!((s.tpot_p50_ms - 2.0).abs() / 2.0 < 0.1, "p50 {}", s.tpot_p50_ms);
+        assert!((s.tpot_p99_ms - 10.0).abs() / 10.0 < 0.1, "p99 {}", s.tpot_p99_ms);
+        // TTFT quantiles ride the same histogram machinery.
+        assert!((s.ttft_p99_ms - 20.0).abs() / 20.0 < 0.1, "ttft p99 {}", s.ttft_p99_ms);
+        assert!(s.render().contains("tpot mean=6.000ms"), "render: {}", s.render());
+    }
+
+    /// The preemptive-reclaim and membership-kick gauges flow from pool
+    /// and controller stats into the snapshot and the rendered text.
+    #[test]
+    fn reclaim_and_kick_gauges_are_reported() {
+        let mut m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.pool_reclaimed, s.controller_membership_kicks, s.controller_reclaims), (0, 0, 0));
+
+        let pool = Arc::new(PoolStats::default());
+        m.attach_pool_stats(pool.clone());
+        pool.record_reclaimed(5_000);
+        pool.record_reclaimed(15_000);
+        let ctl = Arc::new(ControllerStats::default());
+        m.attach_controller_stats(ctl.clone());
+        ctl.record_tick();
+        ctl.record_membership_kick();
+        ctl.record_reclaims(2);
+
+        let s = m.snapshot();
+        assert_eq!(s.pool_reclaimed, 2);
+        assert_eq!(s.controller_membership_kicks, 1);
+        assert_eq!(s.controller_reclaims, 2);
+        // Reclaimed tasks keep their queue wait in the unbiased mean:
+        // (5µs + 15µs) over 2 accounted tasks.
+        assert!((s.pool_queue_wait_us_mean - 10.0).abs() < 1e-9);
+        let text = s.render();
+        assert!(text.contains("reclaimed=2"), "render: {text}");
+        assert!(text.contains("kicks=1 reclaims=2"), "render: {text}");
     }
 
     #[test]

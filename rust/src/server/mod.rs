@@ -8,6 +8,16 @@
 //! join and leave), the generation runs the selected algorithm — DSI
 //! sessions share one [`TargetPool`] — and [`metrics`] aggregates
 //! TTFT/TPOT/throughput over the true wall-clock span.
+//!
+//! Admission is **continuous** by default: the slot a completed
+//! generation frees is refilled by the next arrived request immediately,
+//! sessions join and leave the shared pool mid-flight, and (under
+//! `--adaptive`) every membership change kicks the controller so SP
+//! shares re-water-fill within one tick — with queued speculation beyond
+//! a shrunken share preemptively reclaimed rather than drained. The
+//! [`AdmissionMode::RunToCompletion`] gang baseline (admit a wave of
+//! `max_sessions`, barrier until the whole wave finishes, repeat) is kept
+//! as the A/B control the sustained-load bench measures against.
 
 pub mod controller;
 pub mod metrics;
@@ -20,15 +30,47 @@ use crate::coordinator::{
 };
 use crate::runtime::kv::StoreStats;
 use crate::runtime::tokenizer;
-use crate::workload::Request;
-use controller::{Controller, ControllerStats, SessionRegistry};
+use crate::workload::{Request, SloClass};
+use controller::{Controller, ControllerStats, SessionRegistry, TickSignal};
 use metrics::Metrics;
 use router::{Plan, Router};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// How the scheduler refills freed `max_sessions` slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Continuous batching (default): the instant a generation completes,
+    /// the next arrived request is dispatched into its slot — sessions
+    /// join and leave the shared pool mid-flight.
+    Continuous,
+    /// Gang scheduling: admit a wave of up to `max_sessions` requests,
+    /// barrier until the *whole wave* completes, then admit the next.
+    /// Freed slots idle out the wave tail — the classic serving baseline
+    /// continuous batching beats on tail TTFT; kept as the A/B control.
+    RunToCompletion,
+}
+
+impl AdmissionMode {
+    /// Parse a launcher flag value (`continuous` | `rtc`).
+    pub fn parse(s: &str) -> Option<AdmissionMode> {
+        match s {
+            "continuous" => Some(AdmissionMode::Continuous),
+            "rtc" | "run-to-completion" => Some(AdmissionMode::RunToCompletion),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionMode::Continuous => "continuous",
+            AdmissionMode::RunToCompletion => "rtc",
+        }
+    }
+}
 
 /// A completed request.
 #[derive(Debug, Clone)]
@@ -47,6 +89,12 @@ pub struct Response {
     pub lookahead: usize,
     /// SP share the router planned for this generation.
     pub sp_degree: usize,
+    /// Tenant tag carried through from the request.
+    pub tenant: u32,
+    /// Fair-share weight carried through from the request.
+    pub weight: f64,
+    /// SLO class carried through from the request.
+    pub slo: SloClass,
 }
 
 /// What one scheduler worker holds to execute generations. Constructed
@@ -132,6 +180,9 @@ pub struct Server {
     /// batch sizing. Off by default — the static planner is the A/B
     /// control and stays bit-identical to the pre-adaptive server.
     adaptive: bool,
+    /// Slot-refill discipline (continuous by default; run-to-completion
+    /// is the gang-scheduled A/B baseline).
+    admission: AdmissionMode,
     /// Per-token latency SLO the admission-aware batch sizing protects
     /// (infinite = batch for throughput alone).
     slo_ms: f64,
@@ -171,6 +222,7 @@ impl Server {
             sched_policy: SchedPolicy::Affinity,
             batch_cap: crate::coordinator::pool::BATCH_CAP_DEFAULT,
             adaptive: false,
+            admission: AdmissionMode::Continuous,
             slo_ms: f64::INFINITY,
             control_interval: Duration::from_millis(25),
             controller_stats,
@@ -225,6 +277,14 @@ impl Server {
     /// bit-identical to the pre-adaptive server.
     pub fn with_adaptive(mut self, on: bool) -> Self {
         self.adaptive = on;
+        self
+    }
+
+    /// Select the slot-refill discipline (default
+    /// [`AdmissionMode::Continuous`]; run-to-completion gang scheduling
+    /// is the A/B baseline the sustained-load bench measures against).
+    pub fn with_admission_mode(mut self, mode: AdmissionMode) -> Self {
+        self.admission = mode;
         self
     }
 
@@ -292,6 +352,11 @@ impl Server {
         let registry: Option<SessionRegistry> = (self.adaptive
             && self.algo == AlgoKind::Dsi)
             .then(|| Arc::new(Mutex::new(HashMap::new())));
+        // Membership signal: admissions/completions kick the controller
+        // out of its inter-tick sleep so shares re-water-fill within one
+        // tick of every membership change, not a full interval later.
+        let tick_signal: Option<Arc<TickSignal>> =
+            registry.as_ref().map(|_| Arc::new(TickSignal::new()));
         let ctl_stop = Arc::new(AtomicBool::new(false));
         let ctl_thread = registry.as_ref().map(|reg| {
             let mut ctl = Controller::new(
@@ -304,14 +369,20 @@ impl Server {
             );
             let stop = ctl_stop.clone();
             let interval = self.control_interval;
+            let sig = tick_signal.clone().expect("signal built with registry");
             std::thread::spawn(move || {
                 while !stop.load(Ordering::Acquire) {
+                    // Snapshot the epoch *before* ticking: a kick landing
+                    // mid-tick shortens the following wait instead of
+                    // being lost.
+                    let seen = sig.epoch();
                     ctl.tick();
-                    std::thread::sleep(interval);
+                    let _ = sig.wait_past(seen, interval);
                 }
             })
         });
         let adaptive = self.adaptive;
+        let admission = self.admission;
 
         // Admission order: by arrival time (stable on ties).
         let mut order: Vec<usize> = (0..requests.len()).collect();
@@ -325,6 +396,10 @@ impl Server {
         let (job_tx, job_rx) = channel::<usize>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (resp_tx, resp_rx) = channel::<(usize, Response)>();
+        // Completion counter + condvar: the run-to-completion barrier
+        // (admission waits for the whole wave) — idle under continuous.
+        let completed: Arc<(Mutex<usize>, Condvar)> =
+            Arc::new((Mutex::new(0), Condvar::new()));
         // Arrival pacing and queueing delay are relative to this call's
         // start; metrics span stamps use the server-lifetime epoch so
         // repeated `serve` calls accumulate on one clock.
@@ -343,6 +418,9 @@ impl Server {
                 let active = self.active.clone();
                 let pool = self.pool.clone();
                 let registry = registry.clone();
+                let tick_signal = tick_signal.clone();
+                let ctl_stats = self.controller_stats.clone();
+                let completed = completed.clone();
                 s.spawn(move || {
                     // Lazy: a worker that never receives a job never
                     // loads models or spawns a drafter.
@@ -400,8 +478,25 @@ impl Server {
                             }
                             backend = Some(b);
                         }
+                        // Tenant weight × SLO multiplier → the session's
+                        // fair-share weight in the controller water-fill,
+                        // refreshed per request (slots are reused across
+                        // tenants).
+                        if let Some(Backend::Dsi(sess)) = backend.as_ref() {
+                            sess.ctl().set_weight(req.effective_weight());
+                        }
+                        // Membership changed (a session became active):
+                        // kick the controller to re-water-fill now.
+                        if let Some(sig) = tick_signal.as_ref() {
+                            ctl_stats.record_membership_kick();
+                            sig.kick();
+                        }
                         let out = backend.as_mut().expect("backend built above").run(&cfg);
                         active.fetch_sub(1, Ordering::AcqRel);
+                        if let Some(sig) = tick_signal.as_ref() {
+                            ctl_stats.record_membership_kick();
+                            sig.kick();
+                        }
 
                         // Feed the estimators with the true outcome
                         // counts (§F.2 online variant). The global
@@ -432,11 +527,22 @@ impl Server {
                             algo,
                             lookahead: plan.lookahead,
                             sp_degree: plan.sp_degree,
+                            tenant: req.tenant,
+                            weight: req.weight,
+                            slo: req.slo,
                         };
                         {
                             let mut m = metrics.lock().unwrap();
                             m.note_complete_at(epoch.elapsed().as_secs_f64() * 1e3);
                             m.observe(&resp);
+                        }
+                        // Bump the wave barrier before handing the
+                        // response off (run-to-completion admission waits
+                        // on this count).
+                        {
+                            let (lock, cv) = &*completed;
+                            *lock.lock().unwrap() += 1;
+                            cv.notify_all();
                         }
                         if resp_tx.send((idx, resp)).is_err() {
                             break;
@@ -455,15 +561,31 @@ impl Server {
             }
             drop(resp_tx);
 
-            // Admission: open-loop pacing on this thread.
-            for &idx in &order {
-                let arrival = requests[idx].arrival_ms;
-                let now_ms = t0.elapsed().as_secs_f64() * 1e3;
-                if arrival > now_ms {
-                    crate::coordinator::wait_engine::precise_wait(arrival - now_ms);
+            // Admission: open-loop pacing on this thread. Continuous mode
+            // enqueues each request at its arrival instant — workers
+            // refill freed slots immediately. Run-to-completion admits in
+            // waves of `n_workers` and barriers on the completion counter
+            // until the whole wave drains before admitting the next (the
+            // gang baseline: freed slots idle out the wave tail).
+            'admit: for (wave_no, wave) in order.chunks(n_workers).enumerate() {
+                for &idx in wave {
+                    let arrival = requests[idx].arrival_ms;
+                    let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    if arrival > now_ms {
+                        crate::coordinator::wait_engine::precise_wait(arrival - now_ms);
+                    }
+                    if job_tx.send(idx).is_err() {
+                        break 'admit;
+                    }
                 }
-                if job_tx.send(idx).is_err() {
-                    break;
+                if admission == AdmissionMode::RunToCompletion {
+                    let wave_end = (wave_no + 1) * n_workers;
+                    let target = wave_end.min(order.len());
+                    let (lock, cv) = &*completed;
+                    let mut done = lock.lock().unwrap();
+                    while *done < target {
+                        done = cv.wait(done).unwrap();
+                    }
                 }
             }
             drop(job_tx); // closes the admission queue; workers drain and exit
@@ -472,6 +594,9 @@ impl Server {
         // Workers joined: stop the control plane (its last applied plan
         // and gauges persist in ControllerStats for post-run snapshots).
         ctl_stop.store(true, Ordering::Release);
+        if let Some(sig) = tick_signal.as_ref() {
+            sig.kick(); // wake the controller out of its inter-tick sleep
+        }
         if let Some(h) = ctl_thread {
             let _ = h.join();
         }
@@ -606,6 +731,72 @@ mod tests {
         let _ = srv.serve(&reqs);
         let est = srv.acceptance_estimate();
         assert!(est > 0.95, "estimate {est} biased low by phantom rejections");
+    }
+
+    /// Run-to-completion barriers the wave: a short request stuck behind
+    /// a long wave-mate dispatches only when the whole wave drains, while
+    /// continuous admission refills the freed slot immediately. Outputs
+    /// are identical either way — admission policy is not allowed to
+    /// change tokens.
+    #[test]
+    fn rtc_barriers_waves_continuous_refills_slots() {
+        let mk_reqs = || {
+            let mut gen = PromptGen::new(11, 256);
+            let mut reqs = gen.closed_loop(4, PromptProfile::Instruction, 5);
+            reqs[0].max_new_tokens = 30; // the wave-1 straggler
+            reqs
+        };
+        let serve = |mode: AdmissionMode| {
+            let (factory, _) = wait_factory(0.9);
+            let router =
+                Router::new(LatencyProfile::uniform(3.0), LatencyProfile::uniform(0.4), 2);
+            let mut srv = Server::new(factory, router, AlgoKind::NonSi)
+                .with_max_sessions(2)
+                .with_admission_mode(mode);
+            srv.serve(&mk_reqs())
+        };
+        let cont = serve(AdmissionMode::Continuous);
+        let rtc = serve(AdmissionMode::RunToCompletion);
+        for (c, r) in cont.iter().zip(&rtc) {
+            assert_eq!(c.tokens, r.tokens, "admission mode changed outputs");
+        }
+        // Request 2 heads wave 2: under RTC it waits out the 30-token
+        // straggler (~90ms at 3ms/token); under continuous it takes the
+        // slot the 5-token request freed (~15ms).
+        assert!(
+            rtc[2].queue_ms > cont[2].queue_ms + 30.0,
+            "RTC queue {:.1}ms !> continuous queue {:.1}ms + margin",
+            rtc[2].queue_ms,
+            cont[2].queue_ms
+        );
+        assert!(rtc[2].queue_ms > 60.0, "wave barrier not observed");
+    }
+
+    /// Tenant / weight / SLO tags survive admission into the response.
+    #[test]
+    fn tags_survive_admission_into_responses() {
+        use crate::workload::{SloClass, TenantSpec};
+        let (factory, _) = wait_factory(0.9);
+        let router = Router::new(LatencyProfile::uniform(1.0), LatencyProfile::uniform(0.3), 2);
+        let mut srv = Server::new(factory, router, AlgoKind::NonSi);
+        let mut gen = PromptGen::new(9, 256);
+        let tenants = [
+            TenantSpec { tenant: 7, weight: 2.0, slo: SloClass::Interactive },
+            TenantSpec { tenant: 8, weight: 1.0, slo: SloClass::Batch },
+        ];
+        let reqs = gen.trace_tagged(
+            4,
+            PromptProfile::Instruction,
+            4,
+            crate::workload::ArrivalProcess::Poisson { rate_per_s: 1000.0 },
+            &tenants,
+        );
+        let resps = srv.serve(&reqs);
+        for (req, resp) in reqs.iter().zip(&resps) {
+            assert_eq!((resp.tenant, resp.weight, resp.slo), (req.tenant, req.weight, req.slo));
+        }
+        assert_eq!(resps[0].tenant, 7);
+        assert_eq!(resps[1].slo, SloClass::Batch);
     }
 
     #[test]

@@ -237,6 +237,48 @@ impl Router {
             .collect()
     }
 
+    /// Weighted static allocation: the SP budget split in proportion to
+    /// per-slot fair-share weights (tenant weight × SLO multiplier) by
+    /// largest-remainder apportionment, every slot floored at one server,
+    /// each slot's lookahead re-solved via Equation 1 at its share. With
+    /// uniform weights this reproduces
+    /// [`plan_shared_all`](Self::plan_shared_all) exactly — untagged
+    /// workloads keep the unweighted split bit-for-bit.
+    pub fn plan_shared_weighted(&self, algo: AlgoKind, weights: &[f64]) -> Vec<Plan> {
+        if weights.is_empty() {
+            return self.plan_shared_all(algo, 0);
+        }
+        let w: Vec<f64> = weights
+            .iter()
+            .map(|&x| if x.is_finite() && x > 0.0 { x } else { 1.0 })
+            .collect();
+        let total: f64 = w.iter().sum();
+        let quotas: Vec<f64> = w
+            .iter()
+            .map(|x| self.sp_budget as f64 * x / total)
+            .collect();
+        let mut shares: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+        let mut rem = self.sp_budget.saturating_sub(shares.iter().sum());
+        // Largest fractional remainder first; ties to the earlier slot
+        // (matching plan_shared_all's deal-to-the-first-slots rule).
+        let mut order: Vec<usize> = (0..w.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (fa, fb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
+            fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        });
+        for &i in &order {
+            if rem == 0 {
+                break;
+            }
+            shares[i] += 1;
+            rem -= 1;
+        }
+        shares
+            .into_iter()
+            .map(|s| self.plan_at(algo, s.max(1), self.target.tpot_ms, self.drafter.tpot_ms))
+            .collect()
+    }
+
     /// The Equation-1 operating point for one session at live estimates:
     /// `share` servers, the measured target cost, and `session`'s measured
     /// drafter cost (each falling back to calibration until warm). The
@@ -347,6 +389,33 @@ mod tests {
         let plans = tight.plan_shared_all(AlgoKind::Dsi, 9);
         assert_eq!(plans.len(), 9);
         assert!(plans.iter().all(|p| p.sp_degree == 1));
+    }
+
+    /// Weighted apportionment: uniform weights reproduce the unweighted
+    /// split exactly; skewed weights shift whole servers toward the heavy
+    /// tenant without stranding budget or starving the light one.
+    #[test]
+    fn shared_weighted_apportions_by_weight() {
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 10);
+        // Uniform weights == plan_shared_all, bit for bit.
+        let even = r.plan_shared_weighted(AlgoKind::Dsi, &[1.0; 4]);
+        assert_eq!(even, r.plan_shared_all(AlgoKind::Dsi, 4));
+
+        // 3:1:1 over a budget of 10 → quotas [6, 2, 2], exact.
+        let skew = r.plan_shared_weighted(AlgoKind::Dsi, &[3.0, 1.0, 1.0]);
+        let shares: Vec<usize> = skew.iter().map(|p| p.sp_degree).collect();
+        assert_eq!(shares.iter().sum::<usize>(), 10, "budget partially stranded");
+        assert!(shares[0] > shares[1], "heavy tenant must get more servers");
+        assert_eq!(shares[1], shares[2], "equal weights, equal shares");
+        for p in &skew {
+            assert!(crate::config::required_sp(30.0, 3.0, p.lookahead) <= p.sp_degree);
+        }
+
+        // Extreme skew never starves the light tenant, and junk weights
+        // (zero / NaN) are treated as neutral rather than panicking.
+        let harsh = r.plan_shared_weighted(AlgoKind::Dsi, &[100.0, 0.0, f64::NAN]);
+        assert!(harsh.iter().all(|p| p.sp_degree >= 1));
+        assert!(harsh[0].sp_degree >= harsh[1].sp_degree);
     }
 
     /// Live estimators fall back to calibration until warm, then track

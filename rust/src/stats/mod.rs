@@ -121,6 +121,136 @@ impl Ewma {
     }
 }
 
+/// Streaming latency histogram with fixed logarithmic buckets.
+///
+/// The serving metrics path used to buffer every sample in a `Vec` and
+/// sort it at snapshot time; under sustained load that is unbounded
+/// memory and O(n log n) per snapshot. This histogram is O(1) per
+/// observation and fixed memory: buckets grow geometrically by
+/// 2^(1/BUCKETS_PER_OCTAVE), so any quantile is reported with bounded
+/// relative error (≤ ~4.5% at 8 buckets/octave) while the mean stays
+/// exact (tracked as a running sum).
+///
+/// The bucket range covers 2^-10 .. 2^30 in the caller's unit — for
+/// millisecond latencies that is ~1µs to ~12 days; samples outside the
+/// range clamp into the edge buckets.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Buckets per doubling of the value — relative bucket width 2^(1/8)≈9%.
+const BUCKETS_PER_OCTAVE: usize = 8;
+/// log2 of the smallest bucket boundary.
+const LOG2_MIN: f64 = -10.0;
+/// Octaves covered (2^-10 .. 2^30).
+const OCTAVES: usize = 40;
+const NUM_BUCKETS: usize = OCTAVES * BUCKETS_PER_OCTAVE;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; NUM_BUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(x: f64) -> usize {
+        if x <= 0.0 {
+            return 0;
+        }
+        let idx = ((x.log2() - LOG2_MIN) * BUCKETS_PER_OCTAVE as f64).floor();
+        if idx < 0.0 {
+            0
+        } else {
+            (idx as usize).min(NUM_BUCKETS - 1)
+        }
+    }
+
+    /// Fold in one observation (non-finite samples are dropped).
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.counts[Self::bucket_of(x)] += 1;
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact mean of all observations (running sum, not bucketed).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.sum / self.n as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile estimate, `q` in [0, 100]. Returns the
+    /// geometric midpoint of the bucket holding the rank, clamped to the
+    /// observed [min, max] so tiny samples don't report bucket edges
+    /// wider than the data.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q), "quantile {q} out of range");
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid = LOG2_MIN + (i as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64;
+                return mid.exp2().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(99.0)
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 /// Exact percentile over a sample (nearest-rank). Used for latency
 /// reporting (p50/p90/p99). Sorts a copy; not for hot paths.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
@@ -242,6 +372,90 @@ mod tests {
         // Non-finite samples are ignored.
         e.observe(f64::NAN);
         assert_eq!(e.count(), 41);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_within_bucket_error() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.push(i as f64 / 10.0); // 0.1 .. 100.0
+        }
+        assert_eq!(h.count(), 1000);
+        // Mean is exact (running sum): (0.1 + 100.0)/2 = 50.05.
+        assert!((h.mean() - 50.05).abs() < 1e-9, "mean {}", h.mean());
+        // Quantiles within one log-bucket (~9% relative) of the truth.
+        let p50 = h.p50();
+        assert!((p50 / 50.0 - 1.0).abs() < 0.10, "p50 {p50}");
+        let p99 = h.p99();
+        assert!((p99 / 99.0 - 1.0).abs() < 0.10, "p99 {p99}");
+        assert_eq!(h.min(), 0.1);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn log_histogram_agrees_with_exact_percentile() {
+        // Against the exact nearest-rank implementation on a lognormal-ish
+        // spread (the shape TTFT distributions take under load).
+        let xs: Vec<f64> = (0..5000)
+            .map(|i| ((i as f64 * 0.7).sin() + 1.5) * ((i % 97) as f64 + 1.0))
+            .collect();
+        let mut h = LogHistogram::new();
+        for &x in &xs {
+            h.push(x);
+        }
+        for q in [50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.quantile(q);
+            assert!(
+                (approx / exact - 1.0).abs() < 0.10,
+                "q{q}: approx {approx} exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_edge_cases() {
+        let h = LogHistogram::new();
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+
+        let mut h = LogHistogram::new();
+        h.push(4.2);
+        h.push(f64::NAN); // dropped
+        h.push(f64::INFINITY); // dropped
+        assert_eq!(h.count(), 1);
+        // Single sample: quantiles clamp to the observed value.
+        assert_eq!(h.p50(), 4.2);
+        assert_eq!(h.p99(), 4.2);
+
+        // Zero / negative clamp into the lowest bucket without panicking.
+        let mut h = LogHistogram::new();
+        h.push(0.0);
+        h.push(-1.0);
+        assert_eq!(h.count(), 2);
+        assert!(h.p50().is_finite());
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_sequential() {
+        let xs: Vec<f64> = (1..500).map(|i| (i as f64).sqrt() * 3.0).collect();
+        let mut all = LogHistogram::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for &x in &xs[..200] {
+            a.push(x);
+        }
+        for &x in &xs[200..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.p50(), all.p50());
+        assert_eq!(a.p99(), all.p99());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
     }
 
     #[test]

@@ -43,6 +43,57 @@ impl PromptProfile {
     }
 }
 
+/// SLO class of a request — coarse latency expectation that scales the
+/// tenant's weight in the controller's min-max water-fill. Interactive
+/// traffic outbids batch traffic for SP lanes; standard is the neutral
+/// default (multiplier 1.0, so untagged workloads are unchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloClass {
+    /// Chat-like: user is waiting on every token.
+    Interactive,
+    /// Default request class.
+    Standard,
+    /// Offline/bulk: throughput matters, latency does not.
+    Batch,
+}
+
+impl SloClass {
+    /// Multiplier applied to the tenant weight before water-filling.
+    pub fn weight_multiplier(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 2.0,
+            SloClass::Standard => 1.0,
+            SloClass::Batch => 0.5,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Per-tenant tagging spec for [`PromptGen::trace_tagged`].
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    pub tenant: u32,
+    /// Fair-share weight (> 0); scales the session's claim on SP lanes.
+    pub weight: f64,
+    pub slo: SloClass,
+}
+
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -51,6 +102,90 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival offset from workload start, ms (0 for closed-loop runs).
     pub arrival_ms: f64,
+    /// Tenant identity; flows through serving into the `Response`.
+    pub tenant: u32,
+    /// Fair-share weight for the water-fill (default 1.0).
+    pub weight: f64,
+    pub slo: SloClass,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize, arrival_ms: f64) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            arrival_ms,
+            tenant: 0,
+            weight: 1.0,
+            slo: SloClass::Standard,
+        }
+    }
+
+    /// Effective scheduling weight: tenant weight scaled by SLO class.
+    pub fn effective_weight(&self) -> f64 {
+        (self.weight * self.slo.weight_multiplier()).max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Arrival process for open-loop traces. All variants are simulated
+/// exactly (memoryless state switching, thinning) so the configured mean
+/// rate is reproduced, not approximated.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Two-state Markov-modulated Poisson process: exponential dwell in a
+    /// calm state at `calm_rate_per_s`, exponential dwell in a burst
+    /// state at `burst_rate_per_s`. The classic bursty-traffic model —
+    /// bursts of arrivals separated by quiet stretches.
+    Bursty {
+        calm_rate_per_s: f64,
+        burst_rate_per_s: f64,
+        calm_dwell_ms: f64,
+        burst_dwell_ms: f64,
+    },
+    /// Sinusoidally-modulated Poisson (diurnal pattern scaled down):
+    /// rate(t) = mean · (1 + amplitude · sin(2πt/period)). Simulated by
+    /// thinning against the peak rate. `amplitude` in [0, 1).
+    Diurnal {
+        mean_rate_per_s: f64,
+        period_ms: f64,
+        amplitude: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate of the process, requests per second.
+    pub fn mean_rate_per_s(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => rate_per_s,
+            ArrivalProcess::Bursty {
+                calm_rate_per_s,
+                burst_rate_per_s,
+                calm_dwell_ms,
+                burst_dwell_ms,
+            } => {
+                (calm_rate_per_s * calm_dwell_ms + burst_rate_per_s * burst_dwell_ms)
+                    / (calm_dwell_ms + burst_dwell_ms)
+            }
+            ArrivalProcess::Diurnal { mean_rate_per_s, .. } => mean_rate_per_s,
+        }
+    }
+
+    /// A bursty preset with a 6:1 burst-to-calm rate ratio and 3:1
+    /// calm-to-burst dwell ratio, scaled so the long-run mean rate is
+    /// `mean_rate_per_s`.
+    pub fn bursty_preset(mean_rate_per_s: f64) -> ArrivalProcess {
+        // mean = (0.5r·600 + 3r·200) / 800 = 1.125r  →  r = mean/1.125
+        let r = mean_rate_per_s / 1.125;
+        ArrivalProcess::Bursty {
+            calm_rate_per_s: 0.5 * r,
+            burst_rate_per_s: 3.0 * r,
+            calm_dwell_ms: 600.0,
+            burst_dwell_ms: 200.0,
+        }
+    }
 }
 
 /// Deterministic prompt generator.
@@ -85,12 +220,7 @@ impl PromptGen {
         max_new_tokens: usize,
     ) -> Vec<Request> {
         (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: self.prompt(profile),
-                max_new_tokens,
-                arrival_ms: 0.0,
-            })
+            .map(|i| Request::new(i as u64, self.prompt(profile), max_new_tokens, 0.0))
             .collect()
     }
 
@@ -109,16 +239,20 @@ impl PromptGen {
     ) -> Vec<Request> {
         let burst = burst.max(1);
         (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: self.prompt(profile),
-                max_new_tokens,
-                arrival_ms: (i / burst) as f64 * gap_ms,
+            .map(|i| {
+                Request::new(
+                    i as u64,
+                    self.prompt(profile),
+                    max_new_tokens,
+                    (i / burst) as f64 * gap_ms,
+                )
             })
             .collect()
     }
 
-    /// An open-loop Poisson arrival trace at `rate_per_s`.
+    /// An open-loop Poisson arrival trace at `rate_per_s`. Equivalent to
+    /// [`PromptGen::trace`] with [`ArrivalProcess::Poisson`] (identical
+    /// draw order, so existing seeds reproduce byte-identical traces).
     pub fn open_loop(
         &mut self,
         n: usize,
@@ -126,16 +260,104 @@ impl PromptGen {
         max_new_tokens: usize,
         rate_per_s: f64,
     ) -> Vec<Request> {
+        self.trace(n, profile, max_new_tokens, ArrivalProcess::Poisson { rate_per_s })
+    }
+
+    /// Draw the next inter-arrival and advance the process state.
+    /// `state`: (in_burst, state_end_ms) for the MMPP variant.
+    fn next_arrival(
+        &mut self,
+        t: f64,
+        process: ArrivalProcess,
+        state: &mut (bool, f64),
+    ) -> f64 {
+        match process {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                t + self.rng.gen_exp(1000.0 / rate_per_s)
+            }
+            ArrivalProcess::Bursty {
+                calm_rate_per_s,
+                burst_rate_per_s,
+                calm_dwell_ms,
+                burst_dwell_ms,
+            } => {
+                // Exact MMPP simulation: the exponential clock is
+                // memoryless, so a candidate arrival that overshoots the
+                // current dwell is discarded and redrawn at the new
+                // state's rate from the switch instant.
+                let mut t = t;
+                loop {
+                    let rate = if state.0 { burst_rate_per_s } else { calm_rate_per_s };
+                    debug_assert!(rate > 0.0);
+                    let cand = t + self.rng.gen_exp(1000.0 / rate);
+                    if cand <= state.1 {
+                        return cand;
+                    }
+                    t = state.1;
+                    state.0 = !state.0;
+                    let next_dwell = if state.0 { burst_dwell_ms } else { calm_dwell_ms };
+                    state.1 = t + self.rng.gen_exp(next_dwell);
+                }
+            }
+            ArrivalProcess::Diurnal { mean_rate_per_s, period_ms, amplitude } => {
+                // Thinning (Lewis-Shedler): candidates at the peak rate,
+                // accepted with probability rate(t)/peak — exact for any
+                // bounded rate function.
+                assert!((0.0..1.0).contains(&amplitude), "amplitude {amplitude}");
+                let peak = mean_rate_per_s * (1.0 + amplitude);
+                let mut t = t;
+                loop {
+                    t += self.rng.gen_exp(1000.0 / peak);
+                    let phase = 2.0 * std::f64::consts::PI * t / period_ms;
+                    let rate = mean_rate_per_s * (1.0 + amplitude * phase.sin());
+                    if self.rng.gen_f64() < rate / peak {
+                        return t;
+                    }
+                }
+            }
+        }
+    }
+
+    /// An open-loop arrival trace under any [`ArrivalProcess`], untagged
+    /// (tenant 0, weight 1, standard SLO).
+    pub fn trace(
+        &mut self,
+        n: usize,
+        profile: PromptProfile,
+        max_new_tokens: usize,
+        process: ArrivalProcess,
+    ) -> Vec<Request> {
+        self.trace_tagged(n, profile, max_new_tokens, process, &[])
+    }
+
+    /// An open-loop trace with per-tenant weight/SLO tags assigned
+    /// round-robin over `tenants` (deterministic, so every tenant sees
+    /// the same share of arrivals). Empty `tenants` means untagged.
+    pub fn trace_tagged(
+        &mut self,
+        n: usize,
+        profile: PromptProfile,
+        max_new_tokens: usize,
+        process: ArrivalProcess,
+        tenants: &[TenantSpec],
+    ) -> Vec<Request> {
         let mut t = 0.0;
+        // MMPP starts in the calm state with a fresh dwell.
+        let mut state = (false, 0.0);
+        if let ArrivalProcess::Bursty { calm_dwell_ms, .. } = process {
+            state.1 = self.rng.gen_exp(calm_dwell_ms);
+        }
         (0..n)
             .map(|i| {
-                t += self.rng.gen_exp(1000.0 / rate_per_s);
-                Request {
-                    id: i as u64,
-                    prompt: self.prompt(profile),
-                    max_new_tokens,
-                    arrival_ms: t,
+                t = self.next_arrival(t, process, &mut state);
+                let mut req = Request::new(i as u64, self.prompt(profile), max_new_tokens, t);
+                if !tenants.is_empty() {
+                    let spec = tenants[i % tenants.len()];
+                    req.tenant = spec.tenant;
+                    req.weight = spec.weight;
+                    req.slo = spec.slo;
                 }
+                req
             })
             .collect()
     }
@@ -190,5 +412,154 @@ mod tests {
         // mean inter-arrival ~ 10ms at 100 req/s
         let mean = reqs.last().unwrap().arrival_ms / 50.0;
         assert!((5.0..20.0).contains(&mean), "mean gap {mean}");
+    }
+
+    /// Empirical rate of a trace, requests per second.
+    fn empirical_rate(reqs: &[Request]) -> f64 {
+        reqs.len() as f64 / (reqs.last().unwrap().arrival_ms / 1000.0)
+    }
+
+    #[test]
+    fn open_loop_poisson_rate_is_accurate() {
+        let mut g = PromptGen::new(11, 256);
+        let reqs = g.open_loop(20_000, PromptProfile::Instruction, 8, 250.0);
+        let rate = empirical_rate(&reqs);
+        assert!((rate / 250.0 - 1.0).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn open_loop_is_deterministic_across_seeds() {
+        let mk = |seed| {
+            PromptGen::new(seed, 256).open_loop(64, PromptProfile::Code, 8, 80.0)
+        };
+        let (a, b) = (mk(9), mk(9));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        // A different seed yields a different trace.
+        let c = mk(10);
+        assert!(a.iter().zip(c.iter()).any(|(x, y)| x.arrival_ms != y.arrival_ms));
+    }
+
+    #[test]
+    fn open_loop_matches_poisson_trace() {
+        // open_loop is a thin wrapper over trace(Poisson): same seed must
+        // reproduce byte-identical arrivals AND prompts.
+        let a = PromptGen::new(21, 256).open_loop(32, PromptProfile::Code, 8, 120.0);
+        let b = PromptGen::new(21, 256).trace(
+            32,
+            PromptProfile::Code,
+            8,
+            ArrivalProcess::Poisson { rate_per_s: 120.0 },
+        );
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+
+    #[test]
+    fn bursty_trace_reproduces_mean_rate() {
+        let p = ArrivalProcess::Bursty {
+            calm_rate_per_s: 50.0,
+            burst_rate_per_s: 500.0,
+            calm_dwell_ms: 2000.0,
+            burst_dwell_ms: 500.0,
+        };
+        // mean = (50·2000 + 500·500) / 2500 = 140/s
+        assert!((p.mean_rate_per_s() - 140.0).abs() < 1e-9);
+        let mut g = PromptGen::new(13, 256);
+        let reqs = g.trace(30_000, PromptProfile::Instruction, 8, p);
+        let rate = empirical_rate(&reqs);
+        assert!((rate / 140.0 - 1.0).abs() < 0.07, "rate {rate}");
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_ms < w[1].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn bursty_preset_hits_requested_mean() {
+        let p = ArrivalProcess::bursty_preset(40.0);
+        assert!((p.mean_rate_per_s() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_trace_reproduces_mean_rate() {
+        let p = ArrivalProcess::Diurnal {
+            mean_rate_per_s: 100.0,
+            period_ms: 1000.0,
+            amplitude: 0.8,
+        };
+        assert!((p.mean_rate_per_s() - 100.0).abs() < 1e-9);
+        let mut g = PromptGen::new(17, 256);
+        let reqs = g.trace(20_000, PromptProfile::Instruction, 8, p);
+        // ~200 full periods, so the sinusoid integrates out.
+        let rate = empirical_rate(&reqs);
+        assert!((rate / 100.0 - 1.0).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn diurnal_rate_actually_varies_within_period() {
+        // Split arrivals by sine phase: the peak half-period must see
+        // substantially more traffic than the trough half-period.
+        let period = 1000.0;
+        let mut g = PromptGen::new(19, 256);
+        let reqs = g.trace(
+            20_000,
+            PromptProfile::Instruction,
+            8,
+            ArrivalProcess::Diurnal { mean_rate_per_s: 100.0, period_ms: period, amplitude: 0.8 },
+        );
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &reqs {
+            let phase = (r.arrival_ms / period).fract();
+            if phase < 0.5 {
+                peak += 1; // sin > 0 half
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak {peak} trough {trough}"
+        );
+    }
+
+    #[test]
+    fn tagged_trace_assigns_tenants_round_robin() {
+        let tenants = [
+            TenantSpec { tenant: 1, weight: 2.0, slo: SloClass::Interactive },
+            TenantSpec { tenant: 2, weight: 1.0, slo: SloClass::Batch },
+        ];
+        let mut g = PromptGen::new(23, 256);
+        let reqs = g.trace_tagged(
+            10,
+            PromptProfile::Instruction,
+            8,
+            ArrivalProcess::Poisson { rate_per_s: 50.0 },
+            &tenants,
+        );
+        for (i, r) in reqs.iter().enumerate() {
+            let spec = tenants[i % 2];
+            assert_eq!(r.tenant, spec.tenant);
+            assert_eq!(r.weight, spec.weight);
+            assert_eq!(r.slo, spec.slo);
+        }
+        // Effective weight folds the SLO multiplier in.
+        assert_eq!(reqs[0].effective_weight(), 4.0); // 2.0 × interactive 2.0
+        assert_eq!(reqs[1].effective_weight(), 0.5); // 1.0 × batch 0.5
+    }
+
+    #[test]
+    fn untagged_requests_default_to_neutral_tags() {
+        let mut g = PromptGen::new(29, 256);
+        let reqs = g.closed_loop(3, PromptProfile::Code, 8);
+        for r in &reqs {
+            assert_eq!(r.tenant, 0);
+            assert_eq!(r.weight, 1.0);
+            assert_eq!(r.slo, SloClass::Standard);
+            assert_eq!(r.effective_weight(), 1.0);
+        }
     }
 }

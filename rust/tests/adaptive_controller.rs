@@ -38,6 +38,7 @@ fn live_rates(r: &Router, sids: &[u64]) -> Vec<SessionRates> {
             session: s,
             acceptance: r.live_acceptance(s),
             drafter_tpot_ms: r.live_drafter_tpot_ms(s),
+            weight: 1.0,
         })
         .collect()
 }
