@@ -23,8 +23,10 @@ artifacts:
 
 # Perf trajectory: runs the hot-path bench (long-context concurrent
 # serving) and emits BENCH_hotpath.json at the repo root — tokens/s,
-# context-bytes-copied per settled token, submit→dispatch µs. Set
-# BENCH_SMOKE=1 for the quick CI variant.
+# context-bytes-copied per settled token, submit→dispatch µs, plus the
+# seeded chaos probe's chaos_* fault-absorption fields (CHAOS_SEED picks
+# the interleaving, default 0). Set BENCH_SMOKE=1 for the quick CI
+# variant.
 bench:
 	BENCH_SMOKE=$(BENCH_SMOKE) BENCH_HOTPATH_OUT=$(CURDIR)/BENCH_hotpath.json \
 		$(CARGO) bench --bench hotpath

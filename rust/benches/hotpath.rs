@@ -25,6 +25,12 @@
 //!   admission: arrival-inclusive TTFT and TPOT p50/p99, membership
 //!   kicks, reclaimed tasks; gates continuous < RTC on p99 TTFT with
 //!   every response bit-identical to non-SI greedy.
+//! - **chaos** — a seeded fault plan (worker panic + forward stall +
+//!   recurring drafter death, `FaultPlan::chaos(CHAOS_SEED)`) injected
+//!   into a 2-session serve; gates that every response stays
+//!   bit-identical to fault-free non-SI greedy while the supervision
+//!   counters prove the faults fired and were absorbed
+//!   (`chaos_*` fields in the JSON).
 //!
 //! Results land in `BENCH_hotpath.json` (override the path with
 //! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
@@ -36,7 +42,7 @@
 use dsi::config::{AlgoKind, LatencyProfile};
 use dsi::context;
 use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
-use dsi::coordinator::{run_nonsi, DsiSession, OnlineConfig, SchedPolicy, TargetPool};
+use dsi::coordinator::{run_nonsi, DsiSession, FaultPlan, OnlineConfig, SchedPolicy, TargetPool};
 use dsi::server::router::Router;
 use dsi::server::{AdmissionMode, Response, Server};
 use dsi::stats::percentile;
@@ -226,6 +232,44 @@ fn sustained_probe(mode: AdmissionMode, smoke: bool) -> (Vec<Response>, dsi::ser
     (resps, srv.metrics_snapshot())
 }
 
+/// The chaos probe's wait engine — shared with the fault-free non-SI
+/// replay so the bit-identity check compares like for like.
+fn chaos_engine() -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.4),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 57 },
+        max_context: 8192,
+    }
+}
+
+/// Serve 4 requests through a 2-session / 2-worker DSI server under a
+/// seeded chaos plan (worker panic + forward stall + recurring drafter
+/// death). The faults must be invisible in the *output* — every response
+/// bit-identical to fault-free non-SI greedy — while the supervision
+/// counters prove they actually fired and were absorbed.
+fn chaos_probe(
+    seed: u64,
+    smoke: bool,
+) -> (Vec<Request>, Vec<Response>, dsi::server::metrics::Snapshot) {
+    let eng = chaos_engine();
+    let plan = std::sync::Arc::new(FaultPlan::chaos(seed));
+    let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 2);
+    let mut srv = Server::new(eng.factory(), router, AlgoKind::Dsi)
+        .with_max_depth(64)
+        .with_max_sessions(2)
+        .with_pool_size(2)
+        .with_adaptive(false)
+        .with_fault_plan(plan);
+    let n_tokens = if smoke { 12 } else { 24 };
+    let reqs: Vec<Request> = (0..4u32)
+        .map(|i| Request::new(i as u64, vec![i + 1, 70 + i, 210], n_tokens, 0.0))
+        .collect();
+    let resps = srv.serve(&reqs);
+    let snap = srv.metrics_snapshot();
+    (reqs, resps, snap)
+}
+
 /// Arrival-inclusive TTFT (queueing delay + dispatch-to-first-token) per
 /// response — the quantity continuous batching improves; the scheduler
 /// cannot shrink `ttft_ms` alone, only the queueing in front of it.
@@ -390,6 +434,41 @@ fn main() {
         cont_snap.pool_reclaimed,
     );
 
+    // The chaos probe: a seeded fault plan injected into a full serve.
+    // Losslessness is the whole point of the fault plane — verify every
+    // response against a fault-free non-SI greedy replay of the same
+    // oracle before recording the counters.
+    let chaos_seed: u64 = std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let (chaos_reqs, chaos_resps, chaos_snap) = chaos_probe(chaos_seed, smoke);
+    assert_eq!(chaos_resps.len(), chaos_reqs.len(), "chaos serve dropped requests");
+    for (req, resp) in chaos_reqs.iter().zip(&chaos_resps) {
+        let cfg = OnlineConfig {
+            prompt: req.prompt.clone(),
+            n_tokens: req.max_new_tokens,
+            lookahead: 1,
+            sp_degree: 1,
+            max_speculation_depth: 64,
+        };
+        let nonsi = run_nonsi(&chaos_engine().factory(), &cfg);
+        assert_eq!(
+            resp.tokens, nonsi.tokens,
+            "chaos serve lost losslessness on req {}",
+            req.id
+        );
+    }
+    println!(
+        "  chaos probe (seed {chaos_seed}): lossless under {} injected faults | \
+         worker restarts={} redispatched={} drafter stops={} degraded sessions={}",
+        chaos_snap.faults_injected,
+        chaos_snap.pool_worker_restarts,
+        chaos_snap.pool_redispatched,
+        chaos_snap.drafter_stops,
+        chaos_snap.degraded_sessions,
+    );
+
     let out = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("smoke", Json::Bool(smoke)),
@@ -459,6 +538,13 @@ fn main() {
         ("sustained_load_membership_kicks", num(cont_snap.controller_membership_kicks as f64)),
         ("sustained_load_pool_reclaimed", num(cont_snap.pool_reclaimed as f64)),
         ("sustained_load_lossless", Json::Bool(true)),
+        ("chaos_seed", num(chaos_seed as f64)),
+        ("chaos_faults_injected", num(chaos_snap.faults_injected as f64)),
+        ("chaos_worker_restarts", num(chaos_snap.pool_worker_restarts as f64)),
+        ("chaos_redispatched", num(chaos_snap.pool_redispatched as f64)),
+        ("chaos_drafter_stops", num(chaos_snap.drafter_stops as f64)),
+        ("chaos_degraded_sessions", num(chaos_snap.degraded_sessions as f64)),
+        ("chaos_lossless", Json::Bool(true)),
     ]);
     let path = std::env::var("BENCH_HOTPATH_OUT")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
@@ -526,5 +612,28 @@ fn main() {
         sl_ttft_p99 < rtc_ttft_p99,
         "continuous admission lost on p99 TTFT: {sl_ttft_p99:.1}ms vs \
          RTC {rtc_ttft_p99:.1}ms"
+    );
+    // The chaos acceptance gates: the injected faults must actually have
+    // happened (a chaos run where nothing fired proves nothing) and the
+    // supervision machinery must have absorbed each one — a respawned
+    // worker, its batch re-dispatched, and the doomed drafter's session
+    // degraded to target-only pace. (Losslessness was already asserted
+    // per request above.)
+    assert!(
+        chaos_snap.faults_injected >= 3,
+        "chaos plan only fired {} of >= 3 scheduled faults",
+        chaos_snap.faults_injected
+    );
+    assert!(
+        chaos_snap.pool_worker_restarts >= 1,
+        "chaos worker panic never triggered a supervised respawn"
+    );
+    assert!(
+        chaos_snap.pool_redispatched >= 1,
+        "the dead worker's batch was never re-dispatched"
+    );
+    assert!(
+        chaos_snap.degraded_sessions >= 1,
+        "the recurring drafter death never degraded a session"
     );
 }

@@ -50,15 +50,30 @@
 //! rates, under pool contention in `rust/tests/concurrent_serving.rs`,
 //! and for the real PJRT engine in `rust/tests/`).
 
+use super::fault::FaultStats;
 use super::pool::{PoolHandle, SessionMsg, TargetPool};
 use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
 use crate::context::TokenRope;
 use std::collections::BTreeMap;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Verify-deadline auto-derivation: a *generous* multiple of the live
+/// target-TPOT estimate, floored so cold estimators never produce a
+/// hair-trigger deadline. The deadline only has to beat "forever" — a
+/// lost result otherwise blocks the session's event loop indefinitely —
+/// so false expiries (which cost one duplicate, still-lossless dispatch)
+/// are traded away aggressively.
+pub const VERIFY_DEADLINE_TPOT_MULT: f64 = 32.0;
+/// Lower bound on the auto-derived verify deadline, ms.
+pub const VERIFY_DEADLINE_FLOOR_MS: f64 = 250.0;
+/// Verify deadline when no TPOT estimate exists yet and no override is
+/// set, ms.
+pub const VERIFY_DEADLINE_DEFAULT_MS: f64 = 500.0;
 
 /// The live control/telemetry surface of one DSI session, shared with the
 /// adaptive controller. The knob half is write-side for the controller:
@@ -90,6 +105,16 @@ pub struct SessionCtl {
     drafter_steps: AtomicU64,
     accepted: AtomicU64,
     rejected: AtomicU64,
+    /// Operator override for the verify deadline, µs (0 = auto-derive
+    /// from the target-TPOT hint). Written once from `--verify-deadline-ms`.
+    verify_deadline_us: AtomicU64,
+    /// Live target-TPOT estimate, µs (0 = no estimate yet). Written by
+    /// the adaptive controller each tick; read by
+    /// [`verify_deadline`](Self::verify_deadline).
+    target_tpot_us: AtomicU64,
+    /// Times this session's drafter thread stopped (panic or clean exit
+    /// while a generation still wanted drafts).
+    drafter_stops: AtomicU64,
 }
 
 /// A point-in-time reading of a session's cumulative telemetry; the
@@ -100,6 +125,7 @@ pub struct CtlTelemetry {
     pub drafter_steps: u64,
     pub accepted: u64,
     pub rejected: u64,
+    pub drafter_stops: u64,
 }
 
 impl SessionCtl {
@@ -113,6 +139,9 @@ impl SessionCtl {
             drafter_steps: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            verify_deadline_us: AtomicU64::new(0),
+            target_tpot_us: AtomicU64::new(0),
+            drafter_stops: AtomicU64::new(0),
         }
     }
 
@@ -188,6 +217,44 @@ impl SessionCtl {
         self.lookahead.load(Ordering::Relaxed).max(1)
     }
 
+    /// Force the verify deadline (`--verify-deadline-ms`); non-positive
+    /// or non-finite values restore auto-derivation.
+    pub fn set_verify_deadline_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 { (ms * 1e3) as u64 } else { 0 };
+        self.verify_deadline_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Feed the live target-TPOT estimate (ms) the auto deadline derives
+    /// from. The adaptive controller writes this every tick.
+    pub fn set_target_tpot_hint_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 { (ms * 1e3) as u64 } else { 0 };
+        self.target_tpot_us.store(us, Ordering::Relaxed);
+    }
+
+    /// How long the event loop waits on a verification before declaring
+    /// the result lost and re-dispatching: the operator override if set,
+    /// else [`VERIFY_DEADLINE_TPOT_MULT`] × the live target-TPOT estimate
+    /// (floored at [`VERIFY_DEADLINE_FLOOR_MS`]), else
+    /// [`VERIFY_DEADLINE_DEFAULT_MS`].
+    pub fn verify_deadline(&self) -> Duration {
+        let forced = self.verify_deadline_us.load(Ordering::Relaxed);
+        if forced > 0 {
+            return Duration::from_micros(forced);
+        }
+        let hint_us = self.target_tpot_us.load(Ordering::Relaxed);
+        let ms = if hint_us > 0 {
+            (hint_us as f64 / 1e3 * VERIFY_DEADLINE_TPOT_MULT).max(VERIFY_DEADLINE_FLOOR_MS)
+        } else {
+            VERIFY_DEADLINE_DEFAULT_MS
+        };
+        Duration::from_secs_f64(ms / 1e3)
+    }
+
+    /// Count one drafter stop (panic or premature clean exit).
+    fn record_drafter_stop(&self) {
+        self.drafter_stops.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Cumulative telemetry snapshot.
     pub fn telemetry(&self) -> CtlTelemetry {
         CtlTelemetry {
@@ -195,6 +262,7 @@ impl SessionCtl {
             drafter_steps: self.drafter_steps.load(Ordering::Relaxed),
             accepted: self.accepted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            drafter_stops: self.drafter_stops.load(Ordering::Relaxed),
         }
     }
 }
@@ -230,13 +298,135 @@ pub fn run_dsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
 pub struct DsiSession {
     handle: PoolHandle,
     msg_rx: Receiver<SessionMsg>,
+    /// Kept so a respawned drafter can be handed the same session inbox.
+    msg_tx: Sender<SessionMsg>,
     ctrl_tx: Sender<Ctrl>,
     frontier: Arc<AtomicUsize>,
     depth: Arc<AtomicUsize>,
     drafter_calls_ctr: Arc<AtomicUsize>,
     drafter_handle: Option<std::thread::JoinHandle<()>>,
+    /// Kept for supervised drafter respawns.
+    factory: ServerFactory,
     ctl: Arc<SessionCtl>,
+    /// Fault-plane gauges shared with the serving snapshot (optional —
+    /// a bare session still recovers, it just doesn't report).
+    fault_stats: Option<Arc<FaultStats>>,
+    /// Set once the drafter is gone for good: the session then runs
+    /// target-only (non-SI pace via the chain fallback), still lossless.
+    degraded: bool,
+    /// Supervised drafter restart budget before degrading. One attempt:
+    /// a drafter that dies twice is treated as deterministically broken.
+    drafter_restarts_left: usize,
     gen: u64,
+}
+
+/// The drafter thread body: stream drafts non-blocking (DSI's defining
+/// property), park on `Pause`, resync on `Restart`. Extracted so the
+/// supervisor can respawn it after a panic.
+#[allow(clippy::too_many_arguments)]
+fn drafter_loop(
+    factory: ServerFactory,
+    drafter_id: usize,
+    tx: Sender<SessionMsg>,
+    ctrl_rx: Receiver<Ctrl>,
+    frontier: Arc<AtomicUsize>,
+    depth: Arc<AtomicUsize>,
+    calls: Arc<AtomicUsize>,
+    ctl: Arc<SessionCtl>,
+) {
+    let mut server = factory(ServerRole::Drafter, drafter_id);
+    let horizon = server.max_context();
+    let mut gen = 0u64;
+    let mut ctx = TokenRope::new();
+    let mut paused = true; // parked until the first Restart
+    'outer: loop {
+        // Drain control messages (newest restart wins); block
+        // while paused.
+        loop {
+            let msg = if paused {
+                match ctrl_rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match ctrl_rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => break 'outer,
+                }
+            };
+            match msg {
+                Some(Ctrl::Restart { gen: g, ctx: c }) => {
+                    gen = g;
+                    // The drafter's incremental prefix state
+                    // resyncs inside its next `predictions`
+                    // call; no warm-up needed here.
+                    ctx = c;
+                    paused = false;
+                }
+                Some(Ctrl::Pause) => paused = true,
+                Some(Ctrl::Stop) => break 'outer,
+                None => break,
+            }
+            if paused {
+                continue; // keep blocking on the channel
+            }
+            break;
+        }
+        // Depth / horizon limits: idle briefly rather than spin.
+        let f = frontier.load(Ordering::Acquire);
+        let d = depth.load(Ordering::Acquire);
+        if ctx.len().saturating_sub(f) >= d || ctx.len() >= horizon {
+            match ctrl_rx.recv_timeout(Duration::from_micros(200)) {
+                Ok(Ctrl::Restart { gen: g, ctx: c }) => {
+                    gen = g;
+                    ctx = c;
+                    paused = false;
+                }
+                Ok(Ctrl::Pause) => paused = true,
+                Ok(Ctrl::Stop) => break,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(_) => break,
+            }
+            continue;
+        }
+        let cost_before = server.forward_cost();
+        let tok = server.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
+        ctl.record_drafter_cost(server.forward_cost() - cost_before);
+        calls.fetch_add(1, Ordering::Relaxed);
+        ctx.push(tok);
+        if tx
+            .send(SessionMsg::Draft { gen, index: ctx.len() - 1, token: tok })
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// Spawn one supervised drafter thread. `DrafterStopped` is sent on EVERY
+/// exit path — clean stop, channel teardown, or a panic anywhere in the
+/// loop (including server construction) — so the coordinator always
+/// learns the drafter is gone instead of waiting on drafts forever.
+fn spawn_drafter(
+    factory: &ServerFactory,
+    drafter_id: usize,
+    tx: Sender<SessionMsg>,
+    frontier: Arc<AtomicUsize>,
+    depth: Arc<AtomicUsize>,
+    calls: Arc<AtomicUsize>,
+    ctl: Arc<SessionCtl>,
+) -> (Sender<Ctrl>, std::thread::JoinHandle<()>) {
+    let (ctrl_tx, ctrl_rx): (Sender<Ctrl>, Receiver<Ctrl>) = channel();
+    let factory = factory.clone();
+    let handle = std::thread::spawn(move || {
+        let done_tx = tx.clone();
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(move || {
+            drafter_loop(factory, drafter_id, tx, ctrl_rx, frontier, depth, calls, ctl)
+        }));
+        let _ = done_tx.send(SessionMsg::DrafterStopped);
+    });
+    (ctrl_tx, handle)
 }
 
 impl DsiSession {
@@ -250,106 +440,49 @@ impl DsiSession {
         let drafter_calls_ctr = Arc::new(AtomicUsize::new(0));
         let ctl = Arc::new(SessionCtl::new());
 
-        // --- drafter thread ---
-        let (ctrl_tx, ctrl_rx): (Sender<Ctrl>, Receiver<Ctrl>) = channel();
-        let drafter_handle = {
-            let tx = msg_tx;
-            let factory = factory.clone();
-            let frontier = frontier.clone();
-            let depth = depth.clone();
-            let calls = drafter_calls_ctr.clone();
-            let ctl = ctl.clone();
-            // The drafter's factory id is the pool-unique session id —
-            // concurrent sessions must never hand their factories the
-            // same (Drafter, id) pair, or id-seeded engines would alias
-            // their streams.
-            let drafter_id = handle.session_id() as usize;
-            std::thread::spawn(move || {
-                let mut server = factory(ServerRole::Drafter, drafter_id);
-                let horizon = server.max_context();
-                let mut gen = 0u64;
-                let mut ctx = TokenRope::new();
-                let mut paused = true; // parked until the first Restart
-                'outer: loop {
-                    // Drain control messages (newest restart wins); block
-                    // while paused.
-                    loop {
-                        let msg = if paused {
-                            match ctrl_rx.recv() {
-                                Ok(m) => Some(m),
-                                Err(_) => break 'outer,
-                            }
-                        } else {
-                            match ctrl_rx.try_recv() {
-                                Ok(m) => Some(m),
-                                Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                                    break 'outer
-                                }
-                            }
-                        };
-                        match msg {
-                            Some(Ctrl::Restart { gen: g, ctx: c }) => {
-                                gen = g;
-                                // The drafter's incremental prefix state
-                                // resyncs inside its next `predictions`
-                                // call; no warm-up needed here.
-                                ctx = c;
-                                paused = false;
-                            }
-                            Some(Ctrl::Pause) => paused = true,
-                            Some(Ctrl::Stop) => break 'outer,
-                            None => break,
-                        }
-                        if paused {
-                            continue; // keep blocking on the channel
-                        }
-                        break;
-                    }
-                    // Depth / horizon limits: idle briefly rather than spin.
-                    let f = frontier.load(Ordering::Acquire);
-                    let d = depth.load(Ordering::Acquire);
-                    if ctx.len().saturating_sub(f) >= d || ctx.len() >= horizon {
-                        match ctrl_rx.recv_timeout(Duration::from_micros(200)) {
-                            Ok(Ctrl::Restart { gen: g, ctx: c }) => {
-                                gen = g;
-                                ctx = c;
-                                paused = false;
-                            }
-                            Ok(Ctrl::Pause) => paused = true,
-                            Ok(Ctrl::Stop) => break,
-                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                            Err(_) => break,
-                        }
-                        continue;
-                    }
-                    let cost_before = server.forward_cost();
-                    let tok = server.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
-                    ctl.record_drafter_cost(server.forward_cost() - cost_before);
-                    calls.fetch_add(1, Ordering::Relaxed);
-                    ctx.push(tok);
-                    if tx
-                        .send(SessionMsg::Draft { gen, index: ctx.len() - 1, token: tok })
-                        .is_err()
-                    {
-                        break;
-                    }
-                }
-                let _ = tx.send(SessionMsg::DrafterStopped);
-            })
-        };
+        // The drafter's factory id is the pool-unique session id —
+        // concurrent sessions must never hand their factories the
+        // same (Drafter, id) pair, or id-seeded engines would alias
+        // their streams.
+        let (ctrl_tx, drafter_handle) = spawn_drafter(
+            factory,
+            handle.session_id() as usize,
+            msg_tx.clone(),
+            frontier.clone(),
+            depth.clone(),
+            drafter_calls_ctr.clone(),
+            ctl.clone(),
+        );
 
         Self {
             handle,
             msg_rx,
+            msg_tx,
             ctrl_tx,
             frontier,
             depth,
             drafter_calls_ctr,
             drafter_handle: Some(drafter_handle),
+            factory: factory.clone(),
             ctl,
+            fault_stats: None,
+            degraded: false,
+            drafter_restarts_left: 1,
             gen: 0,
         }
+    }
+
+    /// Attach the serving plane's fault gauges: deadline expiries,
+    /// drafter stops/restarts, and degradations are then visible in the
+    /// metrics `Snapshot`.
+    pub fn set_fault_stats(&mut self, stats: Arc<FaultStats>) {
+        self.fault_stats = Some(stats);
+    }
+
+    /// Whether the session has permanently degraded to target-only
+    /// (non-SI) mode after losing its drafter.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
     }
 
     /// This session's pool-unique id.
@@ -464,12 +597,93 @@ impl DsiSession {
         dispatch_chain_if_stalled!();
 
         'main: while settled < goal {
-            let msg = match self.msg_rx.recv() {
+            let msg = match self.msg_rx.recv_timeout(ctl.verify_deadline()) {
                 Ok(m) => m,
-                Err(_) => break,
+                Err(RecvTimeoutError::Timeout) => {
+                    if inflight.is_empty() {
+                        // Only waiting on a draft (the covering result is
+                        // already buffered) — nothing dispatched to
+                        // recover, so this is not an expiry. Re-arm.
+                        continue 'main;
+                    }
+                    // Verify deadline expired with coverage in flight: a
+                    // worker died holding our tasks, or a result vanished
+                    // en route. Declare every in-flight task lost and
+                    // re-dispatch — identical contexts yield identical
+                    // predictions (deterministic target), so if a "lost"
+                    // result straggles in later the keep-wider rule
+                    // absorbs the duplicate. Exactly the `Reclaimed`
+                    // rewind, applied to the whole in-flight set: no
+                    // token is ever emitted without passing verification.
+                    if let Some(fs) = &self.fault_stats {
+                        fs.record_deadline_expiry();
+                    }
+                    for (&from, _) in &inflight {
+                        if from > c0 && (from - c0 - 1) % k == 0 {
+                            let j = (from - c0 - 1) / k + 1;
+                            next_task = next_task.min(j);
+                        }
+                    }
+                    inflight.clear();
+                    chain_dispatched_for = usize::MAX;
+                    dispatch_ready_tasks!();
+                    dispatch_chain_if_stalled!();
+                    continue 'main;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
             };
             match msg {
-                SessionMsg::DrafterStopped => {}
+                SessionMsg::DrafterStopped => {
+                    ctl.record_drafter_stop();
+                    if let Some(fs) = &self.fault_stats {
+                        fs.record_drafter_stop();
+                    }
+                    if self.degraded {
+                        continue;
+                    }
+                    if self.drafter_restarts_left > 0 {
+                        // One supervised restart: join the dead thread,
+                        // spawn a fresh drafter on the same inbox, and
+                        // point it at the current speculation rope — the
+                        // in-order channel guarantees every draft the old
+                        // drafter sent is already in `spec`, so the new
+                        // one continues exactly at the tip (same gen; the
+                        // gen tag shields against any stale stragglers).
+                        self.drafter_restarts_left -= 1;
+                        if let Some(fs) = &self.fault_stats {
+                            fs.record_drafter_restart();
+                        }
+                        if let Some(h) = self.drafter_handle.take() {
+                            let _ = h.join();
+                        }
+                        let (ctrl_tx, h) = spawn_drafter(
+                            &self.factory,
+                            self.handle.session_id() as usize,
+                            self.msg_tx.clone(),
+                            self.frontier.clone(),
+                            self.depth.clone(),
+                            self.drafter_calls_ctr.clone(),
+                            self.ctl.clone(),
+                        );
+                        self.ctrl_tx = ctrl_tx;
+                        self.drafter_handle = Some(h);
+                        spec.freeze();
+                        crate::context::note_full_clone(spec.len());
+                        let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: spec.clone() });
+                    } else {
+                        // Restart budget spent: degrade to target-only
+                        // mode. The chain fallback alone advances the
+                        // frontier at non-SI pace — output bit-identical,
+                        // only the speedup is gone. Permanent for this
+                        // session (the drafter is deterministically
+                        // broken); the server retires the session when
+                        // the request completes.
+                        self.degraded = true;
+                        if let Some(fs) = &self.fault_stats {
+                            fs.record_degraded_session();
+                        }
+                    }
+                }
                 SessionMsg::Draft { gen: g, index, token } => {
                     if g != gen {
                         continue; // stale speculation branch
@@ -540,6 +754,25 @@ impl DsiSession {
                 // faster than the target, so this only waits in
                 // pathological schedules; we wait for the next Draft).
                 let Some(draft) = spec.get(pos) else {
+                    if self.degraded {
+                        // Degraded target-only mode: no drafter will ever
+                        // extend the rope, and the buffered prediction IS
+                        // the target's own greedy token for `pos` (the
+                        // chain task's self-draft). Settle it directly —
+                        // bit-identical to non-SI by construction. Pinning
+                        // `c0` to the frontier keeps the block arithmetic
+                        // inert (no drafts ⇒ no block tasks) and the
+                        // expiry rewind safe.
+                        let now = start.elapsed().as_secs_f64() * 1e3;
+                        debug_assert_eq!(pos, spec.len(), "degraded frontier drift");
+                        spec.push(pred);
+                        settled += 1;
+                        settle_ms.push(now);
+                        self.frontier.store(settled, Ordering::Release);
+                        c0 = settled;
+                        next_task = 1;
+                        continue 'settle;
+                    }
                     break 'settle;
                 };
                 let now = start.elapsed().as_secs_f64() * 1e3;
@@ -872,5 +1105,101 @@ mod tests {
             let nonsi = run_nonsi(&eng.factory(), &c);
             assert_eq!(out.tokens, nonsi.tokens, "request of {n} tokens");
         }
+    }
+
+    /// Deadline-expiry losslessness (ISSUE 7 satellite): the fault plan
+    /// eats exactly one verify result in flight. The session's verify
+    /// deadline must declare it lost, re-dispatch, and finish
+    /// bit-identical to non-SI with exactly one expiry counted.
+    #[test]
+    fn deadline_expiry_redispatches_losslessly() {
+        use crate::coordinator::fault::{FaultPlan, FaultStats};
+        use crate::coordinator::pool::SchedPolicy;
+        // p = 1.0: no rejection ever stales a generation, so the ONLY
+        // stall this run can hit is the eaten result. A 1-worker pool
+        // serializes completions, making the eaten send deterministically
+        // the FIRST one — the chain task's result for the first output
+        // position, which nothing else ever covers.
+        let eng = engine(1.0, 2.0, 0.4, 71);
+        let plan = Arc::new(FaultPlan::parse("drop-verify@1").unwrap());
+        let pool =
+            TargetPool::new_with_faults(&eng.factory(), 1, SchedPolicy::Affinity, 8, Some(plan));
+        let mut session = DsiSession::new(&pool, &eng.factory());
+        let stats = Arc::new(FaultStats::default());
+        session.set_fault_stats(stats.clone());
+        session.ctl().set_verify_deadline_ms(60.0);
+        let c = cfg(16, 2, 2);
+        let out = session.generate(&c);
+
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens, "deadline recovery broke losslessness");
+        assert_eq!(out.tokens.len(), 16);
+        assert_eq!(
+            stats.deadline_expiries(),
+            1,
+            "one eaten result must cost exactly one expiry"
+        );
+        assert_eq!(stats.degraded_sessions(), 0);
+        assert!(!session.is_degraded());
+    }
+
+    /// Drafter death with a recurring fault: the supervised restart is
+    /// attempted, the replacement dies the same way, and the session
+    /// degrades to target-only mode — still finishing bit-identical to
+    /// non-SI (the chain fallback alone carries the request).
+    #[test]
+    fn drafter_death_degrades_to_nonsi_losslessly() {
+        use crate::coordinator::fault::{faulty_factory, FaultPlan, FaultStats};
+        // Clean target pool; only the session's drafter is fault-wrapped.
+        let eng = engine(0.8, 2.0, 0.4, 73);
+        let pool = TargetPool::new(&eng.factory(), 2);
+        let plan = Arc::new(FaultPlan::parse("drafter-die@3").unwrap());
+        let faulty = faulty_factory(eng.factory(), plan);
+        let mut session = DsiSession::new(&pool, &faulty);
+        let stats = Arc::new(FaultStats::default());
+        session.set_fault_stats(stats.clone());
+        let c = cfg(12, 2, 2);
+        let out = session.generate(&c);
+
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens, "degraded mode broke losslessness");
+        assert_eq!(out.tokens.len(), 12);
+        assert_eq!(stats.drafter_restarts(), 1, "the one restart attempt must be spent");
+        assert_eq!(stats.degraded_sessions(), 1);
+        assert!(stats.drafter_stops() >= 2, "both drafter deaths must be observed");
+        assert!(session.is_degraded());
+        assert!(session.ctl().telemetry().drafter_stops >= 2);
+
+        // Degradation is permanent for the session — and still lossless
+        // across a request boundary (target-only from the start).
+        let c2 = cfg(8, 2, 2);
+        let out2 = session.generate(&c2);
+        assert_eq!(out2.tokens, run_nonsi(&eng.factory(), &c2).tokens);
+        assert_eq!(stats.degraded_sessions(), 1, "degradation double-counted");
+    }
+
+    /// A single (one-shot) drafter death is absorbed by the supervised
+    /// restart: the session keeps speculating and never degrades.
+    #[test]
+    fn drafter_single_death_restart_recovers() {
+        use crate::coordinator::fault::{faulty_factory, FaultPlan, FaultStats};
+        let eng = engine(0.8, 2.0, 0.4, 79);
+        let pool = TargetPool::new(&eng.factory(), 2);
+        let plan = Arc::new(FaultPlan::parse("drafter-die-once@2").unwrap());
+        let faulty = faulty_factory(eng.factory(), plan);
+        let mut session = DsiSession::new(&pool, &faulty);
+        let stats = Arc::new(FaultStats::default());
+        session.set_fault_stats(stats.clone());
+        let c = cfg(12, 2, 2);
+        let out = session.generate(&c);
+
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens, "restart recovery broke losslessness");
+        assert_eq!(stats.drafter_restarts(), 1);
+        assert_eq!(stats.degraded_sessions(), 0, "a recovered session must not degrade");
+        assert!(!session.is_degraded());
+        // The replacement drafter actually drafted: some tokens were
+        // accepted from speculation after the restart.
+        assert!(out.drafter_calls > 0);
     }
 }

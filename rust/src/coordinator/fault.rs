@@ -1,0 +1,440 @@
+//! Seeded fault injection: the chaos harness behind `--fault-spec`.
+//!
+//! The paper's guarantee — lossless, never slower than non-SI, *given any
+//! drafters* — only means something operationally if the serving plane
+//! survives the drafters (and target workers) actually failing. This
+//! module provides the deterministic fault source the supervision paths
+//! are tested against:
+//!
+//! - [`FaultPlan`] is a parsed, seeded schedule of injected faults. It is
+//!   deliberately counter-based (the N-th target forward, the S-th drafter
+//!   step, the N-th verify-result send), not time-based, so a plan replays
+//!   identically across runs and machines.
+//! - [`FaultyServer`] decorates any [`LmServer`] and consults the plan
+//!   before each forward: a target forward may panic (worker death), raise
+//!   a transient predict error (also surfaced as a panic — the supervisor
+//!   path is identical), or stall; a drafter forward may panic (drafter
+//!   death). [`faulty_factory`] wraps a [`ServerFactory`] so every server
+//!   built for a serve is decorated.
+//! - [`FaultStats`] is the recovery-side counter block (deadline expiries,
+//!   drafter stops/restarts, degraded sessions), shared between the DSI
+//!   sessions and `server::metrics` snapshots.
+//!
+//! Spec grammar (comma-separated, whitespace-free):
+//!
+//! ```text
+//!   seed=N               record the seed (used by the `chaos` preset)
+//!   worker-panic@N       one-shot: the N-th target forward panics
+//!   predict-err@N        one-shot: the N-th target forward fails transiently
+//!   stall@N:D            one-shot: the N-th target forward stalls D ms first
+//!   drop-verify@N        one-shot: the N-th verify-result send is lost
+//!   drafter-die@S        recurring: EVERY drafter instance dies at its S-th
+//!                        forward (a restarted drafter dies again, so the
+//!                        session must degrade to non-SI)
+//!   drafter-die-once@S   one-shot: the first drafter to reach step S dies
+//!                        (its supervised restart then succeeds)
+//! ```
+//!
+//! Target-forward counters are global across the pool (a batched forward
+//! counts once); the drafter step counter is per server instance — that is
+//! what makes `drafter-die@S` recurring per restart.
+
+use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
+use crate::context::TokenRope;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What the plan wants done to the current target forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    None,
+    /// Panic inside the forward (a worker death; caught by the pool
+    /// supervisor, which re-queues the lanes and respawns the worker).
+    Panic,
+    /// Transient predict failure. Also surfaced as a panic — the recovery
+    /// path (requeue + respawn) is deliberately the same; the distinct
+    /// event exists so specs and logs can tell the scenarios apart.
+    TransientErr,
+    /// Sleep this many ms before running the forward (a stalled worker;
+    /// the coordinator's verify deadline covers the session side).
+    Stall(u64),
+}
+
+/// A one-shot event keyed on a counter value, claimed at most once even
+/// under concurrent workers.
+#[derive(Debug)]
+struct OneShot {
+    at: u64,
+    fired: AtomicBool,
+}
+
+impl OneShot {
+    fn new(at: u64) -> Self {
+        Self { at, fired: AtomicBool::new(false) }
+    }
+
+    /// True exactly once, when `n` reaches the trigger point.
+    fn claim(&self, n: u64) -> bool {
+        n == self.at
+            && self
+                .fired
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+    }
+}
+
+/// A deterministic, seeded schedule of injected faults. Shared (`Arc`)
+/// between the decorated servers, the pool's send path, and metrics.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Seed the spec recorded (`seed=N`); purely for reproducibility
+    /// bookkeeping — the schedule itself is explicit in the events.
+    pub seed: u64,
+    worker_panics: Vec<OneShot>,
+    predict_errs: Vec<OneShot>,
+    /// (event, stall ms)
+    stalls: Vec<(OneShot, u64)>,
+    drop_verifies: Vec<OneShot>,
+    /// Recurring per-instance drafter deaths: any drafter that reaches
+    /// one of these local step counts panics — including restarted ones.
+    drafter_die_at: Vec<u64>,
+    drafter_die_once: Vec<OneShot>,
+    /// Global target forwards observed (batched forwards count once).
+    target_forwards: AtomicU64,
+    /// Global verify-result sends observed.
+    verify_sends: AtomicU64,
+    /// Faults actually fired (events whose trigger point was reached).
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `--fault-spec` string. Empty specs yield an empty plan
+    /// (every hook is then a no-op).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let parse_n = |s: &str, what: &str| -> Result<u64, String> {
+                s.parse::<u64>()
+                    .map_err(|_| format!("fault-spec: bad {what} count in '{part}'"))
+            };
+            if let Some(v) = part.strip_prefix("seed=") {
+                plan.seed = parse_n(v, "seed")?;
+            } else if let Some(v) = part.strip_prefix("worker-panic@") {
+                plan.worker_panics.push(OneShot::new(parse_n(v, "forward")?));
+            } else if let Some(v) = part.strip_prefix("predict-err@") {
+                plan.predict_errs.push(OneShot::new(parse_n(v, "forward")?));
+            } else if let Some(v) = part.strip_prefix("stall@") {
+                let (at, ms) = v
+                    .split_once(':')
+                    .ok_or_else(|| format!("fault-spec: stall needs '@N:D' in '{part}'"))?;
+                plan.stalls
+                    .push((OneShot::new(parse_n(at, "forward")?), parse_n(ms, "stall ms")?));
+            } else if let Some(v) = part.strip_prefix("drop-verify@") {
+                plan.drop_verifies.push(OneShot::new(parse_n(v, "send")?));
+            } else if let Some(v) = part.strip_prefix("drafter-die-once@") {
+                plan.drafter_die_once.push(OneShot::new(parse_n(v, "step")?));
+            } else if let Some(v) = part.strip_prefix("drafter-die@") {
+                plan.drafter_die_at.push(parse_n(v, "step")?);
+            } else {
+                return Err(format!("fault-spec: unknown event '{part}'"));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The chaos-gate preset: one worker panic, one forward stall, and a
+    /// recurring drafter death (so the restart attempt also dies and the
+    /// session must degrade), with positions derived from `seed` so a CI
+    /// seed matrix exercises different interleavings deterministically.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        let panic_at = 2 + seed % 3;
+        let stall_at = panic_at + 2 + seed % 4;
+        let die_step = 3 + seed % 5;
+        FaultPlan::parse(&format!(
+            "seed={seed},worker-panic@{panic_at},stall@{stall_at}:20,drafter-die@{die_step}"
+        ))
+        .expect("chaos preset is well-formed")
+    }
+
+    /// True when the plan schedules nothing (hooks are no-ops).
+    pub fn is_empty(&self) -> bool {
+        self.worker_panics.is_empty()
+            && self.predict_errs.is_empty()
+            && self.stalls.is_empty()
+            && self.drop_verifies.is_empty()
+            && self.drafter_die_at.is_empty()
+            && self.drafter_die_once.is_empty()
+    }
+
+    /// Consult the plan before a target forward (a batched forward counts
+    /// once). Called by [`FaultyServer`].
+    pub fn on_target_forward(&self) -> FaultAction {
+        let n = self.target_forwards.fetch_add(1, Ordering::AcqRel) + 1;
+        if self.worker_panics.iter().any(|e| e.claim(n)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return FaultAction::Panic;
+        }
+        if self.predict_errs.iter().any(|e| e.claim(n)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return FaultAction::TransientErr;
+        }
+        if let Some((_, ms)) = self.stalls.iter().find(|(e, _)| e.claim(n)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return FaultAction::Stall(*ms);
+        }
+        FaultAction::None
+    }
+
+    /// Consult the plan at a drafter's `step`-th forward (per-instance
+    /// counter). True = this drafter dies now.
+    pub fn on_drafter_step(&self, step: u64) -> bool {
+        if self.drafter_die_at.contains(&step) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        if self.drafter_die_once.iter().any(|e| e.claim(step)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Consult the plan before a verify-result send. True = eat the
+    /// result (the session's verify deadline must recover it).
+    pub fn on_verify_send(&self) -> bool {
+        let n = self.verify_sends.fetch_add(1, Ordering::AcqRel) + 1;
+        if self.drop_verifies.iter().any(|e| e.claim(n)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Faults whose trigger point was actually reached this run.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+/// Recovery-side counters: what the supervision paths *did* about faults
+/// (injected or organic). Shared between DSI sessions and metrics.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Verify deadlines that expired (each one rewound and re-dispatched
+    /// the lost coverage — lossless by construction).
+    deadline_expiries: AtomicU64,
+    /// `DrafterStopped` events observed mid-generation.
+    drafter_stops: AtomicU64,
+    /// Supervised drafter restarts attempted.
+    drafter_restarts: AtomicU64,
+    /// Sessions that exhausted their restart budget and degraded to
+    /// target-only (non-SI) mode.
+    degraded_sessions: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn record_deadline_expiry(&self) {
+        self.deadline_expiries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_drafter_stop(&self) {
+        self.drafter_stops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_drafter_restart(&self) {
+        self.drafter_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_degraded_session(&self) {
+        self.degraded_sessions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn deadline_expiries(&self) -> u64 {
+        self.deadline_expiries.load(Ordering::Relaxed)
+    }
+
+    pub fn drafter_stops(&self) -> u64 {
+        self.drafter_stops.load(Ordering::Relaxed)
+    }
+
+    pub fn drafter_restarts(&self) -> u64 {
+        self.drafter_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn degraded_sessions(&self) -> u64 {
+        self.degraded_sessions.load(Ordering::Relaxed)
+    }
+}
+
+/// An [`LmServer`] decorator that consults a [`FaultPlan`] before every
+/// forward. Injection changes *when and whether* a forward completes,
+/// never its predictions — a surviving forward is bit-identical to the
+/// undecorated server's, which is what keeps chaos runs lossless.
+pub struct FaultyServer {
+    inner: Box<dyn LmServer>,
+    plan: Arc<FaultPlan>,
+    role: ServerRole,
+    /// This instance's local forward count (drafter-death trigger).
+    steps: u64,
+}
+
+impl FaultyServer {
+    pub fn new(inner: Box<dyn LmServer>, plan: Arc<FaultPlan>, role: ServerRole) -> Self {
+        Self { inner, plan, role, steps: 0 }
+    }
+
+    fn before_forward(&mut self) {
+        match self.role {
+            ServerRole::Target => match self.plan.on_target_forward() {
+                FaultAction::None => {}
+                FaultAction::Panic => panic!("injected fault: worker panic"),
+                FaultAction::TransientErr => {
+                    panic!("injected fault: transient predict error")
+                }
+                FaultAction::Stall(ms) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms))
+                }
+            },
+            ServerRole::Drafter => {
+                self.steps += 1;
+                if self.plan.on_drafter_step(self.steps) {
+                    panic!("injected fault: drafter death");
+                }
+            }
+        }
+    }
+}
+
+impl LmServer for FaultyServer {
+    fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
+        self.before_forward();
+        self.inner.predictions(ctx, from, to)
+    }
+
+    fn predict_batch(&mut self, reqs: &[BatchReq]) -> Vec<Vec<u32>> {
+        self.before_forward();
+        self.inner.predict_batch(reqs)
+    }
+
+    fn max_context(&self) -> usize {
+        self.inner.max_context()
+    }
+
+    fn advance(&mut self, ctx: &TokenRope) {
+        self.inner.advance(ctx)
+    }
+
+    fn cached_len(&self) -> usize {
+        self.inner.cached_len()
+    }
+
+    fn kv_reuse(&self) -> KvReuse {
+        self.inner.kv_reuse()
+    }
+
+    fn forward_cost(&self) -> ForwardCost {
+        self.inner.forward_cost()
+    }
+}
+
+/// Wrap a factory so every server it builds is fault-decorated under
+/// `plan`. Identity in behavior when the plan schedules nothing.
+pub fn faulty_factory(inner: ServerFactory, plan: Arc<FaultPlan>) -> ServerFactory {
+    Arc::new(move |role, id| {
+        Box::new(FaultyServer::new(inner(role, id), plan.clone(), role))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7,worker-panic@3,predict-err@5,stall@4:25,drop-verify@2,\
+             drafter-die@6,drafter-die-once@9",
+        )
+        .expect("well-formed spec");
+        assert_eq!(p.seed, 7);
+        assert!(!p.is_empty());
+        assert_eq!(p.injected(), 0);
+        // Unknown events and malformed counts are errors, not silent noise.
+        assert!(FaultPlan::parse("gremlins@3").is_err());
+        assert!(FaultPlan::parse("worker-panic@many").is_err());
+        assert!(FaultPlan::parse("stall@3").is_err(), "stall needs a duration");
+        assert!(FaultPlan::parse("").expect("empty spec ok").is_empty());
+    }
+
+    #[test]
+    fn target_events_fire_once_at_their_forward() {
+        let p = FaultPlan::parse("worker-panic@2,stall@3:40").unwrap();
+        assert_eq!(p.on_target_forward(), FaultAction::None); // forward 1
+        assert_eq!(p.on_target_forward(), FaultAction::Panic); // forward 2
+        assert_eq!(p.on_target_forward(), FaultAction::Stall(40)); // forward 3
+        assert_eq!(p.on_target_forward(), FaultAction::None); // forward 4
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn drafter_death_is_recurring_per_instance_once_variant_is_not() {
+        let p = FaultPlan::parse("drafter-die@3").unwrap();
+        // Two drafter instances (a restart): both die at their local step 3.
+        for _instance in 0..2 {
+            assert!(!p.on_drafter_step(1));
+            assert!(!p.on_drafter_step(2));
+            assert!(p.on_drafter_step(3), "recurring death must re-fire after restart");
+        }
+        let once = FaultPlan::parse("drafter-die-once@3").unwrap();
+        assert!(once.on_drafter_step(3));
+        assert!(!once.on_drafter_step(3), "once variant re-fired");
+    }
+
+    #[test]
+    fn verify_send_drop_fires_once() {
+        let p = FaultPlan::parse("drop-verify@2").unwrap();
+        assert!(!p.on_verify_send());
+        assert!(p.on_verify_send());
+        assert!(!p.on_verify_send());
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn chaos_preset_schedules_all_three_scenarios() {
+        for seed in 0..5 {
+            let p = FaultPlan::chaos(seed);
+            assert_eq!(p.seed, seed);
+            assert_eq!(p.worker_panics.len(), 1);
+            assert_eq!(p.stalls.len(), 1);
+            assert_eq!(p.drafter_die_at.len(), 1);
+            // The stall is scheduled after the panic so both can fire in
+            // one short serve.
+            assert!(p.stalls[0].0.at > p.worker_panics[0].at);
+        }
+    }
+
+    #[test]
+    fn faulty_factory_is_transparent_without_events() {
+        use crate::config::LatencyProfile;
+        use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(0.1),
+            drafter: LatencyProfile::uniform(0.1),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 3 },
+            max_context: 4096,
+        };
+        let plan = Arc::new(FaultPlan::default());
+        let plain = (eng.factory())(ServerRole::Target, 0);
+        let wrapped_factory = faulty_factory(eng.factory(), plan.clone());
+        let mut wrapped = wrapped_factory(ServerRole::Target, 0);
+        let mut plain = plain;
+        let ctx = TokenRope::from_slice(&[1, 2, 3, 4]);
+        assert_eq!(
+            wrapped.predictions(&ctx, 4, 5),
+            plain.predictions(&ctx, 4, 5),
+            "an empty plan must be behavior-transparent"
+        );
+        assert_eq!(wrapped.max_context(), plain.max_context());
+        assert_eq!(plan.injected(), 0);
+    }
+}

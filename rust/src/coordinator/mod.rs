@@ -27,6 +27,7 @@
 //! flood of verification tasks fills lanes instead of serializing.
 
 mod dsi;
+pub mod fault;
 mod nonsi;
 pub mod pool;
 pub mod real_engine;
@@ -34,6 +35,7 @@ mod si;
 pub mod wait_engine;
 
 pub use dsi::{run_dsi, CtlTelemetry, DsiSession, SessionCtl};
+pub use fault::{faulty_factory, FaultAction, FaultPlan, FaultStats, FaultyServer};
 pub use nonsi::{run_nonsi, run_nonsi_with};
 pub use pool::{PoolHandle, PoolStats, SchedPolicy, SessionMsg, TargetPool, VerifyResult};
 pub use real_engine::{real_factory, real_factory_with_kv, RealServer};

@@ -60,13 +60,25 @@
 //! [`TargetPool::register`]; dropping the handle unregisters the session
 //! and purges its queued tasks.
 
+use super::fault::FaultPlan;
 use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
 use std::collections::{HashMap, VecDeque};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Poison-recovering lock. A worker that panics mid-forward (organic bug
+/// or injected fault) must never wedge the pool: every mutation under
+/// these mutexes is a single push/pop/remove that either happened or
+/// didn't — there is no partially-applied state a panic can expose — so
+/// recovering the guard is sound, and the supervisor (not the lock
+/// poison) is what owns failure handling.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Consecutive same-session tasks a worker serves before it must steal
 /// an oldest-waiting other-session task (if one exists). Bounds the
@@ -83,6 +95,13 @@ pub const AFFINITY_STREAK_MAX: usize = 8;
 /// flood DSI's speculation parallelism deliberately creates. `1`
 /// reproduces the pre-batching serial plane (the bench's A/B control).
 pub const BATCH_CAP_DEFAULT: usize = 8;
+
+/// Cap on the supervisor's exponential restart backoff: a worker whose
+/// server dies repeatedly (e.g. a model that panics on construction or on
+/// every forward) is respawned with `1ms << min(consecutive - 1, MAX)`
+/// of delay, so a crash loop costs bounded CPU without ever giving up —
+/// the pool must keep draining as long as the process lives.
+pub const WORKER_RESTART_MAX: u32 = 6;
 
 /// How long a worker whose drain came up short lets near-simultaneous
 /// submits land before running a partial batch. Only paid when more than
@@ -242,6 +261,13 @@ pub struct PoolStats {
     /// into the wait mean like skips, so reclaim has no survivor bias
     /// either.
     reclaimed_wait_ns: AtomicU64,
+    /// Tasks a dying worker had popped but not answered, re-queued at
+    /// their sub-queue front by the supervisor. Each re-queued task is
+    /// counted (and timed) again when it re-pops, so `tasks` counts it
+    /// twice — this gauge is the difference's explanation.
+    redispatched: AtomicU64,
+    /// Worker respawns after a forward panicked (organic or injected).
+    worker_restarts: AtomicU64,
 }
 
 impl PoolStats {
@@ -271,6 +297,27 @@ impl PoolStats {
     /// Queued tasks cancelled by preemptive SP-share reclaim.
     pub fn reclaimed(&self) -> u64 {
         self.reclaimed.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` tasks re-queued from a dead worker's batch.
+    pub fn record_redispatched(&self, n: u64) {
+        self.redispatched.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one supervised worker respawn.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tasks re-queued (order-preserving, at sub-queue front) after their
+    /// worker died mid-batch.
+    pub fn redispatched(&self) -> u64 {
+        self.redispatched.load(Ordering::Relaxed)
+    }
+
+    /// Supervised worker respawns after a panicked forward.
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
     }
 
     /// Record one batched forward (its lanes were each `record`ed).
@@ -416,18 +463,42 @@ struct PoolShared {
     next_session: AtomicU64,
     active: AtomicUsize,
     stats: Arc<PoolStats>,
+    /// Injected-fault schedule (None in production; the chaos harness
+    /// threads one through the whole serving plane).
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl PoolShared {
     fn push(&self, t: VerifyTask) {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = relock(&self.queue);
         q.subs.entry(t.session).or_default().push_back(t);
         drop(q);
         self.cv.notify_one();
     }
 
+    /// Re-queue a dead worker's un-answered tasks at their sub-queue
+    /// *front*, preserving their original relative order (the iterator is
+    /// walked in reverse so the first task ends up at the head). The
+    /// per-session FIFO invariant the coordinators rely on is restored
+    /// exactly — a re-dispatched task runs before anything submitted
+    /// after it.
+    fn requeue_front(&self, tasks: Vec<VerifyTask>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len() as u64;
+        {
+            let mut q = relock(&self.queue);
+            for t in tasks.into_iter().rev() {
+                q.subs.entry(t.session).or_default().push_front(t);
+            }
+        }
+        self.stats.record_redispatched(n);
+        self.cv.notify_all();
+    }
+
     fn push_shutdown(&self) {
-        self.queue.lock().unwrap().shutdown += 1;
+        relock(&self.queue).shutdown += 1;
         self.cv.notify_one();
     }
 
@@ -459,7 +530,7 @@ impl PoolShared {
     fn pop_batch(&self, preferred: Option<u64>, streak_in: usize) -> Popped {
         // One cap per drain: a runtime retune applies from the next pop.
         let batch_cap = self.batch_cap.load(Ordering::Relaxed).max(1);
-        let mut q = self.queue.lock().unwrap();
+        let mut q = relock(&self.queue);
         loop {
             let Some(first) = self.pick_next(&q, preferred, streak_in) else {
                 // Shutdown only once every queued task is drained: a
@@ -470,7 +541,7 @@ impl PoolShared {
                     q.shutdown -= 1;
                     return Popped::Shutdown;
                 }
-                q = self.cv.wait(q).unwrap();
+                q = self.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
                 continue;
             };
             let mut batch = vec![q.pop_from(first)];
@@ -486,7 +557,10 @@ impl PoolShared {
                     }
                     None if !window_spent && self.active.load(Ordering::Acquire) > 1 => {
                         window_spent = true;
-                        let (qq, _t) = self.cv.wait_timeout(q, BATCH_DRAIN_WINDOW).unwrap();
+                        let (qq, _t) = self
+                            .cv
+                            .wait_timeout(q, BATCH_DRAIN_WINDOW)
+                            .unwrap_or_else(PoisonError::into_inner);
                         q = qq;
                     }
                     None => break,
@@ -505,7 +579,7 @@ impl PoolShared {
     /// Drop queued tasks of `session` older than `gen` (rejection staling,
     /// per session — other sessions' tasks are untouched).
     fn purge_stale(&self, session: u64, gen: u64) {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = relock(&self.queue);
         if let Some(sub) = q.subs.get_mut(&session) {
             sub.retain(|t| t.gen >= gen);
             if sub.is_empty() {
@@ -519,7 +593,7 @@ impl PoolShared {
     /// equivalent: its `>=` keep-rule would leave a task tagged exactly
     /// `u64::MAX` behind.)
     fn purge_all(&self, session: u64) {
-        self.queue.lock().unwrap().subs.remove(&session);
+        relock(&self.queue).subs.remove(&session);
     }
 
     /// Preemptive SP-share reclaim: cancel `session`'s queued tasks
@@ -534,7 +608,7 @@ impl PoolShared {
     fn reclaim_to_cap(&self, session: u64, cap: usize) -> usize {
         let mut purged: Vec<VerifyTask> = Vec::new();
         {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = relock(&self.queue);
             if let Some(sub) = q.subs.get_mut(&session) {
                 while sub.len() > cap {
                     purged.push(sub.pop_back().expect("len > cap implies non-empty"));
@@ -548,12 +622,7 @@ impl PoolShared {
             return 0;
         }
         let now = Instant::now();
-        let tx = self
-            .routes
-            .lock()
-            .unwrap()
-            .get(&session)
-            .map(|r| r.tx.clone());
+        let tx = relock(&self.routes).get(&session).map(|r| r.tx.clone());
         let n = purged.len();
         for t in purged {
             let wait_ns = now.duration_since(t.submitted).as_nanos() as u64;
@@ -568,12 +637,7 @@ impl PoolShared {
 
     #[cfg(test)]
     fn queued_tasks_of(&self, session: u64) -> usize {
-        self.queue
-            .lock()
-            .unwrap()
-            .subs
-            .get(&session)
-            .map_or(0, VecDeque::len)
+        relock(&self.queue).subs.get(&session).map_or(0, VecDeque::len)
     }
 }
 
@@ -618,7 +682,7 @@ impl PoolHandle {
 
 impl Drop for PoolHandle {
     fn drop(&mut self) {
-        self.shared.routes.lock().unwrap().remove(&self.session);
+        relock(&self.shared.routes).remove(&self.session);
         self.shared.route_epoch.fetch_add(1, Ordering::Release);
         // Leftover queued tasks would only waste worker forwards.
         self.shared.purge_all(self.session);
@@ -657,6 +721,22 @@ impl TargetPool {
         policy: SchedPolicy,
         batch_cap: usize,
     ) -> Self {
+        Self::new_with_faults(factory, size, policy, batch_cap, None)
+    }
+
+    /// The full constructor: like [`new_with_batch_cap`](Self::new_with_batch_cap),
+    /// plus an optional [`FaultPlan`] consulted on the workers' result
+    /// sends (the `drop-verify@N` injection point; forward-side faults
+    /// ride inside a [`faulty_factory`](super::faulty_factory)-wrapped
+    /// `factory` instead). Supervision is always on — the plan only adds
+    /// scheduled failures for it to absorb.
+    pub fn new_with_faults(
+        factory: &ServerFactory,
+        size: usize,
+        policy: SchedPolicy,
+        batch_cap: usize,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Self {
         assert!(size >= 1, "pool needs at least one worker");
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(Queues::default()),
@@ -668,6 +748,7 @@ impl TargetPool {
             next_session: AtomicU64::new(1),
             active: AtomicUsize::new(0),
             stats: Arc::new(PoolStats::default()),
+            fault,
         });
         let mut workers = Vec::with_capacity(size);
         for wid in 0..size {
@@ -688,6 +769,10 @@ impl TargetPool {
                 // were served (the anti-starvation streak).
                 let mut last_session: Option<u64> = None;
                 let mut streak = 0usize;
+                // Supervisor state: consecutive panicked forwards since
+                // the last success, driving the capped exponential
+                // respawn backoff.
+                let mut consecutive_panics = 0u32;
                 // Per-lane metadata of the batch being dispatched (the
                 // rope itself moves into the BatchReq).
                 struct Lane {
@@ -719,7 +804,7 @@ impl TargetPool {
                         let VerifyTask { session, gen, ctx, from, to, submitted } = t;
                         let wait_ns = popped.duration_since(submitted).as_nanos() as u64;
                         if !cache.contains_key(&session) {
-                            let routes = shared.routes.lock().unwrap();
+                            let routes = relock(&shared.routes);
                             if let Some(r) = routes.get(&session) {
                                 cache.insert(session, (r.gen.clone(), r.tx.clone()));
                             }
@@ -757,10 +842,67 @@ impl TargetPool {
                     for lane in &lanes {
                         shared.stats.record(lane.wait_ns, dispatch_ns);
                     }
-                    shared.stats.record_batch();
                     let kv_before = server.kv_reuse();
                     let cost_before = server.forward_cost();
-                    let preds = server.predict_batch(&reqs);
+                    let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        server.predict_batch(&reqs)
+                    }));
+                    let preds = match caught {
+                        Ok(p) => p,
+                        Err(_) => {
+                            // The forward died (organic bug or injected
+                            // fault). Losslessness is preserved by
+                            // re-queueing every un-answered lane at its
+                            // sub-queue front — identical context, so the
+                            // re-run's predictions are identical — and the
+                            // worker is respawned with a fresh server
+                            // under capped exponential backoff.
+                            let tasks: Vec<VerifyTask> = lanes
+                                .into_iter()
+                                .zip(reqs)
+                                .map(|(lane, req)| VerifyTask {
+                                    session: lane.session,
+                                    gen: lane.gen,
+                                    ctx: req.ctx,
+                                    from: req.from,
+                                    to: req.to,
+                                    submitted: Instant::now(),
+                                })
+                                .collect();
+                            shared.requeue_front(tasks);
+                            shared.stats.record_worker_restart();
+                            consecutive_panics += 1;
+                            let shift =
+                                (consecutive_panics - 1).min(WORKER_RESTART_MAX);
+                            std::thread::sleep(Duration::from_millis(1u64 << shift));
+                            // A fresh server has cold KV state: drop the
+                            // affinity claim so the scheduler doesn't
+                            // assume warmth that died with the old one.
+                            last_session = None;
+                            streak = 0;
+                            server = loop {
+                                match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                    factory(ServerRole::Target, wid)
+                                })) {
+                                    Ok(s) => break s,
+                                    Err(_) => {
+                                        // Construction itself crashed:
+                                        // keep backing off — the pool
+                                        // never gives a worker up.
+                                        consecutive_panics += 1;
+                                        let shift = (consecutive_panics - 1)
+                                            .min(WORKER_RESTART_MAX);
+                                        std::thread::sleep(Duration::from_millis(
+                                            1u64 << shift,
+                                        ));
+                                    }
+                                }
+                            };
+                            continue;
+                        }
+                    };
+                    consecutive_panics = 0;
+                    shared.stats.record_batch();
                     shared.stats.record_kv(server.kv_reuse() - kv_before);
                     shared
                         .stats
@@ -779,6 +921,13 @@ impl TargetPool {
                                 continue;
                             };
                             if lane.gen != cur.load(Ordering::Acquire) {
+                                continue;
+                            }
+                            // Injected fault: the result vanishes in
+                            // flight (a lost RPC). The session's verify
+                            // deadline re-dispatches the coverage.
+                            if shared.fault.as_ref().map_or(false, |f| f.on_verify_send())
+                            {
                                 continue;
                             }
                             tx.send(SessionMsg::Verify(VerifyResult {
@@ -820,10 +969,7 @@ impl TargetPool {
     /// Verification tasks currently queued across all sessions — the
     /// admission-pressure signal the controller sizes batches from.
     pub fn queued_depth(&self) -> usize {
-        self.shared
-            .queue
-            .lock()
-            .unwrap()
+        relock(&self.shared.queue)
             .subs
             .values()
             .map(VecDeque::len)
@@ -858,11 +1004,7 @@ impl TargetPool {
     pub fn register(&self, tx: Sender<SessionMsg>) -> PoolHandle {
         let session = self.shared.next_session.fetch_add(1, Ordering::AcqRel);
         let gen = Arc::new(AtomicU64::new(0));
-        self.shared
-            .routes
-            .lock()
-            .unwrap()
-            .insert(session, Route { gen: gen.clone(), tx });
+        relock(&self.shared.routes).insert(session, Route { gen: gen.clone(), tx });
         // No route_epoch bump: session ids are never reused, so a new
         // session cannot be stale-cached anywhere — workers miss and fall
         // through to the locked lookup. Only departure must flush caches.
@@ -1365,5 +1507,69 @@ mod tests {
         drop(a); // departure: purge_all must clear the rest
         assert_eq!(pool.shared.queued_tasks_of(sid), 0, "departure left tasks behind");
         assert!(recv_verify(&rx_blocker).is_some());
+    }
+
+    /// Worker supervision: a factory whose SECOND target forward panics
+    /// must not wedge the pool. The un-answered lane is re-queued at its
+    /// sub-queue *front* (per-session FIFO preserved), the worker
+    /// respawns with a fresh server, and every submitted task still gets
+    /// exactly one result.
+    #[test]
+    fn worker_panic_redispatches_and_respawns() {
+        use crate::coordinator::fault::{faulty_factory, FaultPlan};
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(2.0),
+            drafter: LatencyProfile::uniform(0.1),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 11 },
+            max_context: 4096,
+        };
+        let plan = Arc::new(FaultPlan::parse("worker-panic@2").expect("fault spec"));
+        let factory = faulty_factory(eng.factory(), plan.clone());
+        // batch_cap = 1: one lane per forward, so the schedule is exactly
+        // forward #i == task #i and the panic deterministically hits the
+        // second task.
+        let pool = TargetPool::new_with_faults(&factory, 1, SchedPolicy::Affinity, 1, None);
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1]), 3, 4);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 4, 5);
+        a.submit(0, rope(&[1, 1, 1, 1, 1, 1]), 5, 6);
+
+        // All four results arrive IN SUBMIT ORDER: the panicked lane was
+        // re-queued at the front, not the back.
+        for expect_from in [2, 3, 4, 5] {
+            let r = recv_verify(&rx_a).expect("a task died with its worker");
+            assert_eq!(r.from, expect_from, "re-dispatch broke per-session FIFO");
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.worker_restarts(), 1);
+        assert_eq!(stats.redispatched(), 1);
+        assert_eq!(plan.injected(), 1, "one-shot fault fired more than once");
+        // The re-dispatched lane is counted again at re-pop — `tasks`
+        // deliberately double-counts it (documented on `redispatched`).
+        assert_eq!(stats.tasks(), 5);
+    }
+
+    /// Shutdown while in flight: dropping the pool with one task
+    /// mid-forward and more queued must join cleanly — queued work is
+    /// drained (never silently abandoned) and the drop returns promptly
+    /// instead of hanging on a wedged worker.
+    #[test]
+    fn shutdown_while_inflight_joins_cleanly() {
+        let pool = pool_with_latency(1, 80.0);
+        let (tx_a, rx_a) = channel();
+        let a = pool.register(tx_a);
+        a.submit(0, rope(&[1, 1, 1]), 2, 3);
+        std::thread::sleep(Duration::from_millis(10)); // worker mid-forward
+        a.submit(0, rope(&[1, 1, 1, 1]), 2, 3);
+        a.submit(0, rope(&[1, 1, 1, 1, 1]), 2, 3);
+
+        let t0 = Instant::now();
+        drop(pool); // drains queued tasks, then joins every worker
+        assert!(t0.elapsed() < Duration::from_secs(5), "shutdown hung");
+        for _ in 0..3 {
+            assert!(recv_verify(&rx_a).is_some(), "a queued task was abandoned at shutdown");
+        }
     }
 }

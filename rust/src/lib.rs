@@ -27,6 +27,13 @@
 //!   (affinity-first, streak-bounded) and run them through
 //!   `LmServer::predict_batch` as ONE batched forward charged
 //!   `max`(lane costs), with per-lane outputs bit-identical to serial.
+//!   The plane is fault-tolerant: pool workers are supervised
+//!   (`catch_unwind` + front-requeue of the dead worker's batch +
+//!   backoff respawn), sessions arm a verify deadline off the live
+//!   target TPOT and re-dispatch lost coverage losslessly, and a
+//!   twice-dead drafter degrades its session to target-only non-SI
+//!   pace; [`coordinator::fault`] is the seeded injection plane
+//!   (`FaultPlan`, `--fault-spec`) the chaos harness drives.
 //!   Forward passes are pluggable: calibrated waits (the paper's
 //!   methodology) or real PJRT executions (`pjrt` cargo feature).
 //! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
@@ -63,8 +70,11 @@
 //!   the A/B control; DSI sessions contend for one shared target pool;
 //!   [`server::metrics`] reports streaming-histogram latency percentiles
 //!   (TTFT/e2e/TPOT p50/p99 in O(1) memory), wall-span throughput, an
-//!   active-sessions gauge, reclaim/kick counters, and per-session
-//!   (lookahead, sp_share, acceptance, TPOT, weight) controller gauges.
+//!   active-sessions gauge, reclaim/kick counters, per-session
+//!   (lookahead, sp_share, acceptance, TPOT, weight) controller gauges,
+//!   and the fault-plane counters (worker restarts, re-dispatched
+//!   tasks, deadline expiries, drafter stops/restarts, degraded
+//!   sessions, injected faults — rendered only when something fired).
 //! - [`workload`] — synthetic prompt corpora, arrival processes
 //!   (closed-loop, Poisson, Markov-modulated bursty, diurnal open-loop),
 //!   and per-tenant tagging (weight + SLO class) for traced requests.

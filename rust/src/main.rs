@@ -73,6 +73,14 @@ COMMANDS (system):
                             fair SP water-fill)
                           --slo-classes CSV (interactive|standard|batch per
                             tenant, default standard; scales tenant weight)
+                          --fault-spec SPEC (seeded fault injection for the
+                            chaos harness: chaos:SEED preset, or a CSV of
+                            worker-panic@N, predict-err@N, stall@N:MS,
+                            drop-verify@N, drafter-die@S, drafter-die-once@S,
+                            seed=N — see README "Fault tolerance")
+                          --verify-deadline-ms MS (force the per-session
+                            verify deadline; 0 = derive from live target
+                            TPOT, default)
   generate              generate text with the real AOT model pair
                           --algo dsi|si|nonsi  --prompt STR  --tokens N
   calibrate             measure the tiny pair's TTFT/TPOT + acceptance rate
@@ -275,6 +283,20 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     };
     let slo_ms = flag_f64(flags, "slo-ms", 0.0); // <= 0 disables the SLO clamp
     let control_interval_ms = flag_f64(flags, "control-interval", 25.0);
+    let verify_deadline_ms = flag_f64(flags, "verify-deadline-ms", 0.0);
+    let fault_plan = match flags.get("fault-spec").map(String::as_str) {
+        None | Some("") => None,
+        Some(spec) => {
+            let plan = if let Some(seed) = spec.strip_prefix("chaos:") {
+                dsi::coordinator::FaultPlan::chaos(
+                    seed.parse().map_err(|_| format!("bad chaos seed {seed:?}"))?,
+                )
+            } else {
+                dsi::coordinator::FaultPlan::parse(spec)?
+            };
+            Some(std::sync::Arc::new(plan))
+        }
+    };
     let kv_cfg = dsi::runtime::kv::KvStoreConfig {
         block_tokens: flag_usize(
             flags,
@@ -391,7 +413,16 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         .with_adaptive(adaptive)
         .with_slo_ms(slo_ms)
         .with_control_interval_ms(control_interval_ms)
-        .with_admission_mode(admission);
+        .with_admission_mode(admission)
+        .with_verify_deadline_ms(verify_deadline_ms);
+    if let Some(plan) = &fault_plan {
+        println!(
+            "fault injection active (seed {}): workers are supervised, verify \
+             deadlines re-dispatch, drafter death degrades to non-SI",
+            plan.seed
+        );
+        srv = srv.with_fault_plan(plan.clone());
+    }
     for stats in store_stats {
         srv.attach_store_stats(stats);
     }

@@ -491,6 +491,11 @@ impl Controller {
             // only means this session's tasks never queue); the lookahead
             // is Equation 1's at the live rates.
             ctl.set_plan(plan.lookahead, share);
+            // Keep the session's verify deadline tracking the measured
+            // target pace (a generous multiple is applied session-side),
+            // so a lost result is declared lost relative to how slow the
+            // pool actually is, not a static guess.
+            ctl.set_target_tpot_hint_ms(t);
             // Preemptive reclaim: a shrink takes effect in the pool NOW,
             // not at this session's next dispatch — queued verify tasks
             // beyond the new cap are purged (counted, handed back to the

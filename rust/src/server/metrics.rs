@@ -15,6 +15,7 @@
 
 use super::controller::{ControllerStats, SessionGauge};
 use crate::coordinator::pool::PoolStats;
+use crate::coordinator::{FaultPlan, FaultStats};
 use crate::runtime::kv::StoreStats;
 use crate::stats::{LogHistogram, OnlineStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -48,6 +49,12 @@ pub struct Metrics {
     /// Adaptive control-plane counters and per-session gauges, if a
     /// controller is attached (idle-zero otherwise).
     controller_stats: Option<Arc<ControllerStats>>,
+    /// Fault-plane counters (deadline expiries, drafter stops/restarts,
+    /// degraded sessions), shared with every DSI session the server runs.
+    fault_stats: Option<Arc<FaultStats>>,
+    /// The injected-fault plan, if the serve runs under one — snapshots
+    /// report how many of its events actually fired.
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 /// A point-in-time summary.
@@ -131,6 +138,26 @@ pub struct Snapshot {
     /// planning tick: (lookahead, sp_share, acceptance EWMA, measured
     /// drafter TPOT).
     pub per_session: Vec<SessionGauge>,
+    /// Verify tasks the pool re-queued (at the front of their sub-queue)
+    /// after a worker died mid-flight — lossless re-dispatch, never a
+    /// dropped token.
+    pub pool_redispatched: u64,
+    /// Pool workers respawned after a panic escaped a forward.
+    pub pool_worker_restarts: u64,
+    /// Verify deadlines that expired: a session went silent past its
+    /// deadline with results still in flight and re-dispatched the
+    /// uncovered spans.
+    pub deadline_expiries: u64,
+    /// Sessions that exhausted their drafter-restart budget and degraded
+    /// to target-only (non-SI) pace. Still lossless — just slower.
+    pub degraded_sessions: u64,
+    /// DrafterStopped events sessions observed (a stop precedes either a
+    /// restart or a degradation).
+    pub drafter_stops: u64,
+    /// Supervised drafter restarts that were attempted.
+    pub drafter_restarts: u64,
+    /// Fault-plan events that actually fired (0 without a plan).
+    pub faults_injected: u64,
 }
 
 impl Metrics {
@@ -159,6 +186,18 @@ impl Metrics {
     /// Share the adaptive controller's counters and per-session gauges.
     pub fn attach_controller_stats(&mut self, stats: Arc<ControllerStats>) {
         self.controller_stats = Some(stats);
+    }
+
+    /// Share the fault-plane counters (deadline expiries, drafter
+    /// stops/restarts, degraded sessions) so snapshots expose them.
+    pub fn attach_fault_stats(&mut self, stats: Arc<FaultStats>) {
+        self.fault_stats = Some(stats);
+    }
+
+    /// Share the injected-fault plan so snapshots report how many of its
+    /// events fired.
+    pub fn attach_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault_plan = Some(plan);
     }
 
     /// Record that a request was dispatched at `now_ms` on the server's
@@ -279,6 +318,25 @@ impl Metrics {
                 .controller_stats
                 .as_ref()
                 .map_or_else(Vec::new, |s| s.session_gauges()),
+            pool_redispatched: self.pool_stats.as_ref().map_or(0, |s| s.redispatched()),
+            pool_worker_restarts: self
+                .pool_stats
+                .as_ref()
+                .map_or(0, |s| s.worker_restarts()),
+            deadline_expiries: self
+                .fault_stats
+                .as_ref()
+                .map_or(0, |s| s.deadline_expiries()),
+            degraded_sessions: self
+                .fault_stats
+                .as_ref()
+                .map_or(0, |s| s.degraded_sessions()),
+            drafter_stops: self.fault_stats.as_ref().map_or(0, |s| s.drafter_stops()),
+            drafter_restarts: self
+                .fault_stats
+                .as_ref()
+                .map_or(0, |s| s.drafter_restarts()),
+            faults_injected: self.fault_plan.as_ref().map_or(0, |p| p.injected()),
         }
     }
 }
@@ -330,6 +388,27 @@ impl Snapshot {
                 self.controller_target_tpot_ms,
                 self.controller_membership_kicks,
                 self.controller_reclaims,
+            ));
+        }
+        // Fault-plane segment only when something actually happened — a
+        // healthy serve stays visually identical to the pre-fault-plane
+        // output.
+        if self.pool_worker_restarts > 0
+            || self.pool_redispatched > 0
+            || self.deadline_expiries > 0
+            || self.drafter_stops > 0
+            || self.faults_injected > 0
+        {
+            out.push_str(&format!(
+                " | faults injected={} restarts={} redispatched={} expiries={} \
+                 drafter stops={} restarts={} degraded={}",
+                self.faults_injected,
+                self.pool_worker_restarts,
+                self.pool_redispatched,
+                self.deadline_expiries,
+                self.drafter_stops,
+                self.drafter_restarts,
+                self.degraded_sessions,
             ));
         }
         for g in &self.per_session {
@@ -599,6 +678,61 @@ mod tests {
         let text = s.render();
         assert!(text.contains("reclaimed=2"), "render: {text}");
         assert!(text.contains("kicks=1 reclaims=2"), "render: {text}");
+    }
+
+    /// The fault-plane observability surface: pool supervision counters,
+    /// session fault stats, and fired plan events all flow into the
+    /// snapshot; the rendered segment only appears once something fired,
+    /// so a healthy serve's render is unchanged.
+    #[test]
+    fn fault_gauges_are_reported() {
+        use crate::coordinator::FaultAction;
+        let mut m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.pool_redispatched, s.pool_worker_restarts, s.deadline_expiries),
+            (0, 0, 0)
+        );
+        assert_eq!(
+            (s.degraded_sessions, s.drafter_stops, s.drafter_restarts, s.faults_injected),
+            (0, 0, 0, 0)
+        );
+        assert!(!s.render().contains("faults"), "healthy render shows a fault segment");
+
+        let pool = Arc::new(PoolStats::default());
+        m.attach_pool_stats(pool.clone());
+        pool.record_redispatched(2);
+        pool.record_worker_restart();
+
+        let fs = Arc::new(FaultStats::default());
+        m.attach_fault_stats(fs.clone());
+        fs.record_deadline_expiry();
+        fs.record_drafter_stop();
+        fs.record_drafter_stop();
+        fs.record_drafter_restart();
+        fs.record_degraded_session();
+
+        let plan = Arc::new(FaultPlan::parse("worker-panic@1").unwrap());
+        m.attach_fault_plan(plan.clone());
+        assert_eq!(plan.on_target_forward(), FaultAction::Panic);
+
+        let s = m.snapshot();
+        assert_eq!(s.pool_redispatched, 2);
+        assert_eq!(s.pool_worker_restarts, 1);
+        assert_eq!(s.deadline_expiries, 1);
+        assert_eq!(s.degraded_sessions, 1);
+        assert_eq!(s.drafter_stops, 2);
+        assert_eq!(s.drafter_restarts, 1);
+        assert_eq!(s.faults_injected, 1);
+        let text = s.render();
+        assert!(
+            text.contains("faults injected=1 restarts=1 redispatched=2 expiries=1"),
+            "render: {text}"
+        );
+        assert!(
+            text.contains("drafter stops=2 restarts=1 degraded=1"),
+            "render: {text}"
+        );
     }
 
     #[test]

@@ -25,8 +25,8 @@ pub mod router;
 
 use crate::config::AlgoKind;
 use crate::coordinator::{
-    run_nonsi_with, run_si_with, DsiSession, LmServer, OnlineConfig, OnlineOutcome,
-    SchedPolicy, ServerFactory, ServerRole, TargetPool,
+    faulty_factory, run_nonsi_with, run_si_with, DsiSession, FaultPlan, FaultStats, LmServer,
+    OnlineConfig, OnlineOutcome, SchedPolicy, ServerFactory, ServerRole, TargetPool,
 };
 use crate::runtime::kv::StoreStats;
 use crate::runtime::tokenizer;
@@ -186,6 +186,16 @@ pub struct Server {
     /// Per-token latency SLO the admission-aware batch sizing protects
     /// (infinite = batch for throughput alone).
     slo_ms: f64,
+    /// Operator override for the sessions' verify deadline, ms
+    /// (non-positive = auto-derive from the live target-TPOT estimate).
+    verify_deadline_ms: f64,
+    /// Seeded fault-injection schedule (`--fault-spec`). `None` injects
+    /// nothing; supervision still covers organic faults.
+    fault_plan: Option<Arc<FaultPlan>>,
+    /// Recovery-side fault gauges (deadline expiries, drafter
+    /// stops/restarts, degradations), shared with every DSI session and
+    /// attached to metrics at construction.
+    fault_stats: Arc<FaultStats>,
     /// Controller tick period.
     control_interval: Duration,
     /// Controller counters/gauges, attached to metrics at construction so
@@ -208,9 +218,11 @@ impl Server {
         let pool_size = router.sp_budget;
         let active = Arc::new(AtomicUsize::new(0));
         let controller_stats = Arc::new(ControllerStats::default());
+        let fault_stats = Arc::new(FaultStats::default());
         let mut metrics = Metrics::new();
         metrics.attach_active_gauge(active.clone());
         metrics.attach_controller_stats(controller_stats.clone());
+        metrics.attach_fault_stats(fault_stats.clone());
         Self {
             factory,
             router: Arc::new(Mutex::new(router)),
@@ -224,6 +236,9 @@ impl Server {
             adaptive: false,
             admission: AdmissionMode::Continuous,
             slo_ms: f64::INFINITY,
+            verify_deadline_ms: 0.0,
+            fault_plan: None,
+            fault_stats,
             control_interval: Duration::from_millis(25),
             controller_stats,
             pool: None,
@@ -302,6 +317,29 @@ impl Server {
         self
     }
 
+    /// Override the sessions' verify deadline (`--verify-deadline-ms`).
+    /// Non-positive or non-finite restores auto-derivation from the live
+    /// target-TPOT estimate.
+    pub fn with_verify_deadline_ms(mut self, ms: f64) -> Self {
+        self.verify_deadline_ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        self
+    }
+
+    /// Install a seeded fault-injection schedule (`--fault-spec`): every
+    /// server built for this serve is fault-decorated, the pool's send
+    /// path consults the plan, and `faults_injected` appears in
+    /// snapshots. Takes effect before the pool is first built.
+    pub fn with_fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.metrics.lock().unwrap().attach_fault_plan(plan.clone());
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// The recovery-side fault gauges (shared with every DSI session).
+    pub fn fault_stats(&self) -> Arc<FaultStats> {
+        self.fault_stats.clone()
+    }
+
     /// Attach a settled-block store's counters so metrics snapshots
     /// report its eviction pressure (callable once per store — e.g. the
     /// target and drafter stores of the real engine).
@@ -330,12 +368,20 @@ impl Server {
         if requests.is_empty() {
             return Vec::new();
         }
+        // With a fault plan installed, every server built below — pool
+        // workers AND session drafters — is fault-decorated; without one
+        // this is the factory itself (zero-cost, bit-identical path).
+        let factory_eff: ServerFactory = match &self.fault_plan {
+            Some(plan) => faulty_factory(self.factory.clone(), plan.clone()),
+            None => self.factory.clone(),
+        };
         if self.algo == AlgoKind::Dsi && self.pool.is_none() {
-            let pool = Arc::new(TargetPool::new_with_batch_cap(
-                &self.factory,
+            let pool = Arc::new(TargetPool::new_with_faults(
+                &factory_eff,
                 self.pool_size,
                 self.sched_policy,
                 self.batch_cap,
+                self.fault_plan.clone(),
             ));
             // Surface the pool's queue-wait / dispatch-overhead counters
             // in metrics snapshots.
@@ -383,6 +429,7 @@ impl Server {
         });
         let adaptive = self.adaptive;
         let admission = self.admission;
+        let verify_deadline_ms = self.verify_deadline_ms;
 
         // Admission order: by arrival time (stable on ties).
         let mut order: Vec<usize> = (0..requests.len()).collect();
@@ -412,7 +459,8 @@ impl Server {
             for wid in 0..n_workers {
                 let job_rx = job_rx.clone();
                 let resp_tx = resp_tx.clone();
-                let factory = self.factory.clone();
+                let factory = factory_eff.clone();
+                let fault_stats = self.fault_stats.clone();
                 let router = self.router.clone();
                 let metrics = self.metrics.clone();
                 let active = self.active.clone();
@@ -466,15 +514,22 @@ impl Server {
                             max_speculation_depth: depth,
                         };
                         if backend.is_none() {
-                            let b = Backend::new(algo, &factory, pool.as_ref(), wid);
-                            // Hand the session's live control surface to
-                            // the adaptive controller.
-                            if let (Backend::Dsi(sess), Some(reg)) =
-                                (&b, registry.as_ref())
-                            {
-                                reg.lock()
-                                    .unwrap()
-                                    .insert(sess.session_id(), sess.ctl());
+                            let mut b = Backend::new(algo, &factory, pool.as_ref(), wid);
+                            if let Backend::Dsi(sess) = &mut b {
+                                // Wire the fault plane: recovery gauges
+                                // flow into snapshots, and any operator
+                                // deadline override applies.
+                                sess.set_fault_stats(fault_stats.clone());
+                                if verify_deadline_ms > 0.0 {
+                                    sess.ctl().set_verify_deadline_ms(verify_deadline_ms);
+                                }
+                                // Hand the session's live control surface
+                                // to the adaptive controller.
+                                if let Some(reg) = registry.as_ref() {
+                                    reg.lock()
+                                        .unwrap()
+                                        .insert(sess.session_id(), sess.ctl());
+                                }
                             }
                             backend = Some(b);
                         }

@@ -1,0 +1,147 @@
+//! The seeded chaos gate: a serve that eats a worker panic, a forward
+//! stall, and a (recurring) drafter death must still hand back, for every
+//! request, the exact token stream fault-free non-SI greedy decoding
+//! produces — faults may cost latency, never tokens.
+//!
+//! `CHAOS_SEED` (default 0) shifts where in the serve each fault lands;
+//! CI runs a small seed matrix so different interleavings — panic during
+//! a wide batch, stall right before a rejection, drafter death mid-burst
+//! — all pass through the same gate.
+
+use dsi::config::{AlgoKind, LatencyProfile};
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{run_nonsi, FaultPlan, OnlineConfig};
+use dsi::server::router::Router;
+use dsi::server::Server;
+use dsi::workload::Request;
+use std::sync::Arc;
+
+fn engine() -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.4),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 41 },
+        max_context: 8192,
+    }
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("CHAOS_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+fn requests(n_tokens: usize) -> Vec<Request> {
+    (0..4u32)
+        .map(|i| Request::new(i as u64, vec![i + 1, 80 + i, 150], n_tokens, 0.0))
+        .collect()
+}
+
+/// Serve `reqs` on a 2-session / 2-worker DSI server, optionally under a
+/// fault plan; returns the responses and the metrics snapshot.
+fn serve(
+    reqs: &[Request],
+    plan: Option<Arc<FaultPlan>>,
+) -> (Vec<dsi::server::Response>, dsi::server::metrics::Snapshot) {
+    let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 2);
+    let mut srv = Server::new(engine().factory(), router, AlgoKind::Dsi)
+        .with_max_depth(16)
+        .with_max_sessions(2)
+        .with_pool_size(2)
+        .with_adaptive(false);
+    if let Some(plan) = plan {
+        srv = srv.with_fault_plan(plan);
+    }
+    let resps = srv.serve(reqs);
+    let snap = srv.metrics_snapshot();
+    (resps, snap)
+}
+
+/// Bit-identity of every response against fault-free non-SI greedy.
+fn assert_lossless(reqs: &[Request], resps: &[dsi::server::Response], what: &str) {
+    assert_eq!(resps.len(), reqs.len(), "{what} dropped requests");
+    for (req, resp) in reqs.iter().zip(resps) {
+        let cfg = OnlineConfig {
+            prompt: req.prompt.clone(),
+            n_tokens: req.max_new_tokens,
+            lookahead: 1,
+            sp_degree: 1,
+            max_speculation_depth: 64,
+        };
+        let nonsi = run_nonsi(&engine().factory(), &cfg);
+        assert_eq!(resp.tokens, nonsi.tokens, "{what} lost tokens on req {}", req.id);
+    }
+}
+
+/// The acceptance-criteria chaos gate, end to end: worker panic + forward
+/// stall + drafter death in one serve, every request bit-identical to
+/// fault-free non-SI greedy, no panic escapes `serve`, and the
+/// supervision counters prove each fault was absorbed.
+#[test]
+fn chaos_serve_is_lossless_and_absorbs_every_fault() {
+    let seed = chaos_seed();
+    let reqs = requests(16);
+    let plan = Arc::new(FaultPlan::chaos(seed));
+    let (resps, snap) = serve(&reqs, Some(plan.clone()));
+
+    assert_lossless(&reqs, &resps, &format!("chaos serve (seed {seed})"));
+    assert!(
+        plan.injected() >= 3,
+        "chaos plan (seed {seed}) only fired {} of >= 3 scheduled faults",
+        plan.injected()
+    );
+    assert!(snap.pool_worker_restarts >= 1, "worker panic never triggered a respawn");
+    assert!(snap.pool_redispatched >= 1, "the dead worker's batch was never re-dispatched");
+    assert!(
+        snap.degraded_sessions >= 1,
+        "the recurring drafter death never degraded a session"
+    );
+    assert!(snap.drafter_stops >= 2, "expected the restarted drafter to die again");
+    assert_eq!(snap.faults_injected, plan.injected(), "metrics lost the plan's fire count");
+    let text = snap.render();
+    assert!(text.contains("faults injected="), "render hides the fault segment: {text}");
+}
+
+/// A dropped verify result recovers through the *server* stack: the
+/// `--verify-deadline-ms` override flows into the session, the silence
+/// after the eaten result expires the deadline, and the re-dispatch keeps
+/// the stream bit-identical. (The session-level anatomy of this recovery
+/// is unit-tested in the coordinator; this exercises the wiring.)
+#[test]
+fn dropped_verify_result_expires_and_redispatches_through_server() {
+    let reqs: Vec<Request> = vec![Request::new(0, vec![7, 11, 13], 12, 0.0)];
+    let plan = Arc::new(FaultPlan::parse("drop-verify@1").expect("valid spec"));
+    let router = Router::new(LatencyProfile::uniform(1.0), LatencyProfile::uniform(2.0), 1);
+    let mut srv = Server::new(engine().factory(), router, AlgoKind::Dsi)
+        .with_max_depth(16)
+        .with_max_sessions(1)
+        .with_pool_size(1)
+        .with_adaptive(false)
+        .with_verify_deadline_ms(60.0)
+        .with_fault_plan(plan.clone());
+    let resps = srv.serve(&reqs);
+    let snap = srv.metrics_snapshot();
+
+    assert_lossless(&reqs, &resps, "drop-verify serve");
+    assert_eq!(plan.injected(), 1, "the drop-verify event never fired");
+    assert!(
+        snap.deadline_expiries >= 1,
+        "eaten result never expired the verify deadline"
+    );
+    assert_eq!(snap.degraded_sessions, 0, "a lost result must not degrade the session");
+}
+
+/// The A/B control: with no fault plan the same serve keeps every fault
+/// gauge at zero and the rendered snapshot shows no fault segment — the
+/// fault plane is invisible until something goes wrong.
+#[test]
+fn clean_serve_keeps_fault_gauges_at_zero() {
+    let reqs = requests(8);
+    let (resps, snap) = serve(&reqs, None);
+    assert_lossless(&reqs, &resps, "clean serve");
+    assert_eq!(snap.faults_injected, 0);
+    assert_eq!(snap.pool_worker_restarts, 0);
+    assert_eq!(snap.pool_redispatched, 0);
+    assert_eq!(snap.deadline_expiries, 0);
+    assert_eq!(snap.degraded_sessions, 0);
+    assert_eq!(snap.drafter_stops, 0);
+    assert!(!snap.render().contains("faults"), "clean render shows a fault segment");
+}
