@@ -31,6 +31,12 @@
 //!   bit-identical to fault-free non-SI greedy while the supervision
 //!   counters prove the faults fired and were absorbed
 //!   (`chaos_*` fields in the JSON).
+//! - **cross-node** — the same multi-session workload served on 1 node
+//!   vs 2 node shards at equal total workers (`cross_node_probe_*`
+//!   fields); gates 2 nodes strictly faster (per-node admission scales
+//!   concurrency while SP has diminishing returns), bit-identical to
+//!   non-SI greedy, including under a chaos seed that lands node kills
+//!   and partitions on the message plane.
 //!
 //! Results land in `BENCH_hotpath.json` (override the path with
 //! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
@@ -270,6 +276,62 @@ fn chaos_probe(
     (reqs, resps, snap)
 }
 
+/// The cross-node probe's wait engine — shared with the fault-free
+/// non-SI replay so the bit-identity check compares like for like.
+fn cross_node_engine() -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.4),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.85, seed: 181 },
+        max_context: 8192,
+    }
+}
+
+/// Serve a multi-session workload on `nodes` node shards at equal total
+/// workers (4 across the fleet, 2 sessions admitted per node); returns
+/// the requests, responses, and the serve's wall ms.
+fn cross_node_probe(
+    nodes: usize,
+    plan: Option<std::sync::Arc<FaultPlan>>,
+    smoke: bool,
+) -> (Vec<Request>, Vec<Response>, f64) {
+    let eng = cross_node_engine();
+    let router = Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 4);
+    let mut srv = Server::new(eng.factory(), router, AlgoKind::Dsi)
+        .with_max_depth(64)
+        .with_max_sessions(2)
+        .with_pool_size(4)
+        .with_nodes(nodes)
+        .with_adaptive(false);
+    if let Some(plan) = plan {
+        srv = srv.with_fault_plan(plan);
+    }
+    let n_tokens = if smoke { 10 } else { 20 };
+    let n_reqs: u32 = if smoke { 6 } else { 8 };
+    let reqs: Vec<Request> = (0..n_reqs)
+        .map(|i| Request::new(i as u64, vec![i + 1, 90 + i, 220], n_tokens, 0.0))
+        .collect();
+    let t0 = Instant::now();
+    let resps = srv.serve(&reqs);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    (reqs, resps, wall_ms)
+}
+
+/// Bit-identity of cross-node-probe responses vs fault-free non-SI.
+fn assert_cross_node_lossless(reqs: &[Request], resps: &[Response], what: &str) {
+    for (req, resp) in reqs.iter().zip(resps) {
+        let cfg = OnlineConfig {
+            prompt: req.prompt.clone(),
+            n_tokens: req.max_new_tokens,
+            lookahead: 1,
+            sp_degree: 1,
+            max_speculation_depth: 64,
+        };
+        let nonsi = run_nonsi(&cross_node_engine().factory(), &cfg);
+        assert_eq!(resp.tokens, nonsi.tokens, "{what} lost tokens on req {}", req.id);
+    }
+}
+
 /// Arrival-inclusive TTFT (queueing delay + dispatch-to-first-token) per
 /// response — the quantity continuous batching improves; the scheduler
 /// cannot shrink `ttft_ms` alone, only the queueing in front of it.
@@ -469,6 +531,26 @@ fn main() {
         chaos_snap.degraded_sessions,
     );
 
+    // The cross-node probe: the same multi-session workload on 1 node vs
+    // 2 node shards at equal total workers (4), then a 2-node serve under
+    // the seeded chaos plan (node kills and partitions land on the
+    // message plane). Bit-identity against fault-free non-SI greedy is
+    // asserted for all three serves before anything is recorded.
+    let (xn_reqs, xn_one, xn_wall_one) = cross_node_probe(1, None, smoke);
+    let (_, xn_two, xn_wall_two) = cross_node_probe(2, None, smoke);
+    assert_cross_node_lossless(&xn_reqs, &xn_one, "1-node probe serve");
+    assert_cross_node_lossless(&xn_reqs, &xn_two, "2-node probe serve");
+    let xn_plan = std::sync::Arc::new(FaultPlan::chaos(chaos_seed));
+    let (xn_chaos_reqs, xn_chaos, _) = cross_node_probe(2, Some(xn_plan.clone()), smoke);
+    assert_cross_node_lossless(&xn_chaos_reqs, &xn_chaos, "2-node chaos probe serve");
+    let xn_speedup = xn_wall_one / xn_wall_two;
+    println!(
+        "  cross-node probe: 2 nodes {xn_wall_two:.0}ms vs 1 node {xn_wall_one:.0}ms \
+         at 4 total workers = {xn_speedup:.2}x | chaos (seed {chaos_seed}) lossless \
+         under {} injected faults",
+        xn_plan.injected(),
+    );
+
     let out = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("smoke", Json::Bool(smoke)),
@@ -545,6 +627,14 @@ fn main() {
         ("chaos_drafter_stops", num(chaos_snap.drafter_stops as f64)),
         ("chaos_degraded_sessions", num(chaos_snap.degraded_sessions as f64)),
         ("chaos_lossless", Json::Bool(true)),
+        ("cross_node_probe_requests", num(xn_reqs.len() as f64)),
+        ("cross_node_probe_total_workers", num(4.0)),
+        ("cross_node_probe_wall_ms_1node", num(xn_wall_one)),
+        ("cross_node_probe_wall_ms_2node", num(xn_wall_two)),
+        ("cross_node_probe_speedup_x", num(xn_speedup)),
+        ("cross_node_probe_lossless", Json::Bool(true)),
+        ("cross_node_probe_chaos_faults_injected", num(xn_plan.injected() as f64)),
+        ("cross_node_probe_chaos_lossless", Json::Bool(true)),
     ]);
     let path = std::env::var("BENCH_HOTPATH_OUT")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
@@ -635,5 +725,20 @@ fn main() {
     assert!(
         chaos_snap.degraded_sessions >= 1,
         "the recurring drafter death never degraded a session"
+    );
+    // The cross-node acceptance gate: at equal total workers, the sharded
+    // plane must serve the multi-session workload strictly faster than
+    // one node — per-node admission doubles concurrency while per-session
+    // SP has diminishing returns (Equation 1), so this is a structural
+    // win, not scheduling jitter. The chaos variant must also have fired.
+    assert!(
+        xn_wall_two < xn_wall_one,
+        "2 nodes ({xn_wall_two:.0}ms) did not beat 1 node ({xn_wall_one:.0}ms) \
+         at equal total workers"
+    );
+    assert!(
+        xn_plan.injected() >= 3,
+        "cross-node chaos plan only fired {} of >= 3 scheduled faults",
+        xn_plan.injected()
     );
 }

@@ -51,6 +51,7 @@
 //! and for the real PJRT engine in `rust/tests/`).
 
 use super::fault::FaultStats;
+use super::node::{NodeHandle, ShardedPool};
 use super::pool::{PoolHandle, SessionMsg, TargetPool};
 use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
 use crate::config::AlgoKind;
@@ -115,6 +116,11 @@ pub struct SessionCtl {
     /// Times this session's drafter thread stopped (panic or clean exit
     /// while a generation still wanted drafts).
     drafter_stops: AtomicU64,
+    /// Modeled one-way network hop to the session's serving node, µs
+    /// (0 = local). Written at session creation (and on migration) from
+    /// the node plane; read by the controller's latency-weighted
+    /// water-fill — a remote lane pays 2×hop per verification round-trip.
+    hop_us: AtomicU64,
 }
 
 /// A point-in-time reading of a session's cumulative telemetry; the
@@ -142,7 +148,21 @@ impl SessionCtl {
             verify_deadline_us: AtomicU64::new(0),
             target_tpot_us: AtomicU64::new(0),
             drafter_stops: AtomicU64::new(0),
+            hop_us: AtomicU64::new(0),
         }
+    }
+
+    /// Record the modeled one-way hop (ms) to this session's serving
+    /// node (non-finite or negative values clear it).
+    pub fn set_hop_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 { (ms * 1e3) as u64 } else { 0 };
+        self.hop_us.store(us, Ordering::Relaxed);
+    }
+
+    /// The modeled one-way hop to this session's serving node, ms
+    /// (0.0 = local).
+    pub fn hop_ms(&self) -> f64 {
+        self.hop_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     /// Seed the operating point from a request's static plan. A no-op
@@ -247,7 +267,9 @@ impl SessionCtl {
         } else {
             VERIFY_DEADLINE_DEFAULT_MS
         };
-        Duration::from_secs_f64(ms / 1e3)
+        // A remote session's results pay the network hop both ways; the
+        // deadline must not fire on healthy-but-far results.
+        Duration::from_secs_f64((ms + 2.0 * self.hop_ms()) / 1e3)
     }
 
     /// Count one drafter stop (panic or premature clean exit).
@@ -277,6 +299,47 @@ enum Ctrl {
     Stop,
 }
 
+/// The session's dispatch capability: a registration on an in-process
+/// [`TargetPool`], or a [`NodeHandle`] on the cross-node message plane.
+/// The coordinator event loop is identical either way — that is the
+/// point: remote verification changes *latency* (the modeled hop), never
+/// the algorithm or the tokens.
+enum SessionPort {
+    Local(PoolHandle),
+    Node(NodeHandle),
+}
+
+impl SessionPort {
+    fn session_id(&self) -> u64 {
+        match self {
+            SessionPort::Local(h) => h.session_id(),
+            SessionPort::Node(h) => h.session_id(),
+        }
+    }
+
+    fn submit(&self, gen: u64, ctx: TokenRope, from: usize, to: usize) {
+        match self {
+            SessionPort::Local(h) => h.submit(gen, ctx, from, to),
+            SessionPort::Node(h) => h.submit(gen, ctx, from, to),
+        }
+    }
+
+    fn advance_gen(&self, gen: u64) {
+        match self {
+            SessionPort::Local(h) => h.advance_gen(gen),
+            SessionPort::Node(h) => h.advance_gen(gen),
+        }
+    }
+
+    /// Modeled one-way hop to the serving node, ms (0 for local).
+    fn hop_ms(&self) -> f64 {
+        match self {
+            SessionPort::Local(_) => 0.0,
+            SessionPort::Node(h) => h.hop_ms(),
+        }
+    }
+}
+
 /// One-shot convenience: build a private pool and session, run one
 /// generation, tear down. Serving paths should hold a [`TargetPool`] and
 /// [`DsiSession`]s instead — model loading / HLO compilation then happens
@@ -296,7 +359,7 @@ pub fn run_dsi(factory: &ServerFactory, cfg: &OnlineConfig) -> OnlineOutcome {
 /// tagged with its id, results are routed back privately, and rejection
 /// staling never crosses session boundaries.
 pub struct DsiSession {
-    handle: PoolHandle,
+    handle: SessionPort,
     msg_rx: Receiver<SessionMsg>,
     /// Kept so a respawned drafter can be handed the same session inbox.
     msg_tx: Sender<SessionMsg>,
@@ -434,11 +497,33 @@ impl DsiSession {
     /// pool must outlive the session (it owns the target workers).
     pub fn new(pool: &TargetPool, factory: &ServerFactory) -> Self {
         let (msg_tx, msg_rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = channel();
-        let handle = pool.register(msg_tx.clone());
+        let handle = SessionPort::Local(pool.register(msg_tx.clone()));
+        Self::from_port(handle, msg_tx, msg_rx, factory)
+    }
+
+    /// Register on a cross-node [`ShardedPool`]: the session is placed on
+    /// the least-loaded node, its dispatches and results ride the message
+    /// plane (paying the modeled hop), and its verify deadline widens by
+    /// the round-trip. The event loop is byte-for-byte the local one.
+    pub fn new_sharded(pool: &ShardedPool, factory: &ServerFactory) -> Self {
+        let (msg_tx, msg_rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = channel();
+        let handle = SessionPort::Node(pool.register(msg_tx.clone()));
+        Self::from_port(handle, msg_tx, msg_rx, factory)
+    }
+
+    fn from_port(
+        handle: SessionPort,
+        msg_tx: Sender<SessionMsg>,
+        msg_rx: Receiver<SessionMsg>,
+        factory: &ServerFactory,
+    ) -> Self {
         let frontier = Arc::new(AtomicUsize::new(0));
         let depth = Arc::new(AtomicUsize::new(usize::MAX));
         let drafter_calls_ctr = Arc::new(AtomicUsize::new(0));
         let ctl = Arc::new(SessionCtl::new());
+        // Publish the node hop so the controller's water-fill and the
+        // verify-deadline derivation both see what this lane pays.
+        ctl.set_hop_ms(handle.hop_ms());
 
         // The drafter's factory id is the pool-unique session id —
         // concurrent sessions must never hand their factories the

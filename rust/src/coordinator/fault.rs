@@ -33,11 +33,22 @@
 //!                        session must degrade to non-SI)
 //!   drafter-die-once@S   one-shot: the first drafter to reach step S dies
 //!                        (its supervised restart then succeeds)
+//!   node-kill@N          one-shot: the N-th cross-node transport envelope
+//!                        kills its destination node (the sharded plane
+//!                        front-requeues the dead node's queued + in-flight
+//!                        tasks onto survivors)
+//!   partition@N:D        one-shot: from the N-th transport envelope, the
+//!                        message plane drops EVERY envelope for D ms (a
+//!                        network partition; verify deadlines recover the
+//!                        lost coverage)
 //! ```
 //!
 //! Target-forward counters are global across the pool (a batched forward
 //! counts once); the drafter step counter is per server instance — that is
-//! what makes `drafter-die@S` recurring per restart.
+//! what makes `drafter-die@S` recurring per restart. The transport-envelope
+//! counter is global across the sharded plane's message plane and only
+//! advances on cross-node serves, so single-node runs never trip the node
+//! events of a shared chaos seed.
 
 use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::context::TokenRope;
@@ -58,6 +69,20 @@ pub enum FaultAction {
     /// Sleep this many ms before running the forward (a stalled worker;
     /// the coordinator's verify deadline covers the session side).
     Stall(u64),
+}
+
+/// What the plan wants done to the current cross-node transport envelope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportFault {
+    None,
+    /// Kill the envelope's destination node: its queued + in-flight tasks
+    /// must be front-requeued onto surviving nodes (a worker panic writ
+    /// large).
+    NodeKill,
+    /// Open a partition: the message plane drops every envelope for this
+    /// many ms. Each dropped dispatch/result surfaces to its session as
+    /// the verify-deadline case — lossless, never a hang.
+    Partition(u64),
 }
 
 /// A one-shot event keyed on a counter value, claimed at most once even
@@ -99,10 +124,16 @@ pub struct FaultPlan {
     /// one of these local step counts panics — including restarted ones.
     drafter_die_at: Vec<u64>,
     drafter_die_once: Vec<OneShot>,
+    /// One-shot node deaths keyed on the transport-envelope counter.
+    node_kills: Vec<OneShot>,
+    /// One-shot partitions: (trigger envelope, duration ms).
+    partitions: Vec<(OneShot, u64)>,
     /// Global target forwards observed (batched forwards count once).
     target_forwards: AtomicU64,
     /// Global verify-result sends observed.
     verify_sends: AtomicU64,
+    /// Global cross-node transport envelopes observed (any direction).
+    transport_envelopes: AtomicU64,
     /// Faults actually fired (events whose trigger point was reached).
     injected: AtomicU64,
 }
@@ -135,6 +166,16 @@ impl FaultPlan {
                 plan.drafter_die_once.push(OneShot::new(parse_n(v, "step")?));
             } else if let Some(v) = part.strip_prefix("drafter-die@") {
                 plan.drafter_die_at.push(parse_n(v, "step")?);
+            } else if let Some(v) = part.strip_prefix("node-kill@") {
+                plan.node_kills.push(OneShot::new(parse_n(v, "envelope")?));
+            } else if let Some(v) = part.strip_prefix("partition@") {
+                let (at, ms) = v.split_once(':').ok_or_else(|| {
+                    format!("fault-spec: partition needs '@N:D' in '{part}'")
+                })?;
+                plan.partitions.push((
+                    OneShot::new(parse_n(at, "envelope")?),
+                    parse_n(ms, "partition ms")?,
+                ));
             } else {
                 return Err(format!("fault-spec: unknown event '{part}'"));
             }
@@ -150,8 +191,14 @@ impl FaultPlan {
         let panic_at = 2 + seed % 3;
         let stall_at = panic_at + 2 + seed % 4;
         let die_step = 3 + seed % 5;
+        // Node events ride the transport-envelope counter, which only
+        // advances on cross-node serves: a single-node chaos run simply
+        // never reaches their trigger points (injected() stays honest).
+        let kill_at = 3 + seed % 5;
+        let part_at = kill_at + 4 + seed % 6;
         FaultPlan::parse(&format!(
-            "seed={seed},worker-panic@{panic_at},stall@{stall_at}:20,drafter-die@{die_step}"
+            "seed={seed},worker-panic@{panic_at},stall@{stall_at}:20,\
+             drafter-die@{die_step},node-kill@{kill_at},partition@{part_at}:30"
         ))
         .expect("chaos preset is well-formed")
     }
@@ -164,6 +211,8 @@ impl FaultPlan {
             && self.drop_verifies.is_empty()
             && self.drafter_die_at.is_empty()
             && self.drafter_die_once.is_empty()
+            && self.node_kills.is_empty()
+            && self.partitions.is_empty()
     }
 
     /// Consult the plan before a target forward (a batched forward counts
@@ -208,6 +257,22 @@ impl FaultPlan {
             return true;
         }
         false
+    }
+
+    /// Consult the plan before a cross-node transport send (any envelope,
+    /// either direction). Called by the sharded plane's message-plane
+    /// chokepoint; single-node serves never advance this counter.
+    pub fn on_transport_send(&self) -> TransportFault {
+        let n = self.transport_envelopes.fetch_add(1, Ordering::AcqRel) + 1;
+        if self.node_kills.iter().any(|e| e.claim(n)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return TransportFault::NodeKill;
+        }
+        if let Some((_, ms)) = self.partitions.iter().find(|(e, _)| e.claim(n)) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return TransportFault::Partition(*ms);
+        }
+        TransportFault::None
     }
 
     /// Faults whose trigger point was actually reached this run.
@@ -353,7 +418,7 @@ mod tests {
     fn parses_the_full_grammar() {
         let p = FaultPlan::parse(
             "seed=7,worker-panic@3,predict-err@5,stall@4:25,drop-verify@2,\
-             drafter-die@6,drafter-die-once@9",
+             drafter-die@6,drafter-die-once@9,node-kill@4,partition@8:50",
         )
         .expect("well-formed spec");
         assert_eq!(p.seed, 7);
@@ -363,7 +428,20 @@ mod tests {
         assert!(FaultPlan::parse("gremlins@3").is_err());
         assert!(FaultPlan::parse("worker-panic@many").is_err());
         assert!(FaultPlan::parse("stall@3").is_err(), "stall needs a duration");
+        assert!(FaultPlan::parse("partition@3").is_err(), "partition needs a duration");
         assert!(FaultPlan::parse("").expect("empty spec ok").is_empty());
+        assert!(!FaultPlan::parse("node-kill@1").unwrap().is_empty());
+        assert!(!FaultPlan::parse("partition@1:10").unwrap().is_empty());
+    }
+
+    #[test]
+    fn transport_events_fire_once_at_their_envelope() {
+        let p = FaultPlan::parse("node-kill@2,partition@3:40").unwrap();
+        assert_eq!(p.on_transport_send(), TransportFault::None); // envelope 1
+        assert_eq!(p.on_transport_send(), TransportFault::NodeKill); // envelope 2
+        assert_eq!(p.on_transport_send(), TransportFault::Partition(40)); // envelope 3
+        assert_eq!(p.on_transport_send(), TransportFault::None); // envelope 4
+        assert_eq!(p.injected(), 2);
     }
 
     #[test]
@@ -407,9 +485,12 @@ mod tests {
             assert_eq!(p.worker_panics.len(), 1);
             assert_eq!(p.stalls.len(), 1);
             assert_eq!(p.drafter_die_at.len(), 1);
+            assert_eq!(p.node_kills.len(), 1, "chaos must schedule a node kill");
+            assert_eq!(p.partitions.len(), 1, "chaos must schedule a partition");
             // The stall is scheduled after the panic so both can fire in
-            // one short serve.
+            // one short serve; likewise the partition after the kill.
             assert!(p.stalls[0].0.at > p.worker_panics[0].at);
+            assert!(p.partitions[0].0.at > p.node_kills[0].at);
         }
     }
 

@@ -28,6 +28,7 @@
 
 mod dsi;
 pub mod fault;
+pub mod node;
 mod nonsi;
 pub mod pool;
 pub mod real_engine;
@@ -36,6 +37,10 @@ pub mod wait_engine;
 
 pub use dsi::{run_dsi, CtlTelemetry, DsiSession, SessionCtl};
 pub use fault::{faulty_factory, FaultAction, FaultPlan, FaultStats, FaultyServer};
+pub use node::{
+    Envelope, LoopbackTransport, NodeHandle, NodeTransport, ServingPool, ShardedPool,
+    SimulatedHop,
+};
 pub use nonsi::{run_nonsi, run_nonsi_with};
 pub use pool::{PoolHandle, PoolStats, SchedPolicy, SessionMsg, TargetPool, VerifyResult};
 pub use real_engine::{real_factory, real_factory_with_kv, RealServer};

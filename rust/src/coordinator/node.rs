@@ -1,0 +1,1228 @@
+//! The cross-node serving plane: nodes, an RPC-shaped message plane, and
+//! sharded speculation parallelism.
+//!
+//! Everything through the fault-tolerant serving plane ran against one
+//! in-process [`TargetPool`] — but the paper's core claim (speculation
+//! parallelism as a *resource/latency tradeoff*, Equation 1) only gets
+//! interesting past one node's worth of target instances. This module
+//! introduces the node layer between the server and the execution plane:
+//!
+//! - **[`Envelope`] / [`NodeTransport`]** — the RPC-shaped message plane.
+//!   Every cross-node interaction is an envelope: verify dispatch, verify
+//!   result, KV block push, heartbeat. Envelopes address *roles on nodes*
+//!   (a dispatch goes to "node N's target shard", never to a specific
+//!   worker thread), so future drafter-diversity work slots in without
+//!   changing the plane. [`LoopbackTransport`] delivers in-process and
+//!   keeps tier-1 hermetic; [`SimulatedHop`] decorates any transport with
+//!   a modeled network hop so remote lanes are *charged* the latency a
+//!   real RPC would pay (pipelined — the sender never blocks).
+//! - **[`ShardedPool`]** — N node shards, each a full [`TargetPool`]
+//!   (supervised workers, affinity, micro-batching, reclaim), behind the
+//!   single-pool surface the server and controller already use. Session
+//!   ids come from one fleet-wide id space and a session's generation
+//!   counter is one `Arc` that travels with it, so per-session rejection
+//!   staling keeps working across node moves. All shards accumulate into
+//!   ONE [`PoolStats`] block, so the adaptive controller's forward-cost
+//!   differencing sees the fleet as one pool.
+//! - **[`NodeHandle`]** — what a session coordinator holds: the same
+//!   submit / advance-gen surface as a [`PoolHandle`], but dispatches and
+//!   results ride the message plane (and pay the hop).
+//! - **Fault semantics across the boundary** are exactly the intra-node
+//!   ones, writ large: a lost/late remote verify result is the existing
+//!   verify-deadline case (the session rewinds and re-dispatches — a
+//!   dropped envelope costs latency, never a token, and never hangs); a
+//!   dead node is a worker panic writ large — its queued + in-flight
+//!   tasks are front-requeued onto surviving nodes in order, counted
+//!   under the same `redispatched` gauge. `FaultPlan`'s `node-kill@N` /
+//!   `partition@N:MS` events drive both through the message-plane
+//!   chokepoint.
+//! - **KV block exchange**: a migrating session's sealed settled blocks
+//!   move store-to-store via
+//!   [`BlockStore::export_sealed`](crate::runtime::kv::BlockStore::export_sealed)
+//!   / `import_sealed` (Arc moves in-process; the [`Envelope::KvPush`]
+//!   envelope charges the transfer on the message plane), so the session
+//!   re-decodes zero settled tokens on its new node.
+
+use super::fault::{FaultPlan, TransportFault};
+use super::pool::{
+    relock, PoolHandle, PoolStats, ResultUplink, SchedPolicy, SessionMsg, TargetPool,
+};
+use super::ServerFactory;
+use crate::context::TokenRope;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+/// One message on the cross-node plane. Addressing is by node and role —
+/// a dispatch targets "the target shard of node N", never a worker
+/// thread — so the plane survives worker respawns and future multi-role
+/// (drafter-shard) extensions unchanged.
+#[derive(Debug)]
+pub enum Envelope {
+    /// A verification task for `node`'s target shard.
+    VerifyDispatch {
+        node: usize,
+        session: u64,
+        gen: u64,
+        ctx: TokenRope,
+        from: usize,
+        to: usize,
+    },
+    /// A session-bound message coming back *from* `node` (verify result
+    /// or reclaim hand-back).
+    VerifyResult { node: usize, session: u64, msg: SessionMsg },
+    /// A sealed-KV-block push accompanying a session migration. The block
+    /// payload moves store-to-store by `Arc` (in-process simulation); the
+    /// envelope is what the transport *charges* for the transfer.
+    KvPush { from_node: usize, to_node: usize, session: u64, blocks: u64 },
+    /// A liveness probe to `node`.
+    Heartbeat { node: usize, seq: u64 },
+}
+
+impl Envelope {
+    /// The node this envelope is bound to (destination for dispatches,
+    /// KV pushes, and heartbeats; source for results): the node whose
+    /// death makes the envelope undeliverable.
+    pub fn node(&self) -> usize {
+        match self {
+            Envelope::VerifyDispatch { node, .. } => *node,
+            Envelope::VerifyResult { node, .. } => *node,
+            Envelope::KvPush { to_node, .. } => *to_node,
+            Envelope::Heartbeat { node, .. } => *node,
+        }
+    }
+}
+
+/// Transport failure: the link itself is gone (distinct from a dropped
+/// envelope, which is silent — exactly like a lost datagram — and is
+/// recovered by verify deadlines, never by the sender blocking).
+#[derive(Debug, PartialEq, Eq)]
+pub enum TransportError {
+    Closed,
+}
+
+/// The delivery sink a transport hands envelopes to.
+pub type DeliverFn = Arc<dyn Fn(Envelope) + Send + Sync>;
+
+/// The RPC-shaped message plane: fire-and-forget envelope delivery.
+/// Delivery per (sender, node) is FIFO — a transport may delay or drop,
+/// never reorder. Implementations must never block the sender on the
+/// receiver's work.
+pub trait NodeTransport: Send + Sync {
+    fn send(&self, env: Envelope) -> Result<(), TransportError>;
+}
+
+/// In-process transport: synchronous, zero-latency delivery straight into
+/// the sink. Keeps tier-1 hermetic — a 2-node serve is bit-identical in
+/// *tokens* to a 1-node serve, and only [`SimulatedHop`] changes timing.
+pub struct LoopbackTransport {
+    sink: DeliverFn,
+}
+
+impl LoopbackTransport {
+    pub fn new(sink: DeliverFn) -> Self {
+        Self { sink }
+    }
+}
+
+impl NodeTransport for LoopbackTransport {
+    fn send(&self, env: Envelope) -> Result<(), TransportError> {
+        (self.sink)(env);
+        Ok(())
+    }
+}
+
+/// State shared between [`SimulatedHop`] and its delivery thread.
+struct HopShared {
+    /// (due time, envelope), due-ordered by construction: the hop is
+    /// constant, so push order == due order and FIFO is preserved.
+    q: Mutex<std::collections::VecDeque<(Instant, Envelope)>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+/// A latency decorator over any transport: every envelope is delivered
+/// `hop` later by a dedicated delivery thread. The hop is *pipelined* —
+/// senders never block and N in-flight envelopes overlap, exactly like a
+/// network link — so charging the hop changes latency, never throughput
+/// shape.
+pub struct SimulatedHop {
+    shared: Arc<HopShared>,
+    hop: Duration,
+    deliverer: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SimulatedHop {
+    pub fn new(inner: Arc<dyn NodeTransport>, hop_ms: f64) -> Self {
+        let shared = Arc::new(HopShared {
+            q: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        let sh = shared.clone();
+        let deliverer = std::thread::spawn(move || {
+            let mut guard = relock(&sh.q);
+            loop {
+                match guard.front().map(|(due, _)| *due) {
+                    Some(due) => {
+                        let now = Instant::now();
+                        if due <= now {
+                            let (_, env) = guard.pop_front().expect("non-empty");
+                            drop(guard);
+                            let _ = inner.send(env);
+                            guard = relock(&sh.q);
+                        } else {
+                            let (g, _) = sh
+                                .cv
+                                .wait_timeout(guard, due - now)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            guard = g;
+                        }
+                    }
+                    // Drain-before-exit: close only stops the thread once
+                    // every queued envelope was delivered, so a shutdown
+                    // race can't silently eat in-flight results.
+                    None if sh.closed.load(Ordering::Acquire) => break,
+                    None => {
+                        guard = sh.cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
+                    }
+                }
+            }
+        });
+        let hop = Duration::from_nanos((hop_ms.max(0.0) * 1e6) as u64);
+        Self { shared, hop, deliverer: Some(deliverer) }
+    }
+}
+
+impl NodeTransport for SimulatedHop {
+    fn send(&self, env: Envelope) -> Result<(), TransportError> {
+        if self.shared.closed.load(Ordering::Acquire) {
+            return Err(TransportError::Closed);
+        }
+        relock(&self.shared.q).push_back((Instant::now() + self.hop, env));
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl Drop for SimulatedHop {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.deliverer.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Message-plane health counters (atomic; shared with serving metrics).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Envelopes handed to the transport chokepoint (any direction).
+    envelopes: AtomicU64,
+    /// Envelopes dropped by an open partition.
+    dropped_partition: AtomicU64,
+    /// Envelopes dropped because their node was dead (at send or at
+    /// delivery — an in-flight envelope to a node that dies mid-hop
+    /// counts here too).
+    dropped_dead: AtomicU64,
+    /// Sealed KV blocks pushed across nodes for session migrations.
+    kv_blocks_pushed: AtomicU64,
+    /// Nodes killed (injected or explicit).
+    node_kills: AtomicU64,
+    /// Sessions moved between nodes (kills and explicit migrations).
+    migrations: AtomicU64,
+}
+
+impl NetStats {
+    pub fn envelopes(&self) -> u64 {
+        self.envelopes.load(Ordering::Relaxed)
+    }
+    pub fn dropped_partition(&self) -> u64 {
+        self.dropped_partition.load(Ordering::Relaxed)
+    }
+    pub fn dropped_dead(&self) -> u64 {
+        self.dropped_dead.load(Ordering::Relaxed)
+    }
+    pub fn kv_blocks_pushed(&self) -> u64 {
+        self.kv_blocks_pushed.load(Ordering::Relaxed)
+    }
+    pub fn node_kills(&self) -> u64 {
+        self.node_kills.load(Ordering::Relaxed)
+    }
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+}
+
+/// The cross-node KV exchange hook: `(from_node, to_node, session)` →
+/// sealed blocks moved. The engine layer wires this to its per-node
+/// `BlockStore`s (`export_sealed` → `import_sealed`); the plane itself
+/// stays engine-agnostic and only *charges* the push on the transport.
+pub type KvExchange = Arc<dyn Fn(usize, usize, u64) -> u64 + Send + Sync>;
+
+/// One node shard: a full supervised [`TargetPool`] plus its link.
+struct NodeSlot {
+    pool: TargetPool,
+    /// Modeled one-way hop to this node, ms (0 for the local node).
+    hop_ms: f64,
+    transport: Arc<dyn NodeTransport>,
+    alive: AtomicBool,
+    /// Last heartbeat answered by this node.
+    last_seen: Mutex<Option<Instant>>,
+}
+
+/// A task the plane has dispatched but not yet seen answered (queued on a
+/// node, in a worker forward, or in a transport hop). This is the
+/// node-level analog of the pool supervisor's popped-but-unanswered
+/// batch: on node death, these are exactly the tasks front-requeued onto
+/// survivors. Ropes are `Arc`-shared, so tracking is O(1) per task.
+struct OutstandingTask {
+    gen: u64,
+    ctx: TokenRope,
+    from: usize,
+    to: usize,
+}
+
+/// Routing state of one registered session.
+struct SessionEntry {
+    node: usize,
+    /// Registration on the owning node's pool. Dropping it (departure or
+    /// migration) purges the session's queued tasks there.
+    inner: PoolHandle,
+    /// The session coordinator's real channel (results delivered off the
+    /// message plane land here).
+    tx: Sender<SessionMsg>,
+    /// The fleet-wide generation counter — ONE `Arc` for the session's
+    /// whole life, re-registered as-is on every node move, so staling is
+    /// never lost mid-migration.
+    gen: Arc<AtomicU64>,
+}
+
+struct ShardedInner {
+    stats: Arc<PoolStats>,
+    net: NetStats,
+    fault: Option<Arc<FaultPlan>>,
+    /// Node slots, fixed at construction (liveness is the mutable part).
+    nodes: OnceLock<Vec<NodeSlot>>,
+    sessions: Mutex<HashMap<u64, SessionEntry>>,
+    /// Per-session dispatched-but-unanswered tasks, insertion-ordered.
+    outstanding: Mutex<HashMap<u64, Vec<OutstandingTask>>>,
+    next_session: AtomicU64,
+    /// Open partition: until this instant, the chokepoint drops every
+    /// envelope (`None` = no partition; a healed partition is simply in
+    /// the past).
+    partition_until: Mutex<Option<Instant>>,
+    /// Parking channel: node pools are registered with this sender but
+    /// never use it (the uplink seam routes results instead). The
+    /// receiver is kept alive so sends could never error.
+    parking: Mutex<(Sender<SessionMsg>, Receiver<SessionMsg>)>,
+    kv_exchange: Mutex<Option<KvExchange>>,
+}
+
+impl ShardedInner {
+    fn slots(&self) -> &[NodeSlot] {
+        self.nodes.get().expect("nodes initialized at construction")
+    }
+
+    fn alive(&self, node: usize) -> bool {
+        self.slots().get(node).map_or(false, |s| s.alive.load(Ordering::Acquire))
+    }
+
+    fn alive_count(&self) -> usize {
+        self.slots()
+            .iter()
+            .filter(|s| s.alive.load(Ordering::Acquire))
+            .count()
+    }
+
+    /// The alive node currently hosting the fewest sessions (lowest index
+    /// on ties) — placement for admission, migration, and kill recovery.
+    fn pick_node(&self, exclude: Option<usize>) -> Option<usize> {
+        let counts = {
+            let sessions = relock(&self.sessions);
+            let mut counts = vec![0usize; self.slots().len()];
+            for e in sessions.values() {
+                counts[e.node] += 1;
+            }
+            counts
+        };
+        self.slots()
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| Some(*i) != exclude && s.alive.load(Ordering::Acquire))
+            .min_by_key(|(i, _)| counts[*i])
+            .map(|(i, _)| i)
+    }
+
+    /// The message-plane chokepoint: every envelope, either direction,
+    /// passes here exactly once at send time. Fault injection (node
+    /// kills, partitions), partition drops, and dead-node drops all live
+    /// at this one seam, so a real-RPC transport swap changes nothing
+    /// above it.
+    fn transport_send(&self, env: Envelope) {
+        self.net.envelopes.fetch_add(1, Ordering::Relaxed);
+        if let Some(f) = &self.fault {
+            match f.on_transport_send() {
+                TransportFault::None => {}
+                TransportFault::NodeKill => {
+                    // The envelope's own node dies under it; the envelope
+                    // is lost with the node (dead-drop below).
+                    self.kill_node(env.node());
+                }
+                TransportFault::Partition(ms) => {
+                    let until = Instant::now() + Duration::from_millis(ms);
+                    *relock(&self.partition_until) = Some(until);
+                }
+            }
+        }
+        let partitioned = relock(&self.partition_until)
+            .map_or(false, |until| Instant::now() < until);
+        if partitioned {
+            // A partitioned envelope is silently lost — the receiving
+            // side's verify deadline is what recovers the coverage.
+            self.net.dropped_partition.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if !self.alive(env.node()) {
+            self.net.dropped_dead.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let node = env.node();
+        let _ = self.slots()[node].transport.send(env);
+    }
+
+    /// Delivery side of the plane (the sink every transport drains into).
+    fn deliver(&self, env: Envelope) {
+        match env {
+            Envelope::VerifyDispatch { node, session, gen, ctx, from, to } => {
+                // A node that died while the envelope was in flight eats
+                // it (the kill recovery already re-routed the work).
+                if !self.alive(node) {
+                    self.net.dropped_dead.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                let sessions = relock(&self.sessions);
+                // A session that migrated away mid-hop drops the stale
+                // dispatch: its tasks were re-submitted on the new node.
+                if let Some(e) = sessions.get(&session) {
+                    if e.node == node {
+                        e.inner.submit(gen, ctx, from, to);
+                    }
+                }
+            }
+            Envelope::VerifyResult { node, session, msg } => {
+                if !self.alive(node) {
+                    self.net.dropped_dead.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                let tx = relock(&self.sessions).get(&session).map(|e| e.tx.clone());
+                // Retire the outstanding entry this message answers (one
+                // copy: duplicates from re-dispatch retire their own).
+                match &msg {
+                    SessionMsg::Verify(r) => self.retire_outstanding(session, r.gen, r.from),
+                    SessionMsg::Reclaimed { gen, from } => {
+                        self.retire_outstanding(session, *gen, *from)
+                    }
+                    _ => {}
+                }
+                if let Some(tx) = tx {
+                    let _ = tx.send(msg);
+                }
+            }
+            Envelope::KvPush { blocks, .. } => {
+                // The payload moved store-to-store at migration time (Arc
+                // moves); the envelope existed to charge the transfer.
+                self.net.kv_blocks_pushed.fetch_add(blocks, Ordering::Relaxed);
+            }
+            Envelope::Heartbeat { node, .. } => {
+                if let Some(slot) = self.slots().get(node) {
+                    if slot.alive.load(Ordering::Acquire) {
+                        *relock(&slot.last_seen) = Some(Instant::now());
+                    }
+                }
+            }
+        }
+    }
+
+    fn retire_outstanding(&self, session: u64, gen: u64, from: usize) {
+        let mut out = relock(&self.outstanding);
+        if let Some(v) = out.get_mut(&session) {
+            if let Some(i) = v.iter().position(|t| t.gen == gen && t.from == from) {
+                v.remove(i);
+            }
+            if v.is_empty() {
+                out.remove(&session);
+            }
+        }
+    }
+
+    /// Dispatch one verification task for `session` over the plane.
+    fn submit_session(&self, session: u64, gen: u64, ctx: TokenRope, from: usize, to: usize) {
+        let Some(node) = relock(&self.sessions).get(&session).map(|e| e.node) else {
+            return;
+        };
+        relock(&self.outstanding)
+            .entry(session)
+            .or_default()
+            .push(OutstandingTask { gen, ctx: ctx.clone(), from, to });
+        self.transport_send(Envelope::VerifyDispatch { node, session, gen, ctx, from, to });
+    }
+
+    /// Advance a session's generation: staling is control-plane (the gen
+    /// Arc is shared with the owning pool's route), and outstanding tasks
+    /// of older generations are forgotten — they can never answer.
+    fn advance_session_gen(&self, session: u64, gen: u64) {
+        {
+            let sessions = relock(&self.sessions);
+            if let Some(e) = sessions.get(&session) {
+                e.inner.advance_gen(gen);
+            }
+        }
+        let mut out = relock(&self.outstanding);
+        if let Some(v) = out.get_mut(&session) {
+            v.retain(|t| t.gen >= gen);
+            if v.is_empty() {
+                out.remove(&session);
+            }
+        }
+    }
+
+    fn unregister(&self, session: u64) {
+        relock(&self.sessions).remove(&session); // drops the PoolHandle
+        relock(&self.outstanding).remove(&session);
+    }
+
+    /// Kill `node`: mark it dead, move every session it hosted onto
+    /// survivors (same id, same gen Arc), exchange their sealed KV blocks,
+    /// and front-requeue their outstanding tasks in original order — the
+    /// worker-panic recovery rule writ large. Refuses to kill the last
+    /// alive node (there would be nowhere to requeue). Returns whether the
+    /// node was actually killed.
+    fn kill_node(&self, node: usize) -> bool {
+        if node >= self.slots().len() || self.alive_count() <= 1 {
+            return false;
+        }
+        if self.slots()[node]
+            .alive
+            .compare_exchange(true, false, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false; // already dead
+        }
+        self.net.node_kills.fetch_add(1, Ordering::Relaxed);
+        // Phase 1: re-home every session of the dead node. Re-registering
+        // with the same id + gen Arc keeps staling seamless; dropping the
+        // old handle purges whatever still queued on the dead pool.
+        let moved: Vec<u64> = {
+            let mut sessions = relock(&self.sessions);
+            let on_node: Vec<u64> = sessions
+                .iter()
+                .filter(|(_, e)| e.node == node)
+                .map(|(sid, _)| *sid)
+                .collect();
+            for sid in &on_node {
+                // Survivor with the fewest sessions, computed inline (we
+                // hold the map): spread the dead node's load.
+                let mut counts = vec![0usize; self.slots().len()];
+                for e in sessions.values() {
+                    if e.node != node {
+                        counts[e.node] += 1;
+                    }
+                }
+                let dest = self
+                    .slots()
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, s)| *i != node && s.alive.load(Ordering::Acquire))
+                    .min_by_key(|(i, _)| counts[*i])
+                    .map(|(i, _)| i)
+                    .expect("alive_count > 1 implies a survivor");
+                let e = sessions.get_mut(sid).expect("collected above");
+                let parking = relock(&self.parking).0.clone();
+                let fresh =
+                    self.slots()[dest].pool.register_routed(*sid, e.gen.clone(), parking);
+                e.inner = fresh; // old handle drops here → dead pool purged
+                e.node = dest;
+                self.net.migrations.fetch_add(1, Ordering::Relaxed);
+            }
+            on_node
+        };
+        // Phase 2: move sealed KV blocks so the survivors re-decode
+        // nothing the dead node had settled (best effort — the store is
+        // the dead node's RAM; in a real deployment this is the replica /
+        // checkpoint path, here the stores outlive the "node").
+        for sid in &moved {
+            self.exchange_kv(node, *sid);
+        }
+        // Phase 3: front-requeue outstanding tasks in original order
+        // directly onto the new owners (supervisor plane, not the message
+        // plane: recovery must not race the very partition that may have
+        // caused the kill). Stale generations are pruned — they could
+        // only be skipped.
+        for sid in &moved {
+            let tasks: Vec<OutstandingTask> = {
+                let mut out = relock(&self.outstanding);
+                match out.get_mut(sid) {
+                    Some(v) => v
+                        .iter()
+                        .map(|t| OutstandingTask {
+                            gen: t.gen,
+                            ctx: t.ctx.clone(),
+                            from: t.from,
+                            to: t.to,
+                        })
+                        .collect(),
+                    None => Vec::new(),
+                }
+            };
+            if tasks.is_empty() {
+                continue;
+            }
+            let sessions = relock(&self.sessions);
+            if let Some(e) = sessions.get(sid) {
+                let cur_gen = e.gen.load(Ordering::Acquire);
+                let mut n = 0u64;
+                for t in &tasks {
+                    if t.gen == cur_gen {
+                        e.inner.submit(t.gen, t.ctx.clone(), t.from, t.to);
+                        n += 1;
+                    }
+                }
+                self.stats.record_redispatched(n);
+            }
+        }
+        true
+    }
+
+    /// Move `session`'s sealed blocks toward its (new) node, charging the
+    /// push on the message plane.
+    fn exchange_kv(&self, from_node: usize, session: u64) {
+        let (dest, exchange) = {
+            let dest = relock(&self.sessions).get(&session).map(|e| e.node);
+            (dest, relock(&self.kv_exchange).clone())
+        };
+        let (Some(dest), Some(exchange)) = (dest, exchange) else {
+            return;
+        };
+        if dest == from_node {
+            return;
+        }
+        let blocks = exchange(from_node, dest, session);
+        if blocks > 0 {
+            self.transport_send(Envelope::KvPush {
+                from_node,
+                to_node: dest,
+                session,
+                blocks,
+            });
+        }
+    }
+
+    /// Live-migrate `session` onto the least-loaded other alive node:
+    /// KV blocks move first (so the new node's workers restore, not
+    /// re-decode), then routing flips, then outstanding work is
+    /// re-submitted on the new owner. Returns the destination node.
+    fn migrate_session(&self, session: u64) -> Option<usize> {
+        let from = relock(&self.sessions).get(&session)?.node;
+        let dest = self.pick_node(Some(from))?;
+        {
+            let mut sessions = relock(&self.sessions);
+            let e = sessions.get_mut(&session)?;
+            if e.node != from {
+                return Some(e.node); // raced another move; done
+            }
+            let parking = relock(&self.parking).0.clone();
+            let fresh = self.slots()[dest].pool.register_routed(session, e.gen.clone(), parking);
+            e.inner = fresh; // old registration drops → old node purged
+            e.node = dest;
+            self.net.migrations.fetch_add(1, Ordering::Relaxed);
+        }
+        self.exchange_kv(from, session);
+        // Old-node in-flight lanes may still answer (their node is alive;
+        // the target is deterministic, so duplicates are absorbed by the
+        // session's keep-wider rule) — but queued tasks were purged, so
+        // re-submit everything outstanding on the new owner.
+        let tasks: Vec<OutstandingTask> = {
+            let out = relock(&self.outstanding);
+            out.get(&session).map_or(Vec::new(), |v| {
+                v.iter()
+                    .map(|t| OutstandingTask {
+                        gen: t.gen,
+                        ctx: t.ctx.clone(),
+                        from: t.from,
+                        to: t.to,
+                    })
+                    .collect()
+            })
+        };
+        if !tasks.is_empty() {
+            let sessions = relock(&self.sessions);
+            if let Some(e) = sessions.get(&session) {
+                let cur_gen = e.gen.load(Ordering::Acquire);
+                let mut n = 0u64;
+                for t in &tasks {
+                    if t.gen == cur_gen {
+                        e.inner.submit(t.gen, t.ctx.clone(), t.from, t.to);
+                        n += 1;
+                    }
+                }
+                self.stats.record_redispatched(n);
+            }
+        }
+        Some(dest)
+    }
+}
+
+/// A session's capability on the sharded plane — the cross-node analog of
+/// [`PoolHandle`], same surface. Dropping it unregisters the session
+/// fleet-wide.
+pub struct NodeHandle {
+    inner: Arc<ShardedInner>,
+    session: u64,
+}
+
+impl NodeHandle {
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+
+    /// Enqueue one verification task — it rides the message plane to the
+    /// session's current node (and pays that node's hop).
+    pub fn submit(&self, gen: u64, ctx: TokenRope, from: usize, to: usize) {
+        // Copy accounting happens once, in the node-local PoolHandle this
+        // dispatch lands on — the plane itself moves Arc-shared ropes.
+        self.inner.submit_session(self.session, gen, ctx, from, to);
+    }
+
+    /// Advance this session's generation (rejection resync) — control
+    /// plane: staling applies immediately on the owning node.
+    pub fn advance_gen(&self, gen: u64) {
+        self.inner.advance_session_gen(self.session, gen);
+    }
+
+    /// The modeled one-way hop to this session's current node, ms. The
+    /// adaptive controller's latency-weighted water-fill reads this:
+    /// remote lanes pay 2×hop per verification round-trip.
+    pub fn hop_ms(&self) -> f64 {
+        let sessions = relock(&self.inner.sessions);
+        sessions
+            .get(&self.session)
+            .map_or(0.0, |e| self.inner.slots()[e.node].hop_ms)
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        self.inner.unregister(self.session);
+    }
+}
+
+/// N node shards behind the one-pool surface: the server registers
+/// sessions, the controller reads stats / retunes caps / reclaims shares,
+/// and neither knows how many nodes stand behind the plane.
+pub struct ShardedPool {
+    inner: Arc<ShardedInner>,
+    nodes: usize,
+    workers_per_node: usize,
+}
+
+impl ShardedPool {
+    /// Build `node_factories.len()` node shards with `workers_per_node`
+    /// workers each. `node_hop_ms` is the modeled one-way hop to every
+    /// non-local node (node 0 is the local node: hop 0 — its transport is
+    /// pure loopback). Worker ids are globally unique across shards
+    /// (node × workers_per_node + wid), so per-node engine state (e.g. a
+    /// per-node `BlockStore`) can key off them.
+    pub fn new_with_factories(
+        node_factories: Vec<ServerFactory>,
+        workers_per_node: usize,
+        policy: SchedPolicy,
+        batch_cap: usize,
+        fault: Option<Arc<FaultPlan>>,
+        node_hop_ms: f64,
+    ) -> Self {
+        let nodes = node_factories.len();
+        assert!(nodes >= 1, "sharded pool needs at least one node");
+        assert!(workers_per_node >= 1, "each node needs at least one worker");
+        let stats = Arc::new(PoolStats::default());
+        let inner = Arc::new(ShardedInner {
+            stats: stats.clone(),
+            net: NetStats::default(),
+            fault: fault.clone(),
+            nodes: OnceLock::new(),
+            sessions: Mutex::new(HashMap::new()),
+            outstanding: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(1),
+            partition_until: Mutex::new(None),
+            parking: Mutex::new(channel()),
+            kv_exchange: Mutex::new(None),
+        });
+        let mut slots = Vec::with_capacity(nodes);
+        for (n, factory) in node_factories.into_iter().enumerate() {
+            // Weak sinks/uplinks: the transports and pools are owned by
+            // the inner state they deliver into, so strong captures would
+            // cycle and leak every worker thread.
+            let sink_inner = Arc::downgrade(&inner);
+            let sink: DeliverFn = Arc::new(move |env| {
+                if let Some(i) = sink_inner.upgrade() {
+                    i.deliver(env);
+                }
+            });
+            let loopback: Arc<dyn NodeTransport> = Arc::new(LoopbackTransport::new(sink));
+            let hop_ms = if n == 0 { 0.0 } else { node_hop_ms.max(0.0) };
+            let transport: Arc<dyn NodeTransport> = if hop_ms > 0.0 {
+                Arc::new(SimulatedHop::new(loopback, hop_ms))
+            } else {
+                loopback
+            };
+            let uplink_inner = Arc::downgrade(&inner);
+            let uplink: ResultUplink = Arc::new(move |session, msg| {
+                if let Some(i) = uplink_inner.upgrade() {
+                    i.transport_send(Envelope::VerifyResult { node: n, session, msg });
+                }
+            });
+            // Globally-unique worker ids across shards.
+            let offset = n * workers_per_node;
+            let node_factory: ServerFactory =
+                Arc::new(move |role, wid| factory(role, offset + wid));
+            let pool = TargetPool::new_node(
+                &node_factory,
+                workers_per_node,
+                policy,
+                batch_cap,
+                fault.clone(),
+                stats.clone(),
+                Some(uplink),
+            );
+            slots.push(NodeSlot {
+                pool,
+                hop_ms,
+                transport,
+                alive: AtomicBool::new(true),
+                last_seen: Mutex::new(None),
+            });
+        }
+        inner
+            .nodes
+            .set(slots)
+            .unwrap_or_else(|_| unreachable!("nodes set exactly once"));
+        Self { inner, nodes, workers_per_node }
+    }
+
+    /// Build `nodes` shards from one factory (the common path).
+    pub fn new(
+        factory: &ServerFactory,
+        nodes: usize,
+        workers_per_node: usize,
+        policy: SchedPolicy,
+        batch_cap: usize,
+        fault: Option<Arc<FaultPlan>>,
+        node_hop_ms: f64,
+    ) -> Self {
+        Self::new_with_factories(
+            vec![factory.clone(); nodes],
+            workers_per_node,
+            policy,
+            batch_cap,
+            fault,
+            node_hop_ms,
+        )
+    }
+
+    /// Register a session: placed on the least-loaded alive node; results
+    /// arrive on `tx` off the message plane.
+    pub fn register(&self, tx: Sender<SessionMsg>) -> NodeHandle {
+        let session = self.inner.next_session.fetch_add(1, Ordering::AcqRel);
+        let node = self.inner.pick_node(None).expect("at least one alive node");
+        let gen = Arc::new(AtomicU64::new(0));
+        let parking = relock(&self.inner.parking).0.clone();
+        let handle =
+            self.inner.slots()[node].pool.register_routed(session, gen.clone(), parking);
+        relock(&self.inner.sessions)
+            .insert(session, SessionEntry { node, inner: handle, tx, gen });
+        NodeHandle { inner: self.inner.clone(), session }
+    }
+
+    /// Total workers across all nodes (the fleet's SP budget realized).
+    pub fn size(&self) -> usize {
+        self.nodes * self.workers_per_node
+    }
+
+    /// Configured node count.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Nodes currently alive.
+    pub fn alive_nodes(&self) -> usize {
+        self.inner.alive_count()
+    }
+
+    /// Node currently hosting `session`.
+    pub fn node_of(&self, session: u64) -> Option<usize> {
+        relock(&self.inner.sessions).get(&session).map(|e| e.node)
+    }
+
+    /// Modeled one-way hop of `session`'s current node, ms.
+    pub fn hop_ms_of(&self, session: u64) -> f64 {
+        relock(&self.inner.sessions)
+            .get(&session)
+            .map_or(0.0, |e| self.inner.slots()[e.node].hop_ms)
+    }
+
+    /// The shared dispatch-path counters (one block across all shards).
+    pub fn stats(&self) -> Arc<PoolStats> {
+        self.inner.stats.clone()
+    }
+
+    /// Message-plane counters.
+    pub fn net_stats(&self) -> &NetStats {
+        &self.inner.net
+    }
+
+    /// Queued verification tasks across every alive node.
+    pub fn queued_depth(&self) -> usize {
+        self.inner
+            .slots()
+            .iter()
+            .filter(|s| s.alive.load(Ordering::Acquire))
+            .map(|s| s.pool.queued_depth())
+            .sum()
+    }
+
+    /// Sessions currently registered on the plane.
+    pub fn active_sessions(&self) -> usize {
+        relock(&self.inner.sessions).len()
+    }
+
+    /// Current micro-batch cap (uniform across nodes).
+    pub fn batch_cap(&self) -> usize {
+        self.inner.slots().first().map_or(1, |s| s.pool.batch_cap())
+    }
+
+    /// Retune every node's micro-batch cap (the controller's
+    /// admission-aware sizing, fleet-wide).
+    pub fn set_batch_cap(&self, cap: usize) {
+        for s in self.inner.slots() {
+            s.pool.set_batch_cap(cap);
+        }
+    }
+
+    /// Preemptively reclaim `session`'s queued lanes down to `cap` on its
+    /// owning node; the hand-backs ride the message plane (and pay the
+    /// hop) like any result.
+    pub fn reclaim_to_cap(&self, session: u64, cap: usize) -> usize {
+        let node = relock(&self.inner.sessions).get(&session).map(|e| e.node);
+        match node {
+            Some(n) => self.inner.slots()[n].pool.reclaim_to_cap(session, cap),
+            None => 0,
+        }
+    }
+
+    /// Wire the engine-level sealed-block exchange used by migrations.
+    pub fn set_kv_exchange(&self, f: KvExchange) {
+        *relock(&self.inner.kv_exchange) = Some(f);
+    }
+
+    /// Kill a node (explicit chaos): survivors inherit its sessions and
+    /// outstanding work. Refuses to kill the last alive node.
+    pub fn kill_node(&self, node: usize) -> bool {
+        self.inner.kill_node(node)
+    }
+
+    /// Live-migrate a session to the least-loaded other node; returns the
+    /// destination.
+    pub fn migrate_session(&self, session: u64) -> Option<usize> {
+        self.inner.migrate_session(session)
+    }
+
+    /// Send a heartbeat probe to `node` over the message plane (it pays
+    /// the hop; the answer lands in [`last_seen`](Self::last_seen)).
+    pub fn ping(&self, node: usize, seq: u64) {
+        self.inner.transport_send(Envelope::Heartbeat { node, seq });
+    }
+
+    /// When `node` last answered a heartbeat (None: never, or dead).
+    pub fn last_seen(&self, node: usize) -> Option<Instant> {
+        self.inner
+            .slots()
+            .get(node)
+            .and_then(|s| *relock(&s.last_seen))
+    }
+}
+
+/// The one-pool facade the server and adaptive controller hold: a single
+/// in-process [`TargetPool`] or a [`ShardedPool`] of node shards, behind
+/// the identical surface. The control plane (stats differencing,
+/// admission-aware batch sizing, preemptive reclaim) is node-oblivious —
+/// only session *placement* and hop charging live below this line.
+#[derive(Clone)]
+pub enum ServingPool {
+    Single(Arc<TargetPool>),
+    Sharded(Arc<ShardedPool>),
+}
+
+impl ServingPool {
+    /// Shared dispatch-path counters (fleet-wide for sharded).
+    pub fn stats(&self) -> Arc<PoolStats> {
+        match self {
+            ServingPool::Single(p) => p.stats(),
+            ServingPool::Sharded(p) => p.stats(),
+        }
+    }
+
+    /// Total target workers (the realized SP budget).
+    pub fn size(&self) -> usize {
+        match self {
+            ServingPool::Single(p) => p.size(),
+            ServingPool::Sharded(p) => p.size(),
+        }
+    }
+
+    /// Node count behind the facade (1 for a single pool).
+    pub fn nodes(&self) -> usize {
+        match self {
+            ServingPool::Single(_) => 1,
+            ServingPool::Sharded(p) => p.nodes(),
+        }
+    }
+
+    pub fn queued_depth(&self) -> usize {
+        match self {
+            ServingPool::Single(p) => p.queued_depth(),
+            ServingPool::Sharded(p) => p.queued_depth(),
+        }
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        match self {
+            ServingPool::Single(p) => p.active_sessions(),
+            ServingPool::Sharded(p) => p.active_sessions(),
+        }
+    }
+
+    pub fn batch_cap(&self) -> usize {
+        match self {
+            ServingPool::Single(p) => p.batch_cap(),
+            ServingPool::Sharded(p) => p.batch_cap(),
+        }
+    }
+
+    pub fn set_batch_cap(&self, cap: usize) {
+        match self {
+            ServingPool::Single(p) => p.set_batch_cap(cap),
+            ServingPool::Sharded(p) => p.set_batch_cap(cap),
+        }
+    }
+
+    pub fn reclaim_to_cap(&self, session: u64, cap: usize) -> usize {
+        match self {
+            ServingPool::Single(p) => p.reclaim_to_cap(session, cap),
+            ServingPool::Sharded(p) => p.reclaim_to_cap(session, cap),
+        }
+    }
+
+    /// Message-plane counters (None for a single in-process pool — there
+    /// is no plane to count).
+    pub fn net_stats(&self) -> Option<&NetStats> {
+        match self {
+            ServingPool::Single(_) => None,
+            ServingPool::Sharded(p) => Some(p.net_stats()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatencyProfile;
+    use crate::coordinator::wait_engine::{Oracle, WaitEngine};
+    use crate::coordinator::VerifyResult;
+    use std::sync::mpsc::channel;
+
+    fn rope(tokens: &[u32]) -> TokenRope {
+        TokenRope::from_slice(tokens)
+    }
+
+    fn engine(target_ms: f64) -> WaitEngine {
+        WaitEngine {
+            target: LatencyProfile::uniform(target_ms),
+            drafter: LatencyProfile::uniform(0.1),
+            oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 11 },
+            max_context: 4096,
+        }
+    }
+
+    fn sharded(nodes: usize, target_ms: f64, hop_ms: f64) -> ShardedPool {
+        ShardedPool::new(
+            &engine(target_ms).factory(),
+            nodes,
+            1,
+            SchedPolicy::Affinity,
+            1,
+            None,
+            hop_ms,
+        )
+    }
+
+    fn recv_verify(
+        rx: &std::sync::mpsc::Receiver<SessionMsg>,
+        ms: u64,
+    ) -> Option<VerifyResult> {
+        match rx.recv_timeout(Duration::from_millis(ms)) {
+            Ok(SessionMsg::Verify(r)) => Some(r),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn loopback_roundtrip_preserves_per_session_order() {
+        let pool = sharded(2, 0.5, 0.0);
+        let (tx, rx) = channel();
+        let h = pool.register(tx);
+        for i in 0..3 {
+            h.submit(0, rope(&[1, 2, 3, 4 + i]), 2, 3);
+        }
+        let mut froms = Vec::new();
+        for _ in 0..3 {
+            let r = recv_verify(&rx, 500).expect("result over the loopback plane");
+            assert_eq!(r.session, h.session_id());
+            froms.push(r.from);
+        }
+        // One node, one worker, per-session FIFO: results arrive in
+        // submit order even through the envelope plane.
+        assert_eq!(froms, vec![2, 2, 2]);
+        assert!(pool.net_stats().envelopes() >= 6, "3 dispatches + 3 results");
+        assert_eq!(pool.net_stats().dropped_partition(), 0);
+        assert_eq!(pool.stats().tasks(), 3);
+    }
+
+    #[test]
+    fn remote_sessions_pay_the_hop_local_ones_do_not() {
+        let pool = sharded(2, 0.5, 25.0);
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let a = pool.register(tx_a); // node 0: local, hop 0
+        let b = pool.register(tx_b); // node 1: remote, hop 25ms each way
+        assert_eq!(pool.node_of(a.session_id()), Some(0));
+        assert_eq!(pool.node_of(b.session_id()), Some(1));
+        assert_eq!(a.hop_ms(), 0.0);
+        assert_eq!(b.hop_ms(), 25.0);
+
+        let t0 = Instant::now();
+        a.submit(0, rope(&[1, 2, 3]), 2, 3);
+        assert!(recv_verify(&rx_a, 500).is_some());
+        let local = t0.elapsed();
+
+        let t1 = Instant::now();
+        b.submit(0, rope(&[9, 8, 7]), 2, 3);
+        assert!(recv_verify(&rx_b, 1000).is_some());
+        let remote = t1.elapsed();
+
+        assert!(
+            remote >= Duration::from_millis(50),
+            "remote round-trip must pay 2 hops, took {remote:?}"
+        );
+        assert!(
+            local < Duration::from_millis(20),
+            "local lane must not pay the hop, took {local:?}"
+        );
+    }
+
+    #[test]
+    fn node_kill_requeues_outstanding_onto_survivors() {
+        // Slow forwards so the kill lands while work is queued/in-flight.
+        let pool = sharded(2, 40.0, 0.0);
+        let (tx_a, _rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        let _a = pool.register(tx_a); // node 0
+        let b = pool.register(tx_b); // node 1
+        for i in 0..3u32 {
+            b.submit(0, rope(&[9, 8, 7, i]), 2, 3);
+        }
+        assert!(pool.kill_node(1), "node 1 must die");
+        assert_eq!(pool.alive_nodes(), 1);
+        assert_eq!(pool.node_of(b.session_id()), Some(0), "session re-homed");
+        // Every outstanding task re-ran on the survivor: 3 results, none
+        // lost, none duplicated beyond what keep-wider would absorb.
+        for _ in 0..3 {
+            assert!(
+                recv_verify(&rx_b, 2000).is_some(),
+                "result lost across the node kill"
+            );
+        }
+        assert!(pool.stats().redispatched() >= 3, "kill must requeue outstanding");
+        // The dead node's own in-flight answer was dropped at the plane.
+        assert!(pool.kill_node(0) == false, "last node must be unkillable");
+    }
+
+    #[test]
+    fn partition_drops_envelopes_then_heals() {
+        let plan = Arc::new(FaultPlan::parse("partition@1:60").unwrap());
+        let pool = ShardedPool::new(
+            &engine(0.5).factory(),
+            2,
+            1,
+            SchedPolicy::Affinity,
+            1,
+            Some(plan.clone()),
+            0.0,
+        );
+        let (tx, rx) = channel();
+        let h = pool.register(tx);
+        // Envelope 1 opens the partition and is itself lost: no result,
+        // no hang — exactly the verify-deadline shape the session layer
+        // recovers from.
+        h.submit(0, rope(&[1, 2, 3]), 2, 3);
+        assert!(recv_verify(&rx, 40).is_none(), "partitioned dispatch must be dropped");
+        assert_eq!(pool.net_stats().dropped_partition(), 1);
+        assert_eq!(plan.injected(), 1);
+        // After the window, the same coverage re-dispatches cleanly (the
+        // deadline path re-submits in production; we do it by hand here).
+        std::thread::sleep(Duration::from_millis(70));
+        h.submit(0, rope(&[1, 2, 3]), 2, 3);
+        assert!(recv_verify(&rx, 500).is_some(), "plane must heal after the window");
+    }
+
+    #[test]
+    fn heartbeat_answers_only_while_alive() {
+        let pool = sharded(2, 0.5, 0.0);
+        assert!(pool.last_seen(1).is_none());
+        pool.ping(1, 1);
+        // Loopback: delivery is synchronous.
+        assert!(pool.last_seen(1).is_some());
+        assert!(pool.kill_node(1));
+        let seen = pool.last_seen(1);
+        pool.ping(1, 2);
+        assert_eq!(pool.last_seen(1), seen, "dead node must not answer probes");
+    }
+
+    #[test]
+    fn migration_rehomes_and_resubmits() {
+        let pool = sharded(2, 30.0, 0.0);
+        let (tx, rx) = channel();
+        let h = pool.register(tx);
+        assert_eq!(pool.node_of(h.session_id()), Some(0));
+        for i in 0..2u32 {
+            h.submit(0, rope(&[5, 6, 7, i]), 2, 3);
+        }
+        let dest = pool.migrate_session(h.session_id()).expect("a destination");
+        assert_eq!(dest, 1);
+        assert_eq!(pool.node_of(h.session_id()), Some(1));
+        // Both tasks answer (possibly with absorbed duplicates from the
+        // old node's in-flight lane — the coordinator's keep-wider rule
+        // owns that; here we just require no loss).
+        let mut got = 0;
+        while recv_verify(&rx, 1500).is_some() {
+            got += 1;
+            if got >= 2 {
+                break;
+            }
+        }
+        assert!(got >= 2, "results lost across migration (got {got})");
+        assert!(pool.net_stats().migrations() >= 1);
+    }
+}

@@ -75,10 +75,22 @@ use std::time::{Duration, Instant};
 /// these mutexes is a single push/pop/remove that either happened or
 /// didn't — there is no partially-applied state a panic can expose — so
 /// recovering the guard is sound, and the supervisor (not the lock
-/// poison) is what owns failure handling.
-fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+/// poison) is what owns failure handling. Crate-visible because the
+/// server's controller and admission threads share the same contract:
+/// their guarded state is also single-step, so one panicking thread must
+/// degrade that thread, never cascade the serve through lock poison.
+pub(crate) fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
+
+/// The result-plane seam the cross-node layer plugs in: when a pool is
+/// built as a node shard, every session-bound message a worker (or the
+/// reclaim path) would have pushed down the registered `Sender` is handed
+/// to this uplink instead, tagged with the session id — the sharded plane
+/// wraps it in a transport envelope so remote results pay the modeled
+/// hop and can be dropped by partitions. `None` (the single-node default)
+/// keeps the direct in-process send path, byte for byte.
+pub type ResultUplink = Arc<dyn Fn(u64, SessionMsg) + Send + Sync>;
 
 /// Consecutive same-session tasks a worker serves before it must steal
 /// an oldest-waiting other-session task (if one exists). Bounds the
@@ -466,6 +478,8 @@ struct PoolShared {
     /// Injected-fault schedule (None in production; the chaos harness
     /// threads one through the whole serving plane).
     fault: Option<Arc<FaultPlan>>,
+    /// Cross-node result seam (None on a plain single-node pool).
+    uplink: Option<ResultUplink>,
 }
 
 impl PoolShared {
@@ -627,9 +641,14 @@ impl PoolShared {
         for t in purged {
             let wait_ns = now.duration_since(t.submitted).as_nanos() as u64;
             self.stats.record_reclaimed(wait_ns);
-            if let Some(tx) = &tx {
+            let msg = SessionMsg::Reclaimed { gen: t.gen, from: t.from };
+            if let Some(up) = &self.uplink {
+                // Node shard: the hand-back rides the message plane like
+                // any result, so remote reclaim pays the hop too.
+                up(session, msg);
+            } else if let Some(tx) = &tx {
                 // A departed session has no route; the count still stands.
-                let _ = tx.send(SessionMsg::Reclaimed { gen: t.gen, from: t.from });
+                let _ = tx.send(msg);
             }
         }
         n
@@ -737,6 +756,34 @@ impl TargetPool {
         batch_cap: usize,
         fault: Option<Arc<FaultPlan>>,
     ) -> Self {
+        Self::new_node(
+            factory,
+            size,
+            policy,
+            batch_cap,
+            fault,
+            Arc::new(PoolStats::default()),
+            None,
+        )
+    }
+
+    /// The node-shard constructor: like
+    /// [`new_with_faults`](Self::new_with_faults), but the dispatch-path
+    /// counters accumulate into a caller-supplied `stats` block (every
+    /// shard of one `ShardedPool` shares one, so the controller's
+    /// forward-cost differencing and serving snapshots see the fleet as
+    /// one pool) and session-bound messages are routed through `uplink`
+    /// when present (the cross-node message plane) instead of the
+    /// registered `Sender`.
+    pub fn new_node(
+        factory: &ServerFactory,
+        size: usize,
+        policy: SchedPolicy,
+        batch_cap: usize,
+        fault: Option<Arc<FaultPlan>>,
+        stats: Arc<PoolStats>,
+        uplink: Option<ResultUplink>,
+    ) -> Self {
         assert!(size >= 1, "pool needs at least one worker");
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(Queues::default()),
@@ -747,8 +794,9 @@ impl TargetPool {
             route_epoch: AtomicU64::new(0),
             next_session: AtomicU64::new(1),
             active: AtomicUsize::new(0),
-            stats: Arc::new(PoolStats::default()),
+            stats,
             fault,
+            uplink,
         });
         let mut workers = Vec::with_capacity(size);
         for wid in 0..size {
@@ -930,13 +978,21 @@ impl TargetPool {
                             {
                                 continue;
                             }
-                            tx.send(SessionMsg::Verify(VerifyResult {
+                            let msg = SessionMsg::Verify(VerifyResult {
                                 session: lane.session,
                                 gen: lane.gen,
                                 from: lane.from,
                                 preds,
-                            }))
-                            .is_err()
+                            });
+                            if let Some(up) = &shared.uplink {
+                                // Node shard: results ride the message
+                                // plane (envelope + modeled hop) instead
+                                // of the direct channel.
+                                up(lane.session, msg);
+                                false
+                            } else {
+                                tx.send(msg).is_err()
+                            }
                         };
                         if send_failed {
                             cache.remove(&lane.session);
@@ -1003,11 +1059,30 @@ impl TargetPool {
     /// [`SessionMsg::Verify`] on `tx`.
     pub fn register(&self, tx: Sender<SessionMsg>) -> PoolHandle {
         let session = self.shared.next_session.fetch_add(1, Ordering::AcqRel);
-        let gen = Arc::new(AtomicU64::new(0));
+        self.register_routed(session, Arc::new(AtomicU64::new(0)), tx)
+    }
+
+    /// Register a session whose id and generation counter are owned by an
+    /// outer routing layer (the sharded plane): ids come from the fleet's
+    /// one id space, and the *same* `gen` Arc travels with the session
+    /// across node migrations, so staling keeps working mid-move — a task
+    /// queued on the old node under an old generation is still skipped by
+    /// the new node's workers. `session` must be unique among sessions
+    /// ever registered on this pool (callers hand out ids from one
+    /// monotone counter, so a migration re-registration is fine — the old
+    /// registration was dropped first). On a shard built with an uplink,
+    /// `tx` is a parking sender the pool never uses.
+    pub fn register_routed(
+        &self,
+        session: u64,
+        gen: Arc<AtomicU64>,
+        tx: Sender<SessionMsg>,
+    ) -> PoolHandle {
         relock(&self.shared.routes).insert(session, Route { gen: gen.clone(), tx });
-        // No route_epoch bump: session ids are never reused, so a new
-        // session cannot be stale-cached anywhere — workers miss and fall
-        // through to the locked lookup. Only departure must flush caches.
+        // No route_epoch bump: a fresh id cannot be stale-cached anywhere,
+        // and a *returning* id (migration back onto a former node) is safe
+        // because the departure that preceded it already bumped the epoch
+        // — and its gen Arc is the same object either way.
         self.shared.active.fetch_add(1, Ordering::AcqRel);
         PoolHandle { shared: self.shared.clone(), session, gen }
     }

@@ -34,6 +34,15 @@
 //!   twice-dead drafter degrades its session to target-only non-SI
 //!   pace; [`coordinator::fault`] is the seeded injection plane
 //!   (`FaultPlan`, `--fault-spec`) the chaos harness drives.
+//!   [`coordinator::node`] scales the plane past one node: an RPC-shaped
+//!   message plane (`NodeTransport` envelopes for verify dispatch/results,
+//!   KV block push, heartbeats — in-process loopback by default, with a
+//!   simulated-latency hop charging remote round trips) fronts a
+//!   `ShardedPool` of per-node `TargetPool` shards behind the same
+//!   submit/result surface, with latency-weighted SP water-filling,
+//!   sealed-KV block exchange on session migration, and node-kill /
+//!   partition faults recovered by the same deadline + re-dispatch
+//!   machinery (`--nodes`, `--node-hop-ms`).
 //!   Forward passes are pluggable: calibrated waits (the paper's
 //!   methodology) or real PJRT executions (`pjrt` cargo feature).
 //! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
@@ -74,7 +83,9 @@
 //!   (lookahead, sp_share, acceptance, TPOT, weight) controller gauges,
 //!   and the fault-plane counters (worker restarts, re-dispatched
 //!   tasks, deadline expiries, drafter stops/restarts, degraded
-//!   sessions, injected faults — rendered only when something fired).
+//!   sessions, injected faults — rendered whenever a fault plan is
+//!   attached or a counter fired, so an armed-but-quiet chaos run shows
+//!   explicit zeros).
 //! - [`workload`] — synthetic prompt corpora, arrival processes
 //!   (closed-loop, Poisson, Markov-modulated bursty, diurnal open-loop),
 //!   and per-tenant tagging (weight + SLO class) for traced requests.

@@ -43,8 +43,16 @@ COMMANDS (system):
                           --engine wait|real (default wait)
                           --algo dsi|si|nonsi|pearl  --requests N  --tokens N
                           --profile instruction|summarization|code
-                          --max-sessions N (concurrent generations, default 1)
-                          --pool-size N (shared target pool, default 7)
+                          --max-sessions N (concurrent generations per node,
+                            default 1)
+                          --pool-size N (shared target pool, default 7; with
+                            --nodes this is the fleet total, split evenly)
+                          --nodes N (shard the serving plane across N
+                            simulated nodes behind the RPC-shaped message
+                            plane, default 1)
+                          --node-hop-ms MS (modeled one-way hop to non-local
+                            nodes; remote sessions' deadlines and Equation-1
+                            plans widen by the round trip, default 0)
                           --sched-policy affinity|fifo (pool scheduling A/B)
                           --batch-cap N (micro-batch lanes per forward,
                             default 8; 1 = serial verification plane)
@@ -77,7 +85,8 @@ COMMANDS (system):
                             chaos harness: chaos:SEED preset, or a CSV of
                             worker-panic@N, predict-err@N, stall@N:MS,
                             drop-verify@N, drafter-die@S, drafter-die-once@S,
-                            seed=N — see README "Fault tolerance")
+                            node-kill@N, partition@N:MS, seed=N — see README
+                            "Fault tolerance")
                           --verify-deadline-ms MS (force the per-session
                             verify deadline; 0 = derive from live target
                             TPOT, default)
@@ -270,6 +279,8 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     let n_tokens = flag_usize(flags, "tokens", 32);
     let max_sessions = flag_usize(flags, "max-sessions", 1);
     let pool_size = flag_usize(flags, "pool-size", 7);
+    let nodes = flag_usize(flags, "nodes", 1);
+    let node_hop_ms = flag_f64(flags, "node-hop-ms", 0.0);
     let sched_policy = match flags.get("sched-policy").map(String::as_str) {
         None | Some("affinity") => dsi::coordinator::SchedPolicy::Affinity,
         Some("fifo") => dsi::coordinator::SchedPolicy::Fifo,
@@ -408,6 +419,8 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         .with_max_depth(16)
         .with_max_sessions(max_sessions)
         .with_pool_size(pool_size)
+        .with_nodes(nodes)
+        .with_node_hop_ms(node_hop_ms)
         .with_sched_policy(sched_policy)
         .with_batch_cap(batch_cap)
         .with_adaptive(adaptive)
@@ -446,6 +459,13 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     }
     for r in &mut reqs {
         r.prompt.truncate(max_prompt.max(4));
+    }
+    if nodes >= 2 {
+        println!(
+            "cross-node plane: {nodes} nodes, {} workers each, \
+             {node_hop_ms}ms one-way hop to non-local nodes",
+            (pool_size / nodes).max(1)
+        );
     }
     println!(
         "serving {n_requests} {} requests x {n_tokens} tokens via {} \

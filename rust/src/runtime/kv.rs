@@ -262,6 +262,53 @@ impl<P> BlockStore<P> {
         }
         true
     }
+
+    /// Snapshot every sealed block the store currently holds, as
+    /// `(key, block)` pairs. Blocks are `Arc`-shared, so the export moves
+    /// no payload bytes — it is the in-process half of a cross-node block
+    /// push (the message plane charges the transfer; the content rides
+    /// the `Arc`). The store keeps its own references; an export is a
+    /// read, never a drain.
+    pub fn export_sealed(&self) -> Vec<(u64, Arc<KvBlock<P>>)> {
+        let inner = self.inner.lock().unwrap();
+        // Oldest-first by LRU stamp, so an import into a bounded store
+        // evicts the same blocks this store would have considered cold.
+        inner
+            .by_stamp
+            .values()
+            .filter_map(|key| inner.map.get(key).map(|(b, _)| (*key, b.clone())))
+            .collect()
+    }
+
+    /// Ingest exported blocks: each absent key is inserted (counted as
+    /// published, LRU-evicting past capacity like [`publish`](Self::publish));
+    /// present keys are skipped — first writer wins, the content is
+    /// identical by construction. Returns how many blocks were actually
+    /// added. This is the receiving half of a cross-node block push: a
+    /// session migrating onto this store's node re-decodes nothing its
+    /// old node had already settled.
+    pub fn import_sealed(&self, blocks: Vec<(u64, Arc<KvBlock<P>>)>) -> usize {
+        let mut added = 0;
+        let mut inner = self.inner.lock().unwrap();
+        for (key, block) in blocks {
+            debug_assert_eq!(block.tokens.len(), self.block_tokens, "imported block size");
+            if inner.map.contains_key(&key) {
+                continue;
+            }
+            inner.clock += 1;
+            let clock = inner.clock;
+            inner.map.insert(key, (block, clock));
+            inner.by_stamp.insert(clock, key);
+            self.stats.published.fetch_add(1, Ordering::Relaxed);
+            added += 1;
+            while inner.map.len() > self.capacity {
+                let (_, coldest) = inner.by_stamp.pop_first().expect("non-empty LRU index");
+                inner.map.remove(&coldest);
+                self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        added
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +375,30 @@ mod tests {
         assert!(store.lookup(key, 0, &[9, 9]).is_none(), "evicted from the store");
         // …but the Arc the session holds is still the data.
         assert_eq!(held.payload, vec![9, 9]);
+    }
+
+    #[test]
+    fn export_import_moves_sealed_blocks_without_copying() {
+        let a: BlockStore<Vec<u32>> = BlockStore::new(2, 8);
+        let b: BlockStore<Vec<u32>> = BlockStore::new(2, 8);
+        let k = |i: u32| key_of([i, i + 1]);
+        for i in 0..3u32 {
+            a.publish(k(i), block((i as usize) * 2, &[i, i + 1]));
+        }
+        // B already holds one of the keys: import must skip it.
+        b.publish(k(1), block(2, &[1, 2]));
+
+        let exported = a.export_sealed();
+        assert_eq!(exported.len(), 3);
+        let added = b.import_sealed(exported);
+        assert_eq!(added, 2, "present key must be skipped, absent ones added");
+        assert_eq!(b.len(), 3);
+        // The exporter keeps serving its own blocks (export is a read).
+        assert_eq!(a.len(), 3);
+        // Imported blocks are the same Arc'd data, verified-lookup clean.
+        let got = b.lookup(k(0), 0, &[0, 1]).expect("imported block hit");
+        assert_eq!(got.payload, vec![0, 1]);
+        assert_eq!(b.stats().published(), 1 + 2);
     }
 
     #[test]

@@ -34,7 +34,9 @@
 //!   only on the periodic timer.
 //! - **Preemptive SP reclaim.** When a tick *shrinks* a session's share,
 //!   the controller immediately purges that session's queued verify
-//!   tasks beyond the new cap ([`TargetPool::reclaim_to_cap`]): each
+//!   tasks beyond the new cap
+//!   ([`TargetPool::reclaim_to_cap`](crate::coordinator::TargetPool::reclaim_to_cap)):
+//!   each
 //!   purged task is counted (`PoolStats::reclaimed`) and handed back to
 //!   its coordinator (`SessionMsg::Reclaimed`) so the generation stays
 //!   lossless, and the freed lanes reach the sessions this tick chose
@@ -48,18 +50,22 @@
 //!   pool's micro-batch cap follows observed queue depth (lanes beyond
 //!   what's queued are speculative padding) and the `--slo-ms` latency
 //!   target (lanes beyond the SLO's padding budget are latency debt),
-//!   applied live via [`TargetPool::set_batch_cap`].
+//!   applied live via
+//!   [`TargetPool::set_batch_cap`](crate::coordinator::TargetPool::set_batch_cap)
+//!   — fleet-wide when the plane is sharded.
 //!
 //! The static planner remains the A/B control: with the controller off,
 //! plans and outputs are bit-identical to the pre-adaptive server.
 
 use super::router::Router;
 use crate::config::{max_useful_sp, min_lookahead_for_sp, AlgoKind};
+use crate::coordinator::node::ServingPool;
+use crate::coordinator::pool::relock;
 use crate::coordinator::wait_engine::BATCH_LANE_COST_FRAC;
-use crate::coordinator::{CtlTelemetry, SessionCtl, TargetPool};
+use crate::coordinator::{CtlTelemetry, SessionCtl};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Live DSI sessions' control surfaces, keyed by pool session id. Workers
 /// register a session when they construct it and remove it when they
@@ -91,14 +97,14 @@ impl TickSignal {
 
     /// Announce a membership change: bump the epoch and wake the waiter.
     pub fn kick(&self) {
-        *self.epoch.lock().unwrap() += 1;
+        *relock(&self.epoch) += 1;
         self.cv.notify_all();
     }
 
     /// Current epoch — snapshot this *before* the tick whose staleness
     /// the following `wait_past` should measure.
     pub fn epoch(&self) -> u64 {
-        *self.epoch.lock().unwrap()
+        *relock(&self.epoch)
     }
 
     /// Sleep until the epoch moves past `seen` or `timeout` elapses.
@@ -106,13 +112,16 @@ impl TickSignal {
     /// a plain timer expiry.
     pub fn wait_past(&self, seen: u64, timeout: std::time::Duration) -> bool {
         let deadline = std::time::Instant::now() + timeout;
-        let mut g = self.epoch.lock().unwrap();
+        let mut g = relock(&self.epoch);
         while *g <= seen {
             let left = deadline.saturating_duration_since(std::time::Instant::now());
             if left.is_zero() {
                 return *g > seen;
             }
-            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            let (guard, _) = self
+                .cv
+                .wait_timeout(g, left)
+                .unwrap_or_else(PoisonError::into_inner);
             g = guard;
         }
         true
@@ -131,6 +140,12 @@ pub struct SessionRates {
     /// the water-fill objective, so a weight-2 tenant's stall counts
     /// double when choosing where the marginal server goes.
     pub weight: f64,
+    /// Modeled one-way hop to the session's serving node, ms (0 = local).
+    /// A remote session's verifications pay 2×hop per round-trip, so its
+    /// *effective* target cost in the fill is `t + 2·hop` — remote lanes
+    /// stall longer per rejection and therefore pull marginal servers
+    /// sooner than a local twin with identical rates.
+    pub hop_ms: f64,
 }
 
 /// Expected per-token latency of a DSI session granted `share` target
@@ -154,7 +169,10 @@ pub fn expected_token_latency_ms(t: f64, d: f64, p: f64, share: usize) -> f64 {
 /// per-token latency is currently worst — the greedy weighted min-max
 /// fill. With uniform weights this is plain min-max; a weight-w session's
 /// stall counts w× in the objective, so heavier tenants (and tighter SLO
-/// classes) pull the marginal server sooner. Shares are capped at
+/// classes) pull the marginal server sooner. The fill is also
+/// *latency-weighted across nodes*: each session's effective target cost
+/// includes its message-plane round-trip (2 × its node hop), so a remote
+/// lane competes at the cost it actually pays. Shares are capped at
 /// each session's useful maximum (§3.1); if every session is capped the
 /// residue is dealt round-robin so the budget is never silently dropped
 /// (an over-cap share is harmless — that session's tasks simply never
@@ -167,9 +185,18 @@ pub fn waterfill_sp(target_tpot_ms: f64, budget: usize, sessions: &[SessionRates
     }
     let mut shares = vec![1usize; n];
     let mut left = budget.saturating_sub(n);
-    let caps: Vec<usize> = sessions
-        .iter()
-        .map(|s| max_useful_sp(target_tpot_ms, s.drafter_tpot_ms))
+    // A remote session's verifications pay the message-plane round-trip
+    // on top of the forward: its effective target cost is t + 2·hop.
+    // Both the useful-SP cap and the fill objective see the inflated
+    // cost, so remote lanes both *warrant* more servers (a longer
+    // round-trip keeps more of them concurrently busy) and *claim* them
+    // sooner (their rejection stalls are longer).
+    let eff_t = |i: usize| {
+        let hop = sessions[i].hop_ms;
+        target_tpot_ms + if hop.is_finite() && hop > 0.0 { 2.0 * hop } else { 0.0 }
+    };
+    let caps: Vec<usize> = (0..n)
+        .map(|i| max_useful_sp(eff_t(i), sessions[i].drafter_tpot_ms))
         .collect();
     let weight = |i: usize| {
         let w = sessions[i].weight;
@@ -185,14 +212,14 @@ pub fn waterfill_sp(target_tpot_ms: f64, budget: usize, sessions: &[SessionRates
             .max_by(|&a, &b| {
                 let la = weight(a)
                     * expected_token_latency_ms(
-                        target_tpot_ms,
+                        eff_t(a),
                         sessions[a].drafter_tpot_ms,
                         sessions[a].acceptance,
                         shares[a],
                     );
                 let lb = weight(b)
                     * expected_token_latency_ms(
-                        target_tpot_ms,
+                        eff_t(b),
                         sessions[b].drafter_tpot_ms,
                         sessions[b].acceptance,
                         shares[b],
@@ -320,7 +347,7 @@ impl ControllerStats {
 
     /// Replace the per-session gauge set (test hook + controller use).
     pub fn set_session_gauges(&self, gauges: Vec<SessionGauge>) {
-        *self.sessions.lock().unwrap() = gauges;
+        *relock(&self.sessions) = gauges;
     }
 
     /// Count one membership-change wakeup (server-side admission plumbing).
@@ -358,7 +385,7 @@ impl ControllerStats {
     }
 
     pub fn session_gauges(&self) -> Vec<SessionGauge> {
-        self.sessions.lock().unwrap().clone()
+        relock(&self.sessions).clone()
     }
 }
 
@@ -369,7 +396,9 @@ impl ControllerStats {
 pub struct Controller {
     router: Arc<Mutex<Router>>,
     registry: SessionRegistry,
-    pool: Arc<TargetPool>,
+    /// The serving plane — one in-process pool or a sharded node fleet
+    /// behind the identical surface; the control law is node-oblivious.
+    pool: ServingPool,
     stats: Arc<ControllerStats>,
     slo_ms: f64,
     batch_cap_max: usize,
@@ -390,7 +419,7 @@ impl Controller {
     pub fn new(
         router: Arc<Mutex<Router>>,
         registry: SessionRegistry,
-        pool: Arc<TargetPool>,
+        pool: ServingPool,
         stats: Arc<ControllerStats>,
         slo_ms: f64,
         batch_cap_max: usize,
@@ -418,13 +447,13 @@ impl Controller {
         // Registry snapshot (never hold the registry lock against the
         // router's — workers take the router lock on their dispatch path).
         let regs: Vec<(u64, Arc<SessionCtl>)> = {
-            let g = self.registry.lock().unwrap();
+            let g = relock(&self.registry);
             g.iter().map(|(sid, ctl)| (*sid, ctl.clone())).collect()
         };
         self.seen.retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
         self.last_plan.retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
 
-        let mut router = self.router.lock().unwrap();
+        let mut router = relock(&self.router);
 
         // Pool-plane cost deltas: the per-lane mean feeds the router's
         // Equation-1 capacity estimator; the per-forward mean (batched
@@ -480,13 +509,16 @@ impl Controller {
                 acceptance: router.live_acceptance(*sid),
                 drafter_tpot_ms: router.live_drafter_tpot_ms(*sid),
                 weight: ctl.weight(),
+                hop_ms: ctl.hop_ms(),
             })
             .collect();
         let shares = waterfill_sp(t, router.sp_budget, &rates);
         let mut gauges = Vec::with_capacity(regs.len());
         let mut replanned = false;
         for (((sid, ctl), rate), &share) in regs.iter().zip(&rates).zip(&shares) {
-            let plan = router.plan_live(AlgoKind::Dsi, *sid, share);
+            // Remote sessions re-solve Equation 1 at their hop-inflated
+            // target cost — same GPU, longer effective verification.
+            let plan = router.plan_live_with_hop(AlgoKind::Dsi, *sid, share, rate.hop_ms);
             // The in-flight cap is the allocated share (an over-cap share
             // only means this session's tasks never queue); the lookahead
             // is Equation 1's at the live rates.
@@ -554,7 +586,7 @@ mod tests {
     use crate::config::required_sp;
 
     fn rates(session: u64, p: f64, d: f64) -> SessionRates {
-        SessionRates { session, acceptance: p, drafter_tpot_ms: d, weight: 1.0 }
+        SessionRates { session, acceptance: p, drafter_tpot_ms: d, weight: 1.0, hop_ms: 0.0 }
     }
 
     /// The marginal server goes to the weak/slow session until its useful
@@ -679,6 +711,31 @@ mod tests {
         junk[0].weight = f64::NAN;
         junk[1].weight = 0.0;
         assert_eq!(waterfill_sp(t, 6, &junk), vec![3, 3], "junk weights = neutral");
+    }
+
+    /// Cross-node latency weighting: two otherwise-identical sessions,
+    /// one local and one behind a modeled hop — the remote one's longer
+    /// effective round-trip must pull the marginal servers, and a zero
+    /// hop must reproduce the hopless fill bit-for-bit.
+    #[test]
+    fn waterfill_charges_remote_hops() {
+        let t = 30.0;
+        let even = [rates(1, 0.5, 3.0), rates(2, 0.5, 3.0)];
+        assert_eq!(waterfill_sp(t, 6, &even), vec![3, 3]);
+
+        let mut far = even;
+        far[1].hop_ms = 20.0; // effective target 30 + 2*20 = 70ms
+        let shares = waterfill_sp(t, 6, &far);
+        assert_eq!(shares.iter().sum::<usize>(), 6, "budget partially dropped");
+        assert!(
+            shares[1] > shares[0],
+            "the remote session's hop-inflated stall must claim the marginal servers, got {shares:?}"
+        );
+        // Junk hops are neutral, not a panic.
+        let mut junk = even;
+        junk[0].hop_ms = f64::NAN;
+        junk[1].hop_ms = -5.0;
+        assert_eq!(waterfill_sp(t, 6, &junk), vec![3, 3]);
     }
 
     /// The membership signal wakes a waiter early on kick, reports timer

@@ -158,6 +158,11 @@ pub struct Snapshot {
     pub drafter_restarts: u64,
     /// Fault-plan events that actually fired (0 without a plan).
     pub faults_injected: u64,
+    /// Whether an injected-fault plan is attached at all. A chaos run
+    /// whose schedule never fired renders its fault segment anyway —
+    /// explicit zeros are evidence the plan was armed, absence of the
+    /// segment is evidence no plan existed.
+    pub fault_plan_attached: bool,
 }
 
 impl Metrics {
@@ -337,6 +342,7 @@ impl Metrics {
                 .as_ref()
                 .map_or(0, |s| s.drafter_restarts()),
             faults_injected: self.fault_plan.as_ref().map_or(0, |p| p.injected()),
+            fault_plan_attached: self.fault_plan.is_some(),
         }
     }
 }
@@ -390,10 +396,12 @@ impl Snapshot {
                 self.controller_reclaims,
             ));
         }
-        // Fault-plane segment only when something actually happened — a
-        // healthy serve stays visually identical to the pre-fault-plane
-        // output.
-        if self.pool_worker_restarts > 0
+        // Fault-plane segment whenever a fault plan is armed (explicit
+        // zeros prove the schedule simply never fired) or anything
+        // actually happened; a healthy plan-free serve stays visually
+        // identical to the pre-fault-plane output.
+        if self.fault_plan_attached
+            || self.pool_worker_restarts > 0
             || self.pool_redispatched > 0
             || self.deadline_expiries > 0
             || self.drafter_stops > 0
@@ -731,6 +739,25 @@ mod tests {
         );
         assert!(
             text.contains("drafter stops=2 restarts=1 degraded=1"),
+            "render: {text}"
+        );
+    }
+
+    /// An armed-but-never-firing plan still renders the fault segment —
+    /// with explicit zeros — so operators can tell "armed and quiet"
+    /// apart from "no plan at all".
+    #[test]
+    fn armed_fault_plan_renders_explicit_zeros() {
+        let mut m = Metrics::new();
+        // An envelope index no short run reaches: the plan never fires.
+        let plan = Arc::new(FaultPlan::parse("node-kill@999").unwrap());
+        m.attach_fault_plan(plan);
+        let s = m.snapshot();
+        assert!(s.fault_plan_attached);
+        assert_eq!(s.faults_injected, 0);
+        let text = s.render();
+        assert!(
+            text.contains("faults injected=0 restarts=0 redispatched=0 expiries=0"),
             "render: {text}"
         );
     }

@@ -24,6 +24,8 @@ pub mod metrics;
 pub mod router;
 
 use crate::config::AlgoKind;
+use crate::coordinator::node::{ServingPool, ShardedPool};
+use crate::coordinator::pool::relock;
 use crate::coordinator::{
     faulty_factory, run_nonsi_with, run_si_with, DsiSession, FaultPlan, FaultStats, LmServer,
     OnlineConfig, OnlineOutcome, SchedPolicy, ServerFactory, ServerRole, TargetPool,
@@ -37,7 +39,7 @@ use router::{Plan, Router};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 /// How the scheduler refills freed `max_sessions` slots.
@@ -118,13 +120,17 @@ impl Backend {
     fn new(
         algo: AlgoKind,
         factory: &ServerFactory,
-        pool: Option<&Arc<TargetPool>>,
+        pool: Option<&ServingPool>,
         worker_id: usize,
     ) -> Self {
         match algo {
             AlgoKind::Dsi => {
-                let pool = pool.expect("DSI serving requires the shared target pool");
-                Backend::Dsi(DsiSession::new(pool, factory))
+                match pool.expect("DSI serving requires the shared target pool") {
+                    ServingPool::Single(pool) => Backend::Dsi(DsiSession::new(pool, factory)),
+                    ServingPool::Sharded(pool) => {
+                        Backend::Dsi(DsiSession::new_sharded(pool, factory))
+                    }
+                }
             }
             // PEARL's online coordinator is not implemented; its router
             // plan (one target + one drafter, §Router) degrades to
@@ -167,7 +173,16 @@ pub struct Server {
     /// Concurrent generations admitted at once.
     max_sessions: usize,
     /// Shared target-pool size (defaults to the router's SP budget).
+    /// Under node sharding this is the *fleet* budget, split evenly
+    /// across nodes.
     pool_size: usize,
+    /// Node shards in the serving plane (default 1: the classic
+    /// single-node pool; >= 2 shards the pool behind the RPC-shaped
+    /// message plane with simulated inter-node hops).
+    nodes: usize,
+    /// Modeled one-way hop to every non-local node, ms (node 0 is local
+    /// and always pays 0).
+    node_hop_ms: f64,
     /// Pool scheduling policy (affinity by default; FIFO is the A/B
     /// control, now selectable from the launcher via `--sched-policy`).
     sched_policy: SchedPolicy,
@@ -201,10 +216,11 @@ pub struct Server {
     /// Controller counters/gauges, attached to metrics at construction so
     /// snapshots always carry the fields (idle-zero when not adaptive).
     controller_stats: Arc<ControllerStats>,
-    /// The node's target workers; lazily built on the first DSI serve and
-    /// persistent across `serve` calls (model loading / HLO compilation
-    /// happens once per worker, not once per request).
-    pool: Option<Arc<TargetPool>>,
+    /// The serving plane's target workers — one shared pool, or a node
+    /// fleet behind the message plane; lazily built on the first DSI
+    /// serve and persistent across `serve` calls (model loading / HLO
+    /// compilation happens once per worker, not once per request).
+    pool: Option<ServingPool>,
     /// Generations currently in flight.
     active: Arc<AtomicUsize>,
     /// Server-lifetime clock for metrics span stamps: dispatch/completion
@@ -231,6 +247,8 @@ impl Server {
             max_speculation_depth: 24,
             max_sessions: 1,
             pool_size,
+            nodes: 1,
+            node_hop_ms: 0.0,
             sched_policy: SchedPolicy::Affinity,
             batch_cap: crate::coordinator::pool::BATCH_CAP_DEFAULT,
             adaptive: false,
@@ -264,7 +282,28 @@ impl Server {
     /// shares the pool cannot deliver.
     pub fn with_pool_size(mut self, n: usize) -> Self {
         self.pool_size = n.max(1);
-        self.router.lock().unwrap().sp_budget = self.pool_size;
+        relock(&self.router).sp_budget = self.pool_size;
+        self
+    }
+
+    /// Shard the serving plane across `n` simulated nodes (default 1).
+    /// The fleet keeps the same *total* worker budget — each node gets
+    /// `pool_size / n` workers (floor, min 1) — while admission
+    /// concurrency scales to `max_sessions × n`, which is how a 2-node
+    /// plane beats 1 node at equal total workers: SP has diminishing
+    /// returns per Equation 1, concurrency does not. Takes effect before
+    /// the pool is first built.
+    pub fn with_nodes(mut self, n: usize) -> Self {
+        self.nodes = n.max(1);
+        self
+    }
+
+    /// Modeled one-way network hop to every non-local node, ms
+    /// (meaningful only with `--nodes >= 2`; non-finite or non-positive
+    /// values mean free hops). Remote sessions' verify deadlines and
+    /// Equation-1 plans are widened by the round trip automatically.
+    pub fn with_node_hop_ms(mut self, ms: f64) -> Self {
+        self.node_hop_ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
         self
     }
 
@@ -330,7 +369,7 @@ impl Server {
     /// path consults the plan, and `faults_injected` appears in
     /// snapshots. Takes effect before the pool is first built.
     pub fn with_fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
-        self.metrics.lock().unwrap().attach_fault_plan(plan.clone());
+        relock(&self.metrics).attach_fault_plan(plan.clone());
         self.fault_plan = Some(plan);
         self
     }
@@ -344,17 +383,17 @@ impl Server {
     /// report its eviction pressure (callable once per store — e.g. the
     /// target and drafter stores of the real engine).
     pub fn attach_store_stats(&self, stats: Arc<StoreStats>) {
-        self.metrics.lock().unwrap().attach_store_stats(stats);
+        relock(&self.metrics).attach_store_stats(stats);
     }
 
     /// Live acceptance estimate from the router (§F.2 online variant).
     pub fn acceptance_estimate(&self) -> f64 {
-        self.router.lock().unwrap().acceptance_estimate()
+        relock(&self.router).acceptance_estimate()
     }
 
     /// Point-in-time metrics summary.
     pub fn metrics_snapshot(&self) -> metrics::Snapshot {
-        self.metrics.lock().unwrap().snapshot()
+        relock(&self.metrics).snapshot()
     }
 
     /// Generations currently in flight.
@@ -376,19 +415,43 @@ impl Server {
             None => self.factory.clone(),
         };
         if self.algo == AlgoKind::Dsi && self.pool.is_none() {
-            let pool = Arc::new(TargetPool::new_with_faults(
-                &factory_eff,
-                self.pool_size,
-                self.sched_policy,
-                self.batch_cap,
-                self.fault_plan.clone(),
-            ));
+            let pool = if self.nodes >= 2 {
+                // Sharded plane: the fleet splits the worker budget evenly
+                // (floor, min 1 per node) behind the message plane.
+                let wpn = (self.pool_size / self.nodes).max(1);
+                let sharded = Arc::new(ShardedPool::new(
+                    &factory_eff,
+                    self.nodes,
+                    wpn,
+                    self.sched_policy,
+                    self.batch_cap,
+                    self.fault_plan.clone(),
+                    self.node_hop_ms,
+                ));
+                // The realized fleet size may round below the requested
+                // budget; keep Equation-1 plans honest about what the
+                // pool can actually deliver.
+                relock(&self.router).sp_budget = sharded.size();
+                ServingPool::Sharded(sharded)
+            } else {
+                ServingPool::Single(Arc::new(TargetPool::new_with_faults(
+                    &factory_eff,
+                    self.pool_size,
+                    self.sched_policy,
+                    self.batch_cap,
+                    self.fault_plan.clone(),
+                )))
+            };
             // Surface the pool's queue-wait / dispatch-overhead counters
             // in metrics snapshots.
-            self.metrics.lock().unwrap().attach_pool_stats(pool.stats());
+            relock(&self.metrics).attach_pool_stats(pool.stats());
             self.pool = Some(pool);
         }
-        let n_workers = self.max_sessions.min(requests.len());
+        // `max_sessions` is a per-node admission limit: a sharded DSI
+        // plane runs up to `max_sessions × nodes` concurrent generations.
+        let session_slots = self.max_sessions
+            * if self.algo == AlgoKind::Dsi { self.nodes } else { 1 };
+        let n_workers = session_slots.min(requests.len());
 
         // The adaptive control plane: one controller thread per serve
         // call, re-planning live while the workers generate. It touches
@@ -476,7 +539,7 @@ impl Server {
                     loop {
                         // Take the next admitted request; release the
                         // queue lock before generating.
-                        let idx = match job_rx.lock().unwrap().recv() {
+                        let idx = match relock(&job_rx).recv() {
                             Ok(i) => i,
                             Err(_) => break,
                         };
@@ -484,9 +547,7 @@ impl Server {
                         let dispatched_ms = t0.elapsed().as_secs_f64() * 1e3;
                         let queue_ms = (dispatched_ms - req.arrival_ms).max(0.0);
                         let n_active = active.fetch_add(1, Ordering::AcqRel) + 1;
-                        metrics
-                            .lock()
-                            .unwrap()
+                        relock(&metrics)
                             .note_dispatch_at(epoch.elapsed().as_secs_f64() * 1e3);
 
                         // Re-plan the operating point at the current
@@ -499,7 +560,7 @@ impl Server {
                         // historical floor split as the bit-identical A/B
                         // control.
                         let plan: Plan = {
-                            let r = router.lock().unwrap();
+                            let r = relock(&router);
                             if adaptive {
                                 r.plan_shared_all(algo, n_active)[0]
                             } else {
@@ -526,9 +587,7 @@ impl Server {
                                 // Hand the session's live control surface
                                 // to the adaptive controller.
                                 if let Some(reg) = registry.as_ref() {
-                                    reg.lock()
-                                        .unwrap()
-                                        .insert(sess.session_id(), sess.ctl());
+                                    relock(reg).insert(sess.session_id(), sess.ctl());
                                 }
                             }
                             backend = Some(b);
@@ -560,7 +619,7 @@ impl Server {
                         // controller it learns mid-run from telemetry
                         // deltas instead, so nothing is double-counted.
                         {
-                            let mut r = router.lock().unwrap();
+                            let mut r = relock(&router);
                             match backend.as_ref() {
                                 Some(Backend::Dsi(sess)) if !adaptive => r
                                     .observe_session_run(
@@ -587,7 +646,7 @@ impl Server {
                             slo: req.slo,
                         };
                         {
-                            let mut m = metrics.lock().unwrap();
+                            let mut m = relock(&metrics);
                             m.note_complete_at(epoch.elapsed().as_secs_f64() * 1e3);
                             m.observe(&resp);
                         }
@@ -596,7 +655,7 @@ impl Server {
                         // on this count).
                         {
                             let (lock, cv) = &*completed;
-                            *lock.lock().unwrap() += 1;
+                            *relock(lock) += 1;
                             cv.notify_all();
                         }
                         if resp_tx.send((idx, resp)).is_err() {
@@ -608,9 +667,9 @@ impl Server {
                     // estimator state for it.
                     if let Some(Backend::Dsi(sess)) = backend.as_ref() {
                         if let Some(reg) = registry.as_ref() {
-                            reg.lock().unwrap().remove(&sess.session_id());
+                            relock(reg).remove(&sess.session_id());
                         }
-                        router.lock().unwrap().retire_session(sess.session_id());
+                        relock(&router).retire_session(sess.session_id());
                     }
                 });
             }
@@ -637,9 +696,9 @@ impl Server {
                     let wave_end = (wave_no + 1) * n_workers;
                     let target = wave_end.min(order.len());
                     let (lock, cv) = &*completed;
-                    let mut done = lock.lock().unwrap();
+                    let mut done = relock(lock);
                     while *done < target {
-                        done = cv.wait(done).unwrap();
+                        done = cv.wait(done).unwrap_or_else(PoisonError::into_inner);
                     }
                 }
             }

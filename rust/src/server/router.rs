@@ -284,7 +284,30 @@ impl Router {
     /// drafter cost (each falling back to calibration until warm). The
     /// adaptive controller calls this once per session per tick.
     pub fn plan_live(&self, algo: AlgoKind, session: u64, share: usize) -> Plan {
-        self.plan_at(algo, share, self.live_target_tpot_ms(), self.live_drafter_tpot_ms(session))
+        self.plan_live_with_hop(algo, session, share, 0.0)
+    }
+
+    /// [`plan_live`](Self::plan_live) for a session served by a remote
+    /// node: a verification's effective latency is the forward cost plus
+    /// the round-trip over the message plane (2 × the one-way `hop_ms`),
+    /// so Equation 1 re-solves at the *inflated* target cost — a remote
+    /// lane needs a larger lookahead (fewer, longer tasks) and caps at a
+    /// higher useful SP than a local one with the same GPU. Local
+    /// sessions pass 0 and get the plain `plan_live` bit-for-bit.
+    pub fn plan_live_with_hop(
+        &self,
+        algo: AlgoKind,
+        session: u64,
+        share: usize,
+        hop_ms: f64,
+    ) -> Plan {
+        let hop = if hop_ms.is_finite() && hop_ms > 0.0 { hop_ms } else { 0.0 };
+        self.plan_at(
+            algo,
+            share,
+            self.live_target_tpot_ms() + 2.0 * hop,
+            self.live_drafter_tpot_ms(session),
+        )
     }
 
     /// Equation-1 planning core at explicit rates.
@@ -451,5 +474,26 @@ mod tests {
         assert_eq!(r.live_drafter_tpot_ms(7), 3.0);
         r.retire_session(42);
         assert_eq!(r.live_drafter_tpot_ms(42), 3.0);
+    }
+
+    /// A remote lane's hop inflates the effective target cost (forward +
+    /// round-trip): zero/junk hops are bit-identical to `plan_live`, and
+    /// a real hop can only grow the Equation-1 lookahead at a fixed
+    /// share, with the plan still feasible at the inflated cost.
+    #[test]
+    fn plan_live_hop_inflates_the_target_cost() {
+        let r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 8);
+        let local = r.plan_live(AlgoKind::Dsi, 1, 4);
+        assert_eq!(r.plan_live_with_hop(AlgoKind::Dsi, 1, 4, 0.0), local);
+        assert_eq!(r.plan_live_with_hop(AlgoKind::Dsi, 1, 4, f64::NAN), local);
+        assert_eq!(r.plan_live_with_hop(AlgoKind::Dsi, 1, 4, -3.0), local);
+
+        let remote = r.plan_live_with_hop(AlgoKind::Dsi, 1, 4, 15.0);
+        assert!(
+            remote.lookahead >= local.lookahead,
+            "a remote lane must not plan a smaller lookahead"
+        );
+        // Feasible at the inflated effective target cost 30 + 2*15.
+        assert!(crate::config::required_sp(60.0, 3.0, remote.lookahead) <= remote.sp_degree);
     }
 }

@@ -129,6 +129,32 @@ fn dropped_verify_result_expires_and_redispatches_through_server() {
     assert_eq!(snap.degraded_sessions, 0, "a lost result must not degrade the session");
 }
 
+/// An armed fault plan whose schedule never fires still renders the
+/// fault segment — with explicit zeros — so a chaos run can prove the
+/// plan was live and quiet rather than silently detached.
+#[test]
+fn armed_but_idle_plan_renders_explicit_zeros() {
+    let reqs = requests(8);
+    // Trigger indices far past anything this short serve reaches.
+    let plan =
+        Arc::new(FaultPlan::parse("worker-panic@100000,node-kill@100000").expect("valid spec"));
+    let (resps, snap) = serve(&reqs, Some(plan.clone()));
+    assert_lossless(&reqs, &resps, "armed-idle serve");
+    assert_eq!(plan.injected(), 0, "the far-future schedule fired early");
+    assert!(snap.fault_plan_attached);
+    assert_eq!(snap.faults_injected, 0);
+    assert_eq!(snap.pool_worker_restarts, 0);
+    assert_eq!(snap.pool_redispatched, 0);
+    assert_eq!(snap.deadline_expiries, 0);
+    assert_eq!(snap.degraded_sessions, 0);
+    assert_eq!(snap.drafter_stops, 0);
+    let text = snap.render();
+    assert!(
+        text.contains("faults injected=0 restarts=0 redispatched=0 expiries=0"),
+        "armed plan must render explicit zeros: {text}"
+    );
+}
+
 /// The A/B control: with no fault plan the same serve keeps every fault
 /// gauge at zero and the rendered snapshot shows no fault segment — the
 /// fault plane is invisible until something goes wrong.

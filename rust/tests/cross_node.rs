@@ -1,0 +1,245 @@
+//! Cross-node serving gates: the sharded plane must (1) beat the
+//! single-node plane at equal total workers on a multi-session workload,
+//! (2) stay bit-identical to non-SI greedy through node kills and
+//! network partitions — message-plane faults may cost latency, never
+//! tokens and never a hang — and (3) migrate a session between nodes
+//! without re-decoding a single settled token (the KV block exchange
+//! carries the sealed state across).
+//!
+//! `CHAOS_SEED` shifts where the chaos schedule lands, exactly like
+//! `tests/chaos.rs`.
+
+use dsi::config::{AlgoKind, LatencyProfile};
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{
+    run_nonsi, FaultPlan, OnlineConfig, SchedPolicy, SessionMsg, ShardedPool, VerifyResult,
+};
+use dsi::runtime::kv::BlockStore;
+use dsi::server::router::Router;
+use dsi::server::Server;
+use dsi::workload::Request;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn engine() -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.4),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 41 },
+        max_context: 8192,
+    }
+}
+
+fn requests(n: u32, n_tokens: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::new(i as u64, vec![i + 1, 80 + i, 150], n_tokens, 0.0))
+        .collect()
+}
+
+/// Serve `reqs` on a DSI server sharded across `nodes` with
+/// `total_workers` workers in the whole fleet and 2 sessions per node.
+fn serve_nodes(
+    reqs: &[Request],
+    nodes: usize,
+    total_workers: usize,
+    plan: Option<Arc<FaultPlan>>,
+) -> (Vec<dsi::server::Response>, dsi::server::metrics::Snapshot, f64) {
+    let router = Router::new(
+        LatencyProfile::uniform(2.0),
+        LatencyProfile::uniform(0.4),
+        total_workers,
+    );
+    let mut srv = Server::new(engine().factory(), router, AlgoKind::Dsi)
+        .with_max_depth(16)
+        .with_max_sessions(2)
+        .with_pool_size(total_workers)
+        .with_nodes(nodes)
+        .with_adaptive(false);
+    if let Some(plan) = plan {
+        srv = srv.with_fault_plan(plan);
+    }
+    let t0 = std::time::Instant::now();
+    let resps = srv.serve(reqs);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let snap = srv.metrics_snapshot();
+    (resps, snap, wall_ms)
+}
+
+/// Bit-identity of every response against fault-free non-SI greedy.
+fn assert_lossless(reqs: &[Request], resps: &[dsi::server::Response], what: &str) {
+    assert_eq!(resps.len(), reqs.len(), "{what} dropped requests");
+    for (req, resp) in reqs.iter().zip(resps) {
+        let cfg = OnlineConfig {
+            prompt: req.prompt.clone(),
+            n_tokens: req.max_new_tokens,
+            lookahead: 1,
+            sp_degree: 1,
+            max_speculation_depth: 64,
+        };
+        let nonsi = run_nonsi(&engine().factory(), &cfg);
+        assert_eq!(resp.tokens, nonsi.tokens, "{what} lost tokens on req {}", req.id);
+    }
+}
+
+fn recv_verify(rx: &Receiver<SessionMsg>, ms: u64) -> Option<VerifyResult> {
+    match rx.recv_timeout(Duration::from_millis(ms)) {
+        Ok(SessionMsg::Verify(r)) => Some(r),
+        _ => None,
+    }
+}
+
+/// The headline acceptance gate: at equal total workers, two nodes serve
+/// a multi-session workload faster than one, because `max_sessions` is a
+/// per-node admission limit — concurrency scales linearly with nodes
+/// while per-session SP has diminishing returns (Equation 1). Outputs
+/// stay bit-identical to non-SI greedy on both planes.
+#[test]
+fn two_nodes_beat_one_node_at_equal_total_workers() {
+    let reqs = requests(8, 16);
+    let (one, _, wall_one) = serve_nodes(&reqs, 1, 4, None);
+    let (two, _, wall_two) = serve_nodes(&reqs, 2, 4, None);
+    assert_lossless(&reqs, &one, "1-node serve");
+    assert_lossless(&reqs, &two, "2-node serve");
+    for (a, b) in one.iter().zip(&two) {
+        assert_eq!(a.tokens, b.tokens, "node sharding changed tokens on req {}", a.id);
+    }
+    assert!(
+        wall_two < wall_one,
+        "2 nodes ({wall_two:.0}ms) must beat 1 node ({wall_one:.0}ms) at 4 total workers"
+    );
+}
+
+/// A node killed mid-serve: its sessions re-home onto the survivor, the
+/// outstanding verify tasks re-dispatch there, and every response stays
+/// bit-identical — a dead node is a worker panic writ large.
+#[test]
+fn node_kill_mid_serve_stays_lossless() {
+    let reqs = requests(8, 12);
+    let plan = Arc::new(FaultPlan::parse("node-kill@5").expect("valid spec"));
+    let (resps, snap, _) = serve_nodes(&reqs, 2, 4, Some(plan.clone()));
+    assert_lossless(&reqs, &resps, "node-kill serve");
+    assert_eq!(plan.injected(), 1, "the node-kill event never fired");
+    assert!(snap.fault_plan_attached, "plan attachment lost on the way to metrics");
+    assert!(
+        snap.render().contains("faults injected=1"),
+        "armed chaos serve must render its fault segment: {}",
+        snap.render()
+    );
+}
+
+/// A network partition silently eats envelopes; recovery is the verify
+/// deadline (widened by the hop), never a hang: the session goes silent,
+/// the deadline expires, the re-dispatch lands after the partition heals,
+/// and the stream is bit-identical.
+#[test]
+fn partition_recovers_via_verify_deadline_not_a_hang() {
+    let reqs = requests(1, 12);
+    let plan = Arc::new(FaultPlan::parse("partition@2:40").expect("valid spec"));
+    let router =
+        Router::new(LatencyProfile::uniform(2.0), LatencyProfile::uniform(0.4), 2);
+    let mut srv = Server::new(engine().factory(), router, AlgoKind::Dsi)
+        .with_max_depth(16)
+        .with_max_sessions(1)
+        .with_pool_size(2)
+        .with_nodes(2)
+        .with_adaptive(false)
+        .with_verify_deadline_ms(60.0)
+        .with_fault_plan(plan.clone());
+    let resps = srv.serve(&reqs);
+    let snap = srv.metrics_snapshot();
+    assert_lossless(&reqs, &resps, "partition serve");
+    assert_eq!(plan.injected(), 1, "the partition event never fired");
+    assert!(
+        snap.deadline_expiries >= 1,
+        "partitioned envelopes never expired the verify deadline"
+    );
+    assert_eq!(snap.degraded_sessions, 0, "a partition must not degrade the session");
+}
+
+/// The chaos gate across the node boundary: the seeded schedule (worker
+/// panic, stall, drafter death, node kill, partition) lands on a 2-node
+/// serve and every response is still bit-identical to fault-free non-SI
+/// greedy decoding.
+#[test]
+fn cross_node_chaos_serve_is_lossless() {
+    let seed =
+        std::env::var("CHAOS_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0);
+    let reqs = requests(4, 12);
+    let plan = Arc::new(FaultPlan::chaos(seed));
+    let (resps, snap, _) = serve_nodes(&reqs, 2, 4, Some(plan.clone()));
+    assert_lossless(&reqs, &resps, &format!("2-node chaos serve (seed {seed})"));
+    assert!(
+        plan.injected() >= 3,
+        "chaos plan (seed {seed}) only fired {} of >= 3 scheduled faults",
+        plan.injected()
+    );
+    assert_eq!(snap.faults_injected, plan.injected(), "metrics lost the fire count");
+}
+
+/// The migration gate: a session moved between nodes re-decodes zero
+/// settled tokens — the sealed KV blocks ride the message plane's
+/// `KvPush` into the destination node's store, and the cold worker
+/// restores instead of re-decoding.
+#[test]
+fn migration_exchanges_kv_blocks_and_redecodes_nothing() {
+    use dsi::context::TokenRope;
+    const L: usize = 64; // multiple of the 16-token block size
+
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(0.5),
+        drafter: LatencyProfile::uniform(0.1),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.7, seed: 53 },
+        max_context: 4096,
+    };
+    // One sealed-block store per node — migration must move state, not
+    // share it by aliasing.
+    let stores: Vec<Arc<BlockStore<Vec<u64>>>> =
+        (0..2).map(|_| Arc::new(BlockStore::new(16, 1024))).collect();
+    let pool = ShardedPool::new_with_factories(
+        vec![
+            eng.factory_with_store(stores[0].clone()),
+            eng.factory_with_store(stores[1].clone()),
+        ],
+        1,
+        SchedPolicy::Affinity,
+        1,
+        None,
+        0.0,
+    );
+    let (s0, s1) = (stores[0].clone(), stores[1].clone());
+    pool.set_kv_exchange(Arc::new(move |from, to, _session| {
+        let blocks = if from == 0 { s0.export_sealed() } else { s1.export_sealed() };
+        (if to == 0 { s0.import_sealed(blocks) } else { s1.import_sealed(blocks) }) as u64
+    }));
+
+    let (tx, rx) = channel();
+    let h = pool.register(tx);
+    assert_eq!(pool.node_of(h.session_id()), Some(0));
+    let mut ctx = TokenRope::from_slice(&(0..L as u32).collect::<Vec<_>>());
+    ctx.freeze(); // settled prefix: the node-0 worker seals + publishes it
+    h.submit(0, ctx.clone(), L, L + 1);
+    let warm = recv_verify(&rx, 2000).expect("warm verify on node 0");
+
+    let dest = pool.migrate_session(h.session_id());
+    assert_eq!(dest, Some(1), "migration must pick the other node");
+    assert!(pool.net_stats().migrations() >= 1);
+    assert!(
+        pool.net_stats().kv_blocks_pushed() >= (L / 16) as u64,
+        "the sealed blocks never rode the message plane: {} pushed",
+        pool.net_stats().kv_blocks_pushed()
+    );
+
+    // Same span through the migrated session: the destination's cold
+    // worker restores every settled position from the imported blocks.
+    let before = pool.stats().kv_tokens_redecoded();
+    h.submit(0, ctx.clone(), L, L + 1);
+    let cold = recv_verify(&rx, 2000).expect("verify on node 1 after migration");
+    assert_eq!(cold.preds, warm.preds, "migration changed predictions");
+    assert_eq!(
+        pool.stats().kv_tokens_redecoded() - before,
+        0,
+        "migrated session re-decoded settled tokens"
+    );
+    assert!(pool.stats().kv_tokens_reused() >= L as u64);
+}
