@@ -37,6 +37,13 @@
 //!   concurrency while SP has diminishing returns), bit-identical to
 //!   non-SI greedy, including under a chaos seed that lands node kills
 //!   and partitions on the message plane.
+//! - **kv pressure** — the tiered-KV probe (`kv_pressure_*` fields):
+//!   settle a long stream, wash the hot tier with a second one, prefetch
+//!   the first stream's block keys, re-serve — on a hot/cold store vs
+//!   the single-tier control (`cold_bytes = 0`); gates that cold hits
+//!   and promotions actually happened and the re-decode ratio stays
+//!   ≤ 0.5 (graceful degradation, not an eviction cliff), plus the
+//!   cross-session prefix-dedup share.
 //!
 //! Results land in `BENCH_hotpath.json` (override the path with
 //! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
@@ -48,7 +55,10 @@
 use dsi::config::{AlgoKind, LatencyProfile};
 use dsi::context;
 use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
-use dsi::coordinator::{run_nonsi, DsiSession, FaultPlan, OnlineConfig, SchedPolicy, TargetPool};
+use dsi::coordinator::{
+    run_nonsi, DsiSession, FaultPlan, OnlineConfig, SchedPolicy, ServerRole, TargetPool,
+};
+use dsi::runtime::kv::{key_init, key_step, BlockStore};
 use dsi::server::router::Router;
 use dsi::server::{AdmissionMode, Response, Server};
 use dsi::stats::percentile;
@@ -56,7 +66,8 @@ use dsi::util::benchkit::suite;
 use dsi::util::json::{num, obj, Json};
 use dsi::util::Rng64;
 use dsi::workload::{ArrivalProcess, PromptGen, PromptProfile, Request, SloClass, TenantSpec};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Four sessions generating concurrently on a 2-worker (oversubscribed)
 /// pool with the given micro-batch cap; returns (settled tokens per
@@ -332,6 +343,90 @@ fn assert_cross_node_lossless(reqs: &[Request], resps: &[Response], what: &str) 
     }
 }
 
+/// One round of the tiered-KV pressure workload on a store with the
+/// given cold-tier byte budget: settle stream A (publishes its sealed
+/// blocks), wash the hot tier with stream B, prefetch A's block keys
+/// (miss-with-promotion on the tiered store, plain misses on the
+/// `cold_bytes = 0` control), wait for the background promoter, then
+/// re-serve A and count what re-decoded. A final pass touches the
+/// resident blocks under two session tags to exercise the cross-session
+/// prefix-dedup gauge. Returns (re-decoded tokens, the store, blocks
+/// per stream).
+fn kv_pressure_round(cold_bytes: usize, smoke: bool) -> (u64, Arc<BlockStore<Vec<u64>>>, usize) {
+    const B: usize = 16; // block tokens
+    let len: usize = if smoke { 256 } else { 1024 };
+    let blocks = len / B;
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(1.0),
+        drafter: LatencyProfile::uniform(0.2),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.8, seed: 193 },
+        max_context: 8192,
+    };
+    // Hot capacity `blocks + 8`: one stream fits, the two-stream working
+    // set does not — so the wash forces stream A's head out of the hot
+    // tier, but a fully-promoted A can be resident again afterwards.
+    let store: Arc<BlockStore<Vec<u64>>> =
+        Arc::new(BlockStore::with_cold_bytes(B, blocks + 8, cold_bytes));
+    let factory = eng.factory_with_store(store.clone());
+
+    let a: Vec<u32> = (0..len as u32).map(|i| (i * 7 + 3) % 251).collect();
+    let b: Vec<u32> = (0..len as u32).map(|i| (i * 11 + 5) % 241).collect();
+    let mut rope_a = context::TokenRope::from_slice(&a);
+    rope_a.freeze();
+    let mut rope_b = context::TokenRope::from_slice(&b);
+    rope_b.freeze();
+    let serve = |rope: &context::TokenRope| -> u64 {
+        let mut server = factory(ServerRole::Target, 0);
+        let before = server.kv_reuse().tokens_redecoded;
+        let _ = server.predictions(rope, rope.len(), rope.len() + 1);
+        server.kv_reuse().tokens_redecoded - before
+    };
+    serve(&rope_a);
+    serve(&rope_b);
+
+    // Prefetch pass over A's block keys: every hot miss that matches a
+    // cold block queues an async promotion.
+    let keys: Vec<(u64, usize, Vec<u32>)> = {
+        let mut keys = Vec::new();
+        let mut k = key_init();
+        for (i, chunk) in a.chunks(B).enumerate() {
+            for &t in chunk {
+                k = key_step(k, t);
+            }
+            keys.push((k, i * B, chunk.to_vec()));
+        }
+        keys
+    };
+    for (k, start, expect) in &keys {
+        let _ = store.lookup(*k, *start, expect);
+    }
+    store.promote_now();
+    // The background promoter may still be decoding keys it popped before
+    // promote_now drained the queue: wait until the next lookups actually
+    // hit (the miss-with-promotion → next-lookup-hits contract). The
+    // control store has no promoter and nothing can ever hit — skip the
+    // wait entirely.
+    let deadline = Instant::now() + Duration::from_millis(500);
+    while cold_bytes > 0 && Instant::now() < deadline {
+        let all_hot = keys
+            .iter()
+            .all(|(k, start, expect)| store.lookup(*k, *start, expect).is_some());
+        if all_hot {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let redecoded = serve(&rope_a);
+    // Two tagged sessions touching the same resident prefix: the
+    // prefix-dedup gauge counts each shared block exactly once.
+    for (k, start, expect) in &keys {
+        let _ = store.lookup_tagged(*k, *start, expect, Some(7001));
+        let _ = store.lookup_tagged(*k, *start, expect, Some(7002));
+    }
+    (redecoded, store, blocks)
+}
+
 /// Arrival-inclusive TTFT (queueing delay + dispatch-to-first-token) per
 /// response — the quantity continuous batching improves; the scheduler
 /// cannot shrink `ttft_ms` alone, only the queueing in front of it.
@@ -551,6 +646,23 @@ fn main() {
         xn_plan.injected(),
     );
 
+    // The tiered-KV pressure probe: the same settle → wash → prefetch →
+    // re-serve round on a hot/cold store vs the single-tier control
+    // (cold_bytes = 0). The cold tier must turn the wash's capacity
+    // misses into promotions that cut the re-serve's re-decode work.
+    let (kvp_redecoded, kvp_store, kvp_blocks) = kv_pressure_round(1 << 20, smoke);
+    let (kvp_control_redecoded, _, _) = kv_pressure_round(0, smoke);
+    let kvp = kvp_store.stats_handle();
+    let kvp_ratio = kvp_redecoded as f64 / kvp_control_redecoded.max(1) as f64;
+    let kvp_dedup_share = kvp.shared_blocks() as f64 / kvp_blocks as f64;
+    println!(
+        "  kv pressure probe: cold hits {} promoted {} | re-decoded {kvp_redecoded} \
+         vs single-tier {kvp_control_redecoded} tokens (ratio {kvp_ratio:.2}) | \
+         dedup share {kvp_dedup_share:.2}",
+        kvp.cold_hits(),
+        kvp.promoted(),
+    );
+
     let out = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("smoke", Json::Bool(smoke)),
@@ -635,6 +747,12 @@ fn main() {
         ("cross_node_probe_lossless", Json::Bool(true)),
         ("cross_node_probe_chaos_faults_injected", num(xn_plan.injected() as f64)),
         ("cross_node_probe_chaos_lossless", Json::Bool(true)),
+        ("kv_pressure_cold_hits", num(kvp.cold_hits() as f64)),
+        ("kv_pressure_promoted", num(kvp.promoted() as f64)),
+        ("kv_pressure_redecoded_tokens", num(kvp_redecoded as f64)),
+        ("kv_pressure_redecoded_tokens_single_tier_control", num(kvp_control_redecoded as f64)),
+        ("kv_pressure_redecode_ratio", num(kvp_ratio)),
+        ("kv_pressure_dedup_share", num(kvp_dedup_share)),
     ]);
     let path = std::env::var("BENCH_HOTPATH_OUT")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
@@ -740,5 +858,22 @@ fn main() {
         xn_plan.injected() >= 3,
         "cross-node chaos plan only fired {} of >= 3 scheduled faults",
         xn_plan.injected()
+    );
+    // The tiered-KV graceful-degradation gates: under forced hot-tier
+    // thrash the cold tier must actually absorb the wash (cold hits and
+    // promotions happened) and the promoter must cut re-decode work to
+    // at most half the single-tier control's — a cold tier that saves
+    // nothing is dead weight. The dedup gate proves the cross-session
+    // gauge sees the resident prefix, not a rounding sliver.
+    assert!(kvp.cold_hits() >= 1, "kv pressure probe never hit the cold tier");
+    assert!(kvp.promoted() >= 1, "kv pressure probe never promoted a cold block");
+    assert!(
+        kvp_ratio <= 0.5,
+        "tiered degradation not graceful: re-decoded {kvp_redecoded} vs \
+         single-tier {kvp_control_redecoded} tokens (ratio {kvp_ratio:.2})"
+    );
+    assert!(
+        kvp_dedup_share > 0.5,
+        "cross-session dedup gauge saw only {kvp_dedup_share:.2} of the resident prefix"
     );
 }

@@ -398,6 +398,10 @@ fn drafter_loop(
     ctl: Arc<SessionCtl>,
 ) {
     let mut server = factory(ServerRole::Drafter, drafter_id);
+    // The drafter's forwards belong to this pool session: tag them so the
+    // drafter-side block store tracks the session's block set (selective
+    // KV migration) and cross-session sharing.
+    server.bind_session(drafter_id as u64);
     let horizon = server.max_context();
     let mut gen = 0u64;
     let mut ctx = TokenRope::new();

@@ -381,6 +381,10 @@ impl LmServer for FaultyServer {
         self.inner.predict_batch(reqs)
     }
 
+    fn bind_session(&mut self, session: u64) {
+        self.inner.bind_session(session)
+    }
+
     fn max_context(&self) -> usize {
         self.inner.max_context()
     }

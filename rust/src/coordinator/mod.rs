@@ -38,8 +38,8 @@ pub mod wait_engine;
 pub use dsi::{run_dsi, CtlTelemetry, DsiSession, SessionCtl};
 pub use fault::{faulty_factory, FaultAction, FaultPlan, FaultStats, FaultyServer};
 pub use node::{
-    Envelope, LoopbackTransport, NodeHandle, NodeTransport, ServingPool, ShardedPool,
-    SimulatedHop,
+    selective_kv_exchange, Envelope, LoopbackTransport, NodeHandle, NodeTransport, ServingPool,
+    ShardedPool, SimulatedHop,
 };
 pub use nonsi::{run_nonsi, run_nonsi_with};
 pub use pool::{PoolHandle, PoolStats, SchedPolicy, SessionMsg, TargetPool, VerifyResult};
@@ -115,6 +115,12 @@ pub struct BatchReq {
     pub ctx: TokenRope,
     pub from: usize,
     pub to: usize,
+    /// Pool session the lane belongs to (`0` = untagged, e.g. ad-hoc
+    /// baseline calls). Tagged lanes let the engine's [`BlockStore`]
+    /// (crate::runtime::kv::BlockStore) maintain per-session block sets
+    /// — the substrate of selective KV migration — and its
+    /// cross-session prefix-dedup gauges.
+    pub session: u64,
 }
 
 /// A model server owned by exactly one thread (target-pool worker, drafter
@@ -147,8 +153,22 @@ pub trait LmServer {
     /// sum, and the real engine decodes lanes in lockstep over per-lane
     /// KV sessions.
     fn predict_batch(&mut self, reqs: &[BatchReq]) -> Vec<Vec<u32>> {
-        reqs.iter().map(|r| self.predictions(&r.ctx, r.from, r.to)).collect()
+        reqs.iter()
+            .map(|r| {
+                if r.session != 0 {
+                    self.bind_session(r.session);
+                }
+                self.predictions(&r.ctx, r.from, r.to)
+            })
+            .collect()
     }
+
+    /// Tag subsequent single-lane calls (`predictions` / `advance`) with
+    /// a pool session id, so the engine's settled-block store can track
+    /// per-session block sets and cross-session sharing. Batched lanes
+    /// carry their tag in [`BatchReq::session`] instead. Stateless
+    /// servers may ignore it; `0` clears the tag.
+    fn bind_session(&mut self, _session: u64) {}
 
     /// Upper bound on context length (KV capacity). Drafting and
     /// speculation stop at this horizon.

@@ -37,11 +37,14 @@
 //!   `partition@N:MS` events drive both through the message-plane
 //!   chokepoint.
 //! - **KV block exchange**: a migrating session's sealed settled blocks
-//!   move store-to-store via
-//!   [`BlockStore::export_sealed`](crate::runtime::kv::BlockStore::export_sealed)
-//!   / `import_sealed` (Arc moves in-process; the [`Envelope::KvPush`]
-//!   envelope charges the transfer on the message plane), so the session
-//!   re-decodes zero settled tokens on its new node.
+//!   move store-to-store, *selectively* — [`selective_kv_exchange`] wires
+//!   the plane's hook to per-node stores via
+//!   [`BlockStore::export_for_session`](crate::runtime::kv::BlockStore::export_for_session)
+//!   / `import_sealed` with per-`(session, dest)` watermarks, so a
+//!   migration pushes only the migrating session's block-set delta, never
+//!   the whole store (Arc moves in-process; the [`Envelope::KvPush`]
+//!   envelope charges the transfer on the message plane). The session
+//!   still re-decodes zero settled tokens on its new node.
 
 use super::fault::{FaultPlan, TransportFault};
 use super::pool::{
@@ -262,6 +265,31 @@ impl NetStats {
 /// `BlockStore`s (`export_sealed` → `import_sealed`); the plane itself
 /// stays engine-agnostic and only *charges* the push on the transport.
 pub type KvExchange = Arc<dyn Fn(usize, usize, u64) -> u64 + Send + Sync>;
+
+/// The standard [`KvExchange`] wiring over per-node block stores
+/// (`stores[i]` backs node `i`): a migration moves only the *migrating
+/// session's* block set, and only the delta since the last push to that
+/// destination. Per-`(session, dest)` publish watermarks (from
+/// [`BlockStore::export_for_session`]) make repeat migrations
+/// incremental — blocks the destination already received are never
+/// re-pushed, so the charged `KvPush` stays proportional to what the
+/// session actually settled since its last move, not to store size.
+pub fn selective_kv_exchange<P: Send + Sync + 'static>(
+    stores: Vec<Arc<crate::runtime::kv::BlockStore<P>>>,
+) -> KvExchange {
+    let marks: Mutex<HashMap<(u64, usize), u64>> = Mutex::new(HashMap::new());
+    Arc::new(move |from, to, session| {
+        let (Some(src), Some(dst)) = (stores.get(from), stores.get(to)) else {
+            return 0;
+        };
+        let since = relock(&marks).get(&(session, to)).copied().unwrap_or(0);
+        let (blocks, watermark) = src.export_for_session(session, since);
+        relock(&marks).insert((session, to), watermark);
+        let moved = blocks.len() as u64;
+        dst.import_sealed(blocks);
+        moved
+    })
+}
 
 /// One node shard: a full supervised [`TargetPool`] plus its link.
 struct NodeSlot {

@@ -67,21 +67,18 @@ use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
-/// Poison-recovering lock. A worker that panics mid-forward (organic bug
-/// or injected fault) must never wedge the pool: every mutation under
-/// these mutexes is a single push/pop/remove that either happened or
-/// didn't — there is no partially-applied state a panic can expose — so
-/// recovering the guard is sound, and the supervisor (not the lock
-/// poison) is what owns failure handling. Crate-visible because the
-/// server's controller and admission threads share the same contract:
-/// their guarded state is also single-step, so one panicking thread must
-/// degrade that thread, never cascade the serve through lock poison.
-pub(crate) fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
+/// Poison-recovering lock (now hosted in [`crate::util`] so leaf modules
+/// like `runtime::kv` can share it without a coordinator dependency).
+/// A worker that panics mid-forward (organic bug or injected fault) must
+/// never wedge the pool: every mutation under these mutexes is a single
+/// push/pop/remove that either happened or didn't — there is no
+/// partially-applied state a panic can expose — so recovering the guard
+/// is sound, and the supervisor (not the lock poison) is what owns
+/// failure handling.
+pub(crate) use crate::util::relock;
 
 /// The result-plane seam the cross-node layer plugs in: when a pool is
 /// built as a node shard, every session-bound message a worker (or the
@@ -867,7 +864,7 @@ impl TargetPool {
                             continue;
                         }
                         lanes.push(Lane { session, gen, from, wait_ns });
-                        reqs.push(BatchReq { ctx, from, to });
+                        reqs.push(BatchReq { ctx, from, to, session });
                     }
                     if lanes.is_empty() {
                         continue; // the whole drain was stale padding

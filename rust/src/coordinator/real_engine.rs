@@ -36,6 +36,10 @@ pub struct RealServer {
     /// tasks (lanes) those forwards served — the real engine's side of the
     /// [`ForwardCost`] surface the adaptive controller's estimators read.
     cost: ForwardCost,
+    /// Pool session bound via [`LmServer::bind_session`] (`0` = untagged):
+    /// the tag stamped onto lane 0 for serial calls, and the fallback for
+    /// batched lanes whose [`BatchReq::session`] is `0`.
+    bound: u64,
 }
 
 impl RealServer {
@@ -73,6 +77,7 @@ impl RealServer {
             sessions: vec![sess],
             reuse: KvReuse::default(),
             cost: ForwardCost::default(),
+            bound: 0,
         })
     }
 
@@ -142,6 +147,7 @@ fn serve_lane(
 impl LmServer for RealServer {
     fn predictions(&mut self, ctx: &TokenRope, from: usize, to: usize) -> Vec<u32> {
         let t0 = std::time::Instant::now();
+        self.sessions[0].session = self.bound;
         let preds =
             serve_lane(&self.rt, &mut self.sessions[0], &mut self.reuse, ctx, from, to);
         self.cost.spent_ms += t0.elapsed().as_secs_f64() * 1e3;
@@ -161,7 +167,15 @@ impl LmServer for RealServer {
     fn predict_batch(&mut self, reqs: &[BatchReq]) -> Vec<Vec<u32>> {
         if reqs.len() <= 1 {
             // Single lane: keep the serial path (and lane 0's warmth).
-            return reqs.iter().map(|r| self.predictions(&r.ctx, r.from, r.to)).collect();
+            return reqs
+                .iter()
+                .map(|r| {
+                    if r.session != 0 {
+                        self.bound = r.session;
+                    }
+                    self.predictions(&r.ctx, r.from, r.to)
+                })
+                .collect();
         }
         let batch_t0 = std::time::Instant::now();
         // Lane routing: warmest session wins. A cold request (no shared
@@ -251,6 +265,7 @@ impl LmServer for RealServer {
                 );
                 let li = lane_of[ri];
                 let sess = &mut self.sessions[li];
+                sess.session = if r.session != 0 { r.session } else { self.bound };
                 self.rt.resync(sess, &r.ctx);
                 let start = if sess.pos == 0 {
                     let pre = r.from.min(r.ctx.len());
@@ -313,6 +328,10 @@ impl LmServer for RealServer {
         self.cost.spent_ms += batch_t0.elapsed().as_secs_f64() * 1e3;
         self.cost.forwards += reqs.len() as u64;
         out
+    }
+
+    fn bind_session(&mut self, session: u64) {
+        self.bound = session;
     }
 
     fn max_context(&self) -> usize {
@@ -431,9 +450,9 @@ mod tests {
             r
         };
         let reqs = vec![
-            super::BatchReq { ctx: a.truncated(5), from: 4, to: 6 },
-            super::BatchReq { ctx: b.clone(), from: 3, to: 5 },
-            super::BatchReq { ctx: a.clone(), from: 5, to: 7 },
+            super::BatchReq { ctx: a.truncated(5), from: 4, to: 6, session: 0 },
+            super::BatchReq { ctx: b.clone(), from: 3, to: 5, session: 0 },
+            super::BatchReq { ctx: a.clone(), from: 5, to: 7, session: 0 },
         ];
 
         let mut batched = RealServer::load(&dir, ServerRole::Target).unwrap();

@@ -53,6 +53,31 @@ pub fn precise_wait(ms: f64) {
     }
 }
 
+/// The wait engine's cold-tier codec: oracle hash-chain checkpoints are
+/// plain `u64` words, spilled as little-endian rows. Bit-exact by
+/// construction, so a promoted checkpoint block restores the identical
+/// chain a sealed one carried.
+impl kv::SpillCodec for Vec<u64> {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 8);
+        for v in self {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() % 8 != 0 {
+            return None;
+        }
+        Some(
+            bytes
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                .collect(),
+        )
+    }
+}
+
 /// Deterministic token oracle shared by all servers of a run.
 #[derive(Debug, Clone)]
 pub struct Oracle {
@@ -155,6 +180,12 @@ pub struct WaitServer {
     published: usize,
     /// Cumulative reuse accounting (see [`LmServer::kv_reuse`]).
     reuse: KvReuse,
+    /// Pool session the current lane serves (0 = untagged): single-lane
+    /// servers (the drafter) are bound once via
+    /// [`LmServer::bind_session`]; batched target lanes re-bind per
+    /// request from [`BatchReq::session`]. Tags feed the store's
+    /// per-session block sets and dedup gauges.
+    session: u64,
     /// Storage-identity witness of the validated prefix, so a context
     /// that structurally extends it (the drafter's steady state) skips
     /// the O(L) token re-comparison entirely.
@@ -213,7 +244,8 @@ impl WaitServer {
         while start + b <= ctx.len() && self.tokens.len() < upto {
             let expect: Vec<u32> = ctx.iter_range(start, start + b).collect();
             let key = expect.iter().fold(self.keys[start], |k, &t| kv::key_step(k, t));
-            let Some(block) = self.store.lookup(key, start, &expect) else { break };
+            let tag = (self.session != 0).then_some(self.session);
+            let Some(block) = self.store.lookup_tagged(key, start, &expect, tag) else { break };
             if block.payload.len() != b {
                 break; // foreign payload shape: treat as a miss
             }
@@ -234,16 +266,18 @@ impl WaitServer {
         let b = self.store.block_tokens();
         let end = (self.tokens.len() / b) * b;
         let mut s = (self.published / b) * b;
+        let tag = (self.session != 0).then_some(self.session);
         while s + b <= end {
             let key = self.keys[s + b];
             if !self.store.contains(key) {
-                self.store.publish(
+                self.store.publish_tagged(
                     key,
                     KvBlock {
                         start: s,
                         tokens: self.tokens[s..s + b].to_vec(),
                         payload: self.hashes[s + 1..s + b + 1].to_vec(),
                     },
+                    tag,
                 );
             }
             s += b;
@@ -298,11 +332,22 @@ impl LmServer for WaitServer {
         precise_wait(charged);
         self.spent_ms += charged;
         self.forwards += reqs.len();
-        reqs.iter().map(|r| self.lane_predictions(&r.ctx, r.from, r.to)).collect()
+        reqs.iter()
+            .map(|r| {
+                if r.session != 0 {
+                    self.session = r.session;
+                }
+                self.lane_predictions(&r.ctx, r.from, r.to)
+            })
+            .collect()
     }
 
     fn max_context(&self) -> usize {
         self.max_context
+    }
+
+    fn bind_session(&mut self, session: u64) {
+        self.session = session;
     }
 
     fn advance(&mut self, ctx: &TokenRope) {
@@ -369,6 +414,7 @@ impl WaitEngine {
                 store: store.clone(),
                 published: 0,
                 reuse: KvReuse::default(),
+                session: 0,
                 witness: PrefixWitness::default(),
             })
         })
@@ -464,9 +510,9 @@ mod tests {
         b.push(9);
         b.freeze();
         let reqs = vec![
-            BatchReq { ctx: a.truncated(5), from: 4, to: 6 },
-            BatchReq { ctx: a.clone(), from: 5, to: 7 },
-            BatchReq { ctx: b.clone(), from: 4, to: 7 },
+            BatchReq { ctx: a.truncated(5), from: 4, to: 6, session: 0 },
+            BatchReq { ctx: a.clone(), from: 5, to: 7, session: 0 },
+            BatchReq { ctx: b.clone(), from: 4, to: 7, session: 0 },
         ];
 
         let mut batched = eng.factory()(ServerRole::Target, 0);
@@ -519,7 +565,7 @@ mod tests {
         // A 3-lane batch charges max + 2 * 5% of base, over 3 more tasks.
         let before = s.forward_cost();
         let reqs: Vec<BatchReq> = (0..3)
-            .map(|_| BatchReq { ctx: ctx.clone(), from: 2, to: 6 })
+            .map(|_| BatchReq { ctx: ctx.clone(), from: 2, to: 6, session: 0 })
             .collect();
         let _ = s.predict_batch(&reqs);
         let delta = s.forward_cost() - before;

@@ -49,10 +49,18 @@
 //!   from JAX/Pallas by `python/compile/aot.py`) into PJRT CPU executables;
 //!   npy weight loading, sampling, KV-cache state (including the ragged
 //!   lockstep `decode_batch` over independent lane sessions), byte
-//!   tokenizer, and [`runtime::kv`] — the settled-block store (fixed-size,
-//!   ref-counted, prefix-keyed KV blocks shared across sessions and
-//!   same-role workers, so resync restores rolled-back state instead of
-//!   re-decoding it; sizing via `--kv-block-tokens`/`--kv-capacity-blocks`).
+//!   tokenizer, and [`runtime::kv`] — the tiered settled-block store
+//!   (fixed-size, ref-counted, prefix-keyed KV blocks shared across
+//!   sessions and same-role workers, so resync restores rolled-back state
+//!   instead of re-decoding it; sizing via
+//!   `--kv-block-tokens`/`--kv-capacity-blocks`). Under memory pressure
+//!   the hot RAM tier demotes LRU blocks into a byte-budgeted cold tier
+//!   (`SpillCodec`-encoded, `--kv-cold-bytes`; file-backed slots behind
+//!   the `kv-cold-file` feature) instead of dropping them; a background
+//!   promoter rehydrates cold hits asynchronously so the verify path
+//!   never blocks on a decode-from-cold, and per-session block tracking
+//!   powers selective incremental migration export and cross-session
+//!   prefix-dedup gauges.
 //!   The PJRT client proper is gated behind the `pjrt` feature (stubbed in
 //!   the default dependency-free build).
 //! - [`server`] — the serving front: a continuous-batching multi-session

@@ -60,6 +60,10 @@ COMMANDS (system):
                             default 16)
                           --kv-capacity-blocks N (block-store LRU capacity,
                             default 4096)
+                          --kv-cold-bytes N (cold-tier byte budget: hot-tier
+                            evictions demote encoded blocks into a cold tier
+                            a background promoter rehydrates from; 0 =
+                            single-tier store, the default)
                           --adaptive on|off (adaptive control plane: live
                             estimators drive Equation-1 replanning, uneven
                             SP water-filling, admission-aware batch sizing;
@@ -321,6 +325,7 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
             dsi::runtime::kv::DEFAULT_CAPACITY_BLOCKS,
         )
         .max(1),
+        cold_bytes: flag_usize(flags, "kv-cold-bytes", dsi::runtime::kv::DEFAULT_COLD_BYTES),
     };
     let burst = flag_usize(flags, "burst", 0);
     let gap_ms = flag_f64(flags, "gap", 50.0);

@@ -1,4 +1,5 @@
-//! Settled KV blocks: the cache as a shareable, prefix-keyed resource.
+//! Settled KV blocks: the cache as a shareable, prefix-keyed, **tiered**
+//! resource.
 //!
 //! The paper charges each target server one forward per verification task
 //! because "each server maintains its own KV cache" — and until now our
@@ -24,6 +25,37 @@
 //!   data alive. Eviction itself is least-recently-used under a block
 //!   capacity.
 //!
+//! ## The two tiers
+//!
+//! At production memory scale the hot RAM tier alone silently converts
+//! eviction pressure into re-decodes. With a cold budget
+//! (`--kv-cold-bytes` → [`BlockStore::with_cold_bytes`]), eviction
+//! **demotes** the LRU victim into a cold tier instead of dropping it:
+//! the payload is run through its [`SpillCodec`] into a compact byte
+//! form (in-RAM by default; an append-only spill file under the
+//! `kv-cold-file` cargo feature) and indexed under the same prefix key,
+//! LRU-bounded by bytes. A verified lookup that misses hot but matches
+//! cold is a **miss-with-promotion**: it returns `None` immediately —
+//! the verify path never blocks on a decode-from-cold — but enqueues the
+//! key for the background promoter thread, which decodes it back into
+//! the hot tier so the *next* lookup of that prefix hits. Losslessness
+//! never depends on promotion timing: until the block is hot again the
+//! caller simply re-decodes, exactly as if the block were gone.
+//!
+//! ## Session block sets and selective export
+//!
+//! Tagged lookups/publishes ([`BlockStore::publish_tagged`] /
+//! [`lookup_tagged`](BlockStore::lookup_tagged)) record which sessions
+//! touched which keys, under a monotonically increasing touch sequence.
+//! [`export_for_session`](BlockStore::export_for_session) then exports
+//! only one session's blocks *newer than a watermark* — the selective,
+//! incremental form of [`export_sealed`](BlockStore::export_sealed) that
+//! cross-node migration uses so a `KvPush` moves the migrating session's
+//! delta, never the whole store. The same tagging powers the
+//! cross-session prefix-dedup gauges ([`StoreStats::shared_blocks`]):
+//! blocks touched by ≥2 distinct sessions are exactly the system-prompt
+//! sharing a million-user fleet wins on.
+//!
 //! A store is shared across every `Session` of a `ModelRuntime` and — via
 //! the engine factories — across all pool workers of one role (identical
 //! weights produce bit-identical rows for identical prefixes, so sharing
@@ -32,9 +64,10 @@
 //! suffix to be re-decoded; the pool's `kv_tokens_reused` /
 //! `kv_tokens_redecoded` counters measure the win.
 
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::util::relock;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Default tokens per block. Small enough that partially-settled tails
 /// waste little, large enough that per-block bookkeeping stays trivial
@@ -42,14 +75,26 @@ use std::sync::{Arc, Mutex};
 pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 /// Default store capacity, in blocks (LRU-evicted beyond this).
 pub const DEFAULT_CAPACITY_BLOCKS: usize = 4096;
+/// Default cold-tier byte budget: 0 = cold tier off, eviction drops
+/// blocks exactly as the single-tier store did (the bit-identical
+/// control).
+pub const DEFAULT_COLD_BYTES: usize = 0;
+
+/// Hot-tier LRU stamps start here so bulk imports can always be stamped
+/// *below* every live block (see [`BlockStore::import_sealed`]) without
+/// underflowing.
+const STAMP_BASE: u64 = 1 << 32;
 
 /// Deployment-facing store sizing, threaded from the launcher's
-/// `--kv-block-tokens` / `--kv-capacity-blocks` flags down to the engine
-/// factories (the defaults above apply when unset).
+/// `--kv-block-tokens` / `--kv-capacity-blocks` / `--kv-cold-bytes`
+/// flags down to the engine factories (the defaults above apply when
+/// unset).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvStoreConfig {
     pub block_tokens: usize,
     pub capacity_blocks: usize,
+    /// Cold-tier byte budget; 0 disables the cold tier entirely.
+    pub cold_bytes: usize,
 }
 
 impl Default for KvStoreConfig {
@@ -57,14 +102,18 @@ impl Default for KvStoreConfig {
         Self {
             block_tokens: DEFAULT_BLOCK_TOKENS,
             capacity_blocks: DEFAULT_CAPACITY_BLOCKS,
+            cold_bytes: DEFAULT_COLD_BYTES,
         }
     }
 }
 
 impl KvStoreConfig {
-    /// Build a store of this sizing.
-    pub fn build<P>(&self) -> BlockStore<P> {
-        BlockStore::new(self.block_tokens, self.capacity_blocks)
+    /// Build a store of this sizing. The payload must carry a
+    /// [`SpillCodec`] so a nonzero `cold_bytes` budget can encode
+    /// demoted blocks (with `cold_bytes == 0` the codec is never
+    /// invoked and the store behaves exactly like the single-tier one).
+    pub fn build<P: SpillCodec + Send + Sync + 'static>(&self) -> BlockStore<P> {
+        BlockStore::with_cold_bytes(self.block_tokens, self.capacity_blocks, self.cold_bytes)
     }
 }
 
@@ -88,6 +137,41 @@ pub fn key_of<I: IntoIterator<Item = u32>>(tokens: I) -> u64 {
     tokens.into_iter().fold(key_init(), key_step)
 }
 
+/// A payload that can round-trip through the cold tier's byte form.
+///
+/// `decode(encode(p)) == Some(p)` must hold bit-exactly — a demoted
+/// block that is later promoted serves the *same* rows/checkpoints it
+/// was sealed with, so tiering can never break losslessness. A `decode`
+/// of foreign bytes may return `None`; the promoter then drops the
+/// entry (the caller re-decodes, correct by construction).
+///
+/// Implementations live next to their payloads: `Vec<u64>` (the wait
+/// engine's oracle checkpoints) in `coordinator::wait_engine`,
+/// `Vec<f32>` (cache rows) in `runtime::pjrt` / its stub, and `Vec<u32>`
+/// below (the unit/integration-test payload).
+pub trait SpillCodec: Sized {
+    fn encode(&self) -> Vec<u8>;
+    fn decode(bytes: &[u8]) -> Option<Self>;
+}
+
+/// Test/bench payload codec (little-endian u32 rows) — also what keeps
+/// `BlockStore<Vec<u32>>` usable from integration tests.
+impl SpillCodec for Vec<u32> {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 4);
+        for v in self {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() % 4 != 0 {
+            return None;
+        }
+        Some(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
 /// One settled cache block: `tokens` covers stream positions
 /// `[start, start + tokens.len())`, and `payload` is whatever the engine
 /// needs to restore those positions without re-decoding them.
@@ -106,6 +190,19 @@ pub struct StoreStats {
     published: AtomicU64,
     evicted: AtomicU64,
     tokens_restored: AtomicU64,
+    /// Hot-tier evictions absorbed by the cold tier instead of dropped.
+    demoted: AtomicU64,
+    /// Cold blocks rehydrated back into the hot tier.
+    promoted: AtomicU64,
+    /// Hot misses that matched a cold block (each enqueues a promotion).
+    cold_hits: AtomicU64,
+    /// Current encoded bytes resident in the cold tier (a gauge).
+    cold_bytes: AtomicU64,
+    /// Blocks touched by ≥2 distinct sessions (cross-session prefix
+    /// dedup — counted once, when the second session arrives).
+    shared_blocks: AtomicU64,
+    /// Tagged hits whose session differs from the block's first toucher.
+    cross_session_hits: AtomicU64,
 }
 
 impl StoreStats {
@@ -125,6 +222,30 @@ impl StoreStats {
     pub fn tokens_restored(&self) -> u64 {
         self.tokens_restored.load(Ordering::Relaxed)
     }
+    pub fn demoted(&self) -> u64 {
+        self.demoted.load(Ordering::Relaxed)
+    }
+    pub fn promoted(&self) -> u64 {
+        self.promoted.load(Ordering::Relaxed)
+    }
+    pub fn cold_hits(&self) -> u64 {
+        self.cold_hits.load(Ordering::Relaxed)
+    }
+    pub fn cold_bytes(&self) -> u64 {
+        self.cold_bytes.load(Ordering::Relaxed)
+    }
+    pub fn shared_blocks(&self) -> u64 {
+        self.shared_blocks.load(Ordering::Relaxed)
+    }
+    pub fn cross_session_hits(&self) -> u64 {
+        self.cross_session_hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Which session first touched a key, and whether a second one ever did.
+struct Owner {
+    first: u64,
+    shared: bool,
 }
 
 struct Inner<P> {
@@ -135,75 +256,426 @@ struct Inner<P> {
     /// `pop_first` and a touch is one remove + insert — O(log n), never
     /// a full-map scan while every worker waits on the mutex.
     by_stamp: BTreeMap<u64, u64>,
-    /// Monotonic use counter backing the LRU stamps.
+    /// Monotonic use counter backing the LRU stamps. Starts at
+    /// [`STAMP_BASE`] so imports can be stamped strictly below every
+    /// live block (see [`BlockStore::import_sealed`]).
     clock: u64,
+    /// Monotonic touch sequence backing the per-session watermarks.
+    touch_seq: u64,
+    /// session -> (key -> last touch seq): the per-session block set.
+    /// Entries for keys the store no longer holds (hot or cold) are
+    /// pruned lazily by [`BlockStore::export_for_session`].
+    session_blocks: HashMap<u64, HashMap<u64, u64>>,
+    /// key -> first-toucher, for the cross-session dedup gauges.
+    /// Removed when a key leaves both tiers for good.
+    owners: HashMap<u64, Owner>,
 }
 
-/// A shared, bounded store of settled KV blocks. All methods take `&self`
-/// (one short mutex hold each), so a store can sit behind an `Arc` shared
-/// by every session and worker of a model.
-pub struct BlockStore<P> {
+impl<P> Inner<P> {
+    /// Record a tagged touch of `key`: bump the session's watermark seq
+    /// and maintain the dedup gauges. `hit` distinguishes a lookup (which
+    /// counts cross-session reuse) from a publish.
+    fn note_touch(&mut self, session: u64, key: u64, hit: bool, stats: &StoreStats) {
+        self.touch_seq += 1;
+        let seq = self.touch_seq;
+        self.session_blocks.entry(session).or_default().insert(key, seq);
+        match self.owners.entry(key) {
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Owner { first: session, shared: false });
+            }
+            std::collections::hash_map::Entry::Occupied(mut occ) => {
+                let o = occ.get_mut();
+                if o.first != session {
+                    if !o.shared {
+                        o.shared = true;
+                        stats.shared_blocks.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if hit {
+                        stats.cross_session_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cold-tier backing: where encoded payloads live. In-RAM by default so
+// tier-1 needs no disk; an append-only spill file under `kv-cold-file`.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "kv-cold-file"))]
+mod backing {
+    /// In-RAM backing: the slot owns its encoded bytes.
+    #[derive(Default)]
+    pub struct ColdBacking;
+    pub struct Slot(Vec<u8>);
+
+    impl ColdBacking {
+        pub fn write(&mut self, bytes: Vec<u8>) -> Slot {
+            Slot(bytes)
+        }
+        pub fn read(&self, slot: &Slot) -> Vec<u8> {
+            slot.0.clone()
+        }
+        pub fn free(&mut self, _slot: Slot, _live_bytes: usize) {}
+    }
+}
+
+#[cfg(feature = "kv-cold-file")]
+mod backing {
+    use std::io::{Read, Seek, SeekFrom, Write};
+
+    /// File backing: encoded payloads append to an anonymous spill file
+    /// (created with `tempfile`-style unlink-on-open semantics via
+    /// `std::fs`; the path is removed immediately so the file vanishes
+    /// with the process). The file is append-only — freed slots are not
+    /// compacted — but it is truncated whenever the tier drains to zero
+    /// live bytes, which bounds growth at steady state.
+    pub struct ColdBacking {
+        file: std::fs::File,
+        tail: u64,
+    }
+    pub struct Slot {
+        off: u64,
+        len: u64,
+    }
+
+    impl Default for ColdBacking {
+        fn default() -> Self {
+            let dir = std::env::temp_dir();
+            let path = dir.join(format!("dsi-kv-cold-{}.spill", std::process::id()));
+            let file = std::fs::OpenOptions::new()
+                .create(true)
+                .read(true)
+                .write(true)
+                .truncate(true)
+                .open(&path)
+                .expect("open cold-tier spill file");
+            // Unlink immediately: the fd keeps the storage alive, the
+            // namespace entry is gone even on abnormal exit.
+            let _ = std::fs::remove_file(&path);
+            Self { file, tail: 0 }
+        }
+    }
+
+    impl ColdBacking {
+        pub fn write(&mut self, bytes: Vec<u8>) -> Slot {
+            let off = self.tail;
+            self.file.seek(SeekFrom::Start(off)).expect("seek cold spill");
+            self.file.write_all(&bytes).expect("write cold spill");
+            self.tail += bytes.len() as u64;
+            Slot { off, len: bytes.len() as u64 }
+        }
+        pub fn read(&self, slot: &Slot) -> Vec<u8> {
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(slot.off)).expect("seek cold spill");
+            let mut buf = vec![0u8; slot.len as usize];
+            f.read_exact(&mut buf).expect("read cold spill");
+            buf
+        }
+        pub fn free(&mut self, _slot: Slot, live_bytes: usize) {
+            if live_bytes == 0 {
+                self.file.set_len(0).expect("truncate cold spill");
+                self.tail = 0;
+            }
+        }
+    }
+}
+
+use backing::ColdBacking;
+
+/// One demoted block: verification metadata stays decoded (a cold probe
+/// must verify tokens without paying a payload decode); the payload
+/// lives encoded in the backing.
+struct ColdEntry {
+    start: usize,
+    tokens: Vec<u32>,
+    bytes: usize,
+    slot: backing::Slot,
+    stamp: u64,
+}
+
+/// The cold tier proper: encoded blocks under their own byte-budget LRU.
+struct ColdTier {
+    map: HashMap<u64, ColdEntry>,
+    by_stamp: BTreeMap<u64, u64>,
+    clock: u64,
+    used_bytes: usize,
+    backing: ColdBacking,
+}
+
+impl ColdTier {
+    fn new() -> Self {
+        Self {
+            map: HashMap::new(),
+            by_stamp: BTreeMap::new(),
+            clock: 0,
+            used_bytes: 0,
+            backing: ColdBacking::default(),
+        }
+    }
+
+    fn remove(&mut self, key: u64) -> Option<(usize, Vec<u32>, Vec<u8>)> {
+        let e = self.map.remove(&key)?;
+        self.by_stamp.remove(&e.stamp);
+        self.used_bytes -= e.bytes;
+        let bytes = self.backing.read(&e.slot);
+        self.backing.free(e.slot, self.used_bytes);
+        Some((e.start, e.tokens, bytes))
+    }
+
+    /// Drop the LRU entry without reading it back. Returns its key.
+    fn evict_lru(&mut self) -> Option<u64> {
+        let (_, key) = self.by_stamp.pop_first()?;
+        let e = self.map.remove(&key).expect("LRU index entry");
+        self.used_bytes -= e.bytes;
+        self.backing.free(e.slot, self.used_bytes);
+        Some(key)
+    }
+}
+
+/// The cold half of a tiered store: the encoded tier plus the promotion
+/// queue the background promoter drains. The codec is captured as plain
+/// fn pointers at construction so the store's hot-path methods stay free
+/// of `P: SpillCodec` bounds.
+struct ColdPlane<P> {
+    budget: usize,
+    encode: fn(&P) -> Vec<u8>,
+    decode: fn(&[u8]) -> Option<P>,
+    tier: Mutex<ColdTier>,
+    /// Keys awaiting promotion (deduplicated at enqueue).
+    queue: Mutex<VecDeque<u64>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// State shared between the store handle and its promoter thread.
+///
+/// Lock order: `inner` before `cold.tier` before `cold.queue` — never
+/// the reverse. (The promoter takes `cold.tier` alone, releases it, then
+/// takes `inner`; that is order-consistent because it never holds a
+/// later lock while acquiring an earlier one.)
+struct Shared<P> {
     block_tokens: usize,
     capacity: usize,
     inner: Mutex<Inner<P>>,
-    /// Shared so serving metrics can watch eviction pressure without
-    /// holding the store itself alive (see [`BlockStore::stats_handle`]).
     stats: Arc<StoreStats>,
+    cold: Option<ColdPlane<P>>,
+}
+
+impl<P> Shared<P> {
+    /// Demote an evicted hot block into the cold tier (or count a true
+    /// eviction when there is no tier / the block can't fit). Called with
+    /// the `inner` lock held — takes `cold.tier` after it, per the lock
+    /// order.
+    fn demote(&self, key: u64, block: &Arc<KvBlock<P>>, inner: &mut Inner<P>) {
+        let Some(cold) = &self.cold else {
+            inner.owners.remove(&key);
+            self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let bytes = (cold.encode)(&block.payload);
+        if bytes.is_empty() || bytes.len() > cold.budget {
+            inner.owners.remove(&key);
+            self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut tier = relock(&cold.tier);
+        if !tier.map.contains_key(&key) {
+            let len = bytes.len();
+            tier.clock += 1;
+            let stamp = tier.clock;
+            let slot = tier.backing.write(bytes);
+            tier.map.insert(
+                key,
+                ColdEntry { start: block.start, tokens: block.tokens.clone(), bytes: len, slot, stamp },
+            );
+            tier.by_stamp.insert(stamp, key);
+            tier.used_bytes += len;
+            self.stats.demoted.fetch_add(1, Ordering::Relaxed);
+        }
+        while tier.used_bytes > cold.budget {
+            // Past the byte budget the coldest encoded block really is
+            // dropped — the tier degrades exactly like the single-tier
+            // store did, just much later.
+            if let Some(gone) = tier.evict_lru() {
+                inner.owners.remove(&gone);
+                self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+            } else {
+                break;
+            }
+        }
+        self.stats.cold_bytes.store(tier.used_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Rehydrate one queued key from cold into hot. Returns whether a
+    /// block actually moved. Never called with locks held.
+    fn promote(&self, key: u64) -> bool {
+        let Some(cold) = &self.cold else { return false };
+        let taken = {
+            let mut tier = relock(&cold.tier);
+            let taken = tier.remove(key);
+            self.stats.cold_bytes.store(tier.used_bytes as u64, Ordering::Relaxed);
+            taken
+        };
+        let Some((start, tokens, bytes)) = taken else { return false };
+        let Some(payload) = (cold.decode)(&bytes) else {
+            // Foreign/corrupt bytes: the entry is already gone; callers
+            // simply re-decode. Losslessness is untouched.
+            return false;
+        };
+        let mut inner = relock(&self.inner);
+        if inner.map.contains_key(&key) {
+            return false; // a sibling re-published it while queued
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.map.insert(key, (Arc::new(KvBlock { start, tokens, payload }), clock));
+        inner.by_stamp.insert(clock, key);
+        self.stats.promoted.fetch_add(1, Ordering::Relaxed);
+        while inner.map.len() > self.capacity {
+            let (_, coldest) = inner.by_stamp.pop_first().expect("non-empty LRU index");
+            let (victim, _) = inner.map.remove(&coldest).expect("LRU map entry");
+            self.demote(coldest, &victim, &mut inner);
+        }
+        true
+    }
+}
+
+/// The background promoter: blocks on the promotion queue, rehydrates
+/// one key at a time. Decode happens on this thread — the verify path
+/// that enqueued the key has long since returned.
+fn promoter_loop<P>(shared: Arc<Shared<P>>) {
+    let cold = shared.cold.as_ref().expect("promoter spawned with a cold plane");
+    loop {
+        let key = {
+            let mut q = relock(&cold.queue);
+            loop {
+                if cold.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(k) = q.pop_front() {
+                    break k;
+                }
+                q = cold.cv.wait(q).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        shared.promote(key);
+    }
+}
+
+/// A shared, bounded, tiered store of settled KV blocks. All methods
+/// take `&self` (one short mutex hold each), so a store can sit behind
+/// an `Arc` shared by every session and worker of a model.
+pub struct BlockStore<P> {
+    shared: Arc<Shared<P>>,
+    promoter: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<P> Drop for BlockStore<P> {
+    fn drop(&mut self) {
+        if let Some(cold) = &self.shared.cold {
+            cold.shutdown.store(true, Ordering::Release);
+            // Bounce through the queue mutex before notifying: the
+            // promoter is then either before its shutdown check (sees
+            // the flag) or parked in `wait` (gets the notify) — never
+            // between the two, so the join below cannot hang.
+            drop(relock(&cold.queue));
+            cold.cv.notify_all();
+        }
+        if let Some(h) = self.promoter.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl<P> BlockStore<P> {
+    /// A single-tier store: eviction drops blocks (the pre-tiering
+    /// behavior, and the `--kv-cold-bytes 0` control).
     pub fn new(block_tokens: usize, capacity_blocks: usize) -> Self {
         assert!(block_tokens >= 1 && capacity_blocks >= 1);
         Self {
-            block_tokens,
-            capacity: capacity_blocks,
-            inner: Mutex::new(Inner {
-                map: HashMap::new(),
-                by_stamp: BTreeMap::new(),
-                clock: 0,
+            shared: Arc::new(Shared {
+                block_tokens,
+                capacity: capacity_blocks,
+                inner: Mutex::new(Inner {
+                    map: HashMap::new(),
+                    by_stamp: BTreeMap::new(),
+                    clock: STAMP_BASE,
+                    touch_seq: 0,
+                    session_blocks: HashMap::new(),
+                    owners: HashMap::new(),
+                }),
+                stats: Arc::new(StoreStats::default()),
+                cold: None,
             }),
-            stats: Arc::new(StoreStats::default()),
+            promoter: None,
         }
     }
 
     /// Tokens per block — every published block must cover exactly this
     /// many.
     pub fn block_tokens(&self) -> usize {
-        self.block_tokens
+        self.shared.block_tokens
     }
 
-    /// Blocks currently held.
+    /// Hot-tier blocks currently held.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        relock(&self.shared.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Cold-tier blocks currently held (0 when the tier is disabled).
+    pub fn cold_len(&self) -> usize {
+        match &self.shared.cold {
+            Some(cold) => relock(&cold.tier).map.len(),
+            None => 0,
+        }
+    }
+
     pub fn stats(&self) -> &StoreStats {
-        &self.stats
+        &self.shared.stats
     }
 
     /// A shareable handle to this store's counters — what serving metrics
-    /// attach so snapshots render eviction pressure (`evicted`) live.
+    /// attach so snapshots render eviction/tiering pressure live.
     pub fn stats_handle(&self) -> Arc<StoreStats> {
-        self.stats.clone()
+        self.shared.stats.clone()
     }
 
-    /// Whether `key` is present — the cheap pre-check publishers use to
-    /// skip payload extraction for blocks the store already holds. No
-    /// LRU touch, no stats.
+    /// Whether `key` is present in the hot tier — the cheap pre-check
+    /// publishers use to skip payload extraction for blocks the store
+    /// already holds. No LRU touch, no stats.
     pub fn contains(&self, key: u64) -> bool {
-        self.inner.lock().unwrap().map.contains_key(&key)
+        relock(&self.shared.inner).map.contains_key(&key)
     }
 
     /// Verified lookup: the block under `key` must start at `start` and
     /// cover exactly `expect` — a colliding or stale key is a miss, so a
     /// restored block can never desynchronize a cache from its context.
     pub fn lookup(&self, key: u64, start: usize, expect: &[u32]) -> Option<Arc<KvBlock<P>>> {
+        self.lookup_tagged(key, start, expect, None)
+    }
+
+    /// [`lookup`](Self::lookup) with a session tag: a hit records the key
+    /// in the session's block set (feeding selective export) and the
+    /// cross-session dedup gauges. A *cold* match is a
+    /// miss-with-promotion: it returns `None` immediately — the verify
+    /// path never blocks on a decode — but enqueues the key so the
+    /// background promoter rehydrates it; the next lookup hits hot.
+    pub fn lookup_tagged(
+        &self,
+        key: u64,
+        start: usize,
+        expect: &[u32],
+        session: Option<u64>,
+    ) -> Option<Arc<KvBlock<P>>> {
         let found = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = relock(&self.shared.inner);
             inner.clock += 1;
             let clock = inner.clock;
             let hit = match inner.map.get_mut(&key) {
@@ -213,37 +685,94 @@ impl<P> BlockStore<P> {
                 }
                 _ => None,
             };
-            hit.map(|(block, old_stamp)| {
+            let found = hit.map(|(block, old_stamp)| {
                 inner.by_stamp.remove(&old_stamp);
                 inner.by_stamp.insert(clock, key);
                 block
-            })
+            });
+            if found.is_some() {
+                if let Some(s) = session {
+                    inner.note_touch(s, key, true, &self.shared.stats);
+                }
+            }
+            found
         };
         match &found {
             Some(_) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                self.stats
+                self.shared.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .stats
                     .tokens_restored
                     .fetch_add(expect.len() as u64, Ordering::Relaxed);
             }
             None => {
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                self.shared.stats.misses.fetch_add(1, Ordering::Relaxed);
+                self.probe_cold(key, start, expect, session);
             }
         }
         found
     }
 
-    /// Insert a block under `key` if absent, evicting the least-recently
-    /// used block past capacity. Returns whether it was inserted (an
-    /// already-present key is left untouched: first writer wins; the
-    /// content is identical by construction).
+    /// The cold half of a missed lookup: a verified cold match counts a
+    /// `cold_hit`, tags the session, and queues the key for async
+    /// promotion. Still a miss to the caller.
+    fn probe_cold(&self, key: u64, start: usize, expect: &[u32], session: Option<u64>) {
+        let Some(cold) = &self.shared.cold else { return };
+        let matched = {
+            let mut tier = relock(&cold.tier);
+            let ok = matches!(
+                tier.map.get(&key),
+                Some(e) if e.start == start && e.tokens == expect
+            );
+            if ok {
+                tier.clock += 1;
+                let clock = tier.clock;
+                let e = tier.map.get_mut(&key).expect("probed entry");
+                let old = std::mem::replace(&mut e.stamp, clock);
+                tier.by_stamp.remove(&old);
+                tier.by_stamp.insert(clock, key);
+            }
+            ok
+        };
+        if !matched {
+            return;
+        }
+        self.shared.stats.cold_hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = session {
+            let mut inner = relock(&self.shared.inner);
+            inner.note_touch(s, key, true, &self.shared.stats);
+        }
+        let mut q = relock(&cold.queue);
+        if !q.contains(&key) {
+            q.push_back(key);
+        }
+        drop(q);
+        cold.cv.notify_one();
+    }
+
+    /// Insert a block under `key` if absent, evicting (demoting, when a
+    /// cold tier is configured) the least-recently used block past
+    /// capacity. Returns whether it was inserted (an already-present key
+    /// is left untouched: first writer wins; the content is identical by
+    /// construction).
     pub fn publish(&self, key: u64, block: KvBlock<P>) -> bool {
+        self.publish_tagged(key, block, None)
+    }
+
+    /// [`publish`](Self::publish) with a session tag: the key joins the
+    /// session's block set at a fresh watermark seq, whether or not the
+    /// insert was novel (a re-publish by a second session is exactly the
+    /// prefix-dedup signal).
+    pub fn publish_tagged(&self, key: u64, block: KvBlock<P>, session: Option<u64>) -> bool {
         assert_eq!(
             block.tokens.len(),
-            self.block_tokens,
+            self.shared.block_tokens,
             "block must cover exactly block_tokens tokens"
         );
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = relock(&self.shared.inner);
+        if let Some(s) = session {
+            inner.note_touch(s, key, false, &self.shared.stats);
+        }
         if inner.map.contains_key(&key) {
             return false;
         }
@@ -251,26 +780,46 @@ impl<P> BlockStore<P> {
         let clock = inner.clock;
         inner.map.insert(key, (Arc::new(block), clock));
         inner.by_stamp.insert(clock, key);
-        self.stats.published.fetch_add(1, Ordering::Relaxed);
-        while inner.map.len() > self.capacity {
+        self.shared.stats.published.fetch_add(1, Ordering::Relaxed);
+        while inner.map.len() > self.shared.capacity {
             // At steady state every publish past capacity evicts once;
             // the stamp index makes that O(log n), not a map scan under
             // the mutex every worker shares.
             let (_, coldest) = inner.by_stamp.pop_first().expect("non-empty LRU index");
-            inner.map.remove(&coldest);
-            self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+            let (victim, _) = inner.map.remove(&coldest).expect("LRU map entry");
+            self.shared.demote(coldest, &victim, &mut inner);
         }
         true
     }
 
-    /// Snapshot every sealed block the store currently holds, as
+    /// Synchronously drain the promotion queue — the deterministic hook
+    /// tests and benches use where "eventually hot" must mean "hot now".
+    /// Production code never needs it; the promoter thread does the same
+    /// work asynchronously. Returns how many blocks moved.
+    pub fn promote_now(&self) -> usize {
+        let Some(cold) = &self.shared.cold else { return 0 };
+        let mut moved = 0;
+        loop {
+            let key = relock(&cold.queue).pop_front();
+            match key {
+                Some(k) => {
+                    if self.shared.promote(k) {
+                        moved += 1;
+                    }
+                }
+                None => return moved,
+            }
+        }
+    }
+
+    /// Snapshot every sealed block the hot tier currently holds, as
     /// `(key, block)` pairs. Blocks are `Arc`-shared, so the export moves
     /// no payload bytes — it is the in-process half of a cross-node block
     /// push (the message plane charges the transfer; the content rides
     /// the `Arc`). The store keeps its own references; an export is a
     /// read, never a drain.
     pub fn export_sealed(&self) -> Vec<(u64, Arc<KvBlock<P>>)> {
-        let inner = self.inner.lock().unwrap();
+        let inner = relock(&self.shared.inner);
         // Oldest-first by LRU stamp, so an import into a bounded store
         // evicts the same blocks this store would have considered cold.
         inner
@@ -280,6 +829,62 @@ impl<P> BlockStore<P> {
             .collect()
     }
 
+    /// Selective, incremental export: only blocks in `session`'s block
+    /// set with a touch seq strictly greater than `since`, oldest touch
+    /// first. Returns the blocks plus the new watermark to pass as
+    /// `since` next time, so repeated pushes (migration after migration,
+    /// or a re-push after node recovery) move only the delta. Blocks the
+    /// session touched that have since been demoted are decoded
+    /// synchronously here — migration is rare and off the verify path —
+    /// and blocks gone from both tiers are pruned from the set.
+    pub fn export_for_session(
+        &self,
+        session: u64,
+        since: u64,
+    ) -> (Vec<(u64, Arc<KvBlock<P>>)>, u64) {
+        let mut inner = relock(&self.shared.inner);
+        let watermark = inner.touch_seq;
+        let Some(set) = inner.session_blocks.get(&session) else {
+            return (Vec::new(), watermark);
+        };
+        let mut picked: Vec<(u64, u64)> = // (seq, key)
+            set.iter().filter_map(|(&k, &seq)| (seq > since).then_some((seq, k))).collect();
+        picked.sort_unstable();
+        let mut out = Vec::with_capacity(picked.len());
+        let mut gone: Vec<u64> = Vec::new();
+        for (_, key) in picked {
+            if let Some((b, _)) = inner.map.get(&key) {
+                out.push((key, b.clone()));
+                continue;
+            }
+            let restored = self.shared.cold.as_ref().and_then(|cold| {
+                let tier = relock(&cold.tier);
+                let e = tier.map.get(&key)?;
+                let bytes = tier.backing.read(&e.slot);
+                let payload = (cold.decode)(&bytes)?;
+                Some(Arc::new(KvBlock { start: e.start, tokens: e.tokens.clone(), payload }))
+            });
+            match restored {
+                Some(b) => out.push((key, b)),
+                None => gone.push(key),
+            }
+        }
+        if !gone.is_empty() {
+            if let Some(set) = inner.session_blocks.get_mut(&session) {
+                for key in gone {
+                    set.remove(&key);
+                }
+            }
+        }
+        (out, watermark)
+    }
+
+    /// Drop a departed session's block-set bookkeeping (the blocks
+    /// themselves stay — they may be shared).
+    pub fn forget_session(&self, session: u64) {
+        relock(&self.shared.inner).session_blocks.remove(&session);
+    }
+
     /// Ingest exported blocks: each absent key is inserted (counted as
     /// published, LRU-evicting past capacity like [`publish`](Self::publish));
     /// present keys are skipped — first writer wins, the content is
@@ -287,27 +892,94 @@ impl<P> BlockStore<P> {
     /// added. This is the receiving half of a cross-node block push: a
     /// session migrating onto this store's node re-decodes nothing its
     /// old node had already settled.
+    ///
+    /// Imported blocks are stamped **behind** every block the receiver
+    /// already holds (preserving the exporter's relative LRU order):
+    /// a bulk import must never evict the destination's genuinely hot
+    /// working set in favor of a migrant's cold history — under pressure
+    /// the migrant's own coldest blocks are the first demoted.
     pub fn import_sealed(&self, blocks: Vec<(u64, Arc<KvBlock<P>>)>) -> usize {
         let mut added = 0;
-        let mut inner = self.inner.lock().unwrap();
-        for (key, block) in blocks {
-            debug_assert_eq!(block.tokens.len(), self.block_tokens, "imported block size");
-            if inner.map.contains_key(&key) {
-                continue;
-            }
-            inner.clock += 1;
-            let clock = inner.clock;
-            inner.map.insert(key, (block, clock));
-            inner.by_stamp.insert(clock, key);
-            self.stats.published.fetch_add(1, Ordering::Relaxed);
+        let mut inner = relock(&self.shared.inner);
+        let fresh: Vec<(u64, Arc<KvBlock<P>>)> = blocks
+            .into_iter()
+            .filter(|(key, _)| !inner.map.contains_key(key))
+            .collect();
+        let n = fresh.len() as u64;
+        if n == 0 {
+            return 0;
+        }
+        // Stamps `floor - n .. floor` stay strictly below the current
+        // minimum; `clock` starts at STAMP_BASE, so the floor cannot
+        // underflow in any realistic import sequence.
+        let floor =
+            inner.by_stamp.first_key_value().map(|(s, _)| *s).unwrap_or(inner.clock + 1);
+        debug_assert!(floor > n, "import stamp floor exhausted");
+        for (i, (key, block)) in fresh.into_iter().enumerate() {
+            debug_assert_eq!(
+                block.tokens.len(),
+                self.shared.block_tokens,
+                "imported block size"
+            );
+            let stamp = floor - n + i as u64;
+            inner.map.insert(key, (block, stamp));
+            inner.by_stamp.insert(stamp, key);
+            self.shared.stats.published.fetch_add(1, Ordering::Relaxed);
             added += 1;
-            while inner.map.len() > self.capacity {
-                let (_, coldest) = inner.by_stamp.pop_first().expect("non-empty LRU index");
-                inner.map.remove(&coldest);
-                self.stats.evicted.fetch_add(1, Ordering::Relaxed);
-            }
+        }
+        while inner.map.len() > self.shared.capacity {
+            let (_, coldest) = inner.by_stamp.pop_first().expect("non-empty LRU index");
+            let (victim, _) = inner.map.remove(&coldest).expect("LRU map entry");
+            self.shared.demote(coldest, &victim, &mut inner);
         }
         added
+    }
+}
+
+impl<P: SpillCodec + Send + Sync + 'static> BlockStore<P> {
+    /// A tiered store: hot-tier eviction demotes into a cold tier of up
+    /// to `cold_bytes` encoded bytes, rehydrated asynchronously by a
+    /// background promoter thread. `cold_bytes == 0` builds the plain
+    /// single-tier store (bit-identical behavior, no thread).
+    pub fn with_cold_bytes(
+        block_tokens: usize,
+        capacity_blocks: usize,
+        cold_bytes: usize,
+    ) -> Self {
+        let mut store = Self::new(block_tokens, capacity_blocks);
+        if cold_bytes == 0 {
+            return store;
+        }
+        let shared = Arc::new(Shared {
+            block_tokens,
+            capacity: capacity_blocks,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                by_stamp: BTreeMap::new(),
+                clock: STAMP_BASE,
+                touch_seq: 0,
+                session_blocks: HashMap::new(),
+                owners: HashMap::new(),
+            }),
+            stats: Arc::new(StoreStats::default()),
+            cold: Some(ColdPlane {
+                budget: cold_bytes,
+                encode: P::encode,
+                decode: P::decode,
+                tier: Mutex::new(ColdTier::new()),
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            }),
+        });
+        store.shared = shared.clone();
+        store.promoter = Some(
+            std::thread::Builder::new()
+                .name("kv-promoter".into())
+                .spawn(move || promoter_loop(shared))
+                .expect("spawn kv promoter"),
+        );
+        store
     }
 }
 
@@ -399,6 +1071,192 @@ mod tests {
         let got = b.lookup(k(0), 0, &[0, 1]).expect("imported block hit");
         assert_eq!(got.payload, vec![0, 1]);
         assert_eq!(b.stats().published(), 1 + 2);
+    }
+
+    #[test]
+    fn import_stamps_behind_receivers_hot_blocks() {
+        // Receiver holds its working set (capacity 3); a 2-block import
+        // overflows capacity by 2 — both victims must be the *imported*
+        // blocks, never the receiver's own hot ones.
+        let recv: BlockStore<Vec<u32>> = BlockStore::new(2, 3);
+        let k = |i: u32| key_of([i, i + 1]);
+        for i in 0..3u32 {
+            recv.publish(k(i), block(0, &[i, i + 1]));
+        }
+        let src: BlockStore<Vec<u32>> = BlockStore::new(2, 8);
+        for i in 10..12u32 {
+            src.publish(k(i), block(0, &[i, i + 1]));
+        }
+        recv.import_sealed(src.export_sealed());
+        assert_eq!(recv.len(), 3);
+        for i in 0..3u32 {
+            assert!(
+                recv.lookup(k(i), 0, &[i, i + 1]).is_some(),
+                "import evicted the receiver's hot block {i}"
+            );
+        }
+        assert!(recv.lookup(k(10), 0, &[10, 11]).is_none());
+        assert!(recv.lookup(k(11), 0, &[11, 12]).is_none());
+    }
+
+    #[test]
+    fn spill_codec_roundtrips() {
+        let payload: Vec<u32> = vec![0, 1, u32::MAX, 7];
+        let bytes = payload.encode();
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(Vec::<u32>::decode(&bytes), Some(payload));
+        assert_eq!(Vec::<u32>::decode(&bytes[..3]), None, "ragged bytes must not decode");
+    }
+
+    #[test]
+    fn eviction_demotes_then_promotes_in_lru_order() {
+        // Hot capacity 2, cold budget ample: publishing 4 blocks demotes
+        // the two oldest. A cold lookup is a miss-with-promotion; after
+        // promote_now the same lookup hits hot.
+        let store: BlockStore<Vec<u32>> = BlockStore::with_cold_bytes(2, 2, 1 << 16);
+        let k = |i: u32| key_of([i, i + 1]);
+        for i in 0..4u32 {
+            store.publish(k(i), block(0, &[i, i + 1]));
+        }
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.cold_len(), 2);
+        assert_eq!(store.stats().demoted(), 2);
+        assert_eq!(store.stats().evicted(), 0, "demotion is not eviction");
+
+        // Cold match: immediate miss, cold_hit counted, promotion queued.
+        assert!(store.lookup(k(0), 0, &[0, 1]).is_none());
+        assert_eq!(store.stats().cold_hits(), 1);
+        // A wrong-token probe of a cold key stays a plain miss.
+        assert!(store.lookup(k(1), 0, &[9, 9]).is_none());
+        assert_eq!(store.stats().cold_hits(), 1);
+
+        assert_eq!(store.promote_now(), 1);
+        assert_eq!(store.stats().promoted(), 1);
+        let got = store.lookup(k(0), 0, &[0, 1]).expect("promoted block must hit hot");
+        assert_eq!(got.payload, vec![0, 1]);
+        // Promotion respects hot capacity: the hot LRU victim was
+        // demoted back to cold, nothing was dropped.
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats().evicted(), 0);
+    }
+
+    #[test]
+    fn cold_tier_respects_byte_budget() {
+        // Each encoded payload is 8 bytes (2 × u32); budget 16 holds two.
+        let store: BlockStore<Vec<u32>> = BlockStore::with_cold_bytes(2, 1, 16);
+        let k = |i: u32| key_of([i, i + 1]);
+        for i in 0..4u32 {
+            store.publish(k(i), block(0, &[i, i + 1]));
+        }
+        // 3 demotions happened (blocks 0,1,2); the cold tier holds the 2
+        // newest demotions and dropped the coldest for good.
+        assert_eq!(store.cold_len(), 2);
+        assert_eq!(store.stats().demoted(), 3);
+        assert_eq!(store.stats().evicted(), 1);
+        assert_eq!(store.stats().cold_bytes(), 16);
+    }
+
+    #[test]
+    fn async_promoter_rehydrates_without_promote_now() {
+        let store: BlockStore<Vec<u32>> = BlockStore::with_cold_bytes(2, 2, 1 << 16);
+        let k = |i: u32| key_of([i, i + 1]);
+        for i in 0..3u32 {
+            store.publish(k(i), block(0, &[i, i + 1]));
+        }
+        assert!(store.lookup(k(0), 0, &[0, 1]).is_none(), "first touch is a miss");
+        // The background promoter owns the rehydrate; poll until it lands
+        // (bounded — promotion is one decode, not a forward).
+        let mut hit = false;
+        for _ in 0..500 {
+            if store.lookup(k(0), 0, &[0, 1]).is_some() {
+                hit = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(hit, "promoter thread never rehydrated the cold block");
+        assert_eq!(store.stats().promoted(), 1);
+    }
+
+    #[test]
+    fn zero_cold_budget_is_the_single_tier_store() {
+        let store: BlockStore<Vec<u32>> = BlockStore::with_cold_bytes(2, 1, 0);
+        let k = |i: u32| key_of([i, i + 1]);
+        store.publish(k(0), block(0, &[0, 1]));
+        store.publish(k(1), block(0, &[1, 2]));
+        assert_eq!(store.stats().evicted(), 1, "no tier: eviction drops");
+        assert_eq!(store.stats().demoted(), 0);
+        assert_eq!(store.cold_len(), 0);
+        assert_eq!(store.promote_now(), 0);
+    }
+
+    #[test]
+    fn session_sets_feed_selective_export_watermarks() {
+        let store: BlockStore<Vec<u32>> = BlockStore::new(2, 8);
+        let k = |i: u32| key_of([i, i + 1]);
+        store.publish_tagged(k(0), block(0, &[0, 1]), Some(7));
+        store.publish_tagged(k(1), block(2, &[1, 2]), Some(7));
+        store.publish_tagged(k(2), block(0, &[2, 3]), Some(8));
+
+        // Session 7's delta from the beginning: its two blocks, oldest
+        // touch first, never session 8's.
+        let (blocks, wm1) = store.export_for_session(7, 0);
+        let keys: Vec<u64> = blocks.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![k(0), k(1)]);
+
+        // Nothing new since the watermark → empty incremental push.
+        let (delta, wm2) = store.export_for_session(7, wm1);
+        assert!(delta.is_empty());
+        assert_eq!(wm2, wm1, "watermark only moves on new touches");
+
+        // A fresh touch after the watermark is exactly the delta.
+        store.publish_tagged(k(3), block(4, &[3, 4]), Some(7));
+        let (delta, wm3) = store.export_for_session(7, wm1);
+        assert_eq!(delta.len(), 1);
+        assert_eq!(delta[0].0, k(3));
+        assert!(wm3 > wm1);
+
+        // An untracked session exports nothing.
+        let (none, _) = store.export_for_session(99, 0);
+        assert!(none.is_empty());
+
+        store.forget_session(7);
+        let (none, _) = store.export_for_session(7, 0);
+        assert!(none.is_empty(), "forgotten session must export nothing");
+    }
+
+    #[test]
+    fn selective_export_serves_demoted_blocks_synchronously() {
+        let store: BlockStore<Vec<u32>> = BlockStore::with_cold_bytes(2, 1, 1 << 16);
+        let k = |i: u32| key_of([i, i + 1]);
+        store.publish_tagged(k(0), block(0, &[0, 1]), Some(5));
+        store.publish_tagged(k(1), block(2, &[1, 2]), Some(5));
+        assert_eq!(store.len(), 1, "capacity 1: first block demoted");
+        assert_eq!(store.cold_len(), 1);
+        // Migration export must include the demoted block, decoded in
+        // place — cold state is not lost state.
+        let (blocks, _) = store.export_for_session(5, 0);
+        assert_eq!(blocks.len(), 2);
+        let cold = blocks.iter().find(|(key, _)| *key == k(0)).expect("demoted block exported");
+        assert_eq!(cold.1.payload, vec![0, 1]);
+        assert_eq!(cold.1.start, 0);
+    }
+
+    #[test]
+    fn cross_session_touches_mark_shared_blocks() {
+        let store: BlockStore<Vec<u32>> = BlockStore::new(2, 8);
+        let key = key_of([0, 1]);
+        store.publish_tagged(key, block(0, &[0, 1]), Some(1));
+        assert_eq!(store.stats().shared_blocks(), 0);
+        // Same session re-touching is not sharing.
+        assert!(store.lookup_tagged(key, 0, &[0, 1], Some(1)).is_some());
+        assert_eq!(store.stats().shared_blocks(), 0);
+        // A second distinct session: shared exactly once, cross-hits
+        // counted per hit.
+        assert!(store.lookup_tagged(key, 0, &[0, 1], Some(2)).is_some());
+        assert!(store.lookup_tagged(key, 0, &[0, 1], Some(3)).is_some());
+        assert_eq!(store.stats().shared_blocks(), 1);
+        assert_eq!(store.stats().cross_session_hits(), 2);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! bindings); the default offline build substitutes `pjrt_stub.rs`, which
 //! mirrors this module's surface and fails loading with a clear error.
 
-use super::kv::{self, BlockStore, KvBlock};
+use super::kv::{self, BlockStore, KvBlock, SpillCodec};
 use super::manifest::{Manifest, ModelEntry};
 use super::npy::{load_npy, NpyData};
 use crate::bail;
@@ -19,6 +19,32 @@ use crate::util::error::{Context, Result};
 use std::cell::Cell;
 use std::path::Path;
 use std::sync::Arc;
+
+/// Cold-tier codec for the runtime's cache-row payloads (little-endian
+/// f32 rows, bit-preserving via `to_bits`/`from_bits` so NaN payloads
+/// and signed zeros survive the round-trip exactly). Lives here under
+/// the `pjrt` feature and in `pjrt_stub` otherwise — the two modules
+/// are mutually exclusive, so exactly one impl exists.
+impl SpillCodec for Vec<f32> {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 4);
+        for v in self {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() % 4 != 0 {
+            return None;
+        }
+        Some(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                .collect(),
+        )
+    }
+}
 
 /// Which of the pair to load.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +94,11 @@ pub struct Session {
     keys: Vec<u64>,
     /// Token count already offered to the store (publish watermark).
     published: usize,
+    /// Pool session tag for block-store bookkeeping (`0` = untagged):
+    /// lookups and publishes carry it into the store's per-session block
+    /// sets and cross-session dedup gauges. The engine stamps it from
+    /// [`BatchReq::session`](crate::coordinator::BatchReq) before resync.
+    pub session: u64,
 }
 
 impl ModelRuntime {
@@ -165,6 +196,7 @@ impl ModelRuntime {
             tokens: Vec::new(),
             keys: vec![kv::key_init()],
             published: 0,
+            session: 0,
         })
     }
 
@@ -318,13 +350,16 @@ impl ModelRuntime {
         let b = self.store.block_tokens();
         let base = (sess.pos / b) * b;
         let row_elems = self.cache_elems / self.max_seq;
+        let tag = (sess.session != 0).then_some(sess.session);
         let mut found: Vec<Arc<KvBlock<Vec<f32>>>> = Vec::new();
         let mut start = base;
         let mut key = sess.keys[start];
         while start + b <= ctx.len().min(self.max_seq) {
             let expect: Vec<u32> = ctx.iter_range(start, start + b).collect();
             let next_key = expect.iter().fold(key, |k, &t| kv::key_step(k, t));
-            let Some(block) = self.store.lookup(next_key, start, &expect) else { break };
+            let Some(block) = self.store.lookup_tagged(next_key, start, &expect, tag) else {
+                break;
+            };
             if block.payload.len() != b * row_elems {
                 break; // foreign payload shape (wrong model): a miss
             }
@@ -374,15 +409,17 @@ impl ModelRuntime {
         if missing.is_empty() {
             return;
         }
+        let tag = (sess.session != 0).then_some(sess.session);
         let Ok(flat) = sess.cache.to_vec::<f32>() else { return };
         for s in missing {
-            self.store.publish(
+            self.store.publish_tagged(
                 sess.keys[s + b],
                 KvBlock {
                     start: s,
                     tokens: sess.tokens[s..s + b].to_vec(),
                     payload: self.gather_rows(&flat, s, b),
                 },
+                tag,
             );
         }
     }

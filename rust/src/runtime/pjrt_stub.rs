@@ -8,11 +8,37 @@
 //! Enable the real runtime with `--features pjrt` after adding the
 //! vendored `xla` bindings to `rust/Cargo.toml` (see the comment there).
 
-use super::kv::BlockStore;
+use super::kv::{BlockStore, SpillCodec};
 use crate::bail;
 use crate::util::error::Result;
 use std::path::Path;
 use std::sync::Arc;
+
+/// Cold-tier codec for the runtime's cache-row payloads (little-endian
+/// f32 rows, bit-preserving via `to_bits`/`from_bits` so NaN payloads
+/// and signed zeros survive the round-trip exactly). Lives here in stub
+/// builds and in `runtime::pjrt` under the `pjrt` feature — the two
+/// modules are mutually exclusive, so exactly one impl exists.
+impl SpillCodec for Vec<f32> {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 4);
+        for v in self {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() % 4 != 0 {
+            return None;
+        }
+        Some(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                .collect(),
+        )
+    }
+}
 
 /// Which of the pair to load.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,6 +58,9 @@ pub struct ModelRuntime {
 pub struct Session {
     pub pos: usize,
     pub tokens: Vec<u32>,
+    /// Pool session tag for block-store bookkeeping (0 = untagged) —
+    /// same surface as the real runtime.
+    pub session: u64,
     unconstructible: Never,
 }
 

@@ -114,9 +114,24 @@ pub struct Snapshot {
     pub kv_tokens_reused: u64,
     /// Context positions pool forwards re-decoded.
     pub kv_tokens_redecoded: u64,
-    /// Settled blocks LRU-evicted across the attached block stores — the
-    /// memory-pressure symptom the spill/compaction roadmap item watches.
+    /// Settled blocks LRU-evicted (dropped outright) across the attached
+    /// block stores — with a cold tier enabled this counts only blocks
+    /// the cold tier also couldn't hold.
     pub kv_blocks_evicted: u64,
+    /// Settled blocks demoted hot→cold (encoded, still recoverable)
+    /// instead of dropped, summed across attached stores.
+    pub kv_blocks_demoted: u64,
+    /// Cold blocks rehydrated back into the hot tier by the background
+    /// promoter, summed across attached stores.
+    pub kv_blocks_promoted: u64,
+    /// Lookups that missed hot but matched a cold block (each queues an
+    /// async promotion), summed across attached stores.
+    pub kv_cold_hits: u64,
+    /// Encoded bytes currently resident in the cold tiers.
+    pub kv_cold_bytes: u64,
+    /// Blocks touched by ≥ 2 distinct sessions — the cross-session
+    /// prefix-dedup gauge (each shared block counted once).
+    pub kv_shared_blocks: u64,
     /// Adaptive-controller ticks executed (0 when serving statically).
     pub controller_ticks: u64,
     /// Ticks whose emitted (lookahead, SP) allocation differed from the
@@ -301,6 +316,11 @@ impl Metrics {
                 .as_ref()
                 .map_or(0, |s| s.kv_tokens_redecoded()),
             kv_blocks_evicted: self.store_stats.iter().map(|s| s.evicted()).sum(),
+            kv_blocks_demoted: self.store_stats.iter().map(|s| s.demoted()).sum(),
+            kv_blocks_promoted: self.store_stats.iter().map(|s| s.promoted()).sum(),
+            kv_cold_hits: self.store_stats.iter().map(|s| s.cold_hits()).sum(),
+            kv_cold_bytes: self.store_stats.iter().map(|s| s.cold_bytes()).sum(),
+            kv_shared_blocks: self.store_stats.iter().map(|s| s.shared_blocks()).sum(),
             controller_ticks: self.controller_stats.as_ref().map_or(0, |s| s.ticks()),
             controller_replans: self.controller_stats.as_ref().map_or(0, |s| s.replans()),
             batch_cap_current: self
@@ -385,6 +405,24 @@ impl Snapshot {
             self.kv_tokens_redecoded,
             self.kv_blocks_evicted,
         );
+        // Cold-tier segment only when a tiered store actually did tiered
+        // work (or is holding cold bytes) — a single-tier serve's render
+        // stays byte-identical to the pre-tiering output.
+        if self.kv_blocks_demoted > 0
+            || self.kv_blocks_promoted > 0
+            || self.kv_cold_hits > 0
+            || self.kv_cold_bytes > 0
+            || self.kv_shared_blocks > 0
+        {
+            out.push_str(&format!(
+                " | kv cold demoted={} promoted={} hits={} bytes={} shared={}",
+                self.kv_blocks_demoted,
+                self.kv_blocks_promoted,
+                self.kv_cold_hits,
+                self.kv_cold_bytes,
+                self.kv_shared_blocks,
+            ));
+        }
         if self.controller_ticks > 0 {
             out.push_str(&format!(
                 " | ctl ticks={} replans={} cap={} target={:.2}ms kicks={} reclaims={}",
@@ -575,6 +613,50 @@ mod tests {
         let text = s.render();
         assert!(text.contains("batches=2 occupancy=1.50"), "render: {text}");
         assert!(text.contains("evicted=1"), "render: {text}");
+    }
+
+    /// The cold-tier gauges: demotions, promotions, cold hits, resident
+    /// cold bytes, and the cross-session dedup share flow from a tiered
+    /// store into the snapshot and a render segment that single-tier
+    /// serves never emit.
+    #[test]
+    fn cold_tier_gauges_are_reported() {
+        use crate::runtime::kv::{key_of, BlockStore, KvBlock};
+        let mut m = Metrics::new();
+        assert!(
+            !m.snapshot().render().contains("kv cold"),
+            "single-tier render grew a cold segment"
+        );
+
+        // Capacity-1 hot tier over a roomy cold tier: the second publish
+        // demotes the first block instead of evicting it.
+        let store: BlockStore<Vec<u32>> = BlockStore::with_cold_bytes(2, 1, 1 << 16);
+        m.attach_store_stats(store.stats_handle());
+        let block = |t: &[u32]| KvBlock { start: 0, tokens: t.to_vec(), payload: t.to_vec() };
+        store.publish(key_of([1, 2]), block(&[1, 2]));
+        store.publish(key_of([3, 4]), block(&[3, 4]));
+        // Cold hit on the demoted block, then wait for the rehydration
+        // (promote_now drains the queue, but the background promoter may
+        // have already popped the key and still be mid-decode).
+        assert!(store.lookup(key_of([1, 2]), 0, &[1, 2]).is_none());
+        store.promote_now();
+        // Poll on the *demotion* the promote-swap ends with, so the final
+        // snapshot can't land between the promoted and demoted bumps.
+        for _ in 0..500 {
+            if m.snapshot().kv_blocks_demoted >= 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+
+        let s = m.snapshot();
+        assert_eq!(s.kv_blocks_evicted, 0, "demotion must not count as eviction");
+        assert_eq!(s.kv_blocks_demoted, 2, "demote on publish + demote on promote-swap");
+        assert_eq!(s.kv_blocks_promoted, 1);
+        assert_eq!(s.kv_cold_hits, 1);
+        assert!(s.kv_cold_bytes > 0);
+        let text = s.render();
+        assert!(text.contains("kv cold demoted=2 promoted=1 hits=1"), "render: {text}");
     }
 
     /// The per-session observability surface: attached controller stats

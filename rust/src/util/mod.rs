@@ -15,3 +15,15 @@ pub mod rng;
 
 pub use parallel::par_map;
 pub use rng::Rng64;
+
+/// Poison-recovering lock: shared state guarded by these mutexes is kept
+/// consistent *within* each critical section (counters, map+index pairs
+/// updated together), so a panic that poisons the mutex — a worker dying
+/// mid-forward, a promoter dying mid-decode — leaves data another thread
+/// can safely keep using. Unwrapping the poison instead of panicking is
+/// what keeps one crashed thread from cascading into every thread that
+/// shares the structure. Used by the pool, the serving plane, and the
+/// KV block store (`runtime::kv`).
+pub(crate) fn relock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

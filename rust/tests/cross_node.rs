@@ -12,9 +12,10 @@
 use dsi::config::{AlgoKind, LatencyProfile};
 use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
 use dsi::coordinator::{
-    run_nonsi, FaultPlan, OnlineConfig, SchedPolicy, SessionMsg, ShardedPool, VerifyResult,
+    run_nonsi, selective_kv_exchange, FaultPlan, OnlineConfig, SchedPolicy, SessionMsg,
+    ShardedPool, VerifyResult,
 };
-use dsi::runtime::kv::BlockStore;
+use dsi::runtime::kv::{key_of, BlockStore, KvBlock};
 use dsi::server::router::Router;
 use dsi::server::Server;
 use dsi::workload::Request;
@@ -178,9 +179,11 @@ fn cross_node_chaos_serve_is_lossless() {
 }
 
 /// The migration gate: a session moved between nodes re-decodes zero
-/// settled tokens — the sealed KV blocks ride the message plane's
-/// `KvPush` into the destination node's store, and the cold worker
-/// restores instead of re-decoding.
+/// settled tokens — and moves only ITS sealed blocks. The selective
+/// exchange pushes the migrating session's block set over the message
+/// plane's `KvPush`; another session's settled state on the source node
+/// stays put (a whole-store export would have dragged it along), and the
+/// destination's cold worker still restores instead of re-decoding.
 #[test]
 fn migration_exchanges_kv_blocks_and_redecodes_nothing() {
     use dsi::context::TokenRope;
@@ -207,11 +210,7 @@ fn migration_exchanges_kv_blocks_and_redecodes_nothing() {
         None,
         0.0,
     );
-    let (s0, s1) = (stores[0].clone(), stores[1].clone());
-    pool.set_kv_exchange(Arc::new(move |from, to, _session| {
-        let blocks = if from == 0 { s0.export_sealed() } else { s1.export_sealed() };
-        (if to == 0 { s0.import_sealed(blocks) } else { s1.import_sealed(blocks) }) as u64
-    }));
+    pool.set_kv_exchange(selective_kv_exchange(stores.clone()));
 
     let (tx, rx) = channel();
     let h = pool.register(tx);
@@ -221,13 +220,35 @@ fn migration_exchanges_kv_blocks_and_redecodes_nothing() {
     h.submit(0, ctx.clone(), L, L + 1);
     let warm = recv_verify(&rx, 2000).expect("warm verify on node 0");
 
+    // Another session's settled state on the source node: the selective
+    // exchange must leave it behind.
+    for i in 0..4u32 {
+        let toks: Vec<u32> = (1000 + i * 16..1000 + (i + 1) * 16).collect();
+        stores[0].publish_tagged(
+            key_of(toks.iter().copied()),
+            KvBlock { start: 0, tokens: toks, payload: vec![u64::from(i)] },
+            Some(9999),
+        );
+    }
+
     let dest = pool.migrate_session(h.session_id());
     assert_eq!(dest, Some(1), "migration must pick the other node");
     assert!(pool.net_stats().migrations() >= 1);
+    let pushed = pool.net_stats().kv_blocks_pushed();
     assert!(
-        pool.net_stats().kv_blocks_pushed() >= (L / 16) as u64,
-        "the sealed blocks never rode the message plane: {} pushed",
-        pool.net_stats().kv_blocks_pushed()
+        pushed >= (L / 16) as u64,
+        "the sealed blocks never rode the message plane: {pushed} pushed"
+    );
+    let whole_store = stores[0].export_sealed().len() as u64;
+    assert!(
+        pushed < whole_store,
+        "selective exchange pushed {pushed} of {whole_store} source blocks — \
+         it dragged the other session's state along"
+    );
+    assert_eq!(
+        stores[1].len() as u64,
+        pushed,
+        "destination store holds blocks the push never charged"
     );
 
     // Same span through the migrated session: the destination's cold
