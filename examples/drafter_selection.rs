@@ -1,97 +1,98 @@
 //! Drafter selection — the deployment question the paper's intro
 //! motivates: given a target model and a shelf of candidate drafters
 //! (fast-but-inaccurate through slow-but-accurate), which should you
-//! deploy, and does the answer depend on the algorithm?
+//! deploy?
 //!
-//! With SI the answer is treacherous: a bad pick makes inference *slower*
-//! than not speculating at all. With DSI every candidate helps (Theorem
-//! 1), so selection only tunes the size of the win.
+//! The serving plane now answers this at runtime. Hand the whole shelf
+//! to the server (`--drafters name:ms:acceptance,...`): sessions start
+//! on the calibrated-best member, the controller re-scores every member
+//! each tick at the *measured* acceptance and latencies, and moves a
+//! session to a challenger at a lossless restart boundary when it wins
+//! past the hysteresis margin. A stale calibration costs a few blocks,
+//! not the deployment.
 //!
 //! ```bash
 //! cargo run --release --example drafter_selection
 //! ```
 
-use dsi::config::{min_lookahead_for_sp, AlgoKind, ExperimentConfig, LatencyProfile};
-use dsi::simulator::simulate_mean_ms;
-
-struct Candidate {
-    name: &'static str,
-    latency_frac: f64,
-    acceptance: f64,
-}
+use dsi::config::{AlgoKind, LatencyProfile};
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::DrafterSpec;
+use dsi::runtime::kv::{BlockStore, DEFAULT_BLOCK_TOKENS, DEFAULT_CAPACITY_BLOCKS};
+use dsi::server::router::Router;
+use dsi::server::Server;
+use dsi::workload::Request;
+use std::sync::Arc;
 
 fn main() {
-    // A plausible shelf for a 30 ms/token target: smaller = faster but
-    // less aligned (numbers bracket the paper's Table 2 measurements).
-    let shelf = [
-        Candidate { name: "68M  (3% lat, 55% acc)", latency_frac: 0.03, acceptance: 0.55 },
-        Candidate { name: "160M (8% lat, 72% acc)", latency_frac: 0.08, acceptance: 0.72 },
-        Candidate { name: "1B   (20% lat, 85% acc)", latency_frac: 0.20, acceptance: 0.85 },
-        Candidate { name: "4B   (65% lat, 94% acc)", latency_frac: 0.65, acceptance: 0.94 },
-        Candidate { name: "distill-bad (40% lat, 25% acc)", latency_frac: 0.40, acceptance: 0.25 },
-    ];
-    let target = 30.0;
-    let n_tokens = 100;
-
-    let nonsi = {
-        let cfg = ExperimentConfig {
-            target: LatencyProfile::uniform(target),
-            n_tokens,
-            ..ExperimentConfig::default()
-        };
-        simulate_mean_ms(AlgoKind::NonSi, &cfg, 1)
-    };
-    println!("target: 30 ms/token; non-SI reference: {nonsi:.0} ms for {n_tokens} tokens\n");
-    println!(
-        "{:<32} {:>10} {:>10} {:>12} {:>12}",
-        "drafter", "SI ms", "DSI ms", "SI vs nonSI", "DSI vs nonSI"
-    );
-
-    let mut best: Option<(&str, f64)> = None;
-    for c in &shelf {
-        let drafter = target * c.latency_frac;
-        let k = min_lookahead_for_sp(target, drafter, 7);
-        let cfg = ExperimentConfig {
-            target: LatencyProfile::uniform(target),
-            drafter: LatencyProfile::uniform(drafter),
-            acceptance_rate: c.acceptance,
-            lookahead: k,
-            sp_degree: 7,
-            n_tokens,
-            ..ExperimentConfig::default()
-        };
-        // SI gets its best lookahead among the usual candidates.
-        let si = [1usize, 3, 5, 10, 20]
-            .iter()
-            .map(|&kk| {
-                let mut c2 = cfg.clone();
-                c2.lookahead = kk;
-                simulate_mean_ms(AlgoKind::Si, &c2, 10)
-            })
-            .fold(f64::INFINITY, f64::min);
-        let dsi = simulate_mean_ms(AlgoKind::Dsi, &cfg, 10);
-        let si_tag = if si > nonsi { "SLOWER" } else { "faster" };
+    // A shelf for a 3 ms/token target. The calibration priors rank
+    // "cheap" best (lowest cost per accepted token), but at live rates
+    // its weak acceptance loses to "solid" — the switch the controller
+    // must discover. "weak" is the trap SI deployments fear: picked
+    // statically it would make serving slower than its siblings.
+    let shelf = "cheap:0.6:0.55,solid:1.2:0.9,weak:2.5:0.2";
+    let specs = DrafterSpec::parse_portfolio(shelf).expect("well-formed shelf");
+    let rank = DrafterSpec::rank_by_prior(&specs);
+    println!("portfolio (calibrated rank):");
+    for (pos, &m) in rank.iter().enumerate() {
+        let s = &specs[m];
         println!(
-            "{:<32} {:>10.0} {:>10.0} {:>9.2}x {:>6} {:>9.2}x",
-            c.name,
-            si,
-            dsi,
-            nonsi / si,
-            si_tag,
-            nonsi / dsi
+            "  #{pos} member {m} `{}`: {:.1} ms/token, acceptance prior {:.2}, \
+             prior score {:.2}",
+            s.name,
+            s.profile.tpot_ms,
+            s.acceptance,
+            s.prior_score()
         );
-        if best.map_or(true, |(_, b)| dsi < b) {
-            best = Some((c.name, dsi));
-        }
     }
 
-    let (name, ms) = best.unwrap();
+    // The wait engine realizes each member truthfully; the target chain
+    // is shared across members, so a switch changes speed, never tokens.
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(3.0),
+        drafter: LatencyProfile::uniform(0.6),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.55, seed: 223 },
+        max_context: 8192,
+    };
+    let store: Arc<BlockStore<Vec<u64>>> =
+        Arc::new(BlockStore::new(DEFAULT_BLOCK_TOKENS, DEFAULT_CAPACITY_BLOCKS));
+    let factory = eng.factory_configured(store, 1.0, &specs);
+    let router = Router::new(LatencyProfile::uniform(3.0), specs[0].profile, 4);
+    let mut srv = Server::new(factory, router, AlgoKind::Dsi)
+        .with_max_depth(64)
+        .with_max_sessions(4)
+        .with_pool_size(4)
+        .with_adaptive(true)
+        .with_control_interval_ms(3.0)
+        .with_drafters(specs.clone());
+
+    let reqs: Vec<Request> = (0..4u32)
+        .map(|i| Request::new(i as u64, vec![i + 1, 80 + i, 240], 96, 0.0))
+        .collect();
+    let resps = srv.serve(&reqs);
+    let snap = srv.metrics_snapshot();
+
+    let settled: usize = resps.iter().map(|r| r.tokens.len()).sum();
     println!(
-        "\nbest drafter under DSI: {name} at {ms:.0} ms ({:.2}x vs non-SI)",
-        nonsi / ms
+        "\nserved {} requests / {settled} tokens at {:.0} tok/s \
+         with {} runtime drafter switch(es)",
+        reqs.len(),
+        snap.tokens_per_s,
+        snap.controller_drafter_switches,
     );
+    for g in &snap.per_session {
+        println!(
+            "  session {}: ended on member {} `{}` (live acceptance {:.2}, \
+             drafter {:.2} ms)",
+            g.session,
+            g.drafter_member,
+            specs.get(g.drafter_member).map_or("?", |s| s.name.as_str()),
+            g.acceptance_ewma,
+            g.drafter_tpot_ms,
+        );
+    }
     println!(
-        "note the 'distill-bad' row: SI is slower than not speculating, DSI still wins — \
-         the robustness gap the paper closes."
+        "\nthe controller moved sessions off the calibrated-best `cheap` once the \
+         live rates showed `solid` winning — and never touched `weak`."
     );
 }

@@ -44,6 +44,15 @@
 //!   and promotions actually happened and the re-decode ratio stays
 //!   ≤ 0.5 (graceful degradation, not an eviction cliff), plus the
 //!   cross-session prefix-dedup share.
+//! - **drafter portfolio** — a 3-member portfolio (prior-best member
+//!   loses at live rates; one member deliberately weak) on a 4-session
+//!   adaptive serve vs best/worst static single-drafter controls
+//!   (`drafter_portfolio_*` fields); gates that the controller switches
+//!   at runtime, lands within 10% of the best static control while
+//!   beating the worst outright, that parallel block drafting (k=4,
+//!   marginal 0.25) beats the serial drafter loop, and that the router's
+//!   online cost fit recovers the configured marginal — all
+//!   bit-identical to non-SI greedy.
 //!
 //! Results land in `BENCH_hotpath.json` (override the path with
 //! `BENCH_HOTPATH_OUT`); set `BENCH_SMOKE=1` for the quick CI variant.
@@ -56,9 +65,12 @@ use dsi::config::{AlgoKind, LatencyProfile};
 use dsi::context;
 use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
 use dsi::coordinator::{
-    run_nonsi, DsiSession, FaultPlan, OnlineConfig, SchedPolicy, ServerRole, TargetPool,
+    run_nonsi, DrafterSpec, DsiSession, FaultPlan, OnlineConfig, SchedPolicy, ServerRole,
+    TargetPool,
 };
-use dsi::runtime::kv::{key_init, key_step, BlockStore};
+use dsi::runtime::kv::{
+    key_init, key_step, BlockStore, DEFAULT_BLOCK_TOKENS, DEFAULT_CAPACITY_BLOCKS,
+};
 use dsi::server::router::Router;
 use dsi::server::{AdmissionMode, Response, Server};
 use dsi::stats::percentile;
@@ -67,7 +79,7 @@ use dsi::util::json::{num, obj, Json};
 use dsi::util::Rng64;
 use dsi::workload::{ArrivalProcess, PromptGen, PromptProfile, Request, SloClass, TenantSpec};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Four sessions generating concurrently on a 2-worker (oversubscribed)
 /// pool with the given micro-batch cap; returns (settled tokens per
@@ -400,22 +412,11 @@ fn kv_pressure_round(cold_bytes: usize, smoke: bool) -> (u64, Arc<BlockStore<Vec
     for (k, start, expect) in &keys {
         let _ = store.lookup(*k, *start, expect);
     }
+    // promote_now drains the queue AND barriers on the background
+    // promoter's in-flight key, so once it returns every queued promotion
+    // is visible to the next lookup (the miss-with-promotion →
+    // next-lookup-hits contract) — no polling needed.
     store.promote_now();
-    // The background promoter may still be decoding keys it popped before
-    // promote_now drained the queue: wait until the next lookups actually
-    // hit (the miss-with-promotion → next-lookup-hits contract). The
-    // control store has no promoter and nothing can ever hit — skip the
-    // wait entirely.
-    let deadline = Instant::now() + Duration::from_millis(500);
-    while cold_bytes > 0 && Instant::now() < deadline {
-        let all_hot = keys
-            .iter()
-            .all(|(k, start, expect)| store.lookup(*k, *start, expect).is_some());
-        if all_hot {
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(1));
-    }
 
     let redecoded = serve(&rope_a);
     // Two tagged sessions touching the same resident prefix: the
@@ -425,6 +426,114 @@ fn kv_pressure_round(cold_bytes: usize, smoke: bool) -> (u64, Arc<BlockStore<Vec
         let _ = store.lookup_tagged(*k, *start, expect, Some(7002));
     }
     (redecoded, store, blocks)
+}
+
+/// The drafter-portfolio probe's wait engine. Every portfolio member is
+/// realized truthfully by `factory_configured` (its latency profile and
+/// acceptance), while the target chain is shared across members — so a
+/// drafter switch can change speed only, never the settled tokens.
+fn portfolio_engine() -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(3.0),
+        drafter: LatencyProfile::uniform(0.6),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.55, seed: 223 },
+        max_context: 8192,
+    }
+}
+
+/// Serve 4 requests through a 4-session adaptive DSI server whose
+/// drafters come from the given portfolio spec. Sessions start on the
+/// calibrated-best member; the controller re-scores the portfolio per
+/// tick at live rates and moves sessions at restart boundaries. Returns
+/// (settled tokens per second, drafter switches, requests, responses).
+fn portfolio_probe(members: &str, smoke: bool) -> (f64, u64, Vec<Request>, Vec<Response>) {
+    let eng = portfolio_engine();
+    let specs = DrafterSpec::parse_portfolio(members).expect("well-formed portfolio");
+    let store: Arc<BlockStore<Vec<u64>>> =
+        Arc::new(BlockStore::new(DEFAULT_BLOCK_TOKENS, DEFAULT_CAPACITY_BLOCKS));
+    let factory = eng.factory_configured(store, 1.0, &specs);
+    let router = Router::new(LatencyProfile::uniform(3.0), specs[0].profile, 4);
+    let mut srv = Server::new(factory, router, AlgoKind::Dsi)
+        .with_max_depth(64)
+        .with_max_sessions(4)
+        .with_pool_size(4)
+        .with_adaptive(true)
+        .with_control_interval_ms(3.0)
+        .with_drafters(specs);
+    let n_tokens = if smoke { 48 } else { 96 };
+    let reqs: Vec<Request> = (0..4u32)
+        .map(|i| Request::new(i as u64, vec![i + 1, 80 + i, 240], n_tokens, 0.0))
+        .collect();
+    let t0 = Instant::now();
+    let resps = srv.serve(&reqs);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let settled: usize = resps.iter().map(|r| r.tokens.len()).sum();
+    let snap = srv.metrics_snapshot();
+    (settled as f64 / elapsed, snap.controller_drafter_switches, reqs, resps)
+}
+
+/// One DSI session at lookahead 4 on a 2-worker pool: parallel block
+/// drafting (one `draft_batch` per block, marginal tokens at 0.25x the
+/// serial forward) vs the serial per-token drafter loop on the same
+/// engine. Asserts bit-identity to non-SI greedy and returns settled
+/// tokens per second.
+fn parallel_draft_probe(parallel: bool, smoke: bool) -> f64 {
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(1.0),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 239 },
+        max_context: 8192,
+    };
+    let factory = eng.factory_with_draft_frac(0.25);
+    let pool = TargetPool::new(&factory, 2);
+    let mut sess = DsiSession::new(&pool, &factory);
+    sess.ctl().set_parallel_draft(parallel);
+    let cfg = OnlineConfig {
+        prompt: vec![5, 6, 7],
+        n_tokens: if smoke { 48 } else { 96 },
+        lookahead: 4,
+        sp_degree: 2,
+        max_speculation_depth: 64,
+    };
+    let t0 = Instant::now();
+    let out = sess.generate(&cfg);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let nonsi = run_nonsi(&eng.factory(), &cfg);
+    assert_eq!(
+        out.tokens, nonsi.tokens,
+        "parallel-draft probe lost tokens (parallel={parallel})"
+    );
+    out.tokens.len() as f64 / elapsed
+}
+
+/// Replay a drafter's real `draft_batch` costs at widths 1..=4 into the
+/// router's online draft-cost fit and return the fitted marginal
+/// fraction d_marginal / (d_base + d_marginal) — the quantity that must
+/// recover the engine's configured `--draft-token-cost-frac`.
+fn fitted_marginal_frac(frac: f64) -> f64 {
+    let eng = WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(1.0),
+        oracle: Oracle { vocab: 256, acceptance_rate: 0.9, seed: 241 },
+        max_context: 8192,
+    };
+    let factory = eng.factory_with_draft_frac(frac);
+    let mut drafter = factory(ServerRole::Drafter, 0);
+    let mut router = Router::new(eng.target, eng.drafter, 2);
+    let mut ctx = context::TokenRope::from_slice(&[10, 20, 30]);
+    for k in 1..=4usize {
+        let before = drafter.forward_cost();
+        let toks = drafter.draft_batch(&ctx, k);
+        let delta = drafter.forward_cost() - before;
+        for t in toks {
+            ctx.push(t);
+        }
+        router.observe_drafter_block(9, k as f64, delta.spent_ms);
+    }
+    let (base, marg) = router
+        .live_draft_cost_model(9)
+        .expect("width-diverse evidence warms the fit");
+    marg / (base + marg)
 }
 
 /// Arrival-inclusive TTFT (queueing delay + dispatch-to-first-token) per
@@ -663,6 +772,50 @@ fn main() {
         kvp.promoted(),
     );
 
+    // The drafter-portfolio selection probe: a 3-member portfolio whose
+    // prior-best member ("cheap") loses at live rates to "solid", with
+    // one deliberately weak member, vs best/worst static single-drafter
+    // controls at equal resources. The controller must notice and switch,
+    // and every response must stay bit-identical to non-SI greedy.
+    let portfolio_spec = "cheap:0.6:0.55,solid:1.2:0.9,weak:2.5:0.2";
+    let (sel_tps, sel_switches, pf_reqs, pf_resps) = portfolio_probe(portfolio_spec, smoke);
+    let (best_static_tps, _, _, _) = portfolio_probe("solid:1.2:0.9", smoke);
+    let (worst_static_tps, _, _, _) = portfolio_probe("weak:2.5:0.2", smoke);
+    let pf_eng = portfolio_engine();
+    for (req, resp) in pf_reqs.iter().zip(&pf_resps) {
+        let cfg = OnlineConfig {
+            prompt: req.prompt.clone(),
+            n_tokens: req.max_new_tokens,
+            lookahead: 1,
+            sp_degree: 1,
+            max_speculation_depth: 64,
+        };
+        let nonsi = run_nonsi(&pf_eng.factory(), &cfg);
+        assert_eq!(
+            resp.tokens, nonsi.tokens,
+            "portfolio serve lost tokens on req {}",
+            req.id
+        );
+    }
+    let sel_vs_best = sel_tps / best_static_tps;
+    println!(
+        "  drafter portfolio probe: selection {sel_tps:.0} tok/s ({sel_switches} switches) \
+         vs best static {best_static_tps:.0} vs worst static {worst_static_tps:.0} tok/s \
+         = {sel_vs_best:.2}x of best"
+    );
+
+    // The parallel-draft probe: same engine, same lookahead, block
+    // drafting on vs off, plus the online cost-model fit.
+    let par_tps = parallel_draft_probe(true, smoke);
+    let ser_tps = parallel_draft_probe(false, smoke);
+    let par_speedup = par_tps / ser_tps;
+    let fitted_frac = fitted_marginal_frac(0.25);
+    println!(
+        "  parallel-draft probe (k=4, marginal 0.25): parallel {par_tps:.0} tok/s \
+         vs serial {ser_tps:.0} tok/s = {par_speedup:.2}x | fitted marginal \
+         frac {fitted_frac:.3}"
+    );
+
     let out = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("smoke", Json::Bool(smoke)),
@@ -753,6 +906,16 @@ fn main() {
         ("kv_pressure_redecoded_tokens_single_tier_control", num(kvp_control_redecoded as f64)),
         ("kv_pressure_redecode_ratio", num(kvp_ratio)),
         ("kv_pressure_dedup_share", num(kvp_dedup_share)),
+        ("drafter_portfolio_selection_tokens_per_s", num(sel_tps)),
+        ("drafter_portfolio_best_static_tokens_per_s", num(best_static_tps)),
+        ("drafter_portfolio_worst_static_tokens_per_s", num(worst_static_tps)),
+        ("drafter_portfolio_selection_vs_best_ratio", num(sel_vs_best)),
+        ("drafter_portfolio_switches", num(sel_switches as f64)),
+        ("drafter_portfolio_lossless", Json::Bool(true)),
+        ("drafter_portfolio_parallel_tokens_per_s", num(par_tps)),
+        ("drafter_portfolio_serial_tokens_per_s", num(ser_tps)),
+        ("drafter_portfolio_parallel_speedup_x", num(par_speedup)),
+        ("drafter_portfolio_fitted_marginal_frac", num(fitted_frac)),
     ]);
     let path = std::env::var("BENCH_HOTPATH_OUT")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
@@ -875,5 +1038,37 @@ fn main() {
     assert!(
         kvp_dedup_share > 0.5,
         "cross-session dedup gauge saw only {kvp_dedup_share:.2} of the resident prefix"
+    );
+    // The drafter-portfolio gates: the controller must actually switch
+    // off the prior-best member (whose live expected latency loses to a
+    // challenger past the hysteresis margin), end within 10% of the best
+    // static single-drafter control at equal resources, and beat the
+    // worst static control outright — runtime selection has to recover
+    // most of the oracle-best choice without knowing it in advance.
+    assert!(sel_switches >= 1, "portfolio controller never switched drafters");
+    assert!(
+        sel_vs_best >= 0.9,
+        "portfolio selection {sel_tps:.0} tok/s below 0.9x of best static \
+         {best_static_tps:.0} tok/s ({sel_vs_best:.2}x)"
+    );
+    assert!(
+        sel_tps > worst_static_tps,
+        "portfolio selection {sel_tps:.0} tok/s did not beat worst static \
+         {worst_static_tps:.0} tok/s"
+    );
+    // The parallel-draft gates: block drafting at a 0.25 marginal must
+    // beat the serial drafter loop at equal lookahead (this is the whole
+    // point — draft latency stops scaling with k), and the router's
+    // online least-squares fit must recover the configured marginal from
+    // live block costs (the wait engine's charge model is exact, so the
+    // fit is too).
+    assert!(
+        par_speedup > 1.0,
+        "parallel drafting lost to serial: {par_tps:.0} vs {ser_tps:.0} tok/s \
+         ({par_speedup:.2}x)"
+    );
+    assert!(
+        (fitted_frac - 0.25).abs() < 1e-3,
+        "fitted marginal fraction {fitted_frac:.4} != configured 0.25"
     );
 }

@@ -193,6 +193,51 @@ pub fn max_useful_sp(target_ms: f64, drafter_ms: f64) -> usize {
     (target_ms / drafter_ms).ceil().max(1.0) as usize
 }
 
+/// Equation 1 under the parallel-draft cost model `d(k) = d_base +
+/// k·d_marginal` (ParallelSpec-style multi-token heads): the minimum SP
+/// degree at which verification tasks never queue when drafting a block
+/// of `lookahead` tokens takes `d_base + lookahead·d_marginal` instead of
+/// `lookahead·d`. Setting `d_base = 0, d_marginal = d` recovers the plain
+/// [`required_sp`] exactly.
+pub fn required_sp_marginal(
+    target_ms: f64,
+    draft_base_ms: f64,
+    draft_marginal_ms: f64,
+    lookahead: usize,
+) -> usize {
+    let block = draft_base_ms + lookahead as f64 * draft_marginal_ms;
+    (target_ms / block).ceil().max(1.0) as usize
+}
+
+/// Marginal-cost analog of [`min_lookahead_for_sp`]: the minimal
+/// lookahead satisfying the marginal Equation 1 for a given SP degree.
+/// With a near-zero marginal the block cost barely grows with k, so the
+/// minimal feasible k is *larger* — deeper speculation becomes nearly
+/// free and the planner should take it.
+pub fn min_lookahead_for_sp_marginal(
+    target_ms: f64,
+    draft_base_ms: f64,
+    draft_marginal_ms: f64,
+    sp: usize,
+) -> usize {
+    let mut k = 1usize;
+    while required_sp_marginal(target_ms, draft_base_ms, draft_marginal_ms, k) > sp {
+        k += 1;
+        if k > 100_000 {
+            break; // degenerate latencies; caller validates
+        }
+    }
+    k
+}
+
+/// Marginal-cost analog of [`max_useful_sp`]: the SP degree beyond which
+/// extra servers cannot help, i.e. the servers required at lookahead 1
+/// (block cost `d_base + d_marginal`). Reduces to `max_useful_sp` at
+/// `d_base = 0, d_marginal = d`.
+pub fn max_useful_sp_marginal(target_ms: f64, draft_base_ms: f64, draft_marginal_ms: f64) -> usize {
+    required_sp_marginal(target_ms, draft_base_ms, draft_marginal_ms, 1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +273,60 @@ mod tests {
     fn max_useful_sp_examples() {
         assert_eq!(max_useful_sp(100.0, 5.0), 20);
         assert_eq!(max_useful_sp(30.0, 30.0), 1);
+    }
+
+    #[test]
+    fn marginal_eq1_reduces_to_plain_at_serial_cost() {
+        // d_base = 0, d_marginal = d is exactly serial drafting: every
+        // marginal helper must agree with its plain counterpart.
+        for &(t, d) in &[(30.0, 3.0), (20.6, 6.8), (52.4, 34.6), (100.0, 1.0)] {
+            for k in 1..=12 {
+                assert_eq!(
+                    required_sp_marginal(t, 0.0, d, k),
+                    required_sp(t, d, k),
+                    "t={t} d={d} k={k}"
+                );
+            }
+            for sp in 1..=10 {
+                assert_eq!(
+                    min_lookahead_for_sp_marginal(t, 0.0, d, sp),
+                    min_lookahead_for_sp(t, d, sp),
+                    "t={t} d={d} sp={sp}"
+                );
+            }
+            assert_eq!(max_useful_sp_marginal(t, 0.0, d), max_useful_sp(t, d));
+        }
+    }
+
+    #[test]
+    fn marginal_eq1_flat_cost_deepens_lookahead() {
+        // A near-free marginal (parallel drafting) makes deeper blocks
+        // nearly free: the draft block stops covering the target forward
+        // at small k, so Equation 1's minimal feasible lookahead *grows*
+        // versus serial drafting — exactly the "optimal k grows where
+        // deeper speculation is nearly free" claim. Required SP stays
+        // monotone non-increasing in k in both models.
+        let (t, d) = (100.0, 5.0);
+        let (base, marg) = (d, 0.25 * d);
+        for k in 1..12 {
+            assert!(
+                required_sp_marginal(t, base, marg, k + 1)
+                    <= required_sp_marginal(t, base, marg, k)
+            );
+        }
+        for sp in 1..=8 {
+            let k_serial = min_lookahead_for_sp(t, d, sp);
+            let k_par = min_lookahead_for_sp_marginal(t, base, marg, sp);
+            assert!(required_sp_marginal(t, base, marg, k_par) <= sp);
+            assert!(k_par >= k_serial, "sp={sp} k_par={k_par} k_serial={k_serial}");
+        }
+        // Closed forms: serial k* = ceil(t/(d·sp)); marginal k* solves
+        // base + k·marg >= t/sp.
+        assert_eq!(min_lookahead_for_sp(t, d, 8), 3);
+        assert_eq!(min_lookahead_for_sp_marginal(t, base, marg, 8), 6);
+        // Fully free marginal: block cost is k-independent, so required
+        // SP is too.
+        assert_eq!(required_sp_marginal(t, d, 0.0, 1), required_sp_marginal(t, d, 0.0, 100));
     }
 
     #[test]

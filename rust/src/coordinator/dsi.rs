@@ -53,7 +53,8 @@
 use super::fault::FaultStats;
 use super::node::{NodeHandle, ShardedPool};
 use super::pool::{PoolHandle, SessionMsg, TargetPool};
-use super::{OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
+use super::{drafter_id_with_member, DrafterSpec, OnlineConfig, OnlineOutcome, ServerFactory, ServerRole};
+use std::collections::HashSet;
 use crate::config::AlgoKind;
 use crate::context::TokenRope;
 use std::collections::BTreeMap;
@@ -121,6 +122,27 @@ pub struct SessionCtl {
     /// the node plane; read by the controller's latency-weighted
     /// water-fill — a remote lane pays 2×hop per verification round-trip.
     hop_us: AtomicU64,
+    /// Parallel-draft switch: when set the drafter proposes its whole
+    /// lookahead window with one [`LmServer::draft_batch`] call instead
+    /// of one token per forward. The tokens are bit-identical either
+    /// way; only the latency model changes (d(k) = d_base + k·d_marginal
+    /// instead of k·d).
+    ///
+    /// [`LmServer::draft_batch`]: super::LmServer::draft_batch
+    parallel_draft: AtomicBool,
+    /// Portfolio member currently drafting for this session. Session
+    /// write-side, gauge read-side.
+    drafter_member: AtomicUsize,
+    /// Portfolio member the controller wants at the next restart
+    /// boundary (hysteresis and cooldown live in the controller; the
+    /// session only applies the request where the block arithmetic
+    /// allows a drafter hand-off).
+    requested_member: AtomicUsize,
+    /// Completed drafter blocks (one `draft_batch` call each). Paired
+    /// with the `drafter_steps`/`drafter_cost_ns` deltas of the same
+    /// tick this lets the controller fit the live block cost model
+    /// d(k) = d_base + k·d_marginal instead of assuming it.
+    drafter_blocks: AtomicU64,
 }
 
 /// A point-in-time reading of a session's cumulative telemetry; the
@@ -129,6 +151,9 @@ pub struct SessionCtl {
 pub struct CtlTelemetry {
     pub drafter_cost_ms: f64,
     pub drafter_steps: u64,
+    /// Completed `draft_batch` calls; `drafter_steps / drafter_blocks`
+    /// over a tick is the mean realized block width k̄.
+    pub drafter_blocks: u64,
     pub accepted: u64,
     pub rejected: u64,
     pub drafter_stops: u64,
@@ -149,6 +174,10 @@ impl SessionCtl {
             target_tpot_us: AtomicU64::new(0),
             drafter_stops: AtomicU64::new(0),
             hop_us: AtomicU64::new(0),
+            parallel_draft: AtomicBool::new(false),
+            drafter_member: AtomicUsize::new(0),
+            requested_member: AtomicUsize::new(0),
+            drafter_blocks: AtomicU64::new(0),
         }
     }
 
@@ -218,6 +247,58 @@ impl SessionCtl {
         self.drafter_steps.fetch_add(delta.forwards, Ordering::Relaxed);
     }
 
+    /// Accumulate one drafter *block*'s measured cost (the `delta` spans
+    /// a whole `draft_batch` call, serial width included: width 1 is a
+    /// block of one).
+    fn record_drafter_block(&self, delta: super::ForwardCost) {
+        self.record_drafter_cost(delta);
+        self.drafter_blocks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enable/disable parallel block drafting. Re-read by the drafter at
+    /// every iteration — no restart boundary needed, because the block
+    /// width only changes *when* draft tokens exist, never what they are.
+    pub fn set_parallel_draft(&self, on: bool) {
+        self.parallel_draft.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether parallel block drafting is on.
+    pub fn parallel_draft(&self) -> bool {
+        self.parallel_draft.load(Ordering::Relaxed)
+    }
+
+    /// The drafter's live block width: the full lookahead window under
+    /// parallel drafting, else 1 (classic serial drafting).
+    fn live_draft_width(&self) -> usize {
+        if self.parallel_draft.load(Ordering::Relaxed) {
+            self.live_lookahead()
+        } else {
+            1
+        }
+    }
+
+    /// The portfolio member currently drafting (0 with no portfolio).
+    pub fn drafter_member(&self) -> usize {
+        self.drafter_member.load(Ordering::Relaxed)
+    }
+
+    fn set_drafter_member(&self, m: usize) {
+        self.drafter_member.store(m, Ordering::Relaxed);
+    }
+
+    /// Ask the session to hand drafting to portfolio member `m` at its
+    /// next restart boundary. The session declines unknown or
+    /// known-dead members by writing the live member back, so the
+    /// controller always re-reads the truth.
+    pub fn request_drafter_member(&self, m: usize) {
+        self.requested_member.store(m, Ordering::Relaxed);
+    }
+
+    /// The controller's currently requested portfolio member.
+    pub fn requested_member(&self) -> usize {
+        self.requested_member.load(Ordering::Relaxed)
+    }
+
     /// Record one settle outcome (accept or reject) as it happens.
     fn record_settle(&self, accepted: bool) {
         if accepted {
@@ -282,6 +363,7 @@ impl SessionCtl {
         CtlTelemetry {
             drafter_cost_ms: self.drafter_cost_ns.load(Ordering::Relaxed) as f64 / 1e6,
             drafter_steps: self.drafter_steps.load(Ordering::Relaxed),
+            drafter_blocks: self.drafter_blocks.load(Ordering::Relaxed),
             accepted: self.accepted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             drafter_stops: self.drafter_stops.load(Ordering::Relaxed),
@@ -380,6 +462,18 @@ pub struct DsiSession {
     /// Supervised drafter restart budget before degrading. One attempt:
     /// a drafter that dies twice is treated as deterministically broken.
     drafter_restarts_left: usize,
+    /// Portfolio member indices, calibrated-best first. `[0]` when no
+    /// portfolio was configured (member 0 of a portfolio-less factory is
+    /// the factory's own drafter, so the encoding is the identity).
+    member_rank: Vec<usize>,
+    /// Position in `member_rank` of the member currently drafting.
+    rank_pos: usize,
+    /// Members whose drafter died on us — never handed the pen again.
+    dead_members: HashSet<usize>,
+    /// Deliberate drafter stops (planned member switches) whose
+    /// `DrafterStopped` notice is still in flight; the handler consumes
+    /// these silently so a planned switch is never booked as a fault.
+    expected_drafter_stops: usize,
     gen: u64,
 }
 
@@ -457,16 +551,28 @@ fn drafter_loop(
             }
             continue;
         }
+        // Block width: the full lookahead window under parallel drafting
+        // (1 when serial), clamped to the remaining depth/horizon room so
+        // a block never drafts past what the gate above allows token by
+        // token. The tokens of a block are exactly the tokens the serial
+        // loop would have produced — `draft_batch` is chained greedy — so
+        // only the latency model changes.
+        let room = d
+            .saturating_sub(ctx.len().saturating_sub(f))
+            .min(horizon.saturating_sub(ctx.len()));
+        let k = ctl.live_draft_width().min(room).max(1);
         let cost_before = server.forward_cost();
-        let tok = server.predictions(&ctx, ctx.len(), ctx.len() + 1)[0];
-        ctl.record_drafter_cost(server.forward_cost() - cost_before);
-        calls.fetch_add(1, Ordering::Relaxed);
-        ctx.push(tok);
-        if tx
-            .send(SessionMsg::Draft { gen, index: ctx.len() - 1, token: tok })
-            .is_err()
-        {
-            break;
+        let toks = server.draft_batch(&ctx, k);
+        ctl.record_drafter_block(server.forward_cost() - cost_before);
+        for tok in toks {
+            calls.fetch_add(1, Ordering::Relaxed);
+            ctx.push(tok);
+            if tx
+                .send(SessionMsg::Draft { gen, index: ctx.len() - 1, token: tok })
+                .is_err()
+            {
+                break 'outer;
+            }
         }
     }
 }
@@ -496,13 +602,40 @@ fn spawn_drafter(
     (ctrl_tx, handle)
 }
 
+/// Rank portfolio members calibrated-best first (lowest prior cost per
+/// accepted token). An empty portfolio yields the identity member `[0]`,
+/// under which [`drafter_id_with_member`] degenerates to the bare
+/// session id — exactly the pre-portfolio wiring.
+fn portfolio_rank(portfolio: &[DrafterSpec]) -> Vec<usize> {
+    if portfolio.is_empty() {
+        vec![0]
+    } else {
+        DrafterSpec::rank_by_prior(portfolio)
+    }
+}
+
 impl DsiSession {
     /// Register on `pool` and spawn this session's drafter thread. The
     /// pool must outlive the session (it owns the target workers).
     pub fn new(pool: &TargetPool, factory: &ServerFactory) -> Self {
+        Self::new_with_portfolio(pool, factory, &[])
+    }
+
+    /// Like [`new`](Self::new), with a drafter portfolio: the session
+    /// starts on the calibrated-best member (lowest prior cost per
+    /// accepted token) and can be moved between members at restart
+    /// boundaries via [`SessionCtl::request_drafter_member`]. The
+    /// factory must realize member semantics from the high id bits (see
+    /// [`drafter_id_with_member`]) — e.g.
+    /// [`WaitEngine::factory_configured`](super::wait_engine::WaitEngine::factory_configured).
+    pub fn new_with_portfolio(
+        pool: &TargetPool,
+        factory: &ServerFactory,
+        portfolio: &[DrafterSpec],
+    ) -> Self {
         let (msg_tx, msg_rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = channel();
         let handle = SessionPort::Local(pool.register(msg_tx.clone()));
-        Self::from_port(handle, msg_tx, msg_rx, factory)
+        Self::from_port(handle, msg_tx, msg_rx, factory, portfolio_rank(portfolio))
     }
 
     /// Register on a cross-node [`ShardedPool`]: the session is placed on
@@ -510,9 +643,19 @@ impl DsiSession {
     /// plane (paying the modeled hop), and its verify deadline widens by
     /// the round-trip. The event loop is byte-for-byte the local one.
     pub fn new_sharded(pool: &ShardedPool, factory: &ServerFactory) -> Self {
+        Self::new_sharded_with_portfolio(pool, factory, &[])
+    }
+
+    /// Sharded registration with a drafter portfolio (see
+    /// [`new_with_portfolio`](Self::new_with_portfolio)).
+    pub fn new_sharded_with_portfolio(
+        pool: &ShardedPool,
+        factory: &ServerFactory,
+        portfolio: &[DrafterSpec],
+    ) -> Self {
         let (msg_tx, msg_rx): (Sender<SessionMsg>, Receiver<SessionMsg>) = channel();
         let handle = SessionPort::Node(pool.register(msg_tx.clone()));
-        Self::from_port(handle, msg_tx, msg_rx, factory)
+        Self::from_port(handle, msg_tx, msg_rx, factory, portfolio_rank(portfolio))
     }
 
     fn from_port(
@@ -520,6 +663,7 @@ impl DsiSession {
         msg_tx: Sender<SessionMsg>,
         msg_rx: Receiver<SessionMsg>,
         factory: &ServerFactory,
+        member_rank: Vec<usize>,
     ) -> Self {
         let frontier = Arc::new(AtomicUsize::new(0));
         let depth = Arc::new(AtomicUsize::new(usize::MAX));
@@ -529,13 +673,20 @@ impl DsiSession {
         // verify-deadline derivation both see what this lane pays.
         ctl.set_hop_ms(handle.hop_ms());
 
-        // The drafter's factory id is the pool-unique session id —
-        // concurrent sessions must never hand their factories the
-        // same (Drafter, id) pair, or id-seeded engines would alias
-        // their streams.
+        // Start on the calibrated-best portfolio member and publish it so
+        // controller gauges and switch requests agree from tick one.
+        let member = member_rank.first().copied().unwrap_or(0);
+        ctl.set_drafter_member(member);
+        ctl.request_drafter_member(member);
+
+        // The drafter's factory id is the pool-unique session id (low
+        // bits) plus the portfolio member (high bits) — concurrent
+        // sessions must never hand their factories the same
+        // (Drafter, id) pair, or id-seeded engines would alias their
+        // streams, and distinct members must never alias either.
         let (ctrl_tx, drafter_handle) = spawn_drafter(
             factory,
-            handle.session_id() as usize,
+            drafter_id_with_member(handle.session_id() as usize, member),
             msg_tx.clone(),
             frontier.clone(),
             depth.clone(),
@@ -557,6 +708,10 @@ impl DsiSession {
             fault_stats: None,
             degraded: false,
             drafter_restarts_left: 1,
+            member_rank,
+            rank_pos: 0,
+            dead_members: HashSet::new(),
+            expected_drafter_stops: 0,
             gen: 0,
         }
     }
@@ -602,6 +757,61 @@ impl DsiSession {
         let ctl = self.ctl.clone();
         ctl.seed_plan(cfg.lookahead, cfg.sp_degree);
         let mut k = ctl.live_lookahead();
+
+        // Apply a pending controller request to hand drafting to another
+        // portfolio member. Only legal at restart boundaries (request
+        // start and post-rejection resync): the new drafter is then
+        // pointed at the settled rope by the caller's `Ctrl::Restart`,
+        // and the block arithmetic re-anchors at the new c0, so the
+        // hand-off can never change a token — only who proposes it.
+        macro_rules! apply_requested_member {
+            () => {
+                let req = ctl.requested_member();
+                if req != self.member_rank[self.rank_pos] {
+                    let pos = self
+                        .member_rank
+                        .iter()
+                        .position(|&m| m == req)
+                        .filter(|_| !self.dead_members.contains(&req));
+                    if let Some(pos) = pos {
+                        // Stop the old drafter (pre-excusing its exit
+                        // notice so the supervisor never books a planned
+                        // switch as a fault) and spawn the requested
+                        // member on the same inbox.
+                        let _ = self.ctrl_tx.send(Ctrl::Stop);
+                        if let Some(h) = self.drafter_handle.take() {
+                            let _ = h.join();
+                        }
+                        self.expected_drafter_stops += 1;
+                        self.rank_pos = pos;
+                        ctl.set_drafter_member(req);
+                        let (ctrl_tx, h) = spawn_drafter(
+                            &self.factory,
+                            drafter_id_with_member(
+                                self.handle.session_id() as usize,
+                                req,
+                            ),
+                            self.msg_tx.clone(),
+                            self.frontier.clone(),
+                            self.depth.clone(),
+                            self.drafter_calls_ctr.clone(),
+                            self.ctl.clone(),
+                        );
+                        self.ctrl_tx = ctrl_tx;
+                        self.drafter_handle = Some(h);
+                    } else {
+                        // Unknown or known-dead member: decline and
+                        // republish the live member, so the controller
+                        // re-scores from the truth instead of believing
+                        // its request landed.
+                        ctl.request_drafter_member(self.member_rank[self.rank_pos]);
+                    }
+                }
+            };
+        }
+        if !self.degraded {
+            apply_requested_member!();
+        }
 
         // Fresh request: bump the generation (staling any leftovers from
         // the previous request), point the drafter at the new prompt.
@@ -723,6 +933,12 @@ impl DsiSession {
             };
             match msg {
                 SessionMsg::DrafterStopped => {
+                    if self.expected_drafter_stops > 0 {
+                        // A planned member switch stopped the old drafter;
+                        // its exit notice is bookkeeping, not a fault.
+                        self.expected_drafter_stops -= 1;
+                        continue;
+                    }
                     ctl.record_drafter_stop();
                     if let Some(fs) = &self.fault_stats {
                         fs.record_drafter_stop();
@@ -730,7 +946,45 @@ impl DsiSession {
                     if self.degraded {
                         continue;
                     }
-                    if self.drafter_restarts_left > 0 {
+                    // Portfolio fallback first: a dead member is retired
+                    // and the pen moves to the best member never seen
+                    // dying — WITHOUT spending the same-member restart
+                    // budget. Only once every member has died does the
+                    // budgeted same-member restart (and then permanent
+                    // degradation) apply.
+                    let dead = self.member_rank[self.rank_pos];
+                    self.dead_members.insert(dead);
+                    let next_pos = (0..self.member_rank.len())
+                        .find(|&p| !self.dead_members.contains(&self.member_rank[p]));
+                    if let Some(pos) = next_pos {
+                        self.rank_pos = pos;
+                        let member = self.member_rank[pos];
+                        ctl.set_drafter_member(member);
+                        ctl.request_drafter_member(member);
+                        if let Some(fs) = &self.fault_stats {
+                            fs.record_drafter_restart();
+                        }
+                        if let Some(h) = self.drafter_handle.take() {
+                            let _ = h.join();
+                        }
+                        let (ctrl_tx, h) = spawn_drafter(
+                            &self.factory,
+                            drafter_id_with_member(
+                                self.handle.session_id() as usize,
+                                member,
+                            ),
+                            self.msg_tx.clone(),
+                            self.frontier.clone(),
+                            self.depth.clone(),
+                            self.drafter_calls_ctr.clone(),
+                            self.ctl.clone(),
+                        );
+                        self.ctrl_tx = ctrl_tx;
+                        self.drafter_handle = Some(h);
+                        spec.freeze();
+                        crate::context::note_full_clone(spec.len());
+                        let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: spec.clone() });
+                    } else if self.drafter_restarts_left > 0 {
                         // One supervised restart: join the dead thread,
                         // spawn a fresh drafter on the same inbox, and
                         // point it at the current speculation rope — the
@@ -747,7 +1001,10 @@ impl DsiSession {
                         }
                         let (ctrl_tx, h) = spawn_drafter(
                             &self.factory,
-                            self.handle.session_id() as usize,
+                            drafter_id_with_member(
+                                self.handle.session_id() as usize,
+                                self.member_rank[self.rank_pos],
+                            ),
                             self.msg_tx.clone(),
                             self.frontier.clone(),
                             self.depth.clone(),
@@ -900,8 +1157,12 @@ impl DsiSession {
                     c0 = settled;
                     next_task = 1;
                     // Restart boundary: apply any live re-plan of the
-                    // lookahead (the new blocks anchor at the new c0).
+                    // lookahead (the new blocks anchor at the new c0)
+                    // and any pending drafter hand-off.
                     k = ctl.live_lookahead();
+                    if !self.degraded {
+                        apply_requested_member!();
+                    }
                     crate::context::note_full_clone(spec.len());
                     let _ = self.ctrl_tx.send(Ctrl::Restart { gen, ctx: spec.clone() });
                     continue 'settle;
@@ -1265,6 +1526,46 @@ mod tests {
         let out2 = session.generate(&c2);
         assert_eq!(out2.tokens, run_nonsi(&eng.factory(), &c2).tokens);
         assert_eq!(stats.degraded_sessions(), 1, "degradation double-counted");
+    }
+
+    /// The new control surfaces: parallel-draft width follows the live
+    /// lookahead only when enabled; member requests are visible but
+    /// never self-apply (the session applies them at boundaries).
+    #[test]
+    fn ctl_parallel_draft_and_member_surface() {
+        let ctl = SessionCtl::new();
+        assert!(!ctl.parallel_draft());
+        ctl.set_plan(6, 2);
+        assert_eq!(ctl.live_draft_width(), 1, "serial drafting must stay width-1");
+        ctl.set_parallel_draft(true);
+        assert_eq!(ctl.live_draft_width(), 6);
+        ctl.request_drafter_member(3);
+        assert_eq!(ctl.requested_member(), 3);
+        assert_eq!(ctl.drafter_member(), 0, "a request must not self-apply");
+        let t = ctl.telemetry();
+        assert_eq!(t.drafter_blocks, 0);
+    }
+
+    /// Parallel block drafting is lossless: with draft width = lookahead
+    /// and a discounted marginal token cost the output still matches
+    /// non-SI bit-for-bit, and block telemetry flows.
+    #[test]
+    fn parallel_draft_lossless_with_discounted_marginal() {
+        let eng = engine(0.8, 2.0, 0.4, 83);
+        let factory = eng.factory_with_draft_frac(0.25);
+        let pool = TargetPool::new(&factory, 3);
+        let mut session = DsiSession::new(&pool, &factory);
+        session.ctl().set_parallel_draft(true);
+        let c = cfg(24, 4, 3);
+        let out = session.generate(&c);
+        let nonsi = run_nonsi(&eng.factory(), &c);
+        assert_eq!(out.tokens, nonsi.tokens, "parallel drafting broke losslessness");
+        let t = session.ctl().telemetry();
+        assert!(t.drafter_blocks > 0, "block telemetry never fed");
+        assert!(
+            t.drafter_steps >= t.drafter_blocks,
+            "a block always covers at least one forward"
+        );
     }
 
     /// A single (one-shot) drafter death is absorbed by the supervised

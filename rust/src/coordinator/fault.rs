@@ -381,6 +381,27 @@ impl LmServer for FaultyServer {
         self.inner.predict_batch(reqs)
     }
 
+    /// A k-token draft block advances the per-instance drafter step
+    /// counter once per drafted token, so `drafter-die@S` fires at the
+    /// same step count whether the session drafts serially or in blocks
+    /// — chaos schedules replay identically across `--parallel-draft`
+    /// settings. (A target never calls this, and a block that survives
+    /// the plan delegates to the inner parallel path untouched.)
+    fn draft_batch(&mut self, ctx: &TokenRope, k: usize) -> Vec<u32> {
+        if self.role == ServerRole::Drafter {
+            for _ in 0..k {
+                self.steps += 1;
+                if self.plan.on_drafter_step(self.steps) {
+                    panic!("injected fault: drafter death");
+                }
+            }
+            self.inner.draft_batch(ctx, k)
+        } else {
+            self.before_forward();
+            self.inner.draft_batch(ctx, k)
+        }
+    }
+
     fn bind_session(&mut self, session: u64) {
         self.inner.bind_session(session)
     }

@@ -163,6 +163,26 @@ pub trait LmServer {
             .collect()
     }
 
+    /// Draft `k` tokens in ONE drafter step: the greedy continuation of
+    /// `ctx`, each token conditioned on the previous ones — bit-identical
+    /// to `k` serial single-token `predictions` calls (the default below
+    /// IS that serial sequence, so parallel drafting may only change
+    /// *latency*, never tokens). Engines with a parallel multi-token
+    /// draft head (ParallelSpec-style) override this to charge one base
+    /// forward plus a per-extra-token marginal instead of `k` full
+    /// forwards, flattening Equation 1's draft term from `k·d` to
+    /// `d_base + k·d_marginal`.
+    fn draft_batch(&mut self, ctx: &TokenRope, k: usize) -> Vec<u32> {
+        let mut ext = ctx.clone();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let tok = self.predictions(&ext, ext.len(), ext.len() + 1)[0];
+            ext.push(tok);
+            out.push(tok);
+        }
+        out
+    }
+
     /// Tag subsequent single-lane calls (`predictions` / `advance`) with
     /// a pool session id, so the engine's settled-block store can track
     /// per-session block sets and cross-session sharing. Batched lanes
@@ -225,6 +245,110 @@ pub enum ServerRole {
 /// (the PJRT client is not `Send`), so the factory itself must be
 /// shareable across threads.
 pub type ServerFactory = Arc<dyn Fn(ServerRole, usize) -> Box<dyn LmServer> + Send + Sync>;
+
+/// Bit position of the portfolio-member index inside a drafter factory
+/// id. The low 24 bits stay the session id (the uniqueness the factory
+/// contract demands — concurrent sessions must never share a
+/// `(Drafter, id)` pair), the high bits select which portfolio member
+/// the factory should build. Engines that serve a single drafter treat
+/// the id as opaque, so non-portfolio paths are untouched.
+pub const DRAFTER_ID_MEMBER_SHIFT: u32 = 24;
+
+/// Compose a drafter factory id from a session id and a portfolio
+/// member index.
+pub fn drafter_id_with_member(session: usize, member: usize) -> usize {
+    debug_assert!(session < (1 << DRAFTER_ID_MEMBER_SHIFT));
+    (member << DRAFTER_ID_MEMBER_SHIFT) | (session & ((1 << DRAFTER_ID_MEMBER_SHIFT) - 1))
+}
+
+/// The portfolio-member index encoded in a drafter factory id (0 for
+/// plain non-portfolio ids).
+pub fn drafter_member(id: usize) -> usize {
+    id >> DRAFTER_ID_MEMBER_SHIFT
+}
+
+/// The session part of a drafter factory id.
+pub fn drafter_session(id: usize) -> usize {
+    id & ((1 << DRAFTER_ID_MEMBER_SHIFT) - 1)
+}
+
+/// One drafter in a `--drafters` portfolio: a name for logs/gauges, a
+/// calibrated latency profile, and a calibrated acceptance prior. The
+/// wait engine realizes a member as a drafter with this profile whose
+/// oracle agrees with the target at `acceptance` rate; the controller
+/// uses the priors to seed per-member expected-token-latency scores
+/// before live EWMAs warm up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrafterSpec {
+    pub name: String,
+    pub profile: crate::config::LatencyProfile,
+    /// Calibrated acceptance prior in [0, 1].
+    pub acceptance: f64,
+}
+
+impl DrafterSpec {
+    /// Parse one `name:drafter_ms:acceptance` spec (TTFT defaults to the
+    /// per-token latency — drafters are decode-dominated).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("drafter spec `{s}` is not name:drafter_ms:acceptance"));
+        }
+        let tpot: f64 = parts[1]
+            .parse()
+            .map_err(|_| format!("bad drafter_ms in `{s}`"))?;
+        let acceptance: f64 = parts[2]
+            .parse()
+            .map_err(|_| format!("bad acceptance in `{s}`"))?;
+        if !(tpot > 0.0) {
+            return Err(format!("drafter_ms must be > 0 in `{s}`"));
+        }
+        if !(0.0..=1.0).contains(&acceptance) {
+            return Err(format!("acceptance must be in [0,1] in `{s}`"));
+        }
+        Ok(Self {
+            name: parts[0].to_string(),
+            profile: crate::config::LatencyProfile::uniform(tpot),
+            acceptance,
+        })
+    }
+
+    /// Parse a comma-separated portfolio, e.g.
+    /// `fast:1.0:0.6,slow:4.0:0.9`.
+    pub fn parse_portfolio(s: &str) -> Result<Vec<Self>, String> {
+        let specs: Vec<Self> = s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| Self::parse(p.trim()))
+            .collect::<Result<_, _>>()?;
+        if specs.is_empty() {
+            return Err("empty drafter portfolio".into());
+        }
+        Ok(specs)
+    }
+
+    /// Calibrated prior score: expected drafter latency per *accepted*
+    /// token, ms — lower is better. Target-latency-free on purpose so a
+    /// portfolio can be ranked before any live estimate exists; the
+    /// controller re-scores with the full expected-token-latency model
+    /// once EWMAs warm up.
+    pub fn prior_score(&self) -> f64 {
+        self.profile.tpot_ms / self.acceptance.max(0.01)
+    }
+
+    /// Rank a portfolio's member indices calibrated-best first (ties
+    /// keep declaration order, so the operator's listing breaks them).
+    pub fn rank_by_prior(specs: &[Self]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..specs.len()).collect();
+        idx.sort_by(|&a, &b| {
+            specs[a]
+                .prior_score()
+                .partial_cmp(&specs[b].prior_score())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx
+    }
+}
 
 /// Online-run parameters.
 #[derive(Debug, Clone)]
@@ -290,3 +414,45 @@ impl OnlineOutcome {
 
 // (The slice-based common_prefix_len helper is gone: the resync primitive
 // is `TokenRope::common_prefix_with`, which every engine now uses.)
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drafter_id_member_roundtrip() {
+        for session in [0usize, 1, 7, (1 << DRAFTER_ID_MEMBER_SHIFT) - 1] {
+            for member in [0usize, 1, 3, 255] {
+                let id = drafter_id_with_member(session, member);
+                assert_eq!(drafter_session(id), session);
+                assert_eq!(drafter_member(id), member);
+            }
+        }
+        // Member 0 is the identity: plain pre-portfolio ids pass through.
+        assert_eq!(drafter_id_with_member(42, 0), 42);
+    }
+
+    #[test]
+    fn drafter_spec_parse_and_errors() {
+        let s = DrafterSpec::parse("tiny:1.5:0.8").unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(s.profile.tpot_ms, 1.5);
+        assert_eq!(s.acceptance, 0.8);
+        assert!(DrafterSpec::parse("tiny:1.5").is_err());
+        assert!(DrafterSpec::parse("tiny:0:0.8").is_err());
+        assert!(DrafterSpec::parse("tiny:1.5:1.2").is_err());
+        assert!(DrafterSpec::parse("tiny:x:0.8").is_err());
+        assert!(DrafterSpec::parse_portfolio("").is_err());
+        let p = DrafterSpec::parse_portfolio("a:1:0.5, b:2:0.9").unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[1].name, "b");
+    }
+
+    #[test]
+    fn portfolio_rank_orders_by_cost_per_accepted_token() {
+        // a: 1/0.5 = 2.0, b: 2/0.9 ≈ 2.22, c: 0.5/0.25 = 2.0 (tie with a,
+        // declaration order breaks it), d: 4/1.0 = 4.0.
+        let p = DrafterSpec::parse_portfolio("a:1:0.5,b:2:0.9,c:0.5:0.25,d:4:1.0").unwrap();
+        assert_eq!(DrafterSpec::rank_by_prior(&p), vec![0, 2, 1, 3]);
+    }
+}

@@ -330,6 +330,57 @@ impl LmServer for RealServer {
         out
     }
 
+    /// Multi-token drafting on lane 0: one resync, then a chained
+    /// self-feeding [`ModelRuntime::draft_lockstep`] decode — the argmax
+    /// of each step is fed straight back as the next input, which is
+    /// exactly the state sequence the trait's serial loop (k separate
+    /// `predictions` calls over a growing context) walks, so the drafted
+    /// tokens are bit-identical while the per-block overhead (resync,
+    /// rope bookkeeping, cost stamping) is paid once instead of k times.
+    fn draft_batch(&mut self, ctx: &TokenRope, k: usize) -> Vec<u32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let t0 = std::time::Instant::now();
+        let sess = &mut self.sessions[0];
+        sess.session = self.bound;
+        self.rt.resync(sess, ctx);
+        let out = if sess.pos == 0 {
+            // Truly cold: prefill the whole context — its logits predict
+            // the first draft token — then chain the remaining k-1.
+            let prompt = ctx.to_vec_range(0, ctx.len());
+            let logits = self.rt.prefill(sess, &prompt).expect("prefill");
+            self.reuse.tokens_redecoded += ctx.len() as u64;
+            let first = argmax(&logits);
+            let mut out = vec![first];
+            out.extend(
+                self.rt
+                    .draft_lockstep(sess, first, k - 1, |_, logits| argmax(&logits))
+                    .expect("draft decode"),
+            );
+            out
+        } else {
+            // Warm: re-decode only the uncovered suffix (keeping no
+            // predictions), then chain k steps from the last context
+            // token.
+            let resume = sess.pos.min(ctx.len() - 1);
+            self.rt.rollback(sess, resume);
+            self.reuse.tokens_reused += resume as u64;
+            for tok in ctx.iter_range(resume, ctx.len() - 1) {
+                self.rt.decode_step(sess, tok).expect("decode");
+            }
+            self.reuse.tokens_redecoded += (ctx.len() - resume) as u64;
+            let last = ctx.get(ctx.len() - 1).expect("non-empty draft context");
+            self.rt
+                .draft_lockstep(sess, last, k, |_, logits| argmax(&logits))
+                .expect("draft decode")
+        };
+        self.rt.publish_settled(sess);
+        self.cost.spent_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.cost.forwards += k as u64;
+        out
+    }
+
     fn bind_session(&mut self, session: u64) {
         self.bound = session;
     }

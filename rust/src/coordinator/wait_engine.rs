@@ -16,7 +16,7 @@
 //! Waits are hybrid sleep+spin so sub-millisecond TPOTs (Vicuna-68M is
 //! 2.5 ms; our sweeps go lower) stay accurate.
 
-use super::{BatchReq, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
+use super::{drafter_member, BatchReq, DrafterSpec, ForwardCost, KvReuse, LmServer, ServerFactory, ServerRole};
 use crate::config::LatencyProfile;
 use crate::context::{PrefixWitness, TokenRope};
 use crate::runtime::kv::{self, BlockStore, KvBlock};
@@ -158,6 +158,14 @@ pub struct WaitServer {
     role: ServerRole,
     profile: LatencyProfile,
     oracle: Arc<Oracle>,
+    /// Marginal cost of each drafted token beyond the first in a
+    /// [`LmServer::draft_batch`] block, as a fraction of what that
+    /// forward would have cost serially. `1.0` (the default) charges
+    /// exactly the serial sum — parallel drafting off; `0.0` charges one
+    /// base forward for the whole block (a free ParallelSpec-style
+    /// multi-token head). The serve flag `--draft-token-cost-frac` sets
+    /// it.
+    draft_frac: f64,
     forwards: usize,
     /// Summed charged forward latency, ms — the wait engine's measured
     /// forward cost is exactly what its latency model charged, so the
@@ -342,6 +350,37 @@ impl LmServer for WaitServer {
             .collect()
     }
 
+    /// The parallel-draft latency model: a k-token draft block charges
+    /// the first forward in full plus [`Self::draft_frac`] of each
+    /// subsequent forward's serial cost — `first + frac·Σ rest`. At
+    /// `frac = 1.0` this is *exactly* the serial sum (including a TTFT
+    /// first forward on a cold server), so the default is bit- and
+    /// cost-identical to the trait's serial loop; at `frac → 0` the whole
+    /// block costs one forward, flattening `d(k) = k·d` to
+    /// `d_base + k·d_marginal` with `d_base = d·(1−frac)`,
+    /// `d_marginal = d·frac`. Token-wise the block runs the identical
+    /// extend-by-one resync sequence the serial loop runs, so the drafted
+    /// tokens are bit-identical by construction.
+    fn draft_batch(&mut self, ctx: &TokenRope, k: usize) -> Vec<u32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let first = self.profile.forward_ms(self.forwards);
+        let rest: f64 = (1..k).map(|i| self.profile.forward_ms(self.forwards + i)).sum();
+        let charged = first + self.draft_frac * rest;
+        precise_wait(charged);
+        self.spent_ms += charged;
+        self.forwards += k;
+        let mut ext = ctx.clone();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let tok = self.lane_predictions(&ext, ext.len(), ext.len() + 1)[0];
+            ext.push(tok);
+            out.push(tok);
+        }
+        out
+    }
+
     fn max_context(&self) -> usize {
         self.max_context
     }
@@ -395,21 +434,70 @@ impl WaitEngine {
     /// sizing and for surfacing the store's eviction pressure in serving
     /// metrics (the caller keeps the handle).
     pub fn factory_with_store(&self, store: Arc<BlockStore<Vec<u64>>>) -> ServerFactory {
+        self.factory_configured(store, 1.0, &[])
+    }
+
+    /// Like [`factory`](Self::factory), but with a parallel-draft
+    /// marginal: each drafted token beyond the first in a `draft_batch`
+    /// block costs `draft_frac` of its serial forward (1.0 = serial,
+    /// 0.0 = whole block for one forward).
+    pub fn factory_with_draft_frac(&self, draft_frac: f64) -> ServerFactory {
+        self.factory_configured(
+            Arc::new(BlockStore::new(kv::DEFAULT_BLOCK_TOKENS, kv::DEFAULT_CAPACITY_BLOCKS)),
+            draft_frac,
+            &[],
+        )
+    }
+
+    /// The fully-configured factory: caller-owned store, parallel-draft
+    /// marginal, and an optional drafter portfolio. With a non-empty
+    /// portfolio, drafter construction decodes the member index from the
+    /// factory id's high bits ([`drafter_id_with_member`]
+    /// (super::drafter_id_with_member)) and realizes that member: its
+    /// latency profile, and an oracle whose drafter agrees with the
+    /// *shared* target chain at the member's calibrated acceptance. The
+    /// target chain (and thus the settled output) is identical across
+    /// members — switching drafters can change speed only, never tokens.
+    pub fn factory_configured(
+        &self,
+        store: Arc<BlockStore<Vec<u64>>>,
+        draft_frac: f64,
+        portfolio: &[DrafterSpec],
+    ) -> ServerFactory {
         let this = self.clone();
         let oracle = Arc::new(this.oracle.clone());
-        Arc::new(move |role, _id| {
+        let members: Vec<(LatencyProfile, Arc<Oracle>)> = portfolio
+            .iter()
+            .map(|s| {
+                (
+                    s.profile,
+                    Arc::new(Oracle {
+                        vocab: this.oracle.vocab,
+                        acceptance_rate: s.acceptance,
+                        seed: this.oracle.seed,
+                    }),
+                )
+            })
+            .collect();
+        Arc::new(move |role, id| {
+            let (profile, orc) = match role {
+                ServerRole::Target => (this.target, oracle.clone()),
+                ServerRole::Drafter if members.is_empty() => (this.drafter, oracle.clone()),
+                ServerRole::Drafter => {
+                    let m = drafter_member(id).min(members.len() - 1);
+                    (members[m].0, members[m].1.clone())
+                }
+            };
             Box::new(WaitServer {
                 role,
-                profile: match role {
-                    ServerRole::Target => this.target,
-                    ServerRole::Drafter => this.drafter,
-                },
-                oracle: oracle.clone(),
+                profile,
+                oracle: orc.clone(),
+                draft_frac,
                 forwards: 0,
                 spent_ms: 0.0,
                 max_context: this.max_context,
                 tokens: Vec::new(),
-                hashes: vec![oracle.hash_init()],
+                hashes: vec![orc.hash_init()],
                 keys: vec![kv::key_init()],
                 store: store.clone(),
                 published: 0,
@@ -571,6 +659,86 @@ mod tests {
         let delta = s.forward_cost() - before;
         assert_eq!(delta.forwards, 3);
         assert!((delta.spent_ms - 2.0 * 1.1).abs() < 1e-9, "batched charge {}", delta.spent_ms);
+    }
+
+    /// The parallel-draft charge model: at frac=1.0 a k-token block
+    /// charges exactly the serial sum (TTFT first forward included); at
+    /// frac<1 it charges `first + frac·Σ rest`; and the drafted tokens
+    /// are bit-identical to the trait's serial default at every frac.
+    #[test]
+    fn draft_batch_charge_model_and_bit_identity() {
+        let eng = WaitEngine {
+            target: LatencyProfile::uniform(20.0),
+            drafter: LatencyProfile::new(5.0, 2.0), // TTFT != TPOT on purpose
+            oracle: oracle(0.6),
+            max_context: 4096,
+        };
+        let ctx = TokenRope::from_slice(&[1, 2, 3, 4, 5]);
+
+        // frac=1.0 (default factory): cold 4-block = 5 + 2 + 2 + 2.
+        let mut serial = eng.factory()(ServerRole::Drafter, 0);
+        let toks_serial = serial.draft_batch(&ctx, 4);
+        let fc = serial.forward_cost();
+        assert_eq!(fc.forwards, 4);
+        assert!((fc.spent_ms - 11.0).abs() < 1e-9, "serial-frac charge {}", fc.spent_ms);
+
+        // frac=0.25: cold 4-block = 5 + 0.25·(2+2+2) = 6.5.
+        let mut par = eng.factory_with_draft_frac(0.25)(ServerRole::Drafter, 0);
+        let toks_par = par.draft_batch(&ctx, 4);
+        let fc = par.forward_cost();
+        assert_eq!(fc.forwards, 4);
+        assert!((fc.spent_ms - 6.5).abs() < 1e-9, "marginal charge {}", fc.spent_ms);
+        // Warm block: 0.25 marginal over 4 TPOT forwards = 2 + 0.25·6.
+        let before = par.forward_cost();
+        let mut ext = ctx.clone();
+        for &t in &toks_par {
+            ext.push(t);
+        }
+        let _ = par.draft_batch(&ext, 4);
+        let delta = par.forward_cost() - before;
+        assert!((delta.spent_ms - 3.5).abs() < 1e-9, "warm marginal charge {}", delta.spent_ms);
+
+        // Bit-identity: parallel block == serial block == k single calls.
+        assert_eq!(toks_par, toks_serial);
+        let mut single = eng.factory()(ServerRole::Drafter, 0);
+        let mut ext = ctx.clone();
+        let mut toks_one = Vec::new();
+        for _ in 0..4 {
+            let t = single.predictions(&ext, ext.len(), ext.len() + 1)[0];
+            ext.push(t);
+            toks_one.push(t);
+        }
+        assert_eq!(toks_par, toks_one, "draft_batch diverged from serial single-token drafting");
+    }
+
+    /// The portfolio factory realizes each member: the member index in
+    /// the factory id's high bits selects that member's latency profile
+    /// and acceptance, while the target chain — and thus the settled
+    /// stream — is shared and identical across members.
+    #[test]
+    fn portfolio_factory_realizes_members_over_shared_target_chain() {
+        let eng = zero_latency_engine(0.5, 61);
+        let portfolio = vec![
+            DrafterSpec::parse("perfect:1.0:1.0").unwrap(),
+            DrafterSpec::parse("hopeless:0.5:0.0").unwrap(),
+        ];
+        let store = Arc::new(BlockStore::new(kv::DEFAULT_BLOCK_TOKENS, kv::DEFAULT_CAPACITY_BLOCKS));
+        let f = eng.factory_configured(store, 1.0, &portfolio);
+        let ctx = TokenRope::from_slice(&[3, 1, 4, 1, 5]);
+        let mut target = f(ServerRole::Target, 0);
+        let want = target.predictions(&ctx, 2, 6);
+
+        // Member 0 (acceptance 1.0) always agrees with the target.
+        let mut m0 = f(ServerRole::Drafter, super::super::drafter_id_with_member(7, 0));
+        assert_eq!(m0.predictions(&ctx, 2, 6), want);
+        // Member 1 (acceptance 0.0) never does.
+        let mut m1 = f(ServerRole::Drafter, super::super::drafter_id_with_member(7, 1));
+        for (a, b) in m1.predictions(&ctx, 2, 6).iter().zip(&want) {
+            assert_ne!(a, b, "0-acceptance member agreed with target");
+        }
+        // Targets ignore member bits entirely.
+        let mut t2 = f(ServerRole::Target, super::super::drafter_id_with_member(7, 1));
+        assert_eq!(t2.predictions(&ctx, 2, 6), want);
     }
 
     /// The rolling chain must be invisible to callers: predictions after

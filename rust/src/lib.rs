@@ -43,6 +43,14 @@
 //!   sealed-KV block exchange on session migration, and node-kill /
 //!   partition faults recovered by the same deadline + re-dispatch
 //!   machinery (`--nodes`, `--node-hop-ms`).
+//!   Drafting itself is parallel: `LmServer::draft_batch` fills a
+//!   lookahead block in one call (default = the serial loop,
+//!   bit-identical; the wait engine charges a per-extra-token marginal
+//!   via `--draft-token-cost-frac`, the runtime drafts lockstep), and a
+//!   drafter *portfolio* (`DrafterSpec`, `--drafters`) lets the
+//!   controller move a session between calibrated members at lossless
+//!   restart boundaries — with death-fallback down the portfolio
+//!   ranking before any restart budget is spent.
 //!   Forward passes are pluggable: calibrated waits (the paper's
 //!   methodology) or real PJRT executions (`pjrt` cargo feature).
 //! - [`runtime`] — the AOT bridge: loads `artifacts/*.hlo.txt` (lowered once
@@ -74,11 +82,15 @@
 //!   per-session estimators (EWMA acceptance, measured drafter/target
 //!   costs from the `LmServer::forward_cost` surface) with calibrated
 //!   fallbacks; [`server::controller`] is the adaptive control plane: a
-//!   tick that re-solves Equation 1 per session from the live estimates,
+//!   tick that re-solves Equation 1 per session from the live estimates
+//!   (marginal-aware once the router's online `DraftCostModel` has fit
+//!   `d(k) = d_base + k·d_marginal` from live drafter block costs),
 //!   water-fills the SP budget by *weighted* min-max on expected
-//!   per-token latency (tenant weight × SLO-class multiplier), and sizes
+//!   per-token latency (tenant weight × SLO-class multiplier), sizes
 //!   the pool's micro-batch cap from queue depth and the `--slo-ms`
-//!   target. Every admission/completion kicks the tick immediately
+//!   target, and re-scores the drafter portfolio per tick — the
+//!   incumbent at live rates vs every challenger's prior — requesting a
+//!   hysteresis-gated switch at the session's next restart boundary. Every admission/completion kicks the tick immediately
 //!   (membership-triggered replanning), and when a water-fill shrinks a
 //!   session's SP share the controller preemptively reclaims that
 //!   session's queued verify tasks above the new cap — counted, handed

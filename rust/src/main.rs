@@ -94,6 +94,21 @@ COMMANDS (system):
                           --verify-deadline-ms MS (force the per-session
                             verify deadline; 0 = derive from live target
                             TPOT, default)
+                          --drafters CSV (drafter portfolio, wait engine:
+                            name:drafter_ms:acceptance[,...] — sessions
+                            start on the calibrated-best member and the
+                            adaptive controller switches drafters at
+                            restart boundaries when a challenger wins by
+                            the hysteresis margin; see README "Drafter
+                            portfolio & parallel drafting")
+                          --parallel-draft on|off (fill the whole
+                            lookahead block with one draft_batch call
+                            instead of one forward per token; lossless,
+                            default off)
+                          --draft-token-cost-frac F (wait engine: each
+                            extra token in a drafted block costs F x the
+                            drafter's per-token latency; 1.0 = serial
+                            cost, the default)
   generate              generate text with the real AOT model pair
                           --algo dsi|si|nonsi  --prompt STR  --tokens N
   calibrate             measure the tiny pair's TTFT/TPOT + acceptance rate
@@ -296,6 +311,16 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         Some("off") => false,
         Some(other) => return Err(format!("unknown adaptive mode {other}").into()),
     };
+    let drafters = match flags.get("drafters").map(String::as_str) {
+        None | Some("") => Vec::new(),
+        Some(csv) => dsi::coordinator::DrafterSpec::parse_portfolio(csv)?,
+    };
+    let parallel_draft = match flags.get("parallel-draft").map(String::as_str) {
+        None | Some("off") => false,
+        Some("on") => true,
+        Some(other) => return Err(format!("unknown parallel-draft mode {other}").into()),
+    };
+    let draft_frac = flag_f64(flags, "draft-token-cost-frac", 1.0).clamp(0.0, 1.0);
     let slo_ms = flag_f64(flags, "slo-ms", 0.0); // <= 0 disables the SLO clamp
     let control_interval_ms = flag_f64(flags, "control-interval", 25.0);
     let verify_deadline_ms = flag_f64(flags, "verify-deadline-ms", 0.0);
@@ -384,6 +409,11 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
     // render the block stores' eviction pressure.
     let (factory, store_stats, target_lat, drafter_lat, max_prompt) = match engine {
         "real" => {
+            if !drafters.is_empty() {
+                return Err("--drafters needs the wait engine (the real AOT pair \
+                            ships one drafter model)"
+                    .into());
+            }
             let m = dsi::runtime::Manifest::load(artifacts)?;
             println!(
                 "serving real AOT pair ({} + {} layers)",
@@ -409,7 +439,7 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
             let store = std::sync::Arc::new(kv_cfg.build::<Vec<u64>>());
             let stats = store.stats_handle();
             (
-                eng.factory_with_store(store),
+                eng.factory_configured(store, draft_frac, &drafters),
                 vec![stats],
                 eng.target,
                 eng.drafter,
@@ -432,7 +462,23 @@ fn cmd_serve(artifacts: &Path, flags: &HashMap<String, String>) -> CmdResult {
         .with_slo_ms(slo_ms)
         .with_control_interval_ms(control_interval_ms)
         .with_admission_mode(admission)
-        .with_verify_deadline_ms(verify_deadline_ms);
+        .with_verify_deadline_ms(verify_deadline_ms)
+        .with_drafters(drafters.clone())
+        .with_parallel_draft(parallel_draft);
+    if !drafters.is_empty() {
+        println!(
+            "drafter portfolio: {} members ({}); sessions start on the \
+             calibrated-best, the controller re-scores each tick",
+            drafters.len(),
+            drafters.iter().map(|d| d.name.as_str()).collect::<Vec<_>>().join(", ")
+        );
+    }
+    if parallel_draft {
+        println!(
+            "parallel drafting on: blocks fill in one draft_batch call \
+             (marginal token cost {draft_frac:.2}x serial)"
+        );
+    }
     if let Some(plan) = &fault_plan {
         println!(
             "fault injection active (seed {}): workers are supervised, verify \

@@ -448,6 +448,11 @@ struct ColdPlane<P> {
     queue: Mutex<VecDeque<u64>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// Keys the promoter has popped but not yet finished rehydrating.
+    /// Incremented under the queue lock at pop, decremented after the
+    /// promote completes — [`BlockStore::promote_now`] barriers on it so
+    /// "drained" really means "hot now", not "hot in a moment".
+    busy: AtomicU64,
 }
 
 /// State shared between the store handle and its promoter thread.
@@ -556,12 +561,19 @@ fn promoter_loop<P>(shared: Arc<Shared<P>>) {
                     return;
                 }
                 if let Some(k) = q.pop_front() {
+                    // In-flight marker raised while the queue lock is
+                    // still held: a `promote_now` barrier that finds the
+                    // queue empty is guaranteed to see busy != 0 until
+                    // this key is actually hot.
+                    cold.busy.fetch_add(1, Ordering::AcqRel);
                     break k;
                 }
                 q = cold.cv.wait(q).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         shared.promote(key);
+        cold.busy.fetch_sub(1, Ordering::AcqRel);
+        cold.cv.notify_all();
     }
 }
 
@@ -795,20 +807,35 @@ impl<P> BlockStore<P> {
     /// Synchronously drain the promotion queue — the deterministic hook
     /// tests and benches use where "eventually hot" must mean "hot now".
     /// Production code never needs it; the promoter thread does the same
-    /// work asynchronously. Returns how many blocks moved.
+    /// work asynchronously. Returns how many blocks moved on this thread;
+    /// on return the queue is empty AND the promoter holds no key
+    /// mid-rehydration, so the hot/cold gauges are settled.
     pub fn promote_now(&self) -> usize {
         let Some(cold) = &self.shared.cold else { return 0 };
         let mut moved = 0;
         loop {
-            let key = relock(&cold.queue).pop_front();
-            match key {
-                Some(k) => {
-                    if self.shared.promote(k) {
-                        moved += 1;
+            loop {
+                let key = relock(&cold.queue).pop_front();
+                match key {
+                    Some(k) => {
+                        if self.shared.promote(k) {
+                            moved += 1;
+                        }
                     }
+                    None => break,
                 }
-                None => return moved,
             }
+            // Barrier on the promoter's in-flight key: it raises `busy`
+            // under the queue lock before promoting, so an empty queue
+            // with busy == 0 means every promotion has fully landed.
+            if cold.busy.load(Ordering::Acquire) == 0 {
+                return moved;
+            }
+            let q = relock(&cold.queue);
+            let _ = cold
+                .cv
+                .wait_timeout(q, std::time::Duration::from_millis(1))
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
@@ -970,6 +997,7 @@ impl<P: SpillCodec + Send + Sync + 'static> BlockStore<P> {
                 queue: Mutex::new(VecDeque::new()),
                 cv: Condvar::new(),
                 shutdown: AtomicBool::new(false),
+                busy: AtomicU64::new(0),
             }),
         });
         store.shared = shared.clone();

@@ -316,6 +316,36 @@ impl ModelRuntime {
         Ok(())
     }
 
+    /// Draft `k` tokens in lockstep from the session's current position:
+    /// feed `first` (the token after the session's processed prefix),
+    /// argmax the logits via `pick`, feed the picked token back, repeat —
+    /// the chained self-feeding loop a multi-token draft head replaces
+    /// with one forward. Returns the `k` picked tokens in order. Today
+    /// each step drives the per-token decode executable (cost k·d, like
+    /// the serial path); when the AOT pipeline emits a multi-token draft
+    /// HLO it drops in here without touching callers, exactly as
+    /// [`decode_batch`](Self::decode_batch) is shaped for a lane-stacked
+    /// decode. `pick` receives the step index and logits; bit-identity
+    /// with serial drafting holds because the steps are the identical
+    /// `decode_step` chain.
+    pub fn draft_lockstep(
+        &self,
+        sess: &mut Session,
+        first: u32,
+        k: usize,
+        mut pick: impl FnMut(usize, Vec<f32>) -> u32,
+    ) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(k);
+        let mut tok = first;
+        for i in 0..k {
+            let logits = self.decode_step(sess, tok)?;
+            let chosen = pick(i, logits);
+            out.push(chosen);
+            tok = chosen;
+        }
+        Ok(out)
+    }
+
     /// Roll the session back so only the first `len` tokens remain. The
     /// cache rows beyond `len` are stale but unreachable: the decode
     /// kernel masks rows > pos and new writes overwrite them.

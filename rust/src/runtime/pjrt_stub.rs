@@ -125,6 +125,19 @@ impl ModelRuntime {
         match self.unconstructible {}
     }
 
+    /// Chained self-feeding draft loop — same surface as the real
+    /// runtime's multi-token draft path (`pick` receives each step's
+    /// index and logits and returns the token to feed back).
+    pub fn draft_lockstep(
+        &self,
+        _sess: &mut Session,
+        _first: u32,
+        _k: usize,
+        _pick: impl FnMut(usize, Vec<f32>) -> u32,
+    ) -> Result<Vec<u32>> {
+        match self.unconstructible {}
+    }
+
     pub fn rollback(&self, _sess: &mut Session, _len: usize) {
         match self.unconstructible {}
     }

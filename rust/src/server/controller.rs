@@ -58,11 +58,13 @@
 //! plans and outputs are bit-identical to the pre-adaptive server.
 
 use super::router::Router;
-use crate::config::{max_useful_sp, min_lookahead_for_sp, AlgoKind};
+use crate::config::{
+    max_useful_sp, min_lookahead_for_sp, min_lookahead_for_sp_marginal, AlgoKind,
+};
 use crate::coordinator::node::ServingPool;
 use crate::coordinator::pool::relock;
 use crate::coordinator::wait_engine::BATCH_LANE_COST_FRAC;
-use crate::coordinator::{CtlTelemetry, SessionCtl};
+use crate::coordinator::{CtlTelemetry, DrafterSpec, SessionCtl};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -161,6 +163,58 @@ pub struct SessionRates {
 pub fn expected_token_latency_ms(t: f64, d: f64, p: f64, share: usize) -> f64 {
     let k = min_lookahead_for_sp(t, d, share.max(1));
     d + (1.0 - p.clamp(0.0, 1.0)) * (t + (k - 1) as f64 * d)
+}
+
+/// [`expected_token_latency_ms`] under the fitted parallel-draft block
+/// cost model `d(k) = d_base + k·d_marginal`: the per-token drafting
+/// cost becomes the block cost amortized over its k tokens, and the
+/// rejection stall pays the *rest* of the block plus the verification.
+/// Reduces exactly to the serial formula at `(d_base, d_marginal) =
+/// (0, d)` — block cost `k·d`, amortized cost `d` — so the two models
+/// agree wherever the evidence says drafting is serial.
+pub fn expected_token_latency_marginal_ms(
+    t: f64,
+    d_base: f64,
+    d_marg: f64,
+    p: f64,
+    share: usize,
+) -> f64 {
+    let k = min_lookahead_for_sp_marginal(t, d_base, d_marg, share.max(1));
+    let block = d_base + k as f64 * d_marg;
+    let per_tok = block / k as f64;
+    per_tok + (1.0 - p.clamp(0.0, 1.0)) * (t + block - per_tok)
+}
+
+/// Minimum relative improvement a portfolio switch must promise: the
+/// challenger's expected token latency has to undercut the incumbent's
+/// by this factor. Live EWMAs wobble tick to tick; without the margin a
+/// near-tie would thrash the drafter thread at every restart boundary.
+pub const PORTFOLIO_HYSTERESIS: f64 = 0.85;
+
+/// Control ticks a session sits out after a switch request before the
+/// controller may request another — the switch itself lands at a
+/// restart boundary and its evidence needs a tick or two to warm.
+pub const PORTFOLIO_SWITCH_COOLDOWN_TICKS: u64 = 3;
+
+/// The portfolio switch decision at one tick: `scores[m]` is member m's
+/// expected token latency (live for the incumbent, calibrated prior for
+/// challengers), `current` the incumbent. Returns the member to request,
+/// or `None` to stay — a challenger must win by the
+/// [`PORTFOLIO_HYSTERESIS`] margin, never on a near-tie.
+pub fn portfolio_switch_choice(scores: &[f64], current: usize) -> Option<usize> {
+    if scores.len() < 2 || current >= scores.len() {
+        return None;
+    }
+    let best = (0..scores.len()).min_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    })?;
+    if best != current && scores[best] < scores[current] * PORTFOLIO_HYSTERESIS {
+        Some(best)
+    } else {
+        None
+    }
 }
 
 /// Water-filling SP allocation: every session gets one server (the
@@ -305,6 +359,8 @@ pub struct SessionGauge {
     pub drafter_tpot_ms: f64,
     /// Fair-share weight the water-fill used for this session.
     pub weight: f64,
+    /// Portfolio member currently drafting (0 without a portfolio).
+    pub drafter_member: usize,
 }
 
 /// Controller counters and gauges, shared with `server::metrics` so
@@ -322,6 +378,9 @@ pub struct ControllerStats {
     /// Queued verify tasks the controller preemptively reclaimed when a
     /// tick shrank a session's SP share below its queue depth.
     reclaims: AtomicU64,
+    /// Drafter portfolio switches the controller requested (hysteresis
+    /// survivors only — declined or pending requests are not re-counted).
+    drafter_switches: AtomicU64,
     /// Live target per-task cost the last tick planned with, µs.
     target_tpot_us: AtomicU64,
     /// Per-session plan of the last planning tick (kept through idle
@@ -366,6 +425,15 @@ impl ControllerStats {
 
     pub fn reclaims(&self) -> u64 {
         self.reclaims.load(Ordering::Relaxed)
+    }
+
+    /// Count one requested drafter portfolio switch.
+    pub fn record_drafter_switch(&self) {
+        self.drafter_switches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn drafter_switches(&self) -> u64 {
+        self.drafter_switches.load(Ordering::Relaxed)
     }
 
     pub fn ticks(&self) -> u64 {
@@ -413,6 +481,14 @@ pub struct Controller {
     forward_base_ms: crate::stats::Ewma,
     /// Last applied (lookahead, sp_share) per session, for `replans`.
     last_plan: HashMap<u64, (usize, usize)>,
+    /// The drafter portfolio (empty = single-drafter serving, all
+    /// portfolio machinery inert). Member indices match the specs'
+    /// declaration order — the same indices the sessions encode into
+    /// drafter factory ids.
+    portfolio: Vec<DrafterSpec>,
+    /// Tick stamp of each session's last switch request, for the
+    /// cooldown.
+    member_cooldown: HashMap<u64, u64>,
 }
 
 impl Controller {
@@ -435,7 +511,15 @@ impl Controller {
             pool_seen: (0, 0, 0),
             forward_base_ms: crate::stats::Ewma::new(0.2),
             last_plan: HashMap::new(),
+            portfolio: Vec::new(),
+            member_cooldown: HashMap::new(),
         }
+    }
+
+    /// Attach the drafter portfolio this controller may move sessions
+    /// across (member indices = declaration order of the specs).
+    pub fn set_portfolio(&mut self, portfolio: Vec<DrafterSpec>) {
+        self.portfolio = portfolio;
     }
 
     /// One control tick: difference telemetry into the estimators,
@@ -452,6 +536,8 @@ impl Controller {
         };
         self.seen.retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
         self.last_plan.retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
+        self.member_cooldown
+            .retain(|sid, _| regs.iter().any(|(r, _)| r == sid));
 
         let mut router = relock(&self.router);
 
@@ -486,6 +572,18 @@ impl Controller {
             if steps > 0 {
                 let ms = (now.drafter_cost_ms - prev.drafter_cost_ms).max(0.0);
                 router.observe_drafter_ms(*sid, ms / steps as f64);
+                // Block evidence for the marginal cost fit: this tick's
+                // mean realized block width and mean block cost. Under
+                // serial drafting every block is width 1, so the fit
+                // stays width-less and the classic k·d planner holds.
+                let blocks = now.drafter_blocks.saturating_sub(prev.drafter_blocks);
+                if blocks > 0 {
+                    router.observe_drafter_block(
+                        *sid,
+                        steps as f64 / blocks as f64,
+                        ms / blocks as f64,
+                    );
+                }
             }
             let acc = now.accepted.saturating_sub(prev.accepted);
             let rej = now.rejected.saturating_sub(prev.rejected);
@@ -551,6 +649,48 @@ impl Controller {
                 }
             }
             self.last_plan.insert(*sid, (plan.lookahead, share));
+            // Drafter portfolio re-score: the incumbent member is judged
+            // at its LIVE rates, every challenger at its calibrated
+            // prior, all through the same expected-token-latency lens at
+            // this session's hop-inflated target cost and share. A
+            // challenger that wins past the hysteresis margin (and the
+            // per-session cooldown) is requested; the session applies it
+            // at its next restart boundary and declines dead members.
+            if self.portfolio.len() > 1 && ctl.requested_member() == ctl.drafter_member() {
+                let tick = self.stats.ticks();
+                let cooled = self.member_cooldown.get(sid).map_or(true, |&t0| {
+                    tick.saturating_sub(t0) >= PORTFOLIO_SWITCH_COOLDOWN_TICKS
+                });
+                if cooled {
+                    let cur = ctl.drafter_member();
+                    let eff_t = t + 2.0 * rate.hop_ms.max(0.0);
+                    let scores: Vec<f64> = (0..self.portfolio.len())
+                        .map(|m| {
+                            if m == cur {
+                                expected_token_latency_ms(
+                                    eff_t,
+                                    rate.drafter_tpot_ms,
+                                    rate.acceptance,
+                                    share,
+                                )
+                            } else {
+                                let spec = &self.portfolio[m];
+                                expected_token_latency_ms(
+                                    eff_t,
+                                    spec.profile.tpot_ms,
+                                    spec.acceptance,
+                                    share,
+                                )
+                            }
+                        })
+                        .collect();
+                    if let Some(best) = portfolio_switch_choice(&scores, cur) {
+                        ctl.request_drafter_member(best);
+                        self.stats.record_drafter_switch();
+                        self.member_cooldown.insert(*sid, tick);
+                    }
+                }
+            }
             gauges.push(SessionGauge {
                 session: *sid,
                 lookahead: plan.lookahead,
@@ -558,6 +698,7 @@ impl Controller {
                 acceptance_ewma: rate.acceptance,
                 drafter_tpot_ms: rate.drafter_tpot_ms,
                 weight: rate.weight,
+                drafter_member: ctl.drafter_member(),
             });
         }
         drop(router);
@@ -674,13 +815,63 @@ mod tests {
             acceptance_ewma: 0.25,
             drafter_tpot_ms: 1.5,
             weight: 1.0,
+            drafter_member: 1,
         }]);
         assert_eq!(s.session_gauges().len(), 1);
         assert_eq!(s.session_gauges()[0].session, 9);
+        assert_eq!(s.session_gauges()[0].drafter_member, 1);
         assert_eq!((s.membership_kicks(), s.reclaims()), (0, 0));
         s.record_membership_kick();
         s.record_reclaims(3);
         assert_eq!((s.membership_kicks(), s.reclaims()), (1, 3));
+        assert_eq!(s.drafter_switches(), 0);
+        s.record_drafter_switch();
+        assert_eq!(s.drafter_switches(), 1);
+    }
+
+    /// The marginal expected-latency model reduces exactly to the serial
+    /// one at (d_base, d_marginal) = (0, d), and a near-free marginal
+    /// token cost lowers the expected latency at any acceptance < 1
+    /// (deeper lookahead, same amortized draft cost, shorter stalls
+    /// relative to the serial drafter at equal per-token price).
+    #[test]
+    fn marginal_latency_reduces_to_serial_and_rewards_flat_cost() {
+        for &t in &[10.0, 30.0, 100.0] {
+            for &d in &[0.5, 3.0, 9.0] {
+                for &p in &[0.0, 0.4, 0.9, 1.0] {
+                    for share in 1..=6 {
+                        let serial = expected_token_latency_ms(t, d, p, share);
+                        let marginal = expected_token_latency_marginal_ms(t, 0.0, d, p, share);
+                        assert!(
+                            (serial - marginal).abs() < 1e-9,
+                            "serial reduction broken at t={t} d={d} p={p} share={share}"
+                        );
+                    }
+                }
+            }
+        }
+        // Same base block price, 10x cheaper marginal: expected latency
+        // can only improve (the block amortizes over more tokens).
+        let pricey = expected_token_latency_marginal_ms(30.0, 3.0, 3.0, 0.6, 4);
+        let flat = expected_token_latency_marginal_ms(30.0, 3.0, 0.3, 0.6, 4);
+        assert!(flat < pricey, "flat {flat} !< pricey {pricey}");
+    }
+
+    /// Hysteresis: a challenger must beat the incumbent by the margin —
+    /// near-ties stay put, clear wins switch, and the incumbent's own
+    /// score can never trigger a self-switch.
+    #[test]
+    fn portfolio_switch_respects_hysteresis() {
+        // Clear win: member 2 at half the incumbent's latency.
+        assert_eq!(portfolio_switch_choice(&[10.0, 9.0, 5.0], 0), Some(2));
+        // Near-tie (9.0 vs 10.0 at 0.85 margin): stay.
+        assert_eq!(portfolio_switch_choice(&[10.0, 9.0, 9.5], 0), None);
+        // Incumbent already best: stay.
+        assert_eq!(portfolio_switch_choice(&[5.0, 9.0, 9.5], 0), None);
+        // Degenerate inputs never panic or switch.
+        assert_eq!(portfolio_switch_choice(&[5.0], 0), None);
+        assert_eq!(portfolio_switch_choice(&[5.0, 1.0], 7), None);
+        assert_eq!(portfolio_switch_choice(&[], 0), None);
     }
 
     /// Weighted min-max: two identical sessions split evenly at uniform

@@ -149,6 +149,9 @@ pub struct Snapshot {
     /// Queued verify tasks the controller preemptively reclaimed when a
     /// tick shrank a session's SP share.
     pub controller_reclaims: u64,
+    /// Drafter-portfolio switches the controller requested (a challenger
+    /// member beat the incumbent by the hysteresis margin).
+    pub controller_drafter_switches: u64,
     /// Per-session live plans and estimates from the controller's last
     /// planning tick: (lookahead, sp_share, acceptance EWMA, measured
     /// drafter TPOT).
@@ -339,6 +342,10 @@ impl Metrics {
                 .controller_stats
                 .as_ref()
                 .map_or(0, |s| s.reclaims()),
+            controller_drafter_switches: self
+                .controller_stats
+                .as_ref()
+                .map_or(0, |s| s.drafter_switches()),
             per_session: self
                 .controller_stats
                 .as_ref()
@@ -425,13 +432,14 @@ impl Snapshot {
         }
         if self.controller_ticks > 0 {
             out.push_str(&format!(
-                " | ctl ticks={} replans={} cap={} target={:.2}ms kicks={} reclaims={}",
+                " | ctl ticks={} replans={} cap={} target={:.2}ms kicks={} reclaims={} switches={}",
                 self.controller_ticks,
                 self.controller_replans,
                 self.batch_cap_current,
                 self.controller_target_tpot_ms,
                 self.controller_membership_kicks,
                 self.controller_reclaims,
+                self.controller_drafter_switches,
             ));
         }
         // Fault-plane segment whenever a fault plan is armed (explicit
@@ -459,13 +467,14 @@ impl Snapshot {
         }
         for g in &self.per_session {
             out.push_str(&format!(
-                "\n    session {}: k={} sp={} acc={:.2} drafter={:.2}ms w={:.1}",
+                "\n    session {}: k={} sp={} acc={:.2} drafter={:.2}ms w={:.1} member={}",
                 g.session,
                 g.lookahead,
                 g.sp_share,
                 g.acceptance_ewma,
                 g.drafter_tpot_ms,
                 g.weight,
+                g.drafter_member,
             ));
         }
         out
@@ -635,19 +644,12 @@ mod tests {
         let block = |t: &[u32]| KvBlock { start: 0, tokens: t.to_vec(), payload: t.to_vec() };
         store.publish(key_of([1, 2]), block(&[1, 2]));
         store.publish(key_of([3, 4]), block(&[3, 4]));
-        // Cold hit on the demoted block, then wait for the rehydration
-        // (promote_now drains the queue, but the background promoter may
-        // have already popped the key and still be mid-decode).
+        // Cold hit on the demoted block, then rehydrate deterministically:
+        // promote_now drains the queue AND barriers on the promoter's
+        // in-flight key, so on return the promote-swap (promoted bump +
+        // demotion of the displaced block) has fully landed — no polling.
         assert!(store.lookup(key_of([1, 2]), 0, &[1, 2]).is_none());
         store.promote_now();
-        // Poll on the *demotion* the promote-swap ends with, so the final
-        // snapshot can't land between the promoted and demoted bumps.
-        for _ in 0..500 {
-            if m.snapshot().kv_blocks_demoted >= 2 {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
-        }
 
         let s = m.snapshot();
         assert_eq!(s.kv_blocks_evicted, 0, "demotion must not count as eviction");
@@ -685,6 +687,7 @@ mod tests {
                 acceptance_ewma: 0.21,
                 drafter_tpot_ms: 1.02,
                 weight: 1.0,
+                drafter_member: 0,
             },
             SessionGauge {
                 session: 5,
@@ -693,6 +696,7 @@ mod tests {
                 acceptance_ewma: 0.9,
                 drafter_tpot_ms: 0.4,
                 weight: 2.0,
+                drafter_member: 1,
             },
         ]);
         // Two ticks, one of which re-planned.
@@ -715,6 +719,7 @@ mod tests {
             text.contains("session 3: k=4 sp=2 acc=0.21 drafter=1.02ms"),
             "render: {text}"
         );
+        assert!(text.contains("w=2.0 member=1"), "render: {text}");
     }
 
     /// TPOT quantiles from the streaming histogram: per-request mean
@@ -747,6 +752,7 @@ mod tests {
         let mut m = Metrics::new();
         let s = m.snapshot();
         assert_eq!((s.pool_reclaimed, s.controller_membership_kicks, s.controller_reclaims), (0, 0, 0));
+        assert_eq!(s.controller_drafter_switches, 0);
 
         let pool = Arc::new(PoolStats::default());
         m.attach_pool_stats(pool.clone());
@@ -757,17 +763,19 @@ mod tests {
         ctl.record_tick();
         ctl.record_membership_kick();
         ctl.record_reclaims(2);
+        ctl.record_drafter_switch();
 
         let s = m.snapshot();
         assert_eq!(s.pool_reclaimed, 2);
         assert_eq!(s.controller_membership_kicks, 1);
         assert_eq!(s.controller_reclaims, 2);
+        assert_eq!(s.controller_drafter_switches, 1);
         // Reclaimed tasks keep their queue wait in the unbiased mean:
         // (5µs + 15µs) over 2 accounted tasks.
         assert!((s.pool_queue_wait_us_mean - 10.0).abs() < 1e-9);
         let text = s.render();
         assert!(text.contains("reclaimed=2"), "render: {text}");
-        assert!(text.contains("kicks=1 reclaims=2"), "render: {text}");
+        assert!(text.contains("kicks=1 reclaims=2 switches=1"), "render: {text}");
     }
 
     /// The fault-plane observability surface: pool supervision counters,

@@ -27,8 +27,8 @@ use crate::config::AlgoKind;
 use crate::coordinator::node::{ServingPool, ShardedPool};
 use crate::coordinator::pool::relock;
 use crate::coordinator::{
-    faulty_factory, run_nonsi_with, run_si_with, DsiSession, FaultPlan, FaultStats, LmServer,
-    OnlineConfig, OnlineOutcome, SchedPolicy, ServerFactory, ServerRole, TargetPool,
+    faulty_factory, run_nonsi_with, run_si_with, DrafterSpec, DsiSession, FaultPlan, FaultStats,
+    LmServer, OnlineConfig, OnlineOutcome, SchedPolicy, ServerFactory, ServerRole, TargetPool,
 };
 use crate::runtime::kv::StoreStats;
 use crate::runtime::tokenizer;
@@ -122,13 +122,18 @@ impl Backend {
         factory: &ServerFactory,
         pool: Option<&ServingPool>,
         worker_id: usize,
+        drafters: &[DrafterSpec],
     ) -> Self {
         match algo {
             AlgoKind::Dsi => {
                 match pool.expect("DSI serving requires the shared target pool") {
-                    ServingPool::Single(pool) => Backend::Dsi(DsiSession::new(pool, factory)),
+                    ServingPool::Single(pool) => {
+                        Backend::Dsi(DsiSession::new_with_portfolio(pool, factory, drafters))
+                    }
                     ServingPool::Sharded(pool) => {
-                        Backend::Dsi(DsiSession::new_sharded(pool, factory))
+                        Backend::Dsi(DsiSession::new_sharded_with_portfolio(
+                            pool, factory, drafters,
+                        ))
                     }
                 }
             }
@@ -204,6 +209,14 @@ pub struct Server {
     /// Operator override for the sessions' verify deadline, ms
     /// (non-positive = auto-derive from the live target-TPOT estimate).
     verify_deadline_ms: f64,
+    /// Drafter portfolio (`--drafters`): each DSI session starts on the
+    /// calibrated-best member and the adaptive controller may switch it
+    /// at restart boundaries. Empty = the factory's single drafter.
+    drafters: Vec<DrafterSpec>,
+    /// Enable parallel multi-token drafting (`draft_batch` at the live
+    /// lookahead instead of one token per call). Off by default — the
+    /// serial drafter loop is the bit-identical A/B control.
+    parallel_draft: bool,
     /// Seeded fault-injection schedule (`--fault-spec`). `None` injects
     /// nothing; supervision still covers organic faults.
     fault_plan: Option<Arc<FaultPlan>>,
@@ -255,6 +268,8 @@ impl Server {
             admission: AdmissionMode::Continuous,
             slo_ms: f64::INFINITY,
             verify_deadline_ms: 0.0,
+            drafters: Vec::new(),
+            parallel_draft: false,
             fault_plan: None,
             fault_stats,
             control_interval: Duration::from_millis(25),
@@ -361,6 +376,28 @@ impl Server {
     /// target-TPOT estimate.
     pub fn with_verify_deadline_ms(mut self, ms: f64) -> Self {
         self.verify_deadline_ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        self
+    }
+
+    /// Install a drafter portfolio (`--drafters`): DSI sessions start on
+    /// the calibrated-best member (lowest prior cost per accepted token)
+    /// and, under `--adaptive`, the controller re-scores members at live
+    /// acceptance/TPOT each tick and switches a session's drafter at a
+    /// restart boundary when a challenger wins by the hysteresis margin.
+    /// The factory must realize portfolio members by drafter id (see
+    /// `drafter_member`); the wait engine's `factory_configured` does.
+    pub fn with_drafters(mut self, specs: Vec<DrafterSpec>) -> Self {
+        self.drafters = specs;
+        self
+    }
+
+    /// Enable parallel multi-token drafting: the session drafter fills
+    /// its whole lookahead block with one `draft_batch` call instead of
+    /// one forward per token. Lossless by construction (the batch
+    /// contract is bit-identical to serial greedy drafting); pair with a
+    /// `--draft-token-cost-frac < 1` engine to model the latency win.
+    pub fn with_parallel_draft(mut self, on: bool) -> Self {
+        self.parallel_draft = on;
         self
     }
 
@@ -476,6 +513,7 @@ impl Server {
                 self.slo_ms,
                 self.batch_cap,
             );
+            ctl.set_portfolio(self.drafters.clone());
             let stop = ctl_stop.clone();
             let interval = self.control_interval;
             let sig = tick_signal.clone().expect("signal built with registry");
@@ -493,6 +531,7 @@ impl Server {
         let adaptive = self.adaptive;
         let admission = self.admission;
         let verify_deadline_ms = self.verify_deadline_ms;
+        let parallel_draft = self.parallel_draft;
 
         // Admission order: by arrival time (stable on ties).
         let mut order: Vec<usize> = (0..requests.len()).collect();
@@ -532,6 +571,7 @@ impl Server {
                 let tick_signal = tick_signal.clone();
                 let ctl_stats = self.controller_stats.clone();
                 let completed = completed.clone();
+                let drafters = self.drafters.clone();
                 s.spawn(move || {
                     // Lazy: a worker that never receives a job never
                     // loads models or spawns a drafter.
@@ -575,7 +615,8 @@ impl Server {
                             max_speculation_depth: depth,
                         };
                         if backend.is_none() {
-                            let mut b = Backend::new(algo, &factory, pool.as_ref(), wid);
+                            let mut b =
+                                Backend::new(algo, &factory, pool.as_ref(), wid, &drafters);
                             if let Backend::Dsi(sess) = &mut b {
                                 // Wire the fault plane: recovery gauges
                                 // flow into snapshots, and any operator
@@ -584,6 +625,7 @@ impl Server {
                                 if verify_deadline_ms > 0.0 {
                                     sess.ctl().set_verify_deadline_ms(verify_deadline_ms);
                                 }
+                                sess.ctl().set_parallel_draft(parallel_draft);
                                 // Hand the session's live control surface
                                 // to the adaptive controller.
                                 if let Some(reg) = registry.as_ref() {

@@ -20,7 +20,10 @@
 //!   a usable operating point — warm sessions get their measured rates,
 //!   cold ones the calibration.
 
-use crate::config::{max_useful_sp, min_lookahead_for_sp, AlgoKind, LatencyProfile};
+use crate::config::{
+    max_useful_sp, max_useful_sp_marginal, min_lookahead_for_sp, min_lookahead_for_sp_marginal,
+    AlgoKind, LatencyProfile,
+};
 use crate::stats::Ewma;
 use std::collections::HashMap;
 
@@ -43,16 +46,84 @@ pub struct Plan {
     pub sp_degree: usize,
 }
 
-/// Live per-session evidence: acceptance and measured drafter step cost.
+/// Online least-squares fit of the drafter *block* cost model
+/// `c(k) = d_base + k·d_marginal` (ms per `draft_batch` call of mean
+/// width k). Under parallel drafting the per-token draft cost stops
+/// being `k·d`: one forward proposes the whole window and extra tokens
+/// cost only a marginal slice. The controller feeds one
+/// (mean width, mean block cost) point per session per tick; the fit's
+/// slope IS the live marginal token cost, the intercept the per-block
+/// base — fitted from evidence, never assumed from a flag.
+#[derive(Debug, Clone, Default)]
+pub struct DraftCostModel {
+    n: u64,
+    sum_k: f64,
+    sum_c: f64,
+    sum_kk: f64,
+    sum_kc: f64,
+}
+
+impl DraftCostModel {
+    /// Fold one tick's (mean block width, mean block cost ms) point in.
+    pub fn observe(&mut self, k_mean: f64, cost_ms: f64) {
+        if !(k_mean.is_finite() && k_mean > 0.0 && cost_ms.is_finite() && cost_ms > 0.0) {
+            return;
+        }
+        self.n += 1;
+        self.sum_k += k_mean;
+        self.sum_c += cost_ms;
+        self.sum_kk += k_mean * k_mean;
+        self.sum_kc += k_mean * cost_ms;
+    }
+
+    /// Observation count.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// The fitted `(d_base, d_marginal)` in ms — only when the fit is
+    /// warm AND has genuine spread in k (two distinct widths observed).
+    /// All-one-width evidence — serial drafting included — cannot
+    /// separate base from marginal, so it yields `None` and the planner
+    /// keeps the classic `k·d` model bit-for-bit. The charge model is
+    /// linear by construction in the wait engine, so two distinct widths
+    /// already pin the line.
+    pub fn fit(&self) -> Option<(f64, f64)> {
+        if self.n < WARM_OBS {
+            return None;
+        }
+        let n = self.n as f64;
+        let det = n * self.sum_kk - self.sum_k * self.sum_k;
+        // Spread gate: det is n² × variance(k); scale-relative epsilon.
+        if det <= 1e-9 * (1.0 + self.sum_kk) {
+            return None;
+        }
+        let marg = (n * self.sum_kc - self.sum_k * self.sum_c) / det;
+        let base = (self.sum_c - marg * self.sum_k) / n;
+        let (base, marg) = (base.max(0.0), marg.max(0.0));
+        if base + marg <= 0.0 {
+            return None; // pathological fit; keep the classic model
+        }
+        Some((base, marg))
+    }
+}
+
+/// Live per-session evidence: acceptance, measured drafter step cost,
+/// and the drafter block cost model.
 #[derive(Debug, Clone)]
 struct SessionEstimator {
     acceptance: Ewma,
     drafter_tpot_ms: Ewma,
+    draft_cost: DraftCostModel,
 }
 
 impl SessionEstimator {
     fn new() -> Self {
-        Self { acceptance: Ewma::new(EWMA_ALPHA), drafter_tpot_ms: Ewma::new(EWMA_ALPHA) }
+        Self {
+            acceptance: Ewma::new(EWMA_ALPHA),
+            drafter_tpot_ms: Ewma::new(EWMA_ALPHA),
+            draft_cost: DraftCostModel::default(),
+        }
     }
 }
 
@@ -140,6 +211,25 @@ impl Router {
             .or_insert_with(SessionEstimator::new)
             .drafter_tpot_ms
             .observe(ms_per_step);
+    }
+
+    /// Fold one tick's drafter block observation (mean `draft_batch`
+    /// width, mean block cost ms) into `session`'s block cost model —
+    /// the evidence the marginal Equation-1 re-solve fits
+    /// `d(k) = d_base + k·d_marginal` from.
+    pub fn observe_drafter_block(&mut self, session: u64, k_mean: f64, block_cost_ms: f64) {
+        self.sessions
+            .entry(session)
+            .or_insert_with(SessionEstimator::new)
+            .draft_cost
+            .observe(k_mean, block_cost_ms);
+    }
+
+    /// The fitted live `(d_base, d_marginal)` of `session`'s drafter
+    /// block cost, ms — `None` until the fit has warm, width-diverse
+    /// evidence (see [`DraftCostModel::fit`]).
+    pub fn live_draft_cost_model(&self, session: u64) -> Option<(f64, f64)> {
+        self.sessions.get(&session).and_then(|e| e.draft_cost.fit())
     }
 
     /// Fold one measured target per-task forward cost (ms, from the pool's
@@ -302,12 +392,31 @@ impl Router {
         hop_ms: f64,
     ) -> Plan {
         let hop = if hop_ms.is_finite() && hop_ms > 0.0 { hop_ms } else { 0.0 };
-        self.plan_at(
-            algo,
-            share,
-            self.live_target_tpot_ms() + 2.0 * hop,
-            self.live_drafter_tpot_ms(session),
-        )
+        let target_ms = self.live_target_tpot_ms() + 2.0 * hop;
+        // Prefer the fitted block cost model d(k) = d_base + k·d_marginal
+        // when the session has width-diverse evidence (parallel drafting
+        // live): a cheap marginal makes a block cheaper, so Equation 1
+        // demands MORE concurrent servers at a given k — and the minimal
+        // feasible lookahead grows with it. Without such evidence (serial
+        // drafting, cold sessions) the classic k·d path below is taken
+        // bit-for-bit.
+        if algo == AlgoKind::Dsi {
+            if let Some((base, marg)) = self.live_draft_cost_model(session) {
+                return Self::plan_dsi_marginal(share, target_ms, base, marg);
+            }
+        }
+        self.plan_at(algo, share, target_ms, self.live_drafter_tpot_ms(session))
+    }
+
+    /// Equation-1 planning core under the fitted marginal block cost
+    /// model — the Dsi arm of [`plan_at`](Self::plan_at) with
+    /// `k·d` replaced by `d_base + k·d_marginal`.
+    fn plan_dsi_marginal(share: usize, target_ms: f64, d_base: f64, d_marg: f64) -> Plan {
+        let sp = share
+            .min(max_useful_sp_marginal(target_ms, d_base, d_marg))
+            .max(1);
+        let k = min_lookahead_for_sp_marginal(target_ms, d_base, d_marg, sp);
+        Plan { lookahead: k, sp_degree: sp }
     }
 
     /// Equation-1 planning core at explicit rates.
@@ -474,6 +583,94 @@ mod tests {
         assert_eq!(r.live_drafter_tpot_ms(7), 3.0);
         r.retire_session(42);
         assert_eq!(r.live_drafter_tpot_ms(42), 3.0);
+    }
+
+    /// The fitted block cost model: inert on width-less (serial)
+    /// evidence — the classic `k·d` plan survives bit-for-bit — and
+    /// near-exact on width-diverse linear evidence.
+    #[test]
+    fn draft_cost_fit_warms_only_on_width_diverse_evidence() {
+        let mut r = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 8);
+
+        // Serial evidence: every block width 1. No spread ⇒ no fit ⇒
+        // plan_live identical to a router that never saw blocks.
+        for _ in 0..6 {
+            r.observe_drafter_block(9, 1.0, 3.0);
+        }
+        assert!(r.live_draft_cost_model(9).is_none());
+        let classic = Router::new(LatencyProfile::uniform(30.0), LatencyProfile::uniform(3.0), 8);
+        assert_eq!(
+            r.plan_live(AlgoKind::Dsi, 9, 4),
+            classic.plan_live(AlgoKind::Dsi, 9, 4),
+            "serial block evidence must not move the plan"
+        );
+
+        // Width-diverse evidence on the exact line c(k) = 2 + 0.5k.
+        for (k, c) in [(1.0, 2.5), (4.0, 4.0), (8.0, 6.0)] {
+            r.observe_drafter_block(42, k, c);
+        }
+        let (base, marg) = r.live_draft_cost_model(42).expect("fit must be warm");
+        assert!((base - 2.0).abs() < 1e-6, "fitted base {base}");
+        assert!((marg - 0.5).abs() < 1e-6, "fitted marginal {marg}");
+
+        // Junk observations are dropped, not folded.
+        r.observe_drafter_block(42, f64::NAN, 1.0);
+        r.observe_drafter_block(42, 2.0, -1.0);
+        let (b2, m2) = r.live_draft_cost_model(42).unwrap();
+        assert_eq!((b2, m2), (base, marg));
+
+        r.retire_session(42);
+        assert!(r.live_draft_cost_model(42).is_none());
+    }
+
+    /// Marginal Equation-1 property: across a grid of (target, base,
+    /// marginal, share), every plan the marginal path emits is feasible
+    /// under the marginal block cost and capped at the marginal useful
+    /// maximum — and a cheaper marginal never *shrinks* the lookahead at
+    /// a fixed share (deep speculation becomes nearly free; the planner
+    /// must take it).
+    #[test]
+    fn marginal_plan_satisfies_marginal_eq1() {
+        use crate::config::{max_useful_sp_marginal, required_sp_marginal};
+        for &t in &[10.0, 30.0, 100.0] {
+            for &base in &[0.5, 2.0, 5.0] {
+                for &marg in &[0.1, 0.5, 2.0] {
+                    for share in 1..=8usize {
+                        let mut r = Router::new(
+                            LatencyProfile::uniform(t),
+                            LatencyProfile::uniform(3.0),
+                            8,
+                        );
+                        // Two exact points pin the (linear) charge line.
+                        r.observe_drafter_block(1, 1.0, base + marg);
+                        r.observe_drafter_block(1, 5.0, base + 5.0 * marg);
+                        let (b, m) = r.live_draft_cost_model(1).expect("two-point fit");
+                        assert!((b - base).abs() < 1e-6 && (m - marg).abs() < 1e-6);
+                        let p = r.plan_live(AlgoKind::Dsi, 1, share);
+                        assert!(
+                            required_sp_marginal(t, base, marg, p.lookahead) <= p.sp_degree,
+                            "infeasible plan {p:?} at t={t} base={base} marg={marg} share={share}"
+                        );
+                        assert!(
+                            p.sp_degree
+                                <= share.min(max_useful_sp_marginal(t, base, marg)).max(1)
+                        );
+                    }
+                }
+            }
+        }
+
+        let k_at = |marg: f64| {
+            let mut r =
+                Router::new(LatencyProfile::uniform(40.0), LatencyProfile::uniform(4.0), 6);
+            r.observe_drafter_block(1, 1.0, 4.0 + marg);
+            r.observe_drafter_block(1, 6.0, 4.0 + 6.0 * marg);
+            r.plan_live(AlgoKind::Dsi, 1, 6).lookahead
+        };
+        assert!(
+            k_at(0.25) >= k_at(4.0),
+            "a cheaper marginal token must not shrink the planned lookahead"
+        );
     }
 
     /// A remote lane's hop inflates the effective target cost (forward +

@@ -1,0 +1,231 @@
+//! The drafter-portfolio / parallel-draft gate: every new fast path must
+//! hand back exactly the token stream non-SI greedy decoding produces.
+//!
+//! - Parallel block drafting (one `draft_batch` call per lookahead block,
+//!   marginal tokens discounted) is bit-identical to the serial drafter
+//!   loop across acceptance regimes.
+//! - A mid-stream drafter switch (the controller's restart-boundary
+//!   protocol, driven directly here) is lossless under 4-session
+//!   contention on one shared target pool.
+//! - `drafter-die@S` composes with the portfolio: a dead member falls
+//!   back to the next-best member *before* any restart budget is spent,
+//!   and only after every member has died does the session degrade to
+//!   target-only mode.
+//! - The router's online draft-cost fit recovers the wait engine's
+//!   configured per-extra-token marginal from live block observations.
+
+use dsi::config::LatencyProfile;
+use dsi::coordinator::wait_engine::{Oracle, WaitEngine};
+use dsi::coordinator::{
+    faulty_factory, run_nonsi, DrafterSpec, DsiSession, FaultPlan, FaultStats, OnlineConfig,
+    ServerFactory, ServerRole, TargetPool,
+};
+use dsi::runtime::kv::{BlockStore, DEFAULT_BLOCK_TOKENS, DEFAULT_CAPACITY_BLOCKS};
+use dsi::server::router::Router;
+use std::sync::Arc;
+
+fn engine(p: f64, seed: u64) -> WaitEngine {
+    WaitEngine {
+        target: LatencyProfile::uniform(2.0),
+        drafter: LatencyProfile::uniform(0.4),
+        oracle: Oracle { vocab: 256, acceptance_rate: p, seed },
+        max_context: 8192,
+    }
+}
+
+fn cfg(n: usize, k: usize, sp: usize) -> OnlineConfig {
+    OnlineConfig {
+        prompt: vec![10, 20, 30],
+        n_tokens: n,
+        lookahead: k,
+        sp_degree: sp,
+        max_speculation_depth: 64,
+    }
+}
+
+/// A wait-engine factory that realizes `specs` as portfolio members
+/// (member index decoded from the drafter id; member 0 keeps the
+/// engine's own drafter profile when `specs` is empty).
+fn portfolio_factory(eng: &WaitEngine, frac: f64, specs: &[DrafterSpec]) -> ServerFactory {
+    let store = Arc::new(BlockStore::<Vec<u64>>::new(
+        DEFAULT_BLOCK_TOKENS,
+        DEFAULT_CAPACITY_BLOCKS,
+    ));
+    eng.factory_configured(store, frac, specs)
+}
+
+fn specs() -> Vec<DrafterSpec> {
+    DrafterSpec::parse_portfolio("fast:0.4:0.9,mid:0.6:0.8,slow:1.0:0.5")
+        .expect("well-formed portfolio")
+}
+
+/// Parallel block drafting at a discounted marginal must be bit-identical
+/// to both the serial DSI drafter loop and plain non-SI greedy, across
+/// hostile (p=0.2), typical (p=0.8), and perfect (p=1.0) acceptance.
+#[test]
+fn parallel_draft_is_bit_identical_across_acceptance_regimes() {
+    for (i, p) in [0.2, 0.8, 1.0].into_iter().enumerate() {
+        let eng = engine(p, 101 + i as u64);
+        let c = cfg(32, 4, 3);
+        let nonsi = run_nonsi(&eng.factory(), &c);
+
+        // Serial A/B control: same engine, parallel drafting off.
+        let serial_factory = eng.factory();
+        let pool = TargetPool::new(&serial_factory, 3);
+        let mut serial = DsiSession::new(&pool, &serial_factory);
+        let serial_out = serial.generate(&c);
+        assert_eq!(serial_out.tokens, nonsi.tokens, "serial DSI lost tokens at p={p}");
+
+        // Parallel path: blocks fill in one draft_batch call, marginal
+        // tokens at a quarter of the serial per-token cost.
+        let par_factory = eng.factory_with_draft_frac(0.25);
+        let pool = TargetPool::new(&par_factory, 3);
+        let mut parallel = DsiSession::new(&pool, &par_factory);
+        parallel.ctl().set_parallel_draft(true);
+        let par_out = parallel.generate(&c);
+        assert_eq!(par_out.tokens, nonsi.tokens, "parallel DSI lost tokens at p={p}");
+
+        let t = parallel.ctl().telemetry();
+        assert!(t.drafter_blocks > 0, "p={p}: block telemetry never fed");
+        assert!(
+            t.drafter_steps >= t.drafter_blocks,
+            "p={p}: a drafted block covers at least one forward"
+        );
+    }
+}
+
+/// Four sessions contend for one shared pool while each one's drafter is
+/// switched to a different portfolio member: two switches are requested
+/// before generation (guaranteed to land at the opening restart
+/// boundary), two land mid-stream from a sibling thread. All four
+/// streams must stay bit-identical to non-SI greedy.
+#[test]
+fn mid_stream_drafter_switch_is_lossless_under_contention() {
+    let eng = engine(0.8, 211);
+    let specs = specs();
+    let factory = portfolio_factory(&eng, 1.0, &specs);
+    let pool = Arc::new(TargetPool::new(&factory, 4));
+    let c = cfg(48, 3, 1);
+    let nonsi = run_nonsi(&eng.factory(), &c).tokens;
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for sid in 0..4usize {
+            let factory = factory.clone();
+            let pool = pool.clone();
+            let specs = specs.clone();
+            let c = c.clone();
+            handles.push(s.spawn(move || {
+                let mut sess = DsiSession::new_with_portfolio(&pool, &factory, &specs);
+                let ctl = sess.ctl();
+                // Sessions start on the calibrated-best member (rank 0 ==
+                // spec "fast"); move each one somewhere else.
+                assert_eq!(ctl.drafter_member(), 0, "calibrated-best start");
+                let target_member = 1 + sid % 2;
+                let eager = sid < 2;
+                if eager {
+                    ctl.request_drafter_member(target_member);
+                }
+                let switcher = (!eager).then(|| {
+                    let ctl = ctl.clone();
+                    std::thread::spawn(move || {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        ctl.request_drafter_member(target_member);
+                    })
+                });
+                let out = sess.generate(&c);
+                if let Some(h) = switcher {
+                    let _ = h.join();
+                }
+                // Pre-generation requests apply at the opening restart
+                // boundary, deterministically; mid-stream ones land at
+                // the next rejection (or stay pending if the run ends
+                // first) — either way the stream must be intact.
+                if eager {
+                    assert_eq!(
+                        ctl.drafter_member(),
+                        target_member,
+                        "session {sid}: pre-run switch never applied"
+                    );
+                }
+                out.tokens
+            }));
+        }
+        for (sid, h) in handles.into_iter().enumerate() {
+            let tokens = h.join().expect("session thread panicked");
+            assert_eq!(tokens, nonsi, "session {sid} lost tokens across a drafter switch");
+        }
+    });
+}
+
+/// Recurring drafter death walks the whole portfolio before the session
+/// gives up speculation: die@1 kills every member on its first forward,
+/// so the pen passes best → next → worst (no restart budget spent), the
+/// budgeted same-member restart fires once after all members have died,
+/// and only then does the session degrade — still bit-identical.
+#[test]
+fn drafter_death_falls_back_through_portfolio_before_degrading() {
+    let eng = engine(0.8, 307);
+    let specs = specs();
+    let plan = Arc::new(FaultPlan::parse("drafter-die@1").expect("valid spec"));
+    let factory = faulty_factory(portfolio_factory(&eng, 1.0, &specs), plan);
+    let pool = TargetPool::new(&eng.factory(), 2);
+    let mut sess = DsiSession::new_with_portfolio(&pool, &factory, &specs);
+    let stats = Arc::new(FaultStats::default());
+    sess.set_fault_stats(stats.clone());
+
+    let c = cfg(40, 3, 2);
+    let out = sess.generate(&c);
+    let nonsi = run_nonsi(&eng.factory(), &c);
+    assert_eq!(out.tokens, nonsi.tokens, "portfolio fallback cascade lost tokens");
+
+    // fast dies -> mid (fallback) -> slow (fallback) -> slow again
+    // (budgeted restart) -> degrade: 4 stops, 3 restarts, 1 degradation.
+    assert_eq!(stats.drafter_stops(), 4, "expected every member + the budgeted retry to die");
+    assert_eq!(stats.drafter_restarts(), 3, "2 portfolio fallbacks + 1 budgeted restart");
+    assert_eq!(stats.degraded_sessions(), 1, "exhausted portfolio must degrade");
+    assert_eq!(
+        sess.ctl().drafter_member(),
+        2,
+        "the pen should end on the last (worst-ranked) member"
+    );
+}
+
+/// The online draft-cost fit recovers the engine's configured marginal:
+/// feeding the router real `draft_batch` costs at diverse widths must
+/// yield d(k) = d_base + k * d_marginal with d_marginal/(d_base +
+/// d_marginal) equal to the configured `--draft-token-cost-frac`.
+#[test]
+fn fitted_marginal_cost_matches_configured_fraction() {
+    use dsi::context::TokenRope;
+    let frac = 0.25;
+    let eng = engine(0.9, 401);
+    let factory = eng.factory_with_draft_frac(frac);
+    let mut drafter = factory(ServerRole::Drafter, 0);
+    let mut router = Router::new(eng.target, eng.drafter, 4);
+
+    let mut ctx = TokenRope::from_slice(&[10, 20, 30]);
+    for k in 1..=4usize {
+        let before = drafter.forward_cost();
+        let toks = drafter.draft_batch(&ctx, k);
+        let delta = drafter.forward_cost() - before;
+        assert_eq!(toks.len(), k);
+        for t in toks {
+            ctx.push(t);
+        }
+        router.observe_drafter_block(7, k as f64, delta.spent_ms);
+    }
+
+    let (base, marg) = router
+        .live_draft_cost_model(7)
+        .expect("width-diverse evidence must warm the fit");
+    // Uniform 0.4ms drafter at frac 0.25: charge(k) = 0.4 + 0.1(k-1) =
+    // 0.3 + 0.1k exactly, so the least-squares fit is exact too.
+    let d = eng.drafter.tpot_ms;
+    assert!((base + marg - d).abs() < 1e-6, "k=1 block must cost one serial forward");
+    assert!(
+        (marg / (base + marg) - frac).abs() < 1e-6,
+        "fitted marginal fraction {} != configured {frac}",
+        marg / (base + marg)
+    );
+}
